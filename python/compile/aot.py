@@ -1,0 +1,196 @@
+"""AOT compile path: lower every partition side of every model to HLO text.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the rust ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Outputs, for each model in the zoo and each partition point m:
+
+* ``artifacts/<model>/device_m<m>_b1.hlo.txt``  (m = 1..M)   blocks [0, m)
+* ``artifacts/<model>/edge_m<m>_b<B>.hlo.txt``  (m = 0..M-1) blocks [m, M)
+  for each edge batch size B (edge VMs batch concurrent requests)
+* ``artifacts/<model>/weights.bin``  one sidecar with every block tensor
+  (RWTS format, see ``_write_weights``); artifacts reference tensors by
+  name so nothing is duplicated and the HLO text stays small (weights are
+  *parameters*, uploaded once as PJRT buffers by the rust runtime).
+* ``artifacts/manifest.json`` the machine-readable index consumed by
+  ``rust/src/models`` + ``rust/src/runtime``.
+
+Python runs ONCE at build time (``make artifacts``); nothing here is on
+the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as zoo
+
+RWTS_MAGIC = b"RWTS"
+RWTS_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the only proto-safe route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_part(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    return to_hlo_text(lowered)
+
+
+def _weight_names(model: zoo.ChainModel) -> list:
+    """Stable names for every tensor: b<block>_w<idx>."""
+    names = []
+    for bi, blk in enumerate(model.blocks):
+        for wi in range(len(blk.weights)):
+            names.append(f"b{bi}_w{wi}")
+    return names
+
+
+def _write_weights(path: str, model: zoo.ChainModel) -> None:
+    """RWTS sidecar: magic, version, count, then per tensor
+    (u32 name_len, name, u32 ndim, u64 dims..., u32 dtype=0(f32), raw LE data)."""
+    names = _weight_names(model)
+    tensors = [w for b in model.blocks for w in b.weights]
+    assert len(names) == len(tensors)
+    with open(path, "wb") as f:
+        f.write(RWTS_MAGIC)
+        f.write(struct.pack("<II", RWTS_VERSION, len(tensors)))
+        for name, t in zip(names, tensors):
+            arr = jax.device_get(t).astype("<f4")
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(struct.pack("<I", 0))  # dtype 0 = f32
+            f.write(arr.tobytes())
+
+
+def _part_weight_names(model: zoo.ChainModel, lo: int, hi: int) -> list:
+    names = []
+    for bi in range(lo, hi):
+        for wi in range(len(model.blocks[bi].weights)):
+            names.append(f"b{bi}_w{wi}")
+    return names
+
+
+def build_model(model: zoo.ChainModel, out_dir: str, batches: list,
+                verbose: bool = True) -> dict:
+    """Lower all partition sides of one model; return its manifest entry."""
+    mdir = os.path.join(out_dir, model.name)
+    os.makedirs(mdir, exist_ok=True)
+    _write_weights(os.path.join(mdir, "weights.bin"), model)
+
+    entry = {
+        "num_blocks": model.num_blocks,
+        "input_shape": [1, zoo.INPUT_HW, zoo.INPUT_HW, zoo.INPUT_C],
+        "num_classes": zoo.NUM_CLASSES,
+        "weights": f"{model.name}/weights.bin",
+        "blocks": [
+            {
+                "name": b.name,
+                "gflops": b.gflops,
+                "out_shape": list(b.out_shape),
+                "num_weights": len(b.weights),
+            }
+            for b in model.blocks
+        ],
+        "points": [
+            {
+                "m": m,
+                "d_bytes": model.d_bytes(m),
+                "w_gflops": model.w_gflops(m),
+                "feat_shape": list(model.feature_shape(m)),
+            }
+            for m in range(model.num_points)
+        ],
+        "artifacts": [],
+    }
+
+    def emit(role: str, m: int, batch: int, fn, weights, in_shape, out_shape):
+        fname = f"{model.name}/{role}_m{m}_b{batch}.hlo.txt"
+        example = [jax.ShapeDtypeStruct(tuple(in_shape), jnp.float32)]
+        example += [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in weights]
+        text = lower_part(fn, example)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        lo, hi = (0, m) if role == "device" else (m, model.num_blocks)
+        entry["artifacts"].append(
+            {
+                "role": role,
+                "m": m,
+                "batch": batch,
+                "hlo": fname,
+                "input_shape": list(in_shape),
+                "output_shape": list(out_shape),
+                "weight_names": _part_weight_names(model, lo, hi),
+            }
+        )
+        if verbose:
+            print(f"  {fname}: {len(text)} chars, "
+                  f"{len(weights)} weight params", flush=True)
+
+    for m in range(1, model.num_points):  # device side, batch 1
+        fn, weights = model.device_fn(m)
+        emit("device", m, 1, fn, weights,
+             model.feature_shape(0, 1), model.feature_shape(m, 1))
+    for m in range(model.num_blocks):  # edge side, all batch variants
+        for batch in batches:
+            fn, weights = model.edge_fn(m)
+            emit("edge", m, batch, fn, weights,
+                 model.feature_shape(m, batch),
+                 model.feature_shape(model.num_blocks, batch))
+    return entry
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifacts dir")
+    p.add_argument("--models", default="alexnet,resnet152")
+    p.add_argument("--batches", default="1,8",
+                   help="edge-side batch variants to compile")
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args(argv)
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",") if b]
+
+    manifest = {"version": 1, "models": {}}
+    for name in args.models.split(","):
+        model = zoo.get_model(name)
+        if not args.quiet:
+            print(f"[aot] lowering {name} "
+                  f"({model.num_blocks} blocks, batches={batches})", flush=True)
+        manifest["models"][name] = build_model(
+            model, out_dir, batches, verbose=not args.quiet
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if not args.quiet:
+        n_art = sum(len(m["artifacts"]) for m in manifest["models"].values())
+        print(f"[aot] wrote {n_art} artifacts + manifest to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

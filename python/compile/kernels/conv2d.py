@@ -1,0 +1,135 @@
+"""L1 hot-spot: Pallas 3x3 (and 1x1) convolution kernels, NHWC layout.
+
+The 3x3 kernel processes one batch element per grid step.  Inside the
+kernel the nine filter taps are unrolled and each tap is computed as an
+``(H*W, Cin) @ (Cin, Cout)`` matmul — i.e. the convolution is re-expressed
+as a sum of nine MXU matmuls over *shifted views* of the (pre-padded)
+input.  That is the TPU-idiomatic adaptation of a GPU direct-conv: instead
+of threadblock tiles in shared memory, the BlockSpec keeps one padded
+image slab plus the filter stack resident in VMEM and the systolic array
+does the channel contraction.
+
+1x1 convolutions are pure channel mixes and delegate to the tiled Pallas
+matmul kernel.
+
+All kernels use ``interpret=True`` so the lowered HLO runs on CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mm
+
+
+def _conv3x3_kernel(x_ref, w_ref, b_ref, o_ref, *, h: int, wdt: int,
+                    stride: int, relu: bool):
+    """Compute a full 3x3 same-conv for one batch element.
+
+    x_ref: (1, h+2, wdt+2, cin) pre-padded input slab.
+    w_ref: (3, 3, cin, cout) filter stack.
+    b_ref: (cout,) bias.
+    o_ref: (1, h_out, w_out, cout).
+    """
+    x = x_ref[0]
+    cin = x.shape[-1]
+    cout = o_ref.shape[-1]
+    acc = jnp.zeros((h * wdt, cout), dtype=o_ref.dtype)
+    for di in range(3):
+        for dj in range(3):
+            patch = x[di:di + h, dj:dj + wdt, :].reshape(h * wdt, cin)
+            acc += jnp.dot(
+                patch, w_ref[di, dj], preferred_element_type=o_ref.dtype
+            )
+    out = acc.reshape(h, wdt, cout) + b_ref[...]
+    if stride > 1:
+        out = out[::stride, ::stride, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[0] = out
+
+
+def conv2d_3x3(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    relu: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """3x3 "same" convolution: ``relu(conv(x, w) + bias)``.
+
+    Args:
+      x: ``(N, H, W, Cin)`` activations.
+      w: ``(3, 3, Cin, Cout)`` filters.
+      bias: optional ``(Cout,)``.
+      stride: 1 or 2 (stride-2 keeps the top-left phase, matching
+        ``lax.conv`` with SAME padding on even extents).
+    """
+    if x.ndim != 4 or w.ndim != 4 or w.shape[:2] != (3, 3):
+        raise ValueError(f"conv2d_3x3 shapes: x={x.shape} w={w.shape}")
+    n, h, wdt, cin = x.shape
+    if w.shape[2] != cin:
+        raise ValueError(f"channel mismatch: x={x.shape} w={w.shape}")
+    cout = w.shape[3]
+    if bias is None:
+        bias = jnp.zeros((cout,), dtype=x.dtype)
+    h_out = (h + stride - 1) // stride
+    w_out = (wdt + stride - 1) // stride
+
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    kern = functools.partial(
+        _conv3x3_kernel, h=h, wdt=wdt, stride=stride, relu=relu
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h + 2, wdt + 2, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h_out, w_out, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, cout), x.dtype),
+        interpret=interpret,
+    )(xp, w, bias)
+
+
+def conv2d_1x1(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    relu: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """1x1 convolution (channel mix) via the tiled Pallas matmul.
+
+    Args:
+      x: ``(N, H, W, Cin)``.
+      w: ``(Cin, Cout)``.
+    """
+    if x.ndim != 4 or w.ndim != 2 or w.shape[0] != x.shape[-1]:
+        raise ValueError(f"conv2d_1x1 shapes: x={x.shape} w={w.shape}")
+    n, h, wdt, cin = x.shape
+    cout = w.shape[1]
+    flat = x.reshape(n * h * wdt, cin)
+    out = mm.matmul(flat, w, bias, relu=relu, interpret=interpret)
+    return out.reshape(n, h, wdt, cout)
+
+
+def vmem_footprint_bytes(h: int, w: int, cin: int, cout: int,
+                         itemsize: int = 4) -> int:
+    """Per-step VMEM residency of the 3x3 kernel (slab + filters + out + acc)."""
+    return itemsize * (
+        (h + 2) * (w + 2) * cin     # padded input slab
+        + 9 * cin * cout            # filter stack
+        + h * w * cout              # accumulator
+        + h * w * cout              # output tile
+        + cout                      # bias
+    )

@@ -1,0 +1,121 @@
+"""L1 hot-spot: tiled Pallas matmul with fused bias + ReLU epilogue.
+
+MXU-oriented layout: the output is produced in (bm x bn) tiles while the
+contraction dimension K is the innermost grid axis; each grid step
+accumulates one (bm x bk) @ (bk x bn) partial product in place, and the
+epilogue (bias add + optional ReLU) is fused on the final K step.  On a
+real TPU the BlockSpecs below describe the HBM->VMEM schedule (one x tile,
+one w tile and the o tile resident per step -> VMEM footprint
+bm*bk + bk*bn + bm*bn floats); under ``interpret=True`` the same kernel
+runs on CPU PJRT, which is what the AOT artifacts embed.
+
+All shapes are padded up to the tile grid; the wrapper un-pads the result.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU native 128x128 output tiles.  For the small
+# CIFAR-scale operands in the model zoo the wrapper shrinks tiles to the
+# (padded) operand size so the grid never goes below 1x1x1.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _ceil_to(value: int, mult: int) -> int:
+    return ((value + mult - 1) // mult) * mult
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, relu: bool):
+    """One grid step: accumulate a partial product; epilogue on last step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...]
+        o_ref[...] = jnp.maximum(acc, 0.0) if relu else acc
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    relu: bool = False,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """``relu(x @ w + bias)`` via the tiled Pallas kernel.
+
+    Args:
+      x: ``(M, K)`` float array.
+      w: ``(K, N)`` float array.
+      bias: optional ``(N,)`` float array (zeros when omitted).
+      relu: fuse a ReLU into the epilogue.
+      bm/bn/bk: tile sizes (clamped to the padded operand sizes).
+      interpret: must stay True for CPU PJRT execution (Mosaic custom-calls
+        from real-TPU lowering are not runnable on the CPU plugin).
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if bias is None:
+        bias = jnp.zeros((n,), dtype=x.dtype)
+    if bias.shape != (n,):
+        raise ValueError(f"bias shape {bias.shape} != ({n},)")
+
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(bias, (0, np_ - n)).reshape(1, np_)
+
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Estimated per-step VMEM residency of the kernel (x, w, o, bias tiles)."""
+    return itemsize * (bm * bk + bk * bn + bm * bn + bn)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU issue slots doing useful work (padding overhead only)."""
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    useful = m * n * k
+    issued = mp * np_ * kp
+    return useful / issued if issued else 0.0

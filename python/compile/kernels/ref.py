@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness ground truth).
+
+These never use Pallas; pytest asserts ``allclose`` between each kernel
+and its oracle across hypothesis-generated shapes/dtypes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, w, bias=None, *, relu=False):
+    """Oracle for kernels.matmul.matmul."""
+    out = jnp.dot(x, w, preferred_element_type=x.dtype)
+    if bias is not None:
+        out = out + bias
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def conv2d_3x3_ref(x, w, bias=None, *, stride=1, relu=True):
+    """Oracle for kernels.conv2d.conv2d_3x3 (NHWC, SAME, top-left phase)."""
+    # Explicit padding (1,1) + the stride reproduces the kernel's top-left
+    # stride phase exactly (SAME padding would re-center on even extents).
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((1, 1), (1, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if bias is not None:
+        out = out + bias
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def conv2d_1x1_ref(x, w, bias=None, *, relu=True):
+    """Oracle for kernels.conv2d.conv2d_1x1."""
+    out = jnp.einsum("nhwc,cd->nhwd", x, w)
+    if bias is not None:
+        out = out + bias
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def maxpool2x2_ref(x):
+    """2x2/2 max-pool oracle (used by the L2 model directly)."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )

@@ -1,0 +1,267 @@
+"""L2: block-chain DNN model zoo in JAX, built on the L1 Pallas kernels.
+
+The paper partitions DNNs into a serial chain of *blocks* (Fig. 4): the
+first ``m`` blocks run on the mobile device, the remaining ``M - m`` on
+the edge VM.  This module defines CIFAR-10-shaped block chains that mirror
+the paper's two study models:
+
+* ``alexnet``  — 8 blocks (9 partition points), single-chain conv stack +
+  classifier, matching Table III's structure.
+* ``resnet152`` — 9 blocks (10 partition points), bottleneck-residual
+  chain with stage downsamples, matching Table IV's structure (feature
+  size first expands at the stem, then shrinks — same d_m trend).
+
+Weights are deterministic (seeded) — the paper studies inference *time*,
+not accuracy, so no training is needed; values only have to be realistic
+enough to exercise the same compute graph.
+
+Every block's forward calls the Pallas kernels (conv2d_3x3 / conv2d_1x1 /
+matmul), so the AOT-lowered HLO contains the L1 hot-spots.  ``device_fn`` /
+``edge_fn`` build the two partition sides for any point ``m``; they take
+the block weights as *arguments* (not embedded constants) so the HLO text
+stays small and the rust runtime can upload weights once as PJRT buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as kconv
+from .kernels import matmul as kmm
+from .kernels import ref as kref
+
+INPUT_HW = 32
+INPUT_C = 3
+NUM_CLASSES = 10
+
+
+@dataclasses.dataclass
+class Block:
+    """One partitionable unit of the chain."""
+
+    name: str
+    # fn(weights: list[jax.Array], x) -> y
+    fn: Callable
+    weights: list  # list[jax.Array]
+    gflops: float  # analytic forward GFLOPs at batch=1
+    out_shape: tuple  # activation shape at batch=1, without batch dim
+
+
+@dataclasses.dataclass
+class ChainModel:
+    """A serial block-chain model (paper's Fig. 4 abstraction)."""
+
+    name: str
+    blocks: list  # list[Block]
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def num_points(self) -> int:
+        """Partition points m in {0, .., M}."""
+        return len(self.blocks) + 1
+
+    def feature_shape(self, m: int, batch: int = 1) -> tuple:
+        """Activation shape crossing the network at partition point m."""
+        if m == 0:
+            return (batch, INPUT_HW, INPUT_HW, INPUT_C)
+        return (batch,) + tuple(self.blocks[m - 1].out_shape)
+
+    def d_bytes(self, m: int) -> int:
+        """Paper's d_{n,m}: bytes offloaded at point m (f32 activations).
+
+        d_M is the tiny result vector (class scores)."""
+        return 4 * int(math.prod(self.feature_shape(m, batch=1)))
+
+    def w_gflops(self, m: int) -> float:
+        """Paper's w_{n,m}: cumulative GFLOPs of the local part (blocks 1..m)."""
+        return float(sum(b.gflops for b in self.blocks[:m]))
+
+    def device_fn(self, m: int):
+        """Forward of blocks [0, m) plus the flat weight list it consumes."""
+        blocks = self.blocks[:m]
+        weights = [w for b in blocks for w in b.weights]
+
+        def fn(x, *flat):
+            ws = list(flat)
+            for b in blocks:
+                take, ws = ws[: len(b.weights)], ws[len(b.weights):]
+                x = b.fn(take, x)
+            return (x,)
+
+        return fn, weights
+
+    def edge_fn(self, m: int):
+        """Forward of blocks [m, M) plus its flat weight list."""
+        blocks = self.blocks[m:]
+        weights = [w for b in blocks for w in b.weights]
+
+        def fn(x, *flat):
+            ws = list(flat)
+            for b in blocks:
+                take, ws = ws[: len(b.weights)], ws[len(b.weights):]
+                x = b.fn(take, x)
+            return (x,)
+
+        return fn, weights
+
+    def full_fn(self):
+        fn, weights = self.device_fn(self.num_blocks)
+        return fn, weights
+
+
+# ---------------------------------------------------------------------------
+# Weight init + FLOP accounting helpers
+# ---------------------------------------------------------------------------
+
+
+def _he(key, shape):
+    fan_in = math.prod(shape[:-1]) if len(shape) > 1 else shape[0]
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def _conv3x3_gflops(h, w, cin, cout, stride=1):
+    ho, wo = -(-h // stride), -(-w // stride)
+    # Kernel computes full-res then subsamples, but we account the paper's
+    # convention: MACs of the mathematical conv, x2 for FLOPs.
+    return 2.0 * ho * wo * 9 * cin * cout / 1e9
+
+
+def _conv1x1_gflops(h, w, cin, cout):
+    return 2.0 * h * w * cin * cout / 1e9
+
+
+def _fc_gflops(cin, cout):
+    return 2.0 * cin * cout / 1e9
+
+
+# ---------------------------------------------------------------------------
+# Block builders (all forwards go through the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def _conv_block(name, key, h, w, cin, cout, *, stride=1, pool=False):
+    wk, bk_ = jax.random.split(key)
+    wgt = [_he(wk, (3, 3, cin, cout)), jnp.zeros((cout,), jnp.float32)]
+    ho, wo = -(-h // stride), -(-w // stride)
+    if pool:
+        ho, wo = ho // 2, wo // 2
+
+    def fn(ws, x):
+        y = kconv.conv2d_3x3(x, ws[0], ws[1], stride=stride, relu=True)
+        if pool:
+            y = kref.maxpool2x2_ref(y)
+        return y
+
+    return Block(name, fn, wgt, _conv3x3_gflops(h, w, cin, cout, stride),
+                 (ho, wo, cout))
+
+
+def _fc_block(name, key, cin, cout, *, relu, flatten_from=None):
+    wk, _ = jax.random.split(key)
+    wgt = [_he(wk, (cin, cout)), jnp.zeros((cout,), jnp.float32)]
+
+    def fn(ws, x):
+        if flatten_from is not None:
+            x = x.reshape(x.shape[0], cin)
+        return kmm.matmul(x, ws[0], ws[1], relu=relu)
+
+    out_shape = (cout,)
+    return Block(name, fn, wgt, _fc_gflops(cin, cout), out_shape)
+
+
+def _bottleneck_block(name, key, h, w, c, mid, *, downsample=False, cin=None):
+    """Residual bottleneck: 1x1 down -> 3x3 -> 1x1 up (+skip), optional
+    stride-2 entry downsample with a projection skip."""
+    cin = cin if cin is not None else c
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    stride = 2 if downsample else 1
+    ho, wo = (-(-h // 2), -(-w // 2)) if downsample else (h, w)
+    wgt = [
+        _he(k1, (cin, mid)), jnp.zeros((mid,), jnp.float32),
+        _he(k2, (3, 3, mid, mid)), jnp.zeros((mid,), jnp.float32),
+        _he(k3, (mid, c)), jnp.zeros((c,), jnp.float32),
+    ]
+    proj = downsample or cin != c
+    if proj:
+        wgt += [_he(k4, (cin, c)), jnp.zeros((c,), jnp.float32)]
+
+    def fn(ws, x):
+        y = kconv.conv2d_1x1(x, ws[0], ws[1], relu=True)
+        y = kconv.conv2d_3x3(y, ws[2], ws[3], stride=stride, relu=True)
+        y = kconv.conv2d_1x1(y, ws[4], ws[5], relu=False)
+        if proj:
+            skip = x[:, ::stride, ::stride, :] if stride > 1 else x
+            skip = kconv.conv2d_1x1(skip, ws[6], ws[7], relu=False)
+        else:
+            skip = x
+        return jnp.maximum(y + skip, 0.0)
+
+    gf = (_conv1x1_gflops(h, w, cin, mid)
+          + _conv3x3_gflops(h, w, mid, mid, stride)
+          + _conv1x1_gflops(ho, wo, mid, c)
+          + (_conv1x1_gflops(ho, wo, cin, c) if proj else 0.0))
+    return Block(name, fn, wgt, gf, (ho, wo, c))
+
+
+# ---------------------------------------------------------------------------
+# Model zoo
+# ---------------------------------------------------------------------------
+
+
+def alexnet(seed: int = 0) -> ChainModel:
+    """8-block AlexNet-style chain on 32x32x3 (Table III structure)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 8)
+    b = []
+    b.append(_conv_block("conv1+pool", keys[0], 32, 32, 3, 32, pool=True))      # 16x16x32
+    b.append(_conv_block("conv2+pool", keys[1], 16, 16, 32, 64, pool=True))     # 8x8x64
+    b.append(_conv_block("conv3", keys[2], 8, 8, 64, 96))                       # 8x8x96
+    b.append(_conv_block("conv4", keys[3], 8, 8, 96, 96))                       # 8x8x96
+    b.append(_conv_block("conv5+pool", keys[4], 8, 8, 96, 64, pool=True))       # 4x4x64
+    b.append(_fc_block("fc6", keys[5], 4 * 4 * 64, 256, relu=True,
+                       flatten_from=(4, 4, 64)))
+    b.append(_fc_block("fc7", keys[6], 256, 128, relu=True))
+    b.append(_fc_block("fc8", keys[7], 128, NUM_CLASSES, relu=False))
+    return ChainModel("alexnet", b)
+
+
+def resnet152(seed: int = 1) -> ChainModel:
+    """9-block bottleneck-residual chain on 32x32x3 (Table IV structure)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 9)
+    b = []
+    b.append(_conv_block("stem", keys[0], 32, 32, 3, 32))                        # 32x32x32 (d expands, like Table IV pt 1)
+    b.append(_bottleneck_block("res2a", keys[1], 32, 32, 32, 16))                # 32x32x32
+    b.append(_bottleneck_block("res2b", keys[2], 32, 32, 32, 16))
+    b.append(_bottleneck_block("res3a", keys[3], 32, 32, 64, 32, downsample=True, cin=32))  # 16x16x64
+    b.append(_bottleneck_block("res3b", keys[4], 16, 16, 64, 32))
+    b.append(_bottleneck_block("res4a", keys[5], 16, 16, 128, 64, downsample=True, cin=64))  # 8x8x128
+    b.append(_bottleneck_block("res4b", keys[6], 8, 8, 128, 64))
+    b.append(_bottleneck_block("res5a", keys[7], 8, 8, 256, 128, downsample=True, cin=128))  # 4x4x256
+
+    # head: global average pool + fc
+    kw, _ = jax.random.split(keys[8])
+    head_w = [_he(kw, (256, NUM_CLASSES)), jnp.zeros((NUM_CLASSES,), jnp.float32)]
+
+    def head_fn(ws, x):
+        x = jnp.mean(x, axis=(1, 2))
+        return kmm.matmul(x, ws[0], ws[1], relu=False)
+
+    b.append(Block("pool+fc", head_fn, head_w, _fc_gflops(256, NUM_CLASSES),
+                   (NUM_CLASSES,)))
+    return ChainModel("resnet152", b)
+
+
+MODELS = {"alexnet": alexnet, "resnet152": resnet152}
+
+
+def get_model(name: str, seed: int | None = None) -> ChainModel:
+    if name not in MODELS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(MODELS)}")
+    return MODELS[name]() if seed is None else MODELS[name](seed)

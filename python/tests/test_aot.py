@@ -1,0 +1,124 @@
+"""AOT pipeline: HLO text emission, weight sidecar format, manifest shape.
+
+Full-zoo lowering is exercised by ``make artifacts``; here we lower one
+small model end-to-end into a tmpdir and validate every contract the rust
+side (models/ + runtime/) depends on.
+"""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as zoo
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    model = zoo.get_model("alexnet")
+    entry = aot.build_model(model, out, batches=[1, 2], verbose=False)
+    return out, model, entry
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, model, entry = built
+    art = entry["artifacts"][0]
+    text = open(os.path.join(out, art["hlo"])).read()
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+    # text format, not protobuf bytes
+    assert "\x00" not in text
+
+
+def test_artifact_coverage(built):
+    _, model, entry = built
+    roles = {(a["role"], a["m"], a["batch"]) for a in entry["artifacts"]}
+    for m in range(1, model.num_points):
+        assert ("device", m, 1) in roles
+    for m in range(model.num_blocks):
+        assert ("edge", m, 1) in roles and ("edge", m, 2) in roles
+    assert len(roles) == len(entry["artifacts"])  # no duplicates
+
+
+def test_artifact_shapes(built):
+    _, model, entry = built
+    for a in entry["artifacts"]:
+        b = a["batch"]
+        if a["role"] == "device":
+            assert a["input_shape"] == [b, 32, 32, 3]
+            assert tuple(a["output_shape"]) == model.feature_shape(a["m"], b)
+        else:
+            assert tuple(a["input_shape"]) == model.feature_shape(a["m"], b)
+            assert a["output_shape"] == [b, zoo.NUM_CLASSES]
+
+
+def test_weight_sidecar_roundtrip(built):
+    out, model, entry = built
+    path = os.path.join(out, entry["weights"])
+    with open(path, "rb") as f:
+        assert f.read(4) == aot.RWTS_MAGIC
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == aot.RWTS_VERSION
+        expect = sum(len(b.weights) for b in model.blocks)
+        assert count == expect
+        names = []
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim))
+            (dtype,) = struct.unpack("<I", f.read(4))
+            assert dtype == 0
+            data = f.read(4 * int(jnp.prod(jnp.array(dims))) if ndim else 4)
+            names.append((name, dims, data))
+        assert f.read() == b""  # exact length
+    # names must match the per-artifact weight_names universe
+    all_names = {n for n, _, _ in names}
+    for a in entry["artifacts"]:
+        assert set(a["weight_names"]) <= all_names
+        # order: device part m consumes the first blocks' tensors
+        if a["role"] == "device":
+            assert a["weight_names"] == aot._part_weight_names(
+                model, 0, a["m"]
+            )
+
+
+def test_weight_values_roundtrip(built):
+    out, model, entry = built
+    path = os.path.join(out, entry["weights"])
+    raw = open(path, "rb").read()
+    # first tensor is b0_w0 = conv1 filters (3,3,3,32)
+    off = 4 + 8
+    (nlen,) = struct.unpack_from("<I", raw, off); off += 4
+    assert raw[off:off + nlen].decode() == "b0_w0"; off += nlen
+    (ndim,) = struct.unpack_from("<I", raw, off); off += 4
+    dims = struct.unpack_from(f"<{ndim}Q", raw, off); off += 8 * ndim
+    off += 4  # dtype
+    want = jax.device_get(model.blocks[0].weights[0]).reshape(-1)
+    import numpy as np
+    got = np.frombuffer(raw, "<f4", count=want.size, offset=off)
+    np.testing.assert_array_equal(got, want.astype("<f4"))
+    assert tuple(dims) == model.blocks[0].weights[0].shape
+
+
+def test_manifest_points_table(built):
+    _, model, entry = built
+    pts = entry["points"]
+    assert [p["m"] for p in pts] == list(range(model.num_points))
+    assert pts[0]["w_gflops"] == 0.0
+    assert pts[0]["d_bytes"] == 4 * 32 * 32 * 3
+    assert pts[-1]["d_bytes"] == 4 * zoo.NUM_CLASSES
+
+
+def test_manifest_json_serializable(built):
+    _, _, entry = built
+    text = json.dumps({"models": {"alexnet": entry}})
+    back = json.loads(text)
+    assert back["models"]["alexnet"]["num_blocks"] == 8

@@ -1,0 +1,122 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer — hypothesis
+sweeps shapes/dtypes and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as kconv
+from compile.kernels import matmul as kmm
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    relu=st.booleans(),
+    with_bias=st.booleans(),
+)
+def test_matmul_matches_ref(m, k, n, relu, with_bias):
+    x = _rand(m * 1000 + k, (m, k))
+    w = _rand(n, (k, n))
+    b = _rand(m + n, (n,)) if with_bias else None
+    got = kmm.matmul(x, w, b, relu=relu)
+    want = ref.matmul_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (128, 128, 128)])
+def test_matmul_tile_invariance(bm, bn, bk):
+    """Result must not depend on the tiling (pure schedule change)."""
+    x, w, b = _rand(1, (33, 47)), _rand(2, (47, 21)), _rand(3, (21,))
+    base = ref.matmul_ref(x, w, b, relu=True)
+    got = kmm.matmul(x, w, b, relu=True, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, base, rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        kmm.matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        kmm.matmul(jnp.zeros((2, 3)), jnp.zeros((3, 5)), jnp.zeros((4,)))
+
+
+def test_matmul_vmem_model():
+    # 128x128x128 f32 tiles: 3 tiles + bias row = 4*(3*16384 + 128) bytes.
+    assert kmm.vmem_footprint_bytes(128, 128, 128) == 4 * (3 * 128 * 128 + 128)
+    assert kmm.mxu_utilization_estimate(128, 128, 128, 128, 128, 128) == 1.0
+    assert kmm.mxu_utilization_estimate(1, 1, 1, 8, 8, 8) == pytest.approx(1 / 512)
+
+
+# ---------------------------------------------------------------------------
+# conv kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.sampled_from([4, 8, 11, 16]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    relu=st.booleans(),
+)
+def test_conv3x3_matches_ref(n, hw, cin, cout, stride, relu):
+    x = _rand(n * 100 + hw, (n, hw, hw, cin))
+    w = _rand(cin * 10 + cout, (3, 3, cin, cout))
+    b = _rand(7, (cout,))
+    got = kconv.conv2d_3x3(x, w, b, stride=stride, relu=relu)
+    want = ref.conv2d_3x3_ref(x, w, b, stride=stride, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.sampled_from([4, 8, 13]),
+    cin=st.integers(1, 12),
+    cout=st.integers(1, 12),
+    relu=st.booleans(),
+)
+def test_conv1x1_matches_ref(n, hw, cin, cout, relu):
+    x = _rand(n + hw, (n, hw, hw, cin))
+    w = _rand(cin + cout * 3, (cin, cout))
+    b = _rand(5, (cout,))
+    got = kconv.conv2d_1x1(x, w, b, relu=relu)
+    want = ref.conv2d_1x1_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_conv3x3_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        kconv.conv2d_3x3(jnp.zeros((1, 8, 8, 3)), jnp.zeros((5, 5, 3, 4)))
+    with pytest.raises(ValueError):
+        kconv.conv2d_3x3(jnp.zeros((1, 8, 8, 3)), jnp.zeros((3, 3, 4, 4)))
+
+
+def test_conv_kernels_jit_compatible():
+    """Kernels must lower under jit (the AOT path hard-requires this)."""
+    x = _rand(0, (2, 8, 8, 3))
+    w = _rand(1, (3, 3, 3, 4))
+    got = jax.jit(lambda a, b: kconv.conv2d_3x3(a, b))(x, w)
+    want = ref.conv2d_3x3_ref(x, w, None)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,119 @@
+"""L2 correctness: block-chain models, partitioning, and FLOP accounting."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as zoo
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module", params=["alexnet", "resnet152"])
+def model(request):
+    return zoo.get_model(request.param)
+
+
+def _input(batch=1, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (batch, 32, 32, 3))
+
+
+def test_block_counts(model):
+    expect = {"alexnet": 8, "resnet152": 9}[model.name]
+    assert model.num_blocks == expect
+    assert model.num_points == expect + 1
+
+
+def test_full_forward_shape(model):
+    fn, wts = model.full_fn()
+    y = fn(_input(), *wts)[0]
+    assert y.shape == (1, zoo.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("m_frac", [0.25, 0.5, 0.75, 1.0])
+def test_partition_consistency(model, m_frac):
+    """edge(device(x)) must equal full(x) at every partition point."""
+    m = max(1, int(round(m_frac * model.num_blocks)))
+    x = _input(seed=m)
+    full, fw = model.full_fn()
+    want = full(x, *fw)[0]
+    dfn, dw = model.device_fn(m)
+    efn, ew = model.edge_fn(m)
+    got = efn(dfn(x, *dw)[0], *ew)[0]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_point_zero_and_M_are_identity_sides(model):
+    """m=0: device side empty; m=M: edge side empty."""
+    x = _input(seed=3)
+    dfn, dw = model.device_fn(0)
+    assert dw == [] and dfn(x)[0] is x
+    efn, ew = model.edge_fn(model.num_blocks)
+    assert ew == [] and efn(x)[0] is x
+
+
+def test_feature_shapes_consistent_with_forward(model):
+    x = _input(seed=5)
+    for m in range(model.num_points):
+        dfn, dw = model.device_fn(m)
+        feat = dfn(x, *dw)[0]
+        assert tuple(feat.shape) == model.feature_shape(m, batch=1), m
+
+
+def test_d_bytes_matches_feature_shape(model):
+    for m in range(model.num_points):
+        shape = model.feature_shape(m, batch=1)
+        assert model.d_bytes(m) == 4 * math.prod(shape)
+
+
+def test_w_gflops_monotone_nondecreasing(model):
+    seq = [model.w_gflops(m) for m in range(model.num_points)]
+    assert seq[0] == 0.0
+    assert all(b >= a for a, b in zip(seq, seq[1:]))
+    assert seq[-1] > 0.0
+
+
+def test_result_size_is_tiny(model):
+    """Paper: d_{n,M} (result data) ~ 0.001 MB — ours is 10 class scores."""
+    assert model.d_bytes(model.num_blocks) == 4 * zoo.NUM_CLASSES
+
+
+def test_batch_dimension_supported(model):
+    """Edge parts must run batched (the coordinator batches VM inference)."""
+    m = model.num_blocks // 2
+    efn, ew = model.edge_fn(m)
+    feat = jax.random.normal(
+        jax.random.PRNGKey(0), model.feature_shape(m, batch=4)
+    )
+    y = efn(feat, *ew)[0]
+    assert y.shape == (4, zoo.NUM_CLASSES)
+
+
+def test_batched_equals_stacked_singles(model):
+    """Batching must not change per-sample results (conv/fc only, no BN)."""
+    m = model.num_blocks // 2
+    efn, ew = model.edge_fn(m)
+    feats = jax.random.normal(
+        jax.random.PRNGKey(1), model.feature_shape(m, batch=3)
+    )
+    batched = efn(feats, *ew)[0]
+    singles = jnp.concatenate(
+        [efn(feats[i:i + 1], *ew)[0] for i in range(3)], axis=0
+    )
+    np.testing.assert_allclose(batched, singles, rtol=1e-4, atol=1e-4)
+
+
+def test_deterministic_weights(model):
+    again = zoo.get_model(model.name)
+    for b1, b2 in zip(model.blocks, again.blocks):
+        for w1, w2 in zip(b1.weights, b2.weights):
+            np.testing.assert_array_equal(w1, w2)
+
+
+def test_unknown_model_rejected():
+    with pytest.raises(KeyError):
+        zoo.get_model("vgg19")

@@ -1,0 +1,18 @@
+//! One bench per paper evaluation artifact: times the regeneration of
+//! each table/figure series at Quick effort (the Full versions are run by
+//! `ripra figure all` and recorded in EXPERIMENTS.md).
+
+use std::time::Duration;
+
+use ripra::figures::{self, Effort};
+use ripra::util::bench::Bencher;
+
+fn main() {
+    let mut bench =
+        Bencher::new().with_window(Duration::from_millis(0), Duration::from_millis(1)).with_max_iters(1);
+    for name in ["table3", "fig1", "fig6", "fig7", "fig9", "fig10", "fig12", "fig13a", "fig13c", "fig14a"] {
+        bench.bench(&format!("generate_{name}"), || {
+            figures::run(name, None, Effort::Quick).map(|t| t.len()).unwrap_or(0)
+        });
+    }
+}

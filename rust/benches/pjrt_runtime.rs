@@ -1,0 +1,54 @@
+//! PJRT runtime benchmarks: per-part execution latency on the real AOT
+//! artifacts (device/edge sides, batch 1 vs 8) and the batching payoff —
+//! the serving hot path that `coordinator` drives.
+
+use std::time::Duration;
+
+use ripra::models::manifest::Manifest;
+use ripra::runtime::Engine;
+use ripra::util::bench::Bencher;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping pjrt_runtime bench: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::cpu(&dir).expect("engine");
+    let mut bench =
+        Bencher::new().with_window(Duration::from_millis(200), Duration::from_millis(800));
+
+    for name in ["alexnet", "resnet152"] {
+        let mut rt = engine.model_runtime(name).expect("runtime");
+        let blocks = rt.model().num_blocks;
+        let mid = blocks / 2;
+
+        let in_len: usize = 32 * 32 * 3;
+        let input = vec![0.5f32; in_len];
+        // full edge chain (m=0) and split sides
+        bench.bench(&format!("{name}_edge_full_b1"), || {
+            rt.run_edge(0, 1, &input).unwrap().len()
+        });
+        bench.bench(&format!("{name}_device_m{mid}_b1"), || {
+            rt.run_device(mid, &input).unwrap().len()
+        });
+        let feat_len: usize = rt.model().points[mid].feat_shape.iter().product();
+        let feat = vec![0.25f32; feat_len];
+        bench.bench(&format!("{name}_edge_m{mid}_b1"), || {
+            rt.run_edge(mid, 1, &feat).unwrap().len()
+        });
+        let feat8 = vec![0.25f32; feat_len * 8];
+        let r8 = bench
+            .bench(&format!("{name}_edge_m{mid}_b8"), || {
+                rt.run_edge(mid, 8, &feat8).unwrap().len()
+            })
+            .clone();
+        let r1 = bench
+            .bench(&format!("{name}_edge_m{mid}_b1_again"), || {
+                rt.run_edge(mid, 1, &feat).unwrap().len()
+            })
+            .clone();
+        let speedup = 8.0 * r1.median.as_secs_f64() / r8.median.as_secs_f64();
+        println!("  -> {name} batching payoff: batch-8 is {speedup:.2}x the per-item throughput of batch-1");
+    }
+}

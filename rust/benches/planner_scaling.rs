@@ -1,0 +1,28 @@
+//! Algorithm-2 end-to-end scaling: regenerates the numbers behind Fig. 9
+//! (PCCP iterations) and Fig. 11 (runtime vs N) as benchmark output.
+
+use std::time::Duration;
+
+use ripra::models::ModelProfile;
+use ripra::optim::{alternating, AlternatingOptions, Scenario};
+use ripra::util::bench::Bencher;
+use ripra::util::rng::Rng;
+
+fn main() {
+    let mut bench =
+        Bencher::new().with_window(Duration::from_millis(300), Duration::from_secs(3));
+    for model in [ModelProfile::alexnet_paper(), ModelProfile::resnet152_paper()] {
+        let (b0, d, eps) = ripra::figures::default_setting(&model.name);
+        for n in [5usize, 10, 20, 30] {
+            let b = b0 * (n as f64 / 12.0).max(1.0);
+            let mut rng = Rng::new(0xBE + n as u64);
+            let sc = Scenario::uniform(&model, n, b, d, eps, &mut rng);
+            let r = bench.bench(&format!("alg2_{}_n{n}", model.name), || {
+                alternating::solve(&sc, &AlternatingOptions::default(), None)
+                    .map(|r| r.energy)
+                    .unwrap_or(f64::NAN)
+            });
+            let _ = r;
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Solver micro/meso benchmarks: the optimizer's hot paths.
+//!
+//! - Cholesky + barrier Newton micro-costs (the IPT inner loop)
+//! - resource allocation: joint barrier vs dual decomposition (ablation
+//!   for DESIGN.md §6 — the O(N^3) vs O(N log^2) trade)
+//! - per-device PCCP solve (Algorithm 1 unit of work)
+
+use ripra::linalg::{Cholesky, Matrix};
+use ripra::models::ModelProfile;
+use ripra::optim::types::{Policy, Scenario};
+use ripra::optim::{pccp, resource};
+use ripra::util::bench::Bencher;
+use ripra::util::rng::Rng;
+
+fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+    let mut b = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            b[(i, j)] = rng.normal();
+        }
+    }
+    let mut a = b.matmul(&b.transpose());
+    a.add_diag(n as f64);
+    a
+}
+
+fn main() {
+    let mut bench = Bencher::new();
+    let mut rng = Rng::new(1);
+
+    for n in [16usize, 64, 128] {
+        let a = random_spd(n, &mut rng);
+        let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        bench.bench(&format!("cholesky_factor_{n}"), || {
+            Cholesky::factor(&a).unwrap()
+        });
+        let c = Cholesky::factor(&a).unwrap();
+        bench.bench(&format!("cholesky_solve_{n}"), || c.solve(&rhs));
+    }
+
+    for n in [4usize, 12, 24] {
+        let mut srng = Rng::new(100 + n as u64);
+        let sc = Scenario::uniform(
+            &ModelProfile::alexnet_paper(),
+            n,
+            10e6 * (n as f64 / 12.0).max(1.0),
+            0.20,
+            0.04,
+            &mut srng,
+        );
+        let partition = vec![7usize; n];
+        bench.bench(&format!("resource_barrier_n{n}"), || {
+            resource::solve(&sc, &partition, Policy::Robust).unwrap().energy
+        });
+        bench.bench(&format!("resource_dual_n{n}"), || {
+            resource::solve_dual(&sc, &partition, Policy::Robust).unwrap().energy
+        });
+    }
+
+    {
+        let mut srng = Rng::new(7);
+        let sc =
+            Scenario::uniform(&ModelProfile::alexnet_paper(), 1, 10e6, 0.22, 0.04, &mut srng);
+        let opts = pccp::PccpOptions::default();
+        bench.bench("pccp_device_solve", || {
+            pccp::solve_device(&sc.devices[0], 1.0, 3e6, &opts, None).unwrap().m
+        });
+    }
+}

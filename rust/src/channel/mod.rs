@@ -1,0 +1,214 @@
+//! Wireless uplink substrate (FDMA, §III + §VI-A of the paper).
+//!
+//! Path loss `h_n = 38 + 30 log10(r_n)` dB (3GPP TR 36.931 pico cell),
+//! spectral efficiency `η = log2(1 + p h / (b N0))` — note the SNR depends
+//! on the allocated bandwidth `b` because the fixed transmit power is
+//! spread over the band, which is what makes `t_off = d / (b η(b))`
+//! strictly convex in `b` (perspective of a concave rate function).
+
+/// Physical-layer constants (paper §VI-A).
+pub const TX_POWER_W: f64 = 1.0;
+/// Noise PSD: −174 dBm/Hz in W/Hz.
+pub fn noise_psd_w_per_hz() -> f64 {
+    1e-3 * 10f64.powf(-174.0 / 10.0)
+}
+
+/// One device's uplink.
+#[derive(Clone, Copy, Debug)]
+pub struct Uplink {
+    /// Transmit power, W.
+    pub p_tx: f64,
+    /// Linear channel gain (not dB).
+    pub gain: f64,
+    /// Noise PSD, W/Hz.
+    pub n0: f64,
+}
+
+impl Uplink {
+    /// Build from a device↔edge distance using the paper's path-loss model.
+    pub fn from_distance(r_m: f64) -> Self {
+        assert!(r_m > 0.0);
+        let pl_db = 38.0 + 30.0 * r_m.log10();
+        Uplink { p_tx: TX_POWER_W, gain: 10f64.powf(-pl_db / 10.0), n0: noise_psd_w_per_hz() }
+    }
+
+    /// SNR at bandwidth b (Hz).
+    pub fn snr(&self, b_hz: f64) -> f64 {
+        self.p_tx * self.gain / (b_hz * self.n0)
+    }
+
+    /// Spectral efficiency η(b) = log2(1 + SNR), bits/s/Hz.
+    pub fn spectral_efficiency(&self, b_hz: f64) -> f64 {
+        (1.0 + self.snr(b_hz)).log2()
+    }
+
+    /// Uplink rate b·η(b), bits/s.
+    pub fn rate_bps(&self, b_hz: f64) -> f64 {
+        b_hz * self.spectral_efficiency(b_hz)
+    }
+
+    /// Offload time for `d_bits` at bandwidth b (eq. 3).
+    pub fn t_off(&self, d_bits: f64, b_hz: f64) -> f64 {
+        if d_bits == 0.0 {
+            return 0.0;
+        }
+        d_bits / self.rate_bps(b_hz)
+    }
+
+    /// Offload energy p · t_off (eq. 4).
+    pub fn e_off(&self, d_bits: f64, b_hz: f64) -> f64 {
+        self.p_tx * self.t_off(d_bits, b_hz)
+    }
+
+    /// d/dB of t_off — used by the fast dual-bisection resource solver.
+    /// t_off(b) = d / (b η(b));   d t_off/d b  < 0 (more bandwidth, faster).
+    pub fn t_off_derivative(&self, d_bits: f64, b_hz: f64) -> f64 {
+        // closed form: rate' = η(b) + b η'(b),
+        // η'(b) = -snr / (b (1+snr) ln 2).
+        let snr = self.snr(b_hz);
+        let eta = (1.0 + snr).log2();
+        let eta_p = -snr / (b_hz * (1.0 + snr) * std::f64::consts::LN_2);
+        let rate = b_hz * eta;
+        let rate_p = eta + b_hz * eta_p;
+        -d_bits * rate_p / (rate * rate)
+    }
+
+    /// d²/dB² of t_off — strictly positive (t_off is convex in b).
+    /// With c = p·gain/N0:  rate(b) = b·ln(1+c/b)/ln2,
+    /// rate'' = −c² / (b (b+c)² ln2),  and
+    /// t_off'' = d·(2·rate'² − rate·rate'') / rate³.
+    /// The analytic form matters: a finite difference of `t_off_derivative`
+    /// cancels catastrophically at small b and can go (wrongly) negative,
+    /// which breaks the Newton Hessian's positive-definiteness.
+    pub fn t_off_second_derivative(&self, d_bits: f64, b_hz: f64) -> f64 {
+        let c = self.p_tx * self.gain / self.n0;
+        let snr = c / b_hz;
+        let ln2 = std::f64::consts::LN_2;
+        let eta = (1.0 + snr).log2();
+        let rate = b_hz * eta;
+        let rate_p = eta - snr / ((1.0 + snr) * ln2);
+        let rate_pp = -c * c / (b_hz * (b_hz + c) * (b_hz + c) * ln2);
+        d_bits * (2.0 * rate_p * rate_p - rate * rate_pp) / (rate * rate * rate)
+    }
+}
+
+/// Place N devices uniformly at random in the paper's 400 m × 400 m square
+/// with the edge node at the center; returns device↔edge distances
+/// (min-clamped to 1 m so path loss stays finite).
+pub fn random_distances(n: usize, rng: &mut crate::util::rng::Rng) -> Vec<f64> {
+    (0..n)
+        .map(|_| {
+            let x = rng.range(-200.0, 200.0);
+            let y = rng.range(-200.0, 200.0);
+            (x * x + y * y).sqrt().max(1.0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn path_loss_reference_value() {
+        // r = 100 m: PL = 38 + 60 = 98 dB.
+        let u = Uplink::from_distance(100.0);
+        assert!((u.gain.log10() + 9.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rate_scale_sanity() {
+        // 100 m, 1 MHz: SNR ≈ 4e4, η ≈ 15.3 b/s/Hz, rate ≈ 15 Mbps.
+        let u = Uplink::from_distance(100.0);
+        let rate = u.rate_bps(1e6);
+        assert!(rate > 10e6 && rate < 20e6, "rate={rate}");
+    }
+
+    #[test]
+    fn t_off_monotone_decreasing_in_bandwidth() {
+        let u = Uplink::from_distance(150.0);
+        let d = 0.18 * 8e6; // AlexNet point 2
+        let mut last = f64::INFINITY;
+        for b in [0.2e6, 0.5e6, 1e6, 2e6, 5e6, 10e6] {
+            let t = u.t_off(d, b);
+            assert!(t < last, "b={b} t={t}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn t_off_convex_in_bandwidth() {
+        forall("t_off convex in b", 200, |rng| {
+            let u = Uplink::from_distance(rng.range(5.0, 280.0));
+            let d = rng.range(1e3, 3e7);
+            let b1 = rng.range(1e4, 2e7);
+            let b2 = rng.range(1e4, 2e7);
+            let lam = rng.f64();
+            let mid = lam * b1 + (1.0 - lam) * b2;
+            let lhs = u.t_off(d, mid);
+            let rhs = lam * u.t_off(d, b1) + (1.0 - lam) * u.t_off(d, b2);
+            if lhs <= rhs + 1e-9 * rhs.abs() + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("convexity violated: {lhs} > {rhs}"))
+            }
+        });
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        forall("t_off derivative", 100, |rng| {
+            let u = Uplink::from_distance(rng.range(10.0, 250.0));
+            let d = rng.range(1e4, 1e7);
+            let b = rng.range(1e5, 1e7);
+            let h = b * 1e-6;
+            let fd = (u.t_off(d, b + h) - u.t_off(d, b - h)) / (2.0 * h);
+            crate::util::check::close(u.t_off_derivative(d, b), fd, 1e-4, 1e-12)
+        });
+    }
+
+    #[test]
+    fn second_derivative_matches_finite_difference() {
+        forall("t_off second derivative", 100, |rng| {
+            let u = Uplink::from_distance(rng.range(10.0, 250.0));
+            let d = rng.range(1e4, 1e7);
+            let b = rng.range(1e5, 1e7);
+            let h = b * 1e-4;
+            let fd = (u.t_off_derivative(d, b + h) - u.t_off_derivative(d, b - h)) / (2.0 * h);
+            crate::util::check::close(u.t_off_second_derivative(d, b), fd, 1e-3, 1e-18)
+        });
+    }
+
+    #[test]
+    fn second_derivative_positive_even_at_tiny_bandwidth() {
+        // The convexity must hold numerically down to the barrier's
+        // b -> 0 region (this is where finite differences used to break).
+        let u = Uplink::from_distance(150.0);
+        for b in [1.0, 10.0, 1e3, 1e5, 1e7, 1e9] {
+            assert!(u.t_off_second_derivative(4e6, b) > 0.0, "b={b}");
+        }
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let u = Uplink::from_distance(75.0);
+        assert_eq!(u.e_off(1e6, 2e6), u.p_tx * u.t_off(1e6, 2e6));
+    }
+
+    #[test]
+    fn zero_payload_is_free() {
+        let u = Uplink::from_distance(75.0);
+        assert_eq!(u.t_off(0.0, 1e6), 0.0);
+        assert_eq!(u.e_off(0.0, 1e6), 0.0);
+    }
+
+    #[test]
+    fn distances_within_square() {
+        let mut rng = Rng::new(5);
+        let ds = random_distances(1000, &mut rng);
+        let max = 200.0f64 * std::f64::consts::SQRT_2;
+        assert!(ds.iter().all(|&d| d >= 1.0 && d <= max + 1e-9));
+    }
+}

@@ -1,0 +1,473 @@
+//! Serving coordinator: the L3 runtime that executes a robust plan on the
+//! real AOT artifacts.
+//!
+//! Topology (all std::thread + mpsc; PJRT handles are !Send so one
+//! *executor thread* owns the `runtime::Engine` and serializes
+//! executions, which is faithful to a single shared CPU/accelerator):
+//!
+//! ```text
+//!  device agent 0 ─┐ (local part exec req)        ┌─> executor thread
+//!  device agent 1 ─┼──────────────┐               │   (owns Engine,
+//!       ...        │              ├─> exec queue ─┤    device + edge
+//!  device agent N ─┘              │               │    parts, weights)
+//!        │ features (after link)  │               │
+//!        └────────> batcher ──────┘  batched edge execs
+//!                      │
+//!                      └──> completions → metrics collector (main)
+//! ```
+//!
+//! Each device agent: Poisson arrivals → local inference (real PJRT
+//! compute, padded up to the DVFS-model time so the planner's frequency
+//! choice matters) → simulated uplink (sleep t_off·time_scale) → feature
+//! handed to the batcher.  The batcher groups features per partition
+//! point and flushes full batches immediately or on a window timeout
+//! (vLLM-style dynamic batching); remainders run at batch 1.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::models::manifest::Role;
+use crate::optim::types::{Plan, Scenario};
+use crate::profile::{Dist, SyntheticHardware};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+use crate::util::stats::{percentile_of, Moments};
+
+/// Serving options.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Model name in the manifest.
+    pub model: String,
+    /// Requests each device issues.
+    pub requests_per_device: usize,
+    /// Per-device Poisson arrival rate (requests/s of *virtual* time).
+    pub arrival_rate_hz: f64,
+    /// Edge batching window.
+    pub batch_window: Duration,
+    /// Preferred edge batch size (must exist as an artifact batch).
+    pub max_batch: usize,
+    /// Scale for simulated (wireless / DVFS) sleeps: 1.0 = real time,
+    /// 0 = don't sleep (pure-compute stress mode).
+    pub time_scale: f64,
+    pub seed: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            model: "alexnet".into(),
+            requests_per_device: 20,
+            arrival_rate_hz: 20.0,
+            batch_window: Duration::from_millis(4),
+            max_batch: 8,
+            time_scale: 1.0,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Aggregate serving outcome.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub completed: usize,
+    /// Requests whose end-to-end latency exceeded the device deadline.
+    pub violations: usize,
+    pub wall_time: Duration,
+    pub throughput_rps: f64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Mean realized edge batch size.
+    pub mean_batch: f64,
+    /// Total modeled device energy (J), local + offload.
+    pub total_energy_j: f64,
+    /// Mean wall time of device-part PJRT executions.
+    pub mean_device_exec_s: f64,
+    /// Mean wall time of edge-part PJRT executions.
+    pub mean_edge_exec_s: f64,
+}
+
+// ---- internal messages -----------------------------------------------------
+
+enum ExecReq {
+    Device { m: usize, data: Vec<f32>, reply: mpsc::Sender<Result<Vec<f32>>> },
+    Edge { m: usize, batch: usize, data: Vec<f32>, reply: mpsc::Sender<Result<Vec<f32>>> },
+    Stop,
+}
+
+struct FeatureMsg {
+    device: usize,
+    m: usize,
+    feat: Vec<f32>,
+    started: Instant,
+    enqueued: Instant,
+    deadline_s: f64,
+}
+
+struct Completion {
+    #[allow(dead_code)] // used by richer per-device reporting in figures
+    device: usize,
+    latency_s: f64,
+    batch: usize,
+    deadline_s: f64,
+}
+
+/// Run the serving loop for one scenario + plan on real artifacts.
+pub fn serve(
+    artifacts_dir: PathBuf,
+    sc: &Scenario,
+    plan: &Plan,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    let n = sc.n();
+    assert_eq!(plan.partition.len(), n);
+    let used_points: Vec<usize> = {
+        let mut v = plan.partition.clone();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+
+    // ---- executor thread (owns all PJRT state) ---------------------------
+    let (exec_tx, exec_rx) = mpsc::channel::<ExecReq>();
+    let model_name = opts.model.clone();
+    let max_batch = opts.max_batch;
+    let num_blocks: usize = sc.devices[0].model.num_blocks();
+    let preload = used_points.clone();
+    let exec_handle = std::thread::spawn(move || -> Result<(f64, f64)> {
+        let engine = Engine::cpu(&artifacts_dir)?;
+        let mut rt = engine.model_runtime(&model_name)?;
+        // Pre-compile AND warm-run everything the plan can touch so
+        // serving latencies exclude compilation and first-run lazy init.
+        for &m in &preload {
+            if m > 0 {
+                let part = rt.load_part(Role::Device, m, 1)?;
+                let zeros = vec![0.0f32; part.input_shape.iter().product()];
+                part.run(&zeros)?;
+            }
+            if m < num_blocks {
+                for batch in [1, max_batch] {
+                    let part = rt.load_part(Role::Edge, m, batch)?;
+                    let zeros = vec![0.0f32; part.input_shape.iter().product()];
+                    part.run(&zeros)?;
+                }
+            }
+        }
+        let mut dev_acc = Moments::new();
+        let mut edge_acc = Moments::new();
+        while let Ok(msg) = exec_rx.recv() {
+            match msg {
+                ExecReq::Device { m, data, reply } => {
+                    let t0 = Instant::now();
+                    let r = rt.run_device(m, &data);
+                    dev_acc.push(t0.elapsed().as_secs_f64());
+                    let _ = reply.send(r);
+                }
+                ExecReq::Edge { m, batch, data, reply } => {
+                    let t0 = Instant::now();
+                    let r = rt.run_edge(m, batch, &data);
+                    edge_acc.push(t0.elapsed().as_secs_f64());
+                    let _ = reply.send(r);
+                }
+                ExecReq::Stop => break,
+            }
+        }
+        Ok((dev_acc.mean(), edge_acc.mean()))
+    });
+
+    // ---- batcher thread ---------------------------------------------------
+    let (feat_tx, feat_rx) = mpsc::channel::<FeatureMsg>();
+    let (done_tx, done_rx) = mpsc::channel::<Completion>();
+    let exec_tx_b = exec_tx.clone();
+    let window = opts.batch_window;
+    let num_blocks_b = num_blocks;
+    let done_tx_b = done_tx.clone();
+    let batcher = std::thread::spawn(move || {
+        let mut queues: HashMap<usize, Vec<FeatureMsg>> = HashMap::new();
+        let flush = |m: usize, q: &mut Vec<FeatureMsg>, want: usize| {
+            while !q.is_empty() {
+                let take = if q.len() >= want { want } else { 1 };
+                let group: Vec<FeatureMsg> = q.drain(..take).collect();
+                let flat: Vec<f32> =
+                    group.iter().flat_map(|g| g.feat.iter().copied()).collect();
+                let (rtx, rrx) = mpsc::channel();
+                if exec_tx_b
+                    .send(ExecReq::Edge { m, batch: take, data: flat, reply: rtx })
+                    .is_err()
+                {
+                    return;
+                }
+                let _scores = rrx.recv();
+                for g in group {
+                    let _ = done_tx_b.send(Completion {
+                        device: g.device,
+                        latency_s: g.started.elapsed().as_secs_f64(),
+                        batch: take,
+                        deadline_s: g.deadline_s,
+                    });
+                }
+            }
+        };
+        // Age-based flushing: a queue is flushed as soon as it reaches
+        // max_batch OR its *oldest* element has waited for `window`.
+        // (A plain recv_timeout(window) is wrong: under continuous
+        // arrivals the timeout never fires and sub-full batches starve.)
+        loop {
+            // deadline of the oldest queued feature across all queues
+            let next_flush = queues
+                .values()
+                .filter_map(|q| q.first())
+                .map(|f| f.enqueued + window)
+                .min();
+            let wait = match next_flush {
+                Some(t) => t.saturating_duration_since(Instant::now()),
+                None => window,
+            };
+            let msg = if wait.is_zero() {
+                feat_rx.try_recv().map_err(|e| match e {
+                    mpsc::TryRecvError::Empty => mpsc::RecvTimeoutError::Timeout,
+                    mpsc::TryRecvError::Disconnected => {
+                        mpsc::RecvTimeoutError::Disconnected
+                    }
+                })
+            } else {
+                feat_rx.recv_timeout(wait)
+            };
+            match msg {
+                Ok(msg) => {
+                    if msg.m >= num_blocks_b {
+                        // fully-local request: already has its result
+                        let _ = done_tx_b.send(Completion {
+                            device: msg.device,
+                            latency_s: msg.started.elapsed().as_secs_f64(),
+                            batch: 1,
+                            deadline_s: msg.deadline_s,
+                        });
+                    } else {
+                        let q = queues.entry(msg.m).or_default();
+                        q.push(msg);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    let ms: Vec<usize> = queues.keys().copied().collect();
+                    for m in ms {
+                        let mut q = queues.remove(&m).unwrap();
+                        flush(m, &mut q, max_batch);
+                    }
+                    break;
+                }
+            }
+            // flush full queues and overdue queues
+            let now = Instant::now();
+            let due: Vec<usize> = queues
+                .iter()
+                .filter(|(_, q)| {
+                    q.len() >= max_batch
+                        || q.first().map(|f| now >= f.enqueued + window).unwrap_or(false)
+                })
+                .map(|(&m, _)| m)
+                .collect();
+            for m in due {
+                let mut q = queues.remove(&m).unwrap();
+                flush(m, &mut q, max_batch);
+            }
+        }
+    });
+    drop(done_tx);
+
+    // ---- device agents ----------------------------------------------------
+    let t_start = Instant::now();
+    let mut agents = Vec::new();
+    let mut seed_rng = Rng::new(opts.seed);
+    let mut expected_energy = 0.0;
+    for i in 0..n {
+        let dev = sc.devices[i].clone();
+        let m = plan.partition[i];
+        let f = plan.freq_ghz[i];
+        let b = plan.bandwidth_hz[i];
+        expected_energy +=
+            dev.energy_mean(m, f, b) * opts.requests_per_device as f64;
+        let feat_tx = feat_tx.clone();
+        let exec_tx = exec_tx.clone();
+        let mut rng = seed_rng.fork(i as u64);
+        let reqs = opts.requests_per_device;
+        let rate = opts.arrival_rate_hz;
+        let scale = opts.time_scale;
+        let input_len = 32 * 32 * 3; // CIFAR input
+        agents.push(std::thread::spawn(move || {
+            let hw = SyntheticHardware::new(dev.model.clone(), Dist::Lognormal);
+            for _ in 0..reqs {
+                let gap = rng.exponential(rate);
+                if scale > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(gap * scale));
+                }
+                let started = Instant::now();
+                let input: Vec<f32> =
+                    (0..input_len).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+                // local part (real PJRT compute, padded to the DVFS model)
+                let feat = if m > 0 {
+                    let (rtx, rrx) = mpsc::channel();
+                    if exec_tx
+                        .send(ExecReq::Device { m, data: input.clone(), reply: rtx })
+                        .is_err()
+                    {
+                        return;
+                    }
+                    let Ok(Ok(feat)) = rrx.recv() else { return };
+                    let virtual_t = hw.sample_t_loc(m, f, &mut rng);
+                    let spent = started.elapsed().as_secs_f64();
+                    if scale > 0.0 && virtual_t * scale > spent {
+                        std::thread::sleep(Duration::from_secs_f64(
+                            virtual_t * scale - spent,
+                        ));
+                    }
+                    feat
+                } else {
+                    input
+                };
+                // uplink (simulated FDMA share)
+                let t_off = dev.uplink.t_off(dev.model.d_bits(m), b);
+                if scale > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(t_off * scale));
+                }
+                if feat_tx
+                    .send(FeatureMsg {
+                        device: i,
+                        m,
+                        feat,
+                        started,
+                        enqueued: Instant::now(),
+                        deadline_s: dev.deadline_s,
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+        }));
+    }
+    drop(feat_tx);
+
+    // ---- collect ------------------------------------------------------------
+    let expected = n * opts.requests_per_device;
+    let mut latencies = Vec::with_capacity(expected);
+    let mut batch_acc = Moments::new();
+    let mut violations = 0usize;
+    for c in done_rx {
+        // latency compared in scaled time: un-scale so the deadline check
+        // is in model time.
+        let lat = if opts.time_scale > 0.0 {
+            c.latency_s / opts.time_scale
+        } else {
+            c.latency_s
+        };
+        if lat > c.deadline_s {
+            violations += 1;
+        }
+        latencies.push(lat);
+        batch_acc.push(c.batch as f64);
+        if latencies.len() == expected {
+            break;
+        }
+    }
+    for a in agents {
+        a.join().map_err(|_| anyhow!("device agent panicked"))?;
+    }
+    // batcher exits when feat senders disconnect and queues drain
+    batcher.join().map_err(|_| anyhow!("batcher panicked"))?;
+    exec_tx.send(ExecReq::Stop).ok();
+    let (dev_exec, edge_exec) =
+        exec_handle.join().map_err(|_| anyhow!("executor panicked"))??;
+
+    let wall = t_start.elapsed();
+    let mean_latency = latencies.iter().sum::<f64>() / latencies.len().max(1) as f64;
+    Ok(ServeReport {
+        completed: latencies.len(),
+        violations,
+        wall_time: wall,
+        throughput_rps: latencies.len() as f64 / wall.as_secs_f64(),
+        mean_latency_s: mean_latency,
+        p50_latency_s: percentile_of(&latencies, 50.0),
+        p99_latency_s: percentile_of(&latencies, 99.0),
+        mean_batch: batch_acc.mean(),
+        total_energy_j: expected_energy,
+        mean_device_exec_s: dev_exec,
+        mean_edge_exec_s: edge_exec,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::manifest::Manifest;
+    use crate::models::ModelProfile;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    fn tiny_scenario() -> (Scenario, Plan) {
+        let mut rng = Rng::new(31);
+        let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 3, 10e6, 0.25, 0.05, &mut rng);
+        let plan = Plan {
+            partition: vec![2, 0, 8],
+            bandwidth_hz: vec![3e6, 3e6, 3e6],
+            freq_ghz: vec![1.0, 0.5, 1.2],
+        };
+        (sc, plan)
+    }
+
+    #[test]
+    fn serve_completes_all_requests() {
+        if !have_artifacts() {
+            return;
+        }
+        let (sc, plan) = tiny_scenario();
+        let opts = ServeOptions {
+            requests_per_device: 6,
+            arrival_rate_hz: 200.0,
+            time_scale: 0.0, // no sleeps: fast test, pure compute path
+            batch_window: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let r = serve(Manifest::default_dir(), &sc, &plan, &opts).unwrap();
+        assert_eq!(r.completed, 18);
+        assert!(r.throughput_rps > 0.0);
+        assert!(r.mean_device_exec_s >= 0.0);
+        assert!(r.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn serve_batches_under_load() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut rng = Rng::new(32);
+        let sc =
+            Scenario::uniform(&ModelProfile::alexnet_paper(), 6, 10e6, 0.25, 0.05, &mut rng);
+        // everyone offloads at the same point -> batchable
+        let plan = Plan {
+            partition: vec![2; 6],
+            bandwidth_hz: vec![1.5e6; 6],
+            freq_ghz: vec![1.0; 6],
+        };
+        let opts = ServeOptions {
+            requests_per_device: 16,
+            time_scale: 0.0,
+            batch_window: Duration::from_millis(30),
+            ..Default::default()
+        };
+        let r = serve(Manifest::default_dir(), &sc, &plan, &opts).unwrap();
+        assert_eq!(r.completed, 96);
+        assert!(
+            r.mean_batch > 1.2,
+            "expected batching under load, mean_batch={}",
+            r.mean_batch
+        );
+    }
+}

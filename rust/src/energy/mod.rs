@@ -1,0 +1,84 @@
+//! DVFS energy model (§III-B of the paper).
+//!
+//! Dynamic CMOS power is `α c V² f` with `V ≈ k f` in the non-low
+//! frequency range, giving power `κ f³` and local inference energy
+//! `e^loc = κ f³ t^loc` (eq. 2) with κ the chip-dependent coefficient
+//! measured via Tegrastats (0.8e-27 CPU / 2.8e-27 GPU, in W/(cycle/s)³ —
+//! so `f` enters in cycles/s, i.e. GHz × 1e9).
+
+/// Local compute power at frequency f (GHz): κ (f·1e9)³ watts.
+pub fn local_power_w(kappa: f64, f_ghz: f64) -> f64 {
+    let f_hz = f_ghz * 1e9;
+    kappa * f_hz * f_hz * f_hz
+}
+
+/// Local inference energy κ f³ t (eq. 2).
+pub fn e_loc(kappa: f64, f_ghz: f64, t_loc_s: f64) -> f64 {
+    local_power_w(kappa, f_ghz) * t_loc_s
+}
+
+/// Expected local energy with the eq-10 mean time model: κ f³ · w/(g f)
+/// = κ f² w/g — the f² form that appears in objectives (15)/(23a).
+pub fn e_loc_mean(kappa: f64, f_ghz: f64, w_gflops: f64, g_flops_cycle: f64) -> f64 {
+    if w_gflops == 0.0 {
+        return 0.0;
+    }
+    let f_hz = f_ghz * 1e9;
+    // t = w·1e9 / (g · f_hz); e = κ f³ t = κ f² · (w·1e9/g)
+    kappa * f_hz * f_hz * (w_gflops * 1e9 / g_flops_cycle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn jetson_cpu_power_scale() {
+        // κ = 0.8e-27, f = 1.2 GHz -> κ f³ ≈ 1.38 W (realistic CPU power).
+        let p = local_power_w(0.8e-27, 1.2);
+        assert!((p - 1.3824).abs() < 1e-3, "p={p}");
+    }
+
+    #[test]
+    fn jetson_gpu_power_scale() {
+        // κ = 2.8e-27, f = 0.8 GHz -> ≈ 1.43 W.
+        let p = local_power_w(2.8e-27, 0.8);
+        assert!((p - 1.43360).abs() < 1e-3, "p={p}");
+    }
+
+    #[test]
+    fn mean_energy_equals_power_times_mean_time() {
+        forall("e_loc_mean = κf³ · w/(g f)", 200, |rng| {
+            let kappa = rng.range(0.1e-27, 5e-27);
+            let f = rng.range(0.1, 2.0);
+            let w = rng.range(0.01, 30.0);
+            let g = rng.range(1.0, 400.0);
+            let t = w * 1e9 / (g * f * 1e9);
+            crate::util::check::close(
+                e_loc_mean(kappa, f, w, g),
+                e_loc(kappa, f, t),
+                1e-12,
+                1e-18,
+            )
+        });
+    }
+
+    #[test]
+    fn energy_monotone_in_frequency() {
+        // e ∝ f²: raising f always costs energy (the deadline is why you
+        // would).
+        let mut last = 0.0;
+        for i in 1..=12 {
+            let f = 0.1 * i as f64;
+            let e = e_loc_mean(0.8e-27, f, 1.4214, 7.1037);
+            assert!(e > last);
+            last = e;
+        }
+    }
+
+    #[test]
+    fn zero_workload_costs_nothing() {
+        assert_eq!(e_loc_mean(0.8e-27, 1.0, 0.0, 0.0), 0.0);
+    }
+}

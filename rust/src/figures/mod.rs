@@ -1,0 +1,655 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§VI) — see DESIGN.md §5 for the experiment index.  Each `figNN`
+//! function returns one or more [`Table`]s with the same series the
+//! paper plots; `run` dispatches by name and optionally writes CSVs.
+//!
+//! Absolute numbers come from our substrate (synthetic Jetson/RTX
+//! hardware + CPU-PJRT artifacts), so the *shapes* are the reproduction
+//! target: who wins, by what factor, where the crossovers sit.
+
+pub mod table;
+
+use std::path::Path;
+
+use crate::models::manifest::{Manifest, Role};
+use crate::models::ModelProfile;
+use crate::optim::{alternating, baselines, AlternatingOptions, Scenario};
+use crate::profile::{self, Dist, SyntheticHardware};
+use crate::sim::{self, SimOptions};
+use crate::util::rng::Rng;
+use crate::util::stats::Moments;
+
+pub use table::Table;
+
+/// Effort knob: `Quick` shrinks trial counts/sweeps for tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Effort {
+    Quick,
+    Full,
+}
+
+impl Effort {
+    fn trials(&self, full: usize) -> usize {
+        match self {
+            Effort::Quick => (full / 20).max(50),
+            Effort::Full => full,
+        }
+    }
+}
+
+fn both_models() -> [ModelProfile; 2] {
+    [ModelProfile::alexnet_paper(), ModelProfile::resnet152_paper()]
+}
+
+/// Paper §VI-A defaults per model: (bandwidth, deadline, risk) used by the
+/// energy/violation figures.  ResNet deadlines are shifted +30 ms vs the
+/// paper (120→150) — our VM/channel substrate makes the paper's exact
+/// value infeasible; see EXPERIMENTS.md.
+pub fn default_setting(model: &str) -> (f64, f64, f64) {
+    match model {
+        "alexnet" => (10e6, 0.18, 0.02),
+        _ => (30e6, 0.15, 0.04),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Characterization (Figs. 1, 3, 5, 6, 7 + Tables II-IV)
+// ---------------------------------------------------------------------------
+
+/// Table II: model/hardware pairing.
+pub fn table2() -> Vec<Table> {
+    let mut t = Table::new("table2", "Configurations of DNNs and hardware", &[
+        "model", "device", "f_range_GHz", "kappa", "vm", "vm_GFLOPs", "worst_dev_factor",
+    ]);
+    for m in both_models() {
+        t.push_row(vec![
+            m.name.clone(),
+            if m.name == "alexnet" {
+                "Jetson-NX-CPU (synthetic)".into()
+            } else {
+                "Jetson-NX-GPU (synthetic)".into()
+            },
+            format!("[{}, {}]", m.device.f_min_ghz, m.device.f_max_ghz),
+            format!("{:.1e}", m.device.kappa),
+            "RTX4080 (synthetic)".into(),
+            format!("{}", m.vm.gflops_per_sec),
+            format!("{}", m.worst_dev_factor),
+        ]);
+    }
+    vec![t]
+}
+
+/// Tables III & IV: per-point parameters — registry values side-by-side
+/// with re-profiled estimates from the synthetic hardware (the §IV
+/// pipeline: 500-trial mean + LM fit of g + max-over-frequency variance).
+pub fn table34(effort: Effort) -> Vec<Table> {
+    let mut out = Vec::new();
+    let mut rng = Rng::new(0x7AB7E);
+    for (id, model) in
+        [("table3", ModelProfile::alexnet_paper()), ("table4", ModelProfile::resnet152_paper())]
+    {
+        let hw = SyntheticHardware::new(model.clone(), Dist::Lognormal);
+        let freqs = profile::dvfs_grid(&model, 6);
+        let profs = profile::profile_model(&hw, &freqs, effort.trials(500), &mut rng);
+        let mut t = Table::new(
+            id,
+            &format!("{} per-point parameters (registry vs re-profiled)", model.name),
+            &[
+                "m",
+                "d_MB",
+                "w_GFLOPs",
+                "g_registry",
+                "g_fit",
+                "fit_sse",
+                "v_registry_ms2",
+                "v_measured_ms2",
+            ],
+        );
+        for m in 0..model.num_points() {
+            let p = &model.points[m];
+            let (g_fit, sse, v_meas) = if m == 0 {
+                (0.0, 0.0, 0.0)
+            } else {
+                let pp = &profs[m - 1];
+                (pp.g_fit, pp.fit_sse, pp.v_max)
+            };
+            t.push_nums(&[
+                m as f64,
+                p.d_mb,
+                p.w_gflops,
+                p.g_flops_cycle,
+                g_fit,
+                sse,
+                p.v_loc_s2 * 1e6,
+                v_meas * 1e6,
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig. 1: variation of full-model inference time (CPU vs GPU pairing).
+pub fn fig1(effort: Effort) -> Vec<Table> {
+    let mut t = Table::new(
+        "fig1",
+        "Inference-time variation, full model at f_max (500 trials)",
+        &["model", "mean_ms", "std_ms", "p95_ms", "max_ms", "max_dev_over_std"],
+    )
+    .with_notes("Paper: significant randomness; CPU worse than GPU; outliers far beyond p95.");
+    let mut rng = Rng::new(0xF161);
+    for model in both_models() {
+        let hw = SyntheticHardware::new(model.clone(), Dist::Lognormal);
+        let m = model.num_blocks();
+        let f = model.device.f_max_ghz;
+        let mut acc = Moments::new();
+        let mut samples = Vec::new();
+        for _ in 0..effort.trials(500) {
+            let s = hw.sample_t_loc(m, f, &mut rng);
+            acc.push(s);
+            samples.push(s);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p95 = crate::util::stats::percentile(&samples, 95.0);
+        t.push_row(vec![
+            model.name.clone(),
+            format!("{:.2}", acc.mean() * 1e3),
+            format!("{:.2}", acc.std() * 1e3),
+            format!("{:.2}", p95 * 1e3),
+            format!("{:.2}", acc.max() * 1e3),
+            format!("{:.2}", (acc.max() - acc.mean()) / acc.std()),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig. 3: per-block data size and GFLOPs — paper tables + the real
+/// compiled chains from the AOT manifest when present.
+pub fn fig3() -> Vec<Table> {
+    let mut out = Vec::new();
+    for model in both_models() {
+        let mut t = Table::new(
+            &format!("fig3_{}", model.name),
+            &format!("{}: offload size and cumulative GFLOPs per point", model.name),
+            &["m", "d_MB(paper)", "w_GFLOPs(paper)", "d_KB(artifact)", "w_GFLOPs(artifact)"],
+        )
+        .with_notes("Artifact columns come from artifacts/manifest.json (CIFAR-scale chains).");
+        let manifest = Manifest::load(&Manifest::default_dir()).ok();
+        let mm = manifest.as_ref().and_then(|m| m.model(&model.name).ok());
+        for m in 0..model.num_points() {
+            let (da, wa) = mm
+                .and_then(|mm| mm.points.get(m))
+                .map(|p| (p.d_bytes as f64 / 1e3, p.w_gflops))
+                .unwrap_or((f64::NAN, f64::NAN));
+            t.push_nums(&[m as f64, model.points[m].d_mb, model.points[m].w_gflops, da, wa]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig. 5: per-block inference time variation on the three platforms,
+/// plus the *real* per-part latency of the compiled artifacts on PJRT.
+pub fn fig5(effort: Effort) -> Vec<Table> {
+    let mut out = Vec::new();
+    let _rng = Rng::new(0xF5);
+    for model in both_models() {
+        let hw = SyntheticHardware::new(model.clone(), Dist::Lognormal);
+        let f = model.device.f_max_ghz;
+        let mut t = Table::new(
+            &format!("fig5_{}", model.name),
+            &format!("{}: per-block time at f_max across platforms", model.name),
+            &["block", "device_mean_ms", "device_std_ms", "vm_mean_ms", "pjrt_device_part_ms"],
+        )
+        .with_notes("pjrt column: real wall-clock of the compiled device part (cumulative).");
+        // real PJRT cumulative device-part latencies (best effort)
+        let probe: Vec<f64> = (|| -> anyhow::Result<Vec<f64>> {
+            let engine = crate::runtime::Engine::cpu(&Manifest::default_dir())?;
+            let mut rt = engine.model_runtime(&model.name)?;
+            let mut v = vec![0.0];
+            let iters = effort.trials(60).min(60);
+            for m in 1..model.num_points() {
+                let mut s = rt.probe_latency(Role::Device, m, 1, iters)?;
+                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v.push(crate::util::stats::percentile(&s, 50.0));
+            }
+            Ok(v)
+        })()
+        .unwrap_or_default();
+        for k in 1..model.num_points() {
+            // per-block std from the variance increment at f (shape-scaled)
+            let std_ms = hw.block_var(k, f).sqrt() * 1e3;
+            let vm_block = (model.t_vm_mean(k - 1) - model.t_vm_mean(k)).max(0.0);
+            t.push_nums(&[
+                k as f64,
+                hw.block_mean(k, f) * 1e3,
+                std_ms,
+                vm_block * 1e3,
+                probe.get(k).copied().unwrap_or(f64::NAN) * 1e3,
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig. 6: mean time vs frequency with the eq-10 LM fit + residuals.
+pub fn fig6(effort: Effort) -> Vec<Table> {
+    let mut out = Vec::new();
+    let mut rng = Rng::new(0xF6);
+    for model in both_models() {
+        let hw = SyntheticHardware::new(model.clone(), Dist::Lognormal);
+        let freqs = profile::dvfs_grid(&model, 8);
+        let profs = profile::profile_model(&hw, &freqs, effort.trials(500), &mut rng);
+        let mut t = Table::new(
+            &format!("fig6_{}", model.name),
+            &format!("{}: measured mean time vs frequency + w/(g·f) fit", model.name),
+            &["m", "f_GHz", "measured_ms", "fitted_ms", "g_fit", "sse"],
+        );
+        for pp in &profs {
+            let w = model.points[pp.m].w_gflops;
+            for (i, &f) in pp.freqs_ghz.iter().enumerate() {
+                t.push_nums(&[
+                    pp.m as f64,
+                    f,
+                    pp.mean_s[i] * 1e3,
+                    w / (pp.g_fit * f) * 1e3,
+                    pp.g_fit,
+                    pp.fit_sse,
+                ]);
+            }
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig. 7: variance of inference time vs frequency (non-monotonic).
+pub fn fig7(effort: Effort) -> Vec<Table> {
+    let mut out = Vec::new();
+    let mut rng = Rng::new(0xF7);
+    for model in both_models() {
+        let hw = SyntheticHardware::new(model.clone(), Dist::Lognormal);
+        let freqs = profile::dvfs_grid(&model, 8);
+        let profs = profile::profile_model(&hw, &freqs, effort.trials(500), &mut rng);
+        let mut t = Table::new(
+            &format!("fig7_{}", model.name),
+            &format!("{}: variance vs frequency (max rule -> v_table)", model.name),
+            &["m", "f_GHz", "var_ms2", "v_table_ms2"],
+        )
+        .with_notes("Variance peaks inside the DVFS range; eq-11 takes the max.");
+        for pp in &profs {
+            for (i, &f) in pp.freqs_ghz.iter().enumerate() {
+                t.push_nums(&[pp.m as f64, f, pp.var_s2[i] * 1e6, model.v_loc(pp.m) * 1e6]);
+            }
+        }
+        out.push(t);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Convergence / complexity (Figs. 9, 10, 11)
+// ---------------------------------------------------------------------------
+
+/// Fig. 9: average Algorithm-1 (PCCP) iterations vs number of devices.
+pub fn fig9(effort: Effort) -> Vec<Table> {
+    let ns: &[usize] = match effort {
+        Effort::Quick => &[5, 10],
+        Effort::Full => &[5, 10, 15, 20, 25, 30],
+    };
+    let mut t = Table::new(
+        "fig9",
+        "Average PCCP (Algorithm 1) iterations vs N",
+        &["N", "alexnet_iters", "resnet152_iters"],
+    )
+    .with_notes("Paper: terminates in a few iterations, nearly flat in N.");
+    for &n in ns {
+        let mut row = vec![n as f64];
+        for model in both_models() {
+            let (b, d, eps) = default_setting(&model.name);
+            // more devices need proportionally more bandwidth headroom
+            let b = b * (n as f64 / 12.0).max(1.0);
+            let mut rng = Rng::new(0xF19 + n as u64);
+            let sc = Scenario::uniform(&model, n, b, d, eps, &mut rng);
+            let it = alternating::solve(&sc, &AlternatingOptions::default(), None)
+                .map(|r| r.avg_pccp_iters)
+                .unwrap_or(f64::NAN);
+            row.push(it);
+        }
+        t.push_nums(&row);
+    }
+    vec![t]
+}
+
+/// Fig. 10: Algorithm-2 convergence trajectories from 3 initial points.
+pub fn fig10() -> Vec<Table> {
+    let mut out = Vec::new();
+    for model in both_models() {
+        let (b, d, eps) = default_setting(&model.name);
+        let d = if model.name == "alexnet" { 0.22 } else { d + 0.01 };
+        let mut rng = Rng::new(0xF10);
+        let sc = Scenario::uniform(&model, 6, b, d, eps, &mut rng);
+        let inits: Vec<usize> =
+            if model.name == "alexnet" { vec![3, 7, 8] } else { vec![1, 8, 9] };
+        let mut t = Table::new(
+            &format!("fig10_{}", model.name),
+            &format!("{}: objective per outer iteration from 3 initial points", model.name),
+            &["outer_iter", "init_a", "init_b", "init_c"],
+        )
+        .with_notes("Paper: fast early convergence, (nearly) the same final objective.");
+        let mut trajs = Vec::new();
+        for &p in &inits {
+            let init = vec![p.min(model.num_points() - 1); sc.n()];
+            let r = alternating::solve(&sc, &AlternatingOptions::default(), Some(init));
+            trajs.push(r.map(|r| r.trajectory).unwrap_or_default());
+        }
+        let len = trajs.iter().map(Vec::len).max().unwrap_or(0);
+        for i in 0..len {
+            let row: Vec<f64> = std::iter::once(i as f64)
+                .chain(trajs.iter().map(|tr| {
+                    tr.get(i).copied().unwrap_or_else(|| *tr.last().unwrap_or(&f64::NAN))
+                }))
+                .collect();
+            t.push_nums(&row);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig. 11: average Algorithm-2 runtime vs N.
+pub fn fig11(effort: Effort) -> Vec<Table> {
+    let ns: &[usize] = match effort {
+        Effort::Quick => &[5, 10],
+        Effort::Full => &[5, 10, 15, 20, 25, 30],
+    };
+    let reps = match effort {
+        Effort::Quick => 1,
+        Effort::Full => 3,
+    };
+    let mut t = Table::new(
+        "fig11",
+        "Average Algorithm-2 runtime vs N (seconds)",
+        &["N", "alexnet_s", "resnet152_s"],
+    )
+    .with_notes("Paper: linear growth in N despite the exponential search space.");
+    for &n in ns {
+        let mut row = vec![n as f64];
+        for model in both_models() {
+            let (b, d, eps) = default_setting(&model.name);
+            let b = b * (n as f64 / 12.0).max(1.0);
+            let mut acc = 0.0;
+            for rep in 0..reps {
+                let mut rng = Rng::new(0xF11 + n as u64 + rep as u64 * 977);
+                let sc = Scenario::uniform(&model, n, b, d, eps, &mut rng);
+                let t0 = std::time::Instant::now();
+                let _ = alternating::solve(&sc, &AlternatingOptions::default(), None);
+                acc += t0.elapsed().as_secs_f64();
+            }
+            row.push(acc / reps as f64);
+        }
+        t.push_nums(&row);
+    }
+    vec![t]
+}
+
+// ---------------------------------------------------------------------------
+// Energy / violation benchmarks (Figs. 12, 13, 14)
+// ---------------------------------------------------------------------------
+
+/// Fig. 12: energy vs N, proposed vs (multi-start) optimal.
+pub fn fig12(effort: Effort) -> Vec<Table> {
+    let ns: &[usize] = match effort {
+        Effort::Quick => &[2, 4],
+        Effort::Full => &[2, 4, 6, 8, 10, 12],
+    };
+    let mut out = Vec::new();
+    for model in both_models() {
+        // paper: AlexNet D=200 ms B=5 MHz, ResNet D=150 ms B=15 MHz; our
+        // channel substrate needs 2x the bandwidth at N=12 scale (see
+        // EXPERIMENTS.md).
+        let (b0, d, eps) = match model.name.as_str() {
+            "alexnet" => (10e6, 0.20, 0.02),
+            _ => (30e6, 0.16, 0.04),
+        };
+        let mut t = Table::new(
+            &format!("fig12_{}", model.name),
+            &format!("{}: total energy vs N — proposed vs optimal", model.name),
+            &["N", "proposed_J", "optimal_J", "gap_pct"],
+        )
+        .with_notes(
+            "optimal = exhaustive (N=2) / multi-start enumeration (documented substitution).\n\
+             Paper: proposed tracks optimal closely; energy grows with N.",
+        );
+        for &n in ns {
+            let mut rng = Rng::new(0xF12 + n as u64);
+            let sc = Scenario::uniform(&model, n, b0, d, eps, &mut rng);
+            let prop = alternating::solve_multistart(&sc, &AlternatingOptions::default(), &[])
+                .map(|r| r.energy)
+                .unwrap_or(f64::NAN);
+            let opt = if n == 2 {
+                baselines::exhaustive_optimal(&sc).map(|r| r.energy).unwrap_or(f64::NAN)
+            } else {
+                // best over both search families: the enumeration
+                // multi-start is itself a heuristic at N>2, so the best
+                // feasible plan seen anywhere is the optimum estimate.
+                baselines::multistart_optimal(&sc, 6, 0xF12)
+                    .map(|r| r.energy.min(prop))
+                    .unwrap_or(prop)
+            };
+            t.push_nums(&[n as f64, prop, opt, (prop - opt) / opt * 100.0]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Figs. 13(a)/14(a): energy vs risk level ε, robust vs worst-case.
+pub fn fig_energy_vs_risk(model: &ModelProfile) -> Table {
+    let (b, d, _) = default_setting(&model.name);
+    let n = 12;
+    let id = if model.name == "alexnet" { "fig13a" } else { "fig14a" };
+    let mut t = Table::new(
+        id,
+        &format!("{}: energy vs risk level (N=12)", model.name),
+        &["eps", "robust_J", "worst_case_J", "saving_pct"],
+    )
+    .with_notes(
+        "Paper: robust energy decreases monotonically in eps; worst-case flat.\n\
+         AlexNet: robust wins at all eps; ResNet152: worst-case wins at small eps\n\
+         (conservative eq-11/12 approximations), robust overtakes as eps grows.",
+    );
+    for eps in [0.02, 0.04, 0.06, 0.08] {
+        let mut rng = Rng::new(0xF13A);
+        let sc = Scenario::uniform(model, n, b, d, eps, &mut rng);
+        let rob = alternating::solve(&sc, &AlternatingOptions::default(), None)
+            .map(|r| r.energy)
+            .unwrap_or(f64::NAN);
+        let wc = baselines::worst_case(&sc).map(|r| r.energy).unwrap_or(f64::NAN);
+        t.push_nums(&[eps, rob, wc, (1.0 - rob / wc) * 100.0]);
+    }
+    t
+}
+
+/// Figs. 13(b)/14(b): energy vs deadline.
+pub fn fig_energy_vs_deadline(model: &ModelProfile) -> Table {
+    let (b, _, eps) = default_setting(&model.name);
+    let n = 12;
+    let (id, deadlines): (&str, Vec<f64>) = if model.name == "alexnet" {
+        ("fig13b", vec![0.16, 0.18, 0.20, 0.22, 0.24, 0.26, 0.28])
+    } else {
+        // paper sweeps 120..180 ms; shifted +30 ms (see EXPERIMENTS.md)
+        ("fig14b", vec![0.15, 0.16, 0.17, 0.18, 0.19, 0.20, 0.21])
+    };
+    let mut t = Table::new(
+        id,
+        &format!("{}: energy vs deadline (N=12, eps={eps})", model.name),
+        &["D_ms", "robust_J", "worst_case_J", "saving_pct"],
+    )
+    .with_notes("Paper: energy decreases monotonically as the deadline loosens.");
+    for d in deadlines {
+        let mut rng = Rng::new(0xF13B);
+        let sc = Scenario::uniform(model, n, b, d, eps, &mut rng);
+        let rob = alternating::solve(&sc, &AlternatingOptions::default(), None)
+            .map(|r| r.energy)
+            .unwrap_or(f64::NAN);
+        let wc = baselines::worst_case(&sc).map(|r| r.energy).unwrap_or(f64::NAN);
+        t.push_nums(&[d * 1e3, rob, wc, (1.0 - rob / wc) * 100.0]);
+    }
+    t
+}
+
+/// Figs. 13(c)/14(c): empirical deadline-violation probability vs ε.
+pub fn fig_violation(model: &ModelProfile, effort: Effort) -> Table {
+    let (b, _, _) = default_setting(&model.name);
+    let n = 12;
+    let (id, deadlines): (&str, [f64; 3]) = if model.name == "alexnet" {
+        ("fig13c", [0.16, 0.18, 0.20])
+    } else {
+        ("fig14c", [0.15, 0.17, 0.19])
+    };
+    let mut t = Table::new(
+        id,
+        &format!("{}: empirical violation probability vs risk level", model.name),
+        &["eps", "D1_viol", "D2_viol", "D3_viol", "mean_only_viol_D2"],
+    )
+    .with_notes(
+        "Monte-Carlo over the synthetic hardware (lognormal + spikes).\n\
+         Paper: violation stays below eps at every deadline.  mean_only\n\
+         column shows the unprotected policy for contrast.",
+    );
+    let trials = effort.trials(10_000);
+    for eps in [0.02, 0.04, 0.06, 0.08] {
+        let mut row = vec![eps];
+        for (i, &d) in deadlines.iter().enumerate() {
+            let mut rng = Rng::new(0xF13C + i as u64);
+            let sc = Scenario::uniform(model, n, b, d, eps, &mut rng);
+            let v = alternating::solve(&sc, &AlternatingOptions::default(), None)
+                .map(|r| {
+                    sim::evaluate(&sc, &r.plan, &SimOptions { trials, ..Default::default() })
+                        .worst_violation
+                })
+                .unwrap_or(f64::NAN);
+            row.push(v);
+        }
+        // mean-only contrast at the middle deadline
+        let mut rng = Rng::new(0xF13C + 1);
+        let sc = Scenario::uniform(model, n, b, deadlines[1], eps, &mut rng);
+        let v = baselines::mean_only(&sc)
+            .map(|r| {
+                sim::evaluate(&sc, &r.plan, &SimOptions { trials, ..Default::default() })
+                    .worst_violation
+            })
+            .unwrap_or(f64::NAN);
+        row.push(v);
+        t.push_nums(&row);
+    }
+    t
+}
+
+pub fn fig13(effort: Effort) -> Vec<Table> {
+    let m = ModelProfile::alexnet_paper();
+    vec![fig_energy_vs_risk(&m), fig_energy_vs_deadline(&m), fig_violation(&m, effort)]
+}
+
+pub fn fig14(effort: Effort) -> Vec<Table> {
+    let m = ModelProfile::resnet152_paper();
+    vec![fig_energy_vs_risk(&m), fig_energy_vs_deadline(&m), fig_violation(&m, effort)]
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+pub const ALL: &[&str] = &[
+    "table2", "table3", "table4", "fig1", "fig3", "fig5", "fig6", "fig7", "fig9", "fig10",
+    "fig11", "fig12", "fig13a", "fig13b", "fig13c", "fig14a", "fig14b", "fig14c",
+];
+
+/// Regenerate one named figure (or "all"); print and optionally save CSVs.
+pub fn run(name: &str, out_dir: Option<&Path>, effort: Effort) -> Result<Vec<Table>, String> {
+    let tables: Vec<Table> = match name {
+        "all" => {
+            let mut all = Vec::new();
+            for n in ALL {
+                // table3/table4 share one generator; avoid double work
+                if *n == "table4" {
+                    continue;
+                }
+                all.extend(run(n, out_dir, effort)?);
+            }
+            return Ok(all);
+        }
+        "table2" => table2(),
+        "table3" | "table4" => table34(effort),
+        "fig1" => fig1(effort),
+        "fig3" => fig3(),
+        "fig5" => fig5(effort),
+        "fig6" => fig6(effort),
+        "fig7" => fig7(effort),
+        "fig9" => fig9(effort),
+        "fig10" => fig10(),
+        "fig11" => fig11(effort),
+        "fig12" => fig12(effort),
+        "fig13" => fig13(effort),
+        "fig14" => fig14(effort),
+        "fig13a" => vec![fig_energy_vs_risk(&ModelProfile::alexnet_paper())],
+        "fig13b" => vec![fig_energy_vs_deadline(&ModelProfile::alexnet_paper())],
+        "fig13c" => vec![fig_violation(&ModelProfile::alexnet_paper(), effort)],
+        "fig14a" => vec![fig_energy_vs_risk(&ModelProfile::resnet152_paper())],
+        "fig14b" => vec![fig_energy_vs_deadline(&ModelProfile::resnet152_paper())],
+        "fig14c" => vec![fig_violation(&ModelProfile::resnet152_paper(), effort)],
+        other => return Err(format!("unknown figure {other:?}; have {ALL:?} or 'all'")),
+    };
+    for t in &tables {
+        t.print();
+        if let Some(dir) = out_dir {
+            t.save_csv(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn characterization_figures_quick() {
+        for name in ["table2", "table3", "fig1", "fig3", "fig7"] {
+            let tables = run(name, None, Effort::Quick).unwrap();
+            assert!(!tables.is_empty(), "{name}");
+            assert!(tables.iter().all(|t| !t.rows.is_empty()), "{name}");
+        }
+    }
+
+    #[test]
+    fn fig9_iterations_small() {
+        let t = &fig9(Effort::Quick)[0];
+        // a few iterations, not dozens (paper's Fig. 9 range)
+        for row in &t.rows {
+            let iters: f64 = row[1].parse().unwrap();
+            assert!(iters >= 1.0 && iters < 20.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn fig13a_shape_robust_monotone() {
+        let t = fig_energy_vs_risk(&ModelProfile::alexnet_paper());
+        let energies: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        for w in energies.windows(2) {
+            assert!(w[1] <= w[0] * 1.02, "robust energy not decreasing: {energies:?}");
+        }
+        // robust beats worst-case on AlexNet at every eps (paper's headline)
+        for row in &t.rows {
+            let saving: f64 = row[3].parse().unwrap();
+            assert!(saving > 0.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_figure_rejected() {
+        assert!(run("fig99", None, Effort::Quick).is_err());
+    }
+}

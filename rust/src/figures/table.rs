@@ -1,0 +1,137 @@
+//! Result table: the common output format of every figure/table
+//! regenerator (printed to stdout and optionally dumped as CSV).
+
+use std::io::Write;
+use std::path::Path;
+
+/// A labelled table of string cells.
+#[derive(Clone, Debug)]
+pub struct Table {
+    /// Identifier, e.g. "fig13a".
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form context (parameters, paper-expected shape).
+    pub notes: String,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Table {
+        Table {
+            id: id.into(),
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: String::new(),
+        }
+    }
+
+    pub fn with_notes(mut self, notes: &str) -> Table {
+        self.notes = notes.into();
+        self
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch in {}", self.id);
+        self.rows.push(cells);
+    }
+
+    /// Convenience for numeric rows.
+    pub fn push_nums(&mut self, cells: &[f64]) {
+        self.push_row(cells.iter().map(|x| format_num(*x)).collect());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.columns.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        println!("== {} — {}", self.id, self.title);
+        if !self.notes.is_empty() {
+            println!("   {}", self.notes.replace('\n', "\n   "));
+        }
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(c.len()))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let line = |cells: &[String]| {
+            let mut out = String::from("  ");
+            for (c, w) in cells.iter().zip(&widths) {
+                out.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            println!("{out}");
+        };
+        line(&self.columns);
+        for row in &self.rows {
+            line(row);
+        }
+        println!();
+    }
+
+    /// Write `<dir>/<id>.csv`.
+    pub fn save_csv(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{}.csv", self.id)))?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// Compact numeric formatting for table cells.
+pub fn format_num(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1e5 || x.abs() < 1e-3 {
+        format!("{x:.3e}")
+    } else if x.fract() == 0.0 {
+        format!("{x:.0}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new("t", "demo", &["a", "b"]);
+        t.push_nums(&[1.0, 2.5]);
+        t.push_row(vec!["x".into(), "y".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("a,b\n1,2.5000\n"), "{csv}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("t", "demo", &["a", "b"]);
+        t.push_nums(&[1.0]);
+    }
+
+    #[test]
+    fn num_formatting() {
+        assert_eq!(format_num(0.0), "0");
+        assert_eq!(format_num(12.0), "12");
+        assert_eq!(format_num(0.12345), "0.1235"); // rounded
+        assert!(format_num(1.0e7).contains('e'));
+    }
+}

@@ -1,0 +1,33 @@
+//! # RIPRA — Robust Inference Partitioning and Resource Allocation
+//!
+//! Reproduction of *"Robust DNN Partitioning and Resource Allocation
+//! Under Uncertain Inference Time"* (Nan, Han, Zhou, Niu; CS.DC 2025) as
+//! a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a robust planner
+//!   (chance-constrained programming + interior-point + penalty
+//!   convex-concave procedure) plus the serving coordinator it drives,
+//!   with every substrate built in-crate (dense linear algebra, convex
+//!   solver, PRNG/statistics, JSON, wireless channel, DVFS energy model,
+//!   Monte-Carlo uncertainty simulator).
+//! * **L2/L1 (python/compile)** — JAX block-chain models whose hot-spots
+//!   are Pallas kernels, AOT-lowered once to HLO text artifacts executed
+//!   here through the PJRT CPU client (`runtime`); python is never on the
+//!   request path.
+//!
+//! Start at [`optim::alternating`] (Algorithm 2) for the planner, or
+//! [`coordinator`] for the serving runtime.  `DESIGN.md` maps every paper
+//! table/figure to a module; `figures` regenerates them.
+
+pub mod channel;
+pub mod coordinator;
+pub mod energy;
+pub mod figures;
+pub mod linalg;
+pub mod models;
+pub mod optim;
+pub mod profile;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod util;

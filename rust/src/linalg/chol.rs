@@ -1,0 +1,197 @@
+//! Cholesky factorization + triangular solves.
+//!
+//! The barrier solver's Newton step factors the (positive-definite)
+//! barrier Hessian once per step and reuses the factor for the Schur
+//! complement of equality constraints, so the factorization owns its `L`
+//! and exposes repeated `solve` calls.  A regularized variant retries with
+//! growing diagonal jitter — near the central path's end the Hessian can
+//! become numerically semidefinite.
+
+use super::Matrix;
+
+/// Lower-triangular Cholesky factor: A = L Lᵀ.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Matrix,
+}
+
+/// Factorization failure (matrix not positive definite).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NotPositiveDefinite {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cholesky pivot {} is {:.3e} <= 0", self.pivot, self.value)
+    }
+}
+
+impl std::error::Error for NotPositiveDefinite {}
+
+impl Cholesky {
+    /// Plain factorization; fails if a pivot is non-positive.
+    pub fn factor(a: &Matrix) -> Result<Cholesky, NotPositiveDefinite> {
+        assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
+        let n = a.rows();
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        return Err(NotPositiveDefinite { pivot: i, value: sum });
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Factor `a + jitter*I`, growing jitter by 10x (up to `max_jitter`)
+    /// until the factorization succeeds.  Returns the used jitter.
+    pub fn factor_regularized(
+        a: &Matrix,
+        mut jitter: f64,
+        max_jitter: f64,
+    ) -> Result<(Cholesky, f64), NotPositiveDefinite> {
+        match Cholesky::factor(a) {
+            Ok(c) => return Ok((c, 0.0)),
+            Err(e) => {
+                if jitter <= 0.0 {
+                    return Err(e);
+                }
+            }
+        }
+        loop {
+            let mut b = a.clone();
+            b.add_diag(jitter);
+            match Cholesky::factor(&b) {
+                Ok(c) => return Ok((c, jitter)),
+                Err(e) => {
+                    jitter *= 10.0;
+                    if jitter > max_jitter {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// Solve A x = b in place (forward then backward substitution).
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        let n = self.l.rows();
+        debug_assert_eq!(x.len(), n);
+        // L y = b
+        for i in 0..n {
+            let mut sum = x[i];
+            let row = self.l.row(i);
+            for k in 0..i {
+                sum -= row[k] * x[k];
+            }
+            x[i] = sum / row[i];
+        }
+        // Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut sum = x[i];
+            for k in i + 1..n {
+                sum -= self.l[(k, i)] * x[k];
+            }
+            x[i] = sum / self.l[(i, i)];
+        }
+    }
+
+    /// log det A = 2 Σ log L_ii (used for diagnostics).
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    pub fn l(&self) -> &Matrix {
+        &self.l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+        // A = B Bᵀ + n*I is SPD.
+        let mut b = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = rng.normal();
+            }
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64);
+        a
+    }
+
+    #[test]
+    fn factor_and_solve_roundtrip() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 5, 20, 60] {
+            let a = random_spd(n, &mut rng);
+            let chol = Cholesky::factor(&a).unwrap();
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x_true);
+            let x = chol.solve(&b);
+            let err: f64 = x
+                .iter()
+                .zip(&x_true)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-8, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = Matrix::from_rows(&[
+            &[4.0, 2.0, 0.6],
+            &[2.0, 5.0, 1.0],
+            &[0.6, 1.0, 3.0],
+        ]);
+        let c = Cholesky::factor(&a).unwrap();
+        let recon = c.l().matmul(&c.l().transpose());
+        assert!(recon.max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalue -1
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn regularized_recovers() {
+        let a = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]); // singular
+        let (c, jitter) = Cholesky::factor_regularized(&a, 1e-10, 1.0).unwrap();
+        assert!(jitter > 0.0);
+        let x = c.solve(&[1.0, 1.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn log_det_known() {
+        let a = Matrix::from_rows(&[&[4.0, 0.0], &[0.0, 9.0]]);
+        let c = Cholesky::factor(&a).unwrap();
+        assert!((c.log_det() - (36.0f64).ln()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,282 @@
+//! `ripra` — CLI for the robust DNN-partitioning system.
+//!
+//! Subcommands (hand-rolled parsing; no clap offline):
+//!
+//! * `ripra plan    --model M --n N --bandwidth HZ --deadline S --risk E [--policy P]`
+//! * `ripra figure  <fig13a|...|all> [--out DIR] [--quick]`
+//! * `ripra serve   --model M --n N [--requests K] [--time-scale X]`
+//! * `ripra profile --model M [--trials T]`
+//! * `ripra selftest`
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use ripra::coordinator::{self, ServeOptions};
+use ripra::figures::{self, Effort};
+use ripra::models::manifest::Manifest;
+use ripra::models::ModelProfile;
+use ripra::optim::{alternating, baselines, AlternatingOptions, Policy, Scenario};
+use ripra::sim::{self, SimOptions};
+use ripra::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "usage: ripra <plan|figure|serve|profile|selftest> [options]\n\
+     \n\
+     plan     --model alexnet|resnet152 --n N [--bandwidth HZ] [--deadline S]\n\
+     \x20        [--risk E] [--policy robust|worst|mean] [--seed S] [--trials T]\n\
+     figure   <name|all> [--out DIR] [--quick]\n\
+     serve    --model alexnet|resnet152 [--n N] [--requests K] [--time-scale X]\n\
+     \x20        [--deadline S] [--risk E] [--bandwidth HZ] [--seed S]\n\
+     profile  [--model M] [--trials T]\n\
+     selftest"
+        .into()
+}
+
+/// `--key value` flags into a map; returns (positional, flags).
+fn parse_flags(args: &[String]) -> Result<(Vec<String>, HashMap<String, String>)> {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            // boolean flags
+            if key == "quick" {
+                flags.insert(key.to_string(), "true".into());
+                continue;
+            }
+            let v = it.next().ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+            flags.insert(key.to_string(), v.clone());
+        } else {
+            pos.push(a.clone());
+        }
+    }
+    Ok((pos, flags))
+}
+
+fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad number {v:?}")),
+    }
+}
+
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad integer {v:?}")),
+    }
+}
+
+fn model_of(flags: &HashMap<String, String>) -> Result<ModelProfile> {
+    let name = flags.get("model").map(String::as_str).unwrap_or("alexnet");
+    ModelProfile::by_name(name)
+        .ok_or_else(|| anyhow!("unknown model {name:?} (alexnet | resnet152)"))
+}
+
+fn scenario_of(flags: &HashMap<String, String>) -> Result<Scenario> {
+    let model = model_of(flags)?;
+    let (b_def, d_def, e_def) = figures::default_setting(&model.name);
+    let n = flag_usize(flags, "n", 12)?;
+    let b = flag_f64(flags, "bandwidth", b_def)?;
+    let d = flag_f64(flags, "deadline", d_def)?;
+    let eps = flag_f64(flags, "risk", e_def)?;
+    let seed = flag_usize(flags, "seed", 42)? as u64;
+    let mut rng = Rng::new(seed);
+    Ok(Scenario::uniform(&model, n, b, d, eps, &mut rng))
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else { bail!("{}", usage()) };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "plan" => cmd_plan(rest),
+        "figure" => cmd_figure(rest),
+        "serve" => cmd_serve(rest),
+        "profile" => cmd_profile(rest),
+        "selftest" => cmd_selftest(),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+fn cmd_plan(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args)?;
+    let sc = scenario_of(&flags)?;
+    let policy = flags.get("policy").map(String::as_str).unwrap_or("robust");
+    let trials = flag_usize(&flags, "trials", 10_000)?;
+
+    println!(
+        "scenario: {} devices, model={}, B={:.1} MHz, D={} ms, eps={}",
+        sc.n(),
+        sc.devices[0].model.name,
+        sc.total_bandwidth_hz / 1e6,
+        sc.devices[0].deadline_s * 1e3,
+        sc.devices[0].risk
+    );
+
+    let (plan, energy) = match policy {
+        "robust" => {
+            let r = alternating::solve(&sc, &AlternatingOptions::default(), None)
+                .map_err(|e| anyhow!(e.to_string()))?;
+            println!(
+                "Algorithm 2: {} outer iters, {:.2} avg PCCP iters, {} Newton steps",
+                r.outer_iters, r.avg_pccp_iters, r.newton_iters
+            );
+            (r.plan, r.energy)
+        }
+        "worst" => {
+            let r = baselines::worst_case(&sc).map_err(|e| anyhow!(e.to_string()))?;
+            (r.plan, r.energy)
+        }
+        "mean" => {
+            let r = baselines::mean_only(&sc).map_err(|e| anyhow!(e.to_string()))?;
+            (r.plan, r.energy)
+        }
+        other => bail!("unknown policy {other:?} (robust | worst | mean)"),
+    };
+
+    println!("expected total energy: {energy:.4} J");
+    println!("  dev  m   b_MHz   f_GHz   margin_ms");
+    for i in 0..sc.n() {
+        let d = &sc.devices[i];
+        println!(
+            "  {:>3} {:>2}  {:>6.3}  {:>6.3}  {:>9.2}",
+            i,
+            plan.partition[i],
+            plan.bandwidth_hz[i] / 1e6,
+            plan.freq_ghz[i],
+            d.deadline_margin(
+                plan.partition[i],
+                plan.freq_ghz[i],
+                plan.bandwidth_hz[i],
+                Policy::Robust
+            ) * 1e3
+        );
+    }
+
+    let rep = sim::evaluate(&sc, &plan, &SimOptions { trials, ..Default::default() });
+    println!(
+        "Monte-Carlo ({} trials): worst violation {:.4} (risk {}), mean energy {:.4} J",
+        trials, rep.worst_violation, sc.devices[0].risk, rep.mean_energy
+    );
+    Ok(())
+}
+
+fn cmd_figure(args: &[String]) -> Result<()> {
+    let (pos, flags) = parse_flags(args)?;
+    let name = pos.first().map(String::as_str).unwrap_or("all");
+    let out = flags.get("out").map(PathBuf::from);
+    let effort = if flags.contains_key("quick") { Effort::Quick } else { Effort::Full };
+    figures::run(name, out.as_deref(), effort).map_err(|e| anyhow!(e))?;
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args)?;
+    let mut f2 = flags.clone();
+    f2.entry("n".into()).or_insert_with(|| "6".into());
+    let sc = scenario_of(&f2)?;
+    let model = sc.devices[0].model.name.clone();
+    let r = alternating::solve(&sc, &AlternatingOptions::default(), None)
+        .map_err(|e| anyhow!(e.to_string()))?;
+    println!("plan: partition={:?}, energy {:.4} J", r.plan.partition, r.energy);
+
+    let opts = ServeOptions {
+        model,
+        requests_per_device: flag_usize(&flags, "requests", 20)?,
+        arrival_rate_hz: flag_f64(&flags, "rate", 8.0)?,
+        time_scale: flag_f64(&flags, "time-scale", 0.5)?,
+        batch_window: Duration::from_millis(flag_usize(&flags, "window-ms", 4)? as u64),
+        max_batch: 8,
+        seed: flag_usize(&flags, "seed", 7)? as u64,
+    };
+    let rep = coordinator::serve(Manifest::default_dir(), &sc, &r.plan, &opts)?;
+    println!(
+        "served {} requests in {:.2}s  ({:.1} req/s)",
+        rep.completed,
+        rep.wall_time.as_secs_f64(),
+        rep.throughput_rps
+    );
+    println!(
+        "latency (model-time): mean {:.1} ms  p50 {:.1} ms  p99 {:.1} ms; violations {}",
+        rep.mean_latency_s * 1e3,
+        rep.p50_latency_s * 1e3,
+        rep.p99_latency_s * 1e3,
+        rep.violations
+    );
+    println!(
+        "edge batching: mean batch {:.2}; PJRT exec: device {:.2} ms, edge {:.2} ms; energy {:.3} J",
+        rep.mean_batch,
+        rep.mean_device_exec_s * 1e3,
+        rep.mean_edge_exec_s * 1e3,
+        rep.total_energy_j
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args)?;
+    let model = model_of(&flags)?;
+    let trials = flag_usize(&flags, "trials", 500)?;
+    let hw =
+        ripra::profile::SyntheticHardware::new(model.clone(), ripra::profile::Dist::Lognormal);
+    let freqs = ripra::profile::dvfs_grid(&model, 6);
+    let mut rng = Rng::new(1);
+    let profs = ripra::profile::profile_model(&hw, &freqs, trials, &mut rng);
+    println!("{}: profiling ({} trials per point x frequency)", model.name, trials);
+    println!("  m   g_registry   g_fit     sse        v_table_ms2  v_meas_ms2");
+    for pp in &profs {
+        println!(
+            "  {:>2}  {:>10.4}  {:>8.4}  {:>9.2e}  {:>10.3}  {:>10.3}",
+            pp.m,
+            model.points[pp.m].g_flops_cycle,
+            pp.g_fit,
+            pp.fit_sse,
+            model.v_loc(pp.m) * 1e6,
+            pp.v_max * 1e6
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    // artifacts round-trip: load every model, run a split-vs-full check.
+    let dir = Manifest::default_dir();
+    println!("artifacts dir: {}", dir.display());
+    let engine = ripra::runtime::Engine::cpu(&dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    for name in ["alexnet", "resnet152"] {
+        let mut rt = engine.model_runtime(name)?;
+        let input: Vec<f32> = (0..32 * 32 * 3).map(|i| ((i % 13) as f32) / 13.0).collect();
+        let full = rt.run_edge(0, 1, &input)?;
+        let m = rt.model().num_blocks / 2;
+        let feat = rt.run_device(m, &input)?;
+        let split = rt.run_edge(m, 1, &feat)?;
+        let max_diff =
+            full.iter().zip(&split).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        println!("{name}: split(m={m}) vs full max |diff| = {max_diff:.2e}");
+        if max_diff > 1e-3 {
+            bail!("{name}: partition consistency failed");
+        }
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,317 @@
+//! AOT artifact manifest loader.
+//!
+//! `python/compile/aot.py` emits `artifacts/manifest.json` describing every
+//! lowered partition side (HLO text path, shapes, weight tensor names) plus
+//! the per-point `d_bytes` / cumulative-GFLOPs tables of the real compiled
+//! chains.  This module parses it (with the in-crate JSON parser) into
+//! typed structs for the runtime and the serving coordinator, and can
+//! translate a manifest model into a `ModelProfile` so the optimizer can
+//! plan directly against the real artifacts.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+use super::{DeviceHw, ModelProfile, PointParams, VmProfile};
+
+/// One lowered partition side.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub role: Role,
+    pub m: usize,
+    pub batch: usize,
+    /// HLO text path relative to the artifacts dir.
+    pub hlo: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// Weight tensor names (order = parameter order after the activation).
+    pub weight_names: Vec<String>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Role {
+    Device,
+    Edge,
+}
+
+/// Partition-point row from the manifest (real compiled chain).
+#[derive(Clone, Debug)]
+pub struct ManifestPoint {
+    pub m: usize,
+    pub d_bytes: usize,
+    pub w_gflops: f64,
+    pub feat_shape: Vec<usize>,
+}
+
+/// One model's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ManifestModel {
+    pub name: String,
+    pub num_blocks: usize,
+    pub input_shape: Vec<usize>,
+    pub weights_path: String,
+    pub points: Vec<ManifestPoint>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub block_gflops: Vec<f64>,
+    pub block_names: Vec<String>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: HashMap<String, ManifestModel>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| e.to_string())?;
+        let mut models = HashMap::new();
+        for (name, entry) in root.expect("models")?.as_obj().ok_or("models not an object")? {
+            models.insert(name.clone(), parse_model(name, entry)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    /// Default artifacts dir: `$RIPRA_ARTIFACTS` or `<crate>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("RIPRA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ManifestModel, String> {
+        self.models.get(name).ok_or_else(|| {
+            format!("model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>())
+        })
+    }
+}
+
+impl ManifestModel {
+    /// Find a lowered artifact by (role, m, batch).
+    pub fn artifact(&self, role: Role, m: usize, batch: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.role == role && a.m == m && a.batch == batch)
+    }
+
+    /// Edge batch sizes available for point m.
+    pub fn edge_batches(&self, m: usize) -> Vec<usize> {
+        let mut bs: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.role == Role::Edge && a.m == m)
+            .map(|a| a.batch)
+            .collect();
+        bs.sort_unstable();
+        bs
+    }
+
+    /// Translate into an optimizer-facing `ModelProfile`.
+    ///
+    /// The real chains are CIFAR-scale, so their absolute GFLOPs are tiny;
+    /// the profile keeps the real `d` and `w` shapes while hardware
+    /// throughput/variance are taken from the given device/vm profiles
+    /// (the planner only ever consumes mean/variance, so this is exactly
+    /// the paper's information model).
+    pub fn to_profile(&self, device: DeviceHw, vm: VmProfile, g_flops_cycle: f64,
+                      v_loc_full_s2: f64) -> ModelProfile {
+        let w_full = self.points.last().map(|p| p.w_gflops).max_by_or_zero();
+        let points = self
+            .points
+            .iter()
+            .map(|p| PointParams {
+                d_mb: p.d_bytes as f64 / 1e6,
+                w_gflops: p.w_gflops,
+                g_flops_cycle: if p.m == 0 { 0.0 } else { g_flops_cycle },
+                // Variance grows with the local share of the workload
+                // (same monotone trend as Tables III/IV).
+                v_loc_s2: if w_full > 0.0 {
+                    v_loc_full_s2 * p.w_gflops / w_full
+                } else {
+                    0.0
+                },
+            })
+            .collect();
+        ModelProfile {
+            name: self.name.clone(),
+            points,
+            device,
+            vm,
+            worst_dev_factor: 8.0,
+        }
+    }
+}
+
+trait MaxByOrZero {
+    fn max_by_or_zero(self) -> f64;
+}
+
+impl MaxByOrZero for Option<f64> {
+    fn max_by_or_zero(self) -> f64 {
+        self.unwrap_or(0.0)
+    }
+}
+
+fn parse_model(name: &str, entry: &Json) -> Result<ManifestModel, String> {
+    let num_blocks = entry
+        .expect("num_blocks")?
+        .as_usize()
+        .ok_or("num_blocks not an int")?;
+    let input_shape = entry
+        .expect("input_shape")?
+        .usize_array()
+        .ok_or("bad input_shape")?;
+    let weights_path = entry
+        .expect("weights")?
+        .as_str()
+        .ok_or("weights not a string")?
+        .to_string();
+
+    let mut points = Vec::new();
+    for p in entry.expect("points")?.as_arr().ok_or("points not an array")? {
+        points.push(ManifestPoint {
+            m: p.expect("m")?.as_usize().ok_or("bad m")?,
+            d_bytes: p.expect("d_bytes")?.as_usize().ok_or("bad d_bytes")?,
+            w_gflops: p.expect("w_gflops")?.as_f64().ok_or("bad w_gflops")?,
+            feat_shape: p.expect("feat_shape")?.usize_array().ok_or("bad feat_shape")?,
+        });
+    }
+    if points.len() != num_blocks + 1 {
+        return Err(format!(
+            "model {name}: {} points but {num_blocks} blocks",
+            points.len()
+        ));
+    }
+
+    let mut artifacts = Vec::new();
+    for a in entry.expect("artifacts")?.as_arr().ok_or("artifacts not an array")? {
+        let role = match a.expect("role")?.as_str() {
+            Some("device") => Role::Device,
+            Some("edge") => Role::Edge,
+            other => return Err(format!("bad role {other:?}")),
+        };
+        let weight_names = a
+            .expect("weight_names")?
+            .as_arr()
+            .ok_or("weight_names not an array")?
+            .iter()
+            .map(|x| x.as_str().map(str::to_string).ok_or("bad weight name"))
+            .collect::<Result<Vec<_>, _>>()?;
+        artifacts.push(ArtifactEntry {
+            role,
+            m: a.expect("m")?.as_usize().ok_or("bad m")?,
+            batch: a.expect("batch")?.as_usize().ok_or("bad batch")?,
+            hlo: a.expect("hlo")?.as_str().ok_or("hlo not a string")?.to_string(),
+            input_shape: a.expect("input_shape")?.usize_array().ok_or("bad input_shape")?,
+            output_shape: a
+                .expect("output_shape")?
+                .usize_array()
+                .ok_or("bad output_shape")?,
+            weight_names,
+        });
+    }
+
+    let mut block_gflops = Vec::new();
+    let mut block_names = Vec::new();
+    for b in entry.expect("blocks")?.as_arr().ok_or("blocks not an array")? {
+        block_gflops.push(b.expect("gflops")?.as_f64().ok_or("bad gflops")?);
+        block_names.push(
+            b.expect("name")?.as_str().ok_or("bad block name")?.to_string(),
+        );
+    }
+
+    Ok(ManifestModel {
+        name: name.to_string(),
+        num_blocks,
+        input_shape,
+        weights_path,
+        points,
+        artifacts,
+        block_gflops,
+        block_names,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else { return };
+        assert!(m.models.contains_key("alexnet"));
+        assert!(m.models.contains_key("resnet152"));
+        let a = m.model("alexnet").unwrap();
+        assert_eq!(a.num_blocks, 8);
+        assert_eq!(a.points.len(), 9);
+        assert_eq!(a.input_shape, vec![1, 32, 32, 3]);
+    }
+
+    #[test]
+    fn artifact_coverage_real_manifest() {
+        let Some(m) = manifest() else { return };
+        for model in m.models.values() {
+            for pt in 1..=model.num_blocks {
+                assert!(
+                    model.artifact(Role::Device, pt, 1).is_some(),
+                    "{} device m={pt}",
+                    model.name
+                );
+            }
+            for pt in 0..model.num_blocks {
+                assert!(!model.edge_batches(pt).is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn points_tables_are_consistent() {
+        let Some(m) = manifest() else { return };
+        for model in m.models.values() {
+            assert_eq!(model.points[0].w_gflops, 0.0);
+            for (i, p) in model.points.iter().enumerate() {
+                assert_eq!(p.m, i);
+                assert!(p.d_bytes > 0);
+            }
+            // cumulative gflops must match block sums
+            let total: f64 = model.block_gflops.iter().sum();
+            let last = model.points.last().unwrap().w_gflops;
+            assert!((total - last).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn to_profile_shapes() {
+        let Some(m) = manifest() else { return };
+        let a = m.model("alexnet").unwrap();
+        let prof = a.to_profile(
+            super::super::DeviceHw { f_min_ghz: 0.1, f_max_ghz: 1.2, kappa: 0.8e-27 },
+            super::super::VmProfile { gflops_per_sec: 100.0, time_cv: 0.05 },
+            7.0,
+            1e-4,
+        );
+        assert_eq!(prof.num_points(), a.points.len());
+        assert_eq!(prof.points[0].w_gflops, 0.0);
+        // variance monotone (same property as the paper tables)
+        for i in 1..prof.num_points() {
+            assert!(prof.v_loc(i) >= prof.v_loc(i - 1));
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent/nowhere")).is_err());
+    }
+}

@@ -1,0 +1,373 @@
+//! Algorithm 2: alternate the resource-allocation subproblem (16)/(23)
+//! and the PCCP partitioning subproblem (24)/(36) until the objective of
+//! problem (9) converges.
+//!
+//! Properties used by the figures:
+//! * Fig. 9 — `avg_pccp_iters` (Algorithm-1 iterations per device);
+//! * Fig. 10 — `trajectory` (objective after each outer iteration, from
+//!   arbitrary initial partitions);
+//! * Fig. 11 — wall-clock of [`solve`] vs N;
+//! * Fig. 12–14 — `energy` of the returned plan.
+
+use super::pccp::{self, PccpOptions};
+use super::resource::{self, ResourceError};
+use super::types::{Plan, Policy, Scenario};
+
+/// Algorithm 2 knobs.
+#[derive(Clone, Debug)]
+pub struct AlternatingOptions {
+    pub max_outer: usize,
+    /// Relative objective-change stopping threshold θ_err.
+    pub theta_err: f64,
+    pub pccp: PccpOptions,
+    /// Use the O(N) dual-decomposition resource solver instead of the
+    /// joint barrier (ablation; default false = paper's IPT).
+    pub dual_resource: bool,
+    /// Post-convergence single-device local search: try moving each device
+    /// to every alternative point with a resource re-solve and accept
+    /// improvements.  Escapes the alternation's coordinate-descent traps
+    /// so runs from different initial points converge to nearly the same
+    /// objective (the paper's Fig. 10 behaviour).  Costs O(N·M) barrier
+    /// solves per round (the joint barrier is ~0.5 ms at N=12 — measured
+    /// faster than the dual decomposition at every N we run, see
+    /// EXPERIMENTS.md §Perf).
+    pub polish: bool,
+}
+
+impl Default for AlternatingOptions {
+    fn default() -> Self {
+        AlternatingOptions {
+            max_outer: 20,
+            theta_err: 1e-4,
+            pccp: PccpOptions::default(),
+            dual_resource: false,
+            polish: true,
+        }
+    }
+}
+
+/// Algorithm 2 outcome.
+#[derive(Clone, Debug)]
+pub struct RobustPlan {
+    pub plan: Plan,
+    /// Final expected total energy (objective (9a)).
+    pub energy: f64,
+    pub outer_iters: usize,
+    /// Objective value after each outer iteration (Fig. 10).
+    pub trajectory: Vec<f64>,
+    /// Mean Algorithm-1 iterations per device, averaged over outer
+    /// iterations (Fig. 9).
+    pub avg_pccp_iters: f64,
+    /// Total Newton iterations across every inner solve.
+    pub newton_iters: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum PlanError {
+    /// No partition assignment admits feasible resources.
+    Infeasible(String),
+    Solver(String),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Infeasible(s) => write!(f, "scenario infeasible: {s}"),
+            PlanError::Solver(s) => write!(f, "solver failure: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Heuristic initial partition: per device, the point minimizing the mean
+/// total time at f_max with an equal bandwidth share — the most
+/// feasibility-friendly start (used when the caller gives none).
+pub fn heuristic_partition(sc: &Scenario) -> Vec<usize> {
+    let b_each = sc.total_bandwidth_hz / sc.n() as f64;
+    sc.devices
+        .iter()
+        .map(|d| {
+            (0..d.model.num_points())
+                .min_by(|&a, &b| {
+                    let ta = d.t_total_mean(a, d.model.device.f_max_ghz, b_each)
+                        + d.margin(a, Policy::Robust);
+                    let tb = d.t_total_mean(b, d.model.device.f_max_ghz, b_each)
+                        + d.margin(b, Policy::Robust);
+                    ta.partial_cmp(&tb).unwrap()
+                })
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Run Algorithm 2.  `init_partition` overrides the heuristic start
+/// (Fig. 10 sweeps it).
+pub fn solve(
+    sc: &Scenario,
+    opts: &AlternatingOptions,
+    init_partition: Option<Vec<usize>>,
+) -> Result<RobustPlan, PlanError> {
+    let mut partition = init_partition.unwrap_or_else(|| heuristic_partition(sc));
+    assert_eq!(partition.len(), sc.n());
+
+    let resource_solve = |x: &[usize]| -> Result<resource::ResourceSolution, ResourceError> {
+        if opts.dual_resource {
+            resource::solve_dual(sc, x, Policy::Robust)
+        } else {
+            resource::solve(sc, x, Policy::Robust)
+        }
+    };
+
+    // Initial resources; if the starting partition is infeasible fall back
+    // to the fastest-time heuristic, then fail.
+    let mut res = match resource_solve(&partition) {
+        Ok(r) => r,
+        Err(_) => {
+            partition = heuristic_partition(sc);
+            resource_solve(&partition).map_err(|e| PlanError::Infeasible(e.to_string()))?
+        }
+    };
+
+    let mut trajectory = vec![res.energy];
+    let mut newton = res.newton_iters;
+    let mut pccp_iter_sum = 0.0;
+    let mut outer = 0;
+
+    for k in 0..opts.max_outer {
+        outer = k + 1;
+        // -- partitioning step (Algorithm 1 at fixed resources; the paper
+        // re-initializes Algorithm 1 each call — no warm lock-in) ----------
+        let part = pccp::solve(sc, &res.freq_ghz, &res.bandwidth_hz, &opts.pccp, None)
+            .map_err(|e| PlanError::Solver(e.to_string()))?;
+        pccp_iter_sum += part.avg_iters;
+        newton += part.newton_iters;
+
+        // -- resource step at the new partition ----------------------------
+        let new_res = match resource_solve(&part.partition) {
+            Ok(r) => r,
+            // PCCP's rounding can rarely produce a jointly infeasible
+            // bandwidth demand; keep the previous iterate and stop.
+            Err(_) => break,
+        };
+
+        let prev = *trajectory.last().unwrap();
+        let changed = part.partition != partition;
+        partition = part.partition;
+        res = new_res;
+        newton += res.newton_iters;
+        trajectory.push(res.energy);
+
+        let rel = (prev - res.energy).abs() / prev.abs().max(1e-12);
+        if !changed || rel < opts.theta_err {
+            break;
+        }
+    }
+
+    // -- polish: single-device improvement moves (fast dual re-solves) -----
+    if opts.polish {
+        let mut rounds = 0;
+        loop {
+            rounds += 1;
+            let mut improved = false;
+            for i in 0..sc.n() {
+                let mp1 = sc.devices[i].model.num_points();
+                let current = partition[i];
+                for m in 0..mp1 {
+                    if m == current || partition[i] == m {
+                        continue;
+                    }
+                    let mut cand = partition.clone();
+                    cand[i] = m;
+                    if let Ok(r) = resource::solve(sc, &cand, Policy::Robust) {
+                        if r.energy < res.energy * (1.0 - 1e-6) {
+                            partition = cand;
+                            res = r;
+                            improved = true;
+                        }
+                    }
+                }
+            }
+            if improved {
+                trajectory.push(res.energy);
+            }
+            if !improved || rounds >= 5 {
+                break;
+            }
+        }
+        // Final high-precision resource solve at the polished partition.
+        if let Ok(r) = resource_solve(&partition) {
+            if r.energy <= res.energy * (1.0 + 1e-6) {
+                res = r;
+            }
+        }
+    }
+
+    let plan = Plan {
+        partition,
+        bandwidth_hz: res.bandwidth_hz.clone(),
+        freq_ghz: res.freq_ghz.clone(),
+    };
+    debug_assert!(plan.bandwidth_ok(sc));
+    Ok(RobustPlan {
+        energy: res.energy,
+        plan,
+        outer_iters: outer,
+        avg_pccp_iters: if outer > 0 { pccp_iter_sum / outer as f64 } else { 0.0 },
+        trajectory,
+        newton_iters: newton,
+    })
+}
+
+/// Run Algorithm 2 from several structurally different initial partitions
+/// and keep the best plan.  Algorithm 2 is a coordinate-descent scheme, so
+/// individual runs can stop at local optima; a handful of starts recovers
+/// the near-optimal behaviour the paper reports in Fig. 12 while staying
+/// polynomial (starts × Algorithm-2 cost).
+pub fn solve_multistart(
+    sc: &Scenario,
+    opts: &AlternatingOptions,
+    extra_starts: &[Vec<usize>],
+) -> Result<RobustPlan, PlanError> {
+    let mut inits: Vec<Option<Vec<usize>>> = vec![
+        None,                       // heuristic (fastest margin-adjusted time)
+        Some(vec![0; sc.n()]),      // full offload
+    ];
+    // cheapest feasible one-hot per device at equal share / f_max
+    let b_each = sc.total_bandwidth_hz / sc.n() as f64;
+    let cheap: Vec<usize> = sc
+        .devices
+        .iter()
+        .map(|d| {
+            let f = d.model.device.f_max_ghz;
+            (0..d.model.num_points())
+                .filter(|&m| d.deadline_ok(m, f, b_each, Policy::Robust))
+                .min_by(|&a, &b| {
+                    d.energy_mean(a, f, b_each)
+                        .partial_cmp(&d.energy_mean(b, f, b_each))
+                        .unwrap()
+                })
+                .unwrap_or(0)
+        })
+        .collect();
+    inits.push(Some(cheap));
+    inits.extend(extra_starts.iter().cloned().map(Some));
+
+    let mut best: Option<RobustPlan> = None;
+    let mut last_err: Option<PlanError> = None;
+    for init in inits {
+        match solve(sc, opts, init) {
+            Ok(p) => {
+                if best.as_ref().map_or(true, |b| p.energy < b.energy) {
+                    best = Some(p);
+                }
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    best.ok_or_else(|| last_err.unwrap_or_else(|| PlanError::Infeasible("no start".into())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelProfile;
+    use crate::util::rng::Rng;
+
+    fn scenario(model: &ModelProfile, n: usize, b: f64, d: f64, eps: f64, seed: u64) -> Scenario {
+        let mut rng = Rng::new(seed);
+        Scenario::uniform(model, n, b, d, eps, &mut rng)
+    }
+
+    #[test]
+    fn alexnet_paper_setting_solves() {
+        // Fig. 13 setting: N=12, B=10 MHz, D=180 ms, ε=0.02.
+        let sc = scenario(&ModelProfile::alexnet_paper(), 12, 10e6, 0.18, 0.02, 7);
+        let r = solve(&sc, &AlternatingOptions::default(), None).unwrap();
+        assert!(r.plan.feasible(&sc, Policy::Robust));
+        assert!(r.plan.bandwidth_ok(&sc));
+        assert!(r.plan.freq_ok(&sc));
+        assert!(r.energy > 0.0 && r.energy < 10.0, "energy={}", r.energy);
+    }
+
+    #[test]
+    fn resnet_paper_setting_solves() {
+        // Fig. 14 setting (deadline shifted 120→150 ms: our VM/channel
+        // substrate makes 120 ms infeasible — see EXPERIMENTS.md).
+        let sc = scenario(&ModelProfile::resnet152_paper(), 12, 30e6, 0.15, 0.04, 8);
+        let r = solve(&sc, &AlternatingOptions::default(), None).unwrap();
+        assert!(r.plan.feasible(&sc, Policy::Robust));
+        assert!(r.energy > 0.0, "energy={}", r.energy);
+    }
+
+    #[test]
+    fn objective_trajectory_is_nonincreasing_after_first_step() {
+        let sc = scenario(&ModelProfile::alexnet_paper(), 8, 10e6, 0.2, 0.04, 9);
+        let r = solve(&sc, &AlternatingOptions::default(), None).unwrap();
+        for w in r.trajectory.windows(2).skip(1) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-6), "trajectory={:?}", r.trajectory);
+        }
+    }
+
+    #[test]
+    fn different_initial_points_converge_close() {
+        // Fig. 10's claim: Algorithm 2 converges to (almost) the same
+        // objective from different initial partitions.
+        let sc = scenario(&ModelProfile::alexnet_paper(), 6, 10e6, 0.22, 0.02, 10);
+        let m = sc.devices[0].model.num_points();
+        let energies: Vec<f64> = [3usize, 7, 8]
+            .iter()
+            .map(|&p| {
+                solve(&sc, &AlternatingOptions::default(), Some(vec![p.min(m - 1); 6]))
+                    .unwrap()
+                    .energy
+            })
+            .collect();
+        let min = energies.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = energies.iter().cloned().fold(0.0, f64::max);
+        // Fig. 10's qualitative claim; coordinate descent admits a small
+        // spread between basins on random geometry.
+        assert!(
+            (max - min) / min < 0.25,
+            "initial-point sensitivity too high: {energies:?}"
+        );
+    }
+
+    #[test]
+    fn infeasible_scenario_reports_error() {
+        let sc = scenario(&ModelProfile::alexnet_paper(), 6, 10e6, 0.004, 0.02, 11);
+        assert!(matches!(
+            solve(&sc, &AlternatingOptions::default(), None),
+            Err(PlanError::Infeasible(_))
+        ));
+    }
+
+    #[test]
+    fn dual_resource_variant_agrees() {
+        let sc = scenario(&ModelProfile::alexnet_paper(), 6, 10e6, 0.22, 0.04, 12);
+        let a = solve(&sc, &AlternatingOptions::default(), None).unwrap();
+        let b = solve(
+            &sc,
+            &AlternatingOptions { dual_resource: true, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        assert!(
+            (a.energy - b.energy).abs() / a.energy < 0.05,
+            "barrier {} vs dual {}",
+            a.energy,
+            b.energy
+        );
+    }
+
+    #[test]
+    fn energy_monotone_in_deadline() {
+        let mut last = f64::INFINITY;
+        for d in [0.17, 0.20, 0.24, 0.28] {
+            let sc = scenario(&ModelProfile::alexnet_paper(), 8, 10e6, d, 0.02, 13);
+            let r = solve(&sc, &AlternatingOptions::default(), None).unwrap();
+            assert!(r.energy <= last * 1.02, "D={d}: {} > {last}", r.energy);
+            last = r.energy;
+        }
+    }
+}

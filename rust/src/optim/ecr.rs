@@ -1,0 +1,150 @@
+//! Exact Conic Reformulation of chance constraints (Theorem 1, from Li et
+//! al., "Coping uncertainty in coexistence via exploitation of
+//! interference threshold violation", MobiHoc'19).
+//!
+//! For a random vector λ with known mean λ̄ and covariance C (distribution
+//! unknown),
+//!
+//! ```text
+//!   P{ aᵀλ ≤ z } ≥ 1 − ε    ⟺    aᵀλ̄ + √((1−ε)/ε) · √(aᵀCa) ≤ z
+//! ```
+//!
+//! where the ⟸ direction holds for *every* distribution with those
+//! moments (one-sided Chebyshev / Cantelli), and ⟹ holds because the
+//! bound is achieved by a worst-case two-point distribution — hence
+//! "exact": no conservatism is added in the optimization space beyond
+//! what moment information alone permits.
+
+/// σ(ε) = √((1−ε)/ε).
+pub fn sigma(eps: f64) -> f64 {
+    assert!(eps > 0.0 && eps < 1.0, "risk level must be in (0,1), got {eps}");
+    ((1.0 - eps) / eps).sqrt()
+}
+
+/// LHS of the deterministic reformulation: aᵀλ̄ + σ(ε)·√(aᵀCa) for the
+/// already-aggregated scalars (mean of the sum, variance of the sum).
+pub fn ecr_lhs(mean_sum: f64, var_sum: f64, eps: f64) -> f64 {
+    mean_sum + sigma(eps) * var_sum.max(0.0).sqrt()
+}
+
+/// The deterministic constraint (18): `ecr_lhs ≤ z`.
+pub fn ecr_holds(mean_sum: f64, var_sum: f64, eps: f64, z: f64) -> bool {
+    ecr_lhs(mean_sum, var_sum, eps) <= z
+}
+
+/// Cantelli bound: for any distribution with the given moments,
+/// P{X > z} ≤ var / (var + (z − mean)²) when z > mean.  This is the
+/// guarantee the ECR constraint enforces; the Monte-Carlo tests check
+/// empirical violation probabilities against it.
+pub fn cantelli_violation_bound(mean: f64, var: f64, z: f64) -> f64 {
+    if z <= mean {
+        return 1.0;
+    }
+    let d = z - mean;
+    (var / (var + d * d)).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sigma_reference_values() {
+        // ε = 0.02 → σ = √49 = 7;  ε = 0.5 → σ = 1.
+        assert!((sigma(0.02) - 7.0).abs() < 1e-12);
+        assert!((sigma(0.5) - 1.0).abs() < 1e-12);
+        assert!((sigma(0.1) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sigma_rejects_zero_risk() {
+        sigma(0.0);
+    }
+
+    #[test]
+    fn ecr_iff_cantelli_threshold() {
+        // ECR holds exactly when the Cantelli violation bound ≤ ε.
+        forall("ECR <-> Cantelli", 500, |rng| {
+            let mean = rng.range(0.01, 1.0);
+            let var = rng.range(1e-6, 0.05);
+            let z = rng.range(0.01, 2.0);
+            let eps = rng.range(0.005, 0.3);
+            let lhs_ok = ecr_holds(mean, var, eps, z);
+            let cantelli_ok = cantelli_violation_bound(mean, var, z) <= eps + 1e-12;
+            if lhs_ok == cantelli_ok {
+                Ok(())
+            } else {
+                Err(format!(
+                    "mismatch: ecr={lhs_ok} cantelli={cantelli_ok} \
+                     (mean={mean} var={var} z={z} eps={eps})"
+                ))
+            }
+        });
+    }
+
+    #[test]
+    fn empirical_violation_below_risk_when_ecr_holds() {
+        // Sample from several mean/variance-matching distributions; when
+        // the ECR constraint holds, the empirical violation must be ≤ ε.
+        let trials = 40_000;
+        forall("ECR guarantee", 12, |rng| {
+            let mean = rng.range(0.05, 0.3);
+            let var = rng.range(1e-5, 2e-3);
+            let eps = rng.range(0.02, 0.2);
+            // choose z exactly at the ECR boundary + small slack
+            let z = ecr_lhs(mean, var, eps) * 1.001;
+            let kind = rng.below(3);
+            let mut viol = 0u32;
+            for _ in 0..trials {
+                let t = match kind {
+                    0 => rng.lognormal_mv(mean, var),
+                    1 => rng.gamma_mv(mean, var),
+                    _ => {
+                        let sd = var.sqrt();
+                        let shift = (mean - sd).max(0.0);
+                        shift + rng.exponential(1.0 / (mean - shift))
+                    }
+                };
+                if t > z {
+                    viol += 1;
+                }
+            }
+            let p = viol as f64 / trials as f64;
+            if p <= eps {
+                Ok(())
+            } else {
+                Err(format!("violation {p} > eps {eps} (kind={kind})"))
+            }
+        });
+    }
+
+    #[test]
+    fn ecr_is_tight_for_two_point_distribution() {
+        // The worst-case two-point distribution achieves the bound: mass
+        // 1−ε at a, mass ε at b with matching moments violates z just at ε.
+        let (mean, var, eps) = (0.1, 4e-4, 0.05);
+        let s = sigma(eps);
+        // two-point: a = mean − √(var·ε/(1−ε)), b = mean + √(var(1−ε)/ε)
+        let a = mean - (var * eps / (1.0 - eps)).sqrt();
+        let b = mean + (var * (1.0 - eps) / eps).sqrt();
+        // check moments
+        let m = (1.0 - eps) * a + eps * b;
+        let v = (1.0 - eps) * (a - m).powi(2) + eps * (b - m).powi(2);
+        assert!((m - mean).abs() < 1e-12);
+        assert!((v - var).abs() < 1e-12);
+        // b sits exactly at the ECR threshold mean + σ√var
+        assert!((b - (mean + s * var.sqrt())).abs() < 1e-12);
+        // so any z < b is violated with probability exactly ε:
+        let mut rng = Rng::new(1);
+        let z = b - 1e-9;
+        let trials = 200_000;
+        let viol = (0..trials)
+            .filter(|_| (if rng.f64() < eps { b } else { a }) > z)
+            .count() as f64
+            / trials as f64;
+        assert!((viol - eps).abs() < 0.004, "viol={viol}");
+    }
+}

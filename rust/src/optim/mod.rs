@@ -1,0 +1,18 @@
+//! Robust DNN partitioning + resource allocation (paper §V).
+//!
+//! Pipeline (Fig. 8): problem (9) → Tammer decomposition into the
+//! resource subproblem (13)/(16) and the partitioning subproblem
+//! (14)/(24) → CCP/ECR transform (Theorem 1, [`ecr`]) → convex
+//! interior-point for resources ([`resource`]) and PCCP for partitioning
+//! ([`pccp`]) → alternation ([`alternating`], Algorithm 2).  Benchmark
+//! policies live in [`baselines`].
+
+pub mod alternating;
+pub mod baselines;
+pub mod ecr;
+pub mod pccp;
+pub mod resource;
+pub mod types;
+
+pub use alternating::{solve as plan, AlternatingOptions, RobustPlan};
+pub use types::{Device, Plan, Policy, Scenario};

@@ -1,0 +1,671 @@
+//! DNN-partitioning subproblem via the Penalty Convex-Concave Procedure
+//! (paper §V-C, Algorithm 1).
+//!
+//! Given resources (b, f) from the resource subproblem, problem (24)
+//! selects the partition x.  The chance constraint becomes the
+//! deterministic (28) through the ECR, the binary x is relaxed to [0,1]
+//! with the DC constraint x(1−x) ≤ 0 (eqs. 30/31), and the variance term
+//! is linearized through the auxiliary y (eq. 32), yielding the DC
+//! program (33).  Algorithm 1 solves the sequence of convexified penalty
+//! problems (36), growing ρ ← min(νρ, ρ_max) until ‖x⁽ⁱ⁾−x⁽ⁱ⁻¹⁾‖ < θ.
+//!
+//! Key structural fact exploited here: given (b, f), problem (36) is
+//! **separable per device** — the objective is a sum of per-device terms
+//! and every constraint involves a single device (constraint (24d) is
+//! constant once (24c) holds, because Σ_m x_{n,m} b_n = b_n).  So we run
+//! Algorithm 1 on each device's own (2M+5)-variable program instead of
+//! one N(2M+5)-variable monolith; the iterates are identical to the
+//! joint algorithm's (the joint Newton system is block-diagonal) and the
+//! wall-clock is linear in N — this is what Fig. 11 measures.
+
+use crate::linalg::Matrix;
+use crate::solver::{self, BarrierOptions, ConvexProgram};
+
+use super::types::{Device, Policy, Scenario};
+
+/// Algorithm 1 knobs (paper: ρ⁰ > 0, ν > 1, ρ_max, θ_err).
+#[derive(Clone, Debug)]
+pub struct PccpOptions {
+    pub rho0: f64,
+    pub rho_max: f64,
+    pub nu: f64,
+    pub theta_err: f64,
+    pub max_iters: usize,
+    /// Interior-point options for the inner convex solves.
+    pub barrier: BarrierOptions,
+}
+
+impl Default for PccpOptions {
+    fn default() -> Self {
+        PccpOptions {
+            rho0: 1.0,
+            rho_max: 1e6,
+            nu: 4.0,
+            theta_err: 1e-4,
+            max_iters: 60,
+            barrier: BarrierOptions { tol: 1e-7, ..BarrierOptions::default() },
+        }
+    }
+}
+
+/// Per-device PCCP outcome.
+#[derive(Clone, Debug)]
+pub struct PccpDeviceResult {
+    /// Chosen partition point (rounded from the relaxed stationary x).
+    pub m: usize,
+    /// Relaxed solution x (diagnostic: should be near one-hot).
+    pub x_relaxed: Vec<f64>,
+    /// Algorithm-1 outer iterations (Fig. 9's metric).
+    pub iters: usize,
+    /// Total inner Newton iterations.
+    pub newton_iters: usize,
+}
+
+/// Whole-scenario outcome.
+#[derive(Clone, Debug)]
+pub struct PccpResult {
+    pub partition: Vec<usize>,
+    /// Mean Algorithm-1 iterations across devices (Fig. 9).
+    pub avg_iters: f64,
+    pub newton_iters: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum PccpError {
+    /// No partition point satisfies (28) for this device at the given
+    /// resources.
+    Infeasible { device: usize },
+    Solver(String),
+}
+
+impl std::fmt::Display for PccpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PccpError::Infeasible { device } => {
+                write!(f, "no feasible partition point for device {device}")
+            }
+            PccpError::Solver(e) => write!(f, "solver failure: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PccpError {}
+
+/// Per-device data for problem (36).
+struct DeviceProblem {
+    /// Energy coefficient per point (objective (24a) terms at fixed f, b).
+    cost: Vec<f64>,
+    /// Mean total time per point t̄_{n,m} (eq. 26).
+    t_mean: Vec<f64>,
+    /// Covariance diagonal w_{n,m,m} (eq. 27).
+    w_diag: Vec<f64>,
+    /// σ_n (Theorem 1).
+    sigma: f64,
+    /// Deadline D_n.
+    deadline: f64,
+    /// Linearization point from the previous PCCP iterate.
+    x_prev: Vec<f64>,
+    y_prev: f64,
+    /// Penalty ρ⁽ⁱ⁻¹⁾.
+    rho: f64,
+    /// Strictly feasible start for the inner barrier.
+    start: Vec<f64>,
+}
+
+// Variable layout: z = [x_0..x_M, y, alpha, beta, gamma_0..gamma_M]
+// sizes:            M+1,          1,  1,    1,     M+1        => 2M+5
+//
+// Inequalities:
+//   0..=M        : -x_m ≤ 0
+//   M+1..=2M+1   : x_m − 1 ≤ 0
+//   2M+2         : Σ x t̄ + σ y − D ≤ 0                      (33c)
+//   2M+3         : −y ≤ 0                                    (33g)
+//   2M+4         : Σ w x² − y_prev(2y − y_prev) − α ≤ 0      (36c)
+//   2M+5         : y² − Σ w x_prev(2x − x_prev) − β ≤ 0      (36d)
+//   2M+6..=3M+6  : x_m(1−2x_prev) + x_prev² − γ_m ≤ 0        (36e)
+//   3M+7         : −α ≤ 0
+//   3M+8         : −β ≤ 0
+//   3M+9..=4M+9  : −γ_m ≤ 0
+// Equality: Σ x_m = 1 (24c).
+impl DeviceProblem {
+    fn mp1(&self) -> usize {
+        self.cost.len()
+    }
+
+    fn idx_y(&self) -> usize {
+        self.mp1()
+    }
+
+    fn idx_alpha(&self) -> usize {
+        self.mp1() + 1
+    }
+
+    fn idx_beta(&self) -> usize {
+        self.mp1() + 2
+    }
+
+    fn idx_gamma(&self, m: usize) -> usize {
+        self.mp1() + 3 + m
+    }
+}
+
+impl ConvexProgram for DeviceProblem {
+    fn num_vars(&self) -> usize {
+        2 * self.mp1() + 3
+    }
+
+    fn num_ineq(&self) -> usize {
+        4 * self.mp1() + 6
+    }
+
+    fn objective(&self, z: &[f64]) -> f64 {
+        let mut v = 0.0;
+        for m in 0..self.mp1() {
+            v += self.cost[m] * z[m] + self.rho * z[self.idx_gamma(m)];
+        }
+        v + self.rho * (z[self.idx_alpha()] + z[self.idx_beta()])
+    }
+
+    fn gradient(&self, z: &[f64], g: &mut [f64]) {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        let _ = z;
+        for m in 0..self.mp1() {
+            g[m] = self.cost[m];
+            g[self.idx_gamma(m)] = self.rho;
+        }
+        g[self.idx_alpha()] = self.rho;
+        g[self.idx_beta()] = self.rho;
+    }
+
+    fn hessian_accum(&self, _z: &[f64], _scale: f64, _h: &mut Matrix) {
+        // linear objective
+    }
+
+    fn constraint(&self, c: usize, z: &[f64]) -> f64 {
+        let mp1 = self.mp1();
+        let y = z[self.idx_y()];
+        if c <= mp1 - 1 {
+            return -z[c];
+        }
+        if c <= 2 * mp1 - 1 {
+            return z[c - mp1] - 1.0;
+        }
+        let c = c - 2 * mp1;
+        match c {
+            0 => {
+                let mut v = self.sigma * y - self.deadline;
+                for m in 0..mp1 {
+                    v += z[m] * self.t_mean[m];
+                }
+                v
+            }
+            1 => -y,
+            2 => {
+                let mut v = -self.y_prev * (2.0 * y - self.y_prev) - z[self.idx_alpha()];
+                for m in 0..mp1 {
+                    v += self.w_diag[m] * z[m] * z[m];
+                }
+                v
+            }
+            3 => {
+                let mut v = y * y - z[self.idx_beta()];
+                for m in 0..mp1 {
+                    v -= self.w_diag[m] * self.x_prev[m] * (2.0 * z[m] - self.x_prev[m]);
+                }
+                v
+            }
+            c if c <= mp1 + 3 => {
+                let m = c - 4;
+                z[m] * (1.0 - 2.0 * self.x_prev[m]) + self.x_prev[m] * self.x_prev[m]
+                    - z[self.idx_gamma(m)]
+            }
+            c if c == mp1 + 4 => -z[self.idx_alpha()],
+            c if c == mp1 + 5 => -z[self.idx_beta()],
+            c => -z[self.idx_gamma(c - mp1 - 6)],
+        }
+    }
+
+    fn constraint_grad(&self, c: usize, z: &[f64], g: &mut [f64]) {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        let mp1 = self.mp1();
+        if c <= mp1 - 1 {
+            g[c] = -1.0;
+            return;
+        }
+        if c <= 2 * mp1 - 1 {
+            g[c - mp1] = 1.0;
+            return;
+        }
+        let c = c - 2 * mp1;
+        match c {
+            0 => {
+                for m in 0..mp1 {
+                    g[m] = self.t_mean[m];
+                }
+                g[self.idx_y()] = self.sigma;
+            }
+            1 => g[self.idx_y()] = -1.0,
+            2 => {
+                for m in 0..mp1 {
+                    g[m] = 2.0 * self.w_diag[m] * z[m];
+                }
+                g[self.idx_y()] = -2.0 * self.y_prev;
+                g[self.idx_alpha()] = -1.0;
+            }
+            3 => {
+                for m in 0..mp1 {
+                    g[m] = -2.0 * self.w_diag[m] * self.x_prev[m];
+                }
+                g[self.idx_y()] = 2.0 * z[self.idx_y()];
+                g[self.idx_beta()] = -1.0;
+            }
+            c if c <= mp1 + 3 => {
+                let m = c - 4;
+                g[m] = 1.0 - 2.0 * self.x_prev[m];
+                g[self.idx_gamma(m)] = -1.0;
+            }
+            c if c == mp1 + 4 => g[self.idx_alpha()] = -1.0,
+            c if c == mp1 + 5 => g[self.idx_beta()] = -1.0,
+            c => g[self.idx_gamma(c - mp1 - 6)] = -1.0,
+        }
+    }
+
+    fn constraint_hess_accum(&self, c: usize, _z: &[f64], scale: f64, h: &mut Matrix) {
+        let mp1 = self.mp1();
+        if c < 2 * mp1 {
+            return;
+        }
+        match c - 2 * mp1 {
+            2 => {
+                for m in 0..mp1 {
+                    h[(m, m)] += scale * 2.0 * self.w_diag[m];
+                }
+            }
+            3 => {
+                let y = self.idx_y();
+                h[(y, y)] += scale * 2.0;
+            }
+            _ => {}
+        }
+    }
+
+    fn equalities(&self) -> Option<(Matrix, Vec<f64>)> {
+        let mut a = Matrix::zeros(1, self.num_vars());
+        for m in 0..self.mp1() {
+            a[(0, m)] = 1.0;
+        }
+        Some((a, vec![1.0]))
+    }
+
+    fn initial_point(&self) -> Vec<f64> {
+        self.start.clone()
+    }
+}
+
+/// Build a strictly feasible inner start around a given relaxed x.
+/// Tries progressively smaller clamping floors so that even a start
+/// sitting within 0.1% of the (relaxed) deadline boundary admits a
+/// strictly interior point.
+fn feasible_start(p: &mut DeviceProblem, x: &[f64]) -> bool {
+    // Blend toward the argmax vertex: at a deadline-tight iterate only a
+    // nearly pure one-hot admits strict interiority, so shrink the mixing
+    // mass until the start fits (θ = 1 keeps x as-is).
+    let argmax = x
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(m, _)| m)
+        .unwrap_or(0);
+    for theta in [1.0, 0.3, 0.03, 3e-3, 3e-4, 3e-5] {
+        let blended: Vec<f64> = x
+            .iter()
+            .enumerate()
+            .map(|(m, &v)| {
+                let vertex = if m == argmax { 1.0 } else { 0.0 };
+                (1.0 - theta) * vertex + theta * v
+            })
+            .collect();
+        for floor in [1e-4, 1e-7, 1e-9] {
+            if theta < 1.0 && floor > theta * 1e-2 {
+                continue; // floor would undo the blend
+            }
+            if feasible_start_clamped(p, &blended, floor) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn feasible_start_clamped(p: &mut DeviceProblem, x: &[f64], floor: f64) -> bool {
+    let mp1 = p.mp1();
+    // Clamp x inside the open simplex.
+    let mut xs: Vec<f64> = x.iter().map(|&v| v.clamp(floor, 1.0 - floor)).collect();
+    let s: f64 = xs.iter().sum();
+    xs.iter_mut().for_each(|v| *v /= s);
+
+    // (33c) must hold strictly with y near √(Σ w x²).
+    let y0 = xs
+        .iter()
+        .zip(&p.w_diag)
+        .map(|(x, w)| w * x * x)
+        .sum::<f64>()
+        .sqrt()
+        .max(1e-9);
+    let lhs: f64 =
+        xs.iter().zip(&p.t_mean).map(|(x, t)| x * t).sum::<f64>() + p.sigma * y0;
+    if lhs >= p.deadline * (1.0 - 1e-9) {
+        return false;
+    }
+
+    let mut z = vec![0.0; 2 * mp1 + 3];
+    z[..mp1].copy_from_slice(&xs);
+    z[mp1] = y0;
+    // Slacks: strictly above current constraint values.
+    let margin = 1e-3;
+    let quad: f64 = xs.iter().zip(&p.w_diag).map(|(x, w)| w * x * x).sum();
+    z[mp1 + 1] = (quad - p.y_prev * (2.0 * y0 - p.y_prev)).max(0.0) + margin; // alpha
+    let lin: f64 = p
+        .x_prev
+        .iter()
+        .zip(&xs)
+        .zip(&p.w_diag)
+        .map(|((xp, x), w)| w * xp * (2.0 * x - xp))
+        .sum();
+    z[mp1 + 2] = (y0 * y0 - lin).max(0.0) + margin; // beta
+    for m in 0..mp1 {
+        let v = xs[m] * (1.0 - 2.0 * p.x_prev[m]) + p.x_prev[m] * p.x_prev[m];
+        z[mp1 + 3 + m] = v.max(0.0) + margin; // gamma
+    }
+    p.start = z;
+    true
+}
+
+/// Assemble the per-device problem data at fixed resources.
+fn device_problem(dev: &Device, m_pts: usize, f_ghz: f64, b_hz: f64, rho: f64) -> DeviceProblem {
+    let cost: Vec<f64> = (0..m_pts).map(|m| dev.energy_mean(m, f_ghz, b_hz)).collect();
+    let t_mean: Vec<f64> = (0..m_pts).map(|m| dev.t_total_mean(m, f_ghz, b_hz)).collect();
+    let w_diag: Vec<f64> = (0..m_pts).map(|m| dev.model.w_diag(m)).collect();
+    DeviceProblem {
+        cost,
+        t_mean,
+        w_diag,
+        sigma: dev.sigma(),
+        // Relax the inner deadline by 0.1%: the resource step leaves (22)
+        // *active* at the current point (energy is decreasing in slack),
+        // so the exact-deadline relaxation has no strict interior there.
+        // Rounding checks against the true deadline, so no violation can
+        // leak into the final plan.
+        deadline: dev.deadline_s * (1.0 + 1e-3),
+        x_prev: vec![1.0 / m_pts as f64; m_pts],
+        y_prev: 1e-3,
+        rho,
+        start: vec![],
+    }
+}
+
+/// Feasible one-hot candidates under (28) at the given resources.
+fn feasible_points(dev: &Device, f_ghz: f64, b_hz: f64, policy: Policy) -> Vec<usize> {
+    (0..dev.model.num_points())
+        .filter(|&m| dev.deadline_ok(m, f_ghz, b_hz, policy))
+        .collect()
+}
+
+/// Run Algorithm 1 for one device.  `x_init` seeds the first linearization
+/// (Algorithm 2 passes the previous outer iterate for warm starting).
+pub fn solve_device(
+    dev: &Device,
+    f_ghz: f64,
+    b_hz: f64,
+    opts: &PccpOptions,
+    x_init: Option<&[f64]>,
+) -> Result<PccpDeviceResult, PccpError> {
+    let mp1 = dev.model.num_points();
+    let feas = feasible_points(dev, f_ghz, b_hz, Policy::Robust);
+    if feas.is_empty() {
+        return Err(PccpError::Infeasible { device: usize::MAX });
+    }
+
+    // Initial relaxed x: warm start if provided, else mass on the cheapest
+    // feasible one-hot point (smoothed into the simplex interior).
+    let seed = match x_init {
+        Some(x) if x.len() == mp1 => x.to_vec(),
+        _ => {
+            let best = *feas
+                .iter()
+                .min_by(|&&a, &&b| {
+                    dev.energy_mean(a, f_ghz, b_hz)
+                        .partial_cmp(&dev.energy_mean(b, f_ghz, b_hz))
+                        .unwrap()
+                })
+                .unwrap();
+            let mut x = vec![0.02 / (mp1 - 1) as f64; mp1];
+            x[best] = 0.98;
+            x
+        }
+    };
+
+    let mut rho = opts.rho0;
+    let mut x = seed;
+    let mut y = x
+        .iter()
+        .enumerate()
+        .map(|(m, &v)| dev.model.w_diag(m) * v * v)
+        .sum::<f64>()
+        .sqrt()
+        .max(1e-7);
+    let mut newton_total = 0;
+    let mut iters = 0;
+
+    for i in 0..opts.max_iters {
+        iters = i + 1;
+        let mut prob = device_problem(dev, mp1, f_ghz, b_hz, rho);
+        prob.x_prev = x.clone();
+        prob.y_prev = y;
+        if !feasible_start(&mut prob, &x) {
+            // The relaxed iterate drifted infeasible for (33c) — restart
+            // the linearization from the cheapest feasible one-hot.
+            let best = feas[0];
+            let mut xr = vec![0.02 / (mp1 - 1) as f64; mp1];
+            xr[best] = 0.98;
+            prob.x_prev = xr.clone();
+            prob.y_prev = (dev.model.w_diag(best)).sqrt().max(1e-7);
+            if !feasible_start(&mut prob, &xr) {
+                return Err(PccpError::Infeasible { device: usize::MAX });
+            }
+        }
+        let sol = solver::solve(&prob, &opts.barrier)
+            .map_err(|e| PccpError::Solver(e.to_string()))?;
+        newton_total += sol.newton_iters;
+        let x_new = sol.x[..mp1].to_vec();
+        let y_new = sol.x[mp1];
+
+        let delta: f64 = x_new
+            .iter()
+            .zip(&x)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        x = x_new;
+        y = y_new.max(1e-9);
+        rho = (rho * opts.nu).min(opts.rho_max);
+        if delta < opts.theta_err && i > 0 {
+            break;
+        }
+    }
+
+    // Round to one-hot; fall back to the best feasible point if the argmax
+    // violates (28) (can happen when the relaxation is loose).
+    let argmax = x
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(m, _)| m)
+        .unwrap();
+    let m_final = if feas.contains(&argmax) {
+        argmax
+    } else {
+        *feas
+            .iter()
+            .min_by(|&&a, &&b| {
+                dev.energy_mean(a, f_ghz, b_hz)
+                    .partial_cmp(&dev.energy_mean(b, f_ghz, b_hz))
+                    .unwrap()
+            })
+            .unwrap()
+    };
+
+    Ok(PccpDeviceResult { m: m_final, x_relaxed: x, iters, newton_iters: newton_total })
+}
+
+/// Run Algorithm 1 across a scenario at fixed resources (the partitioning
+/// half of Algorithm 2's alternation).
+pub fn solve(
+    sc: &Scenario,
+    freq_ghz: &[f64],
+    bandwidth_hz: &[f64],
+    opts: &PccpOptions,
+    warm: Option<&[Vec<f64>]>,
+) -> Result<PccpResult, PccpError> {
+    let mut partition = Vec::with_capacity(sc.n());
+    let mut iter_sum = 0usize;
+    let mut newton = 0usize;
+    for (i, dev) in sc.devices.iter().enumerate() {
+        let w = warm.and_then(|w| w.get(i)).map(|v| v.as_slice());
+        let r = solve_device(dev, freq_ghz[i], bandwidth_hz[i], opts, w).map_err(|e| match e {
+            PccpError::Infeasible { .. } => PccpError::Infeasible { device: i },
+            e => e,
+        })?;
+        iter_sum += r.iters;
+        newton += r.newton_iters;
+        partition.push(r.m);
+    }
+    Ok(PccpResult {
+        partition,
+        avg_iters: iter_sum as f64 / sc.n() as f64,
+        newton_iters: newton,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelProfile;
+    use crate::util::rng::Rng;
+
+    fn scenario(n: usize, deadline: f64, risk: f64, seed: u64) -> Scenario {
+        let mut rng = Rng::new(seed);
+        Scenario::uniform(&ModelProfile::alexnet_paper(), n, 10e6, deadline, risk, &mut rng)
+    }
+
+    #[test]
+    fn device_problem_constraint_gradients_match_fd() {
+        // Finite-difference check of every constraint gradient at a
+        // feasible interior point.
+        let sc = scenario(1, 0.25, 0.05, 1);
+        let dev = &sc.devices[0];
+        let mp1 = dev.model.num_points();
+        let mut p = device_problem(dev, mp1, 1.0, 2e6, 3.0);
+        let x0 = vec![1.0 / mp1 as f64; mp1];
+        assert!(feasible_start(&mut p, &x0));
+        let z = p.initial_point();
+        let mut g = vec![0.0; p.num_vars()];
+        for c in 0..p.num_ineq() {
+            p.constraint_grad(c, &z, &mut g);
+            for j in 0..p.num_vars() {
+                let h = 1e-7;
+                let mut zp = z.clone();
+                zp[j] += h;
+                let mut zm = z.clone();
+                zm[j] -= h;
+                let fd = (p.constraint(c, &zp) - p.constraint(c, &zm)) / (2.0 * h);
+                assert!(
+                    (fd - g[j]).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "constraint {c} var {j}: fd={fd} analytic={}",
+                    g[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pccp_returns_feasible_onehot() {
+        let sc = scenario(6, 0.22, 0.05, 2);
+        let f: Vec<f64> = vec![1.1; 6];
+        let b: Vec<f64> = vec![10e6 / 6.0; 6];
+        let r = solve(&sc, &f, &b, &PccpOptions::default(), None).unwrap();
+        assert_eq!(r.partition.len(), 6);
+        for (i, (&m, dev)) in r.partition.iter().zip(&sc.devices).enumerate() {
+            assert!(
+                dev.deadline_ok(m, f[i], b[i], Policy::Robust),
+                "device {i} point {m} violates (28)"
+            );
+        }
+        assert!(r.avg_iters >= 1.0);
+    }
+
+    #[test]
+    fn relaxed_solution_is_near_binary() {
+        let sc = scenario(1, 0.25, 0.05, 3);
+        let r = solve_device(&sc.devices[0], 1.0, 3e6, &PccpOptions::default(), None).unwrap();
+        // penalty should push x to a vertex: max component > 0.9
+        let mx = r.x_relaxed.iter().cloned().fold(0.0, f64::max);
+        assert!(mx > 0.9, "x_relaxed={:?}", r.x_relaxed);
+        let sum: f64 = r.x_relaxed.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn pccp_tracks_energy_tradeoff() {
+        // With a generous deadline and scarce bandwidth, full offload
+        // (m = 0, big raw transfer) should not be chosen when a cheaper
+        // intermediate point exists; with a huge bandwidth and a short
+        // deadline, offloading early becomes attractive.  We only assert
+        // the PCCP choice is no worse than exhaustive per-device search.
+        let sc = scenario(4, 0.22, 0.04, 4);
+        let f = vec![1.0; 4];
+        let b = vec![2.5e6; 4];
+        let r = solve(&sc, &f, &b, &PccpOptions::default(), None).unwrap();
+        for (i, dev) in sc.devices.iter().enumerate() {
+            let best = feasible_points(dev, f[i], b[i], Policy::Robust)
+                .into_iter()
+                .min_by(|&a, &b2| {
+                    dev.energy_mean(a, f[i], b[i])
+                        .partial_cmp(&dev.energy_mean(b2, f[i], b[i]))
+                        .unwrap()
+                })
+                .unwrap();
+            let e_pccp = dev.energy_mean(r.partition[i], f[i], b[i]);
+            let e_best = dev.energy_mean(best, f[i], b[i]);
+            assert!(
+                e_pccp <= e_best * 1.05 + 1e-9,
+                "device {i}: pccp point {} ({e_pccp}) vs best {best} ({e_best})",
+                r.partition[i]
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_when_no_point_fits() {
+        let sc = scenario(1, 0.002, 0.05, 5); // 2 ms deadline: impossible
+        let r = solve(&sc, &[1.2], &[10e6], &PccpOptions::default(), None);
+        assert!(matches!(r, Err(PccpError::Infeasible { device: 0 })));
+    }
+
+    #[test]
+    fn warm_start_converges_fast() {
+        let sc = scenario(1, 0.22, 0.05, 6);
+        let cold =
+            solve_device(&sc.devices[0], 1.0, 3e6, &PccpOptions::default(), None).unwrap();
+        let warm = solve_device(
+            &sc.devices[0],
+            1.0,
+            3e6,
+            &PccpOptions::default(),
+            Some(&cold.x_relaxed),
+        )
+        .unwrap();
+        assert_eq!(warm.m, cold.m);
+        assert!(warm.iters <= cold.iters);
+    }
+}

@@ -1,0 +1,753 @@
+//! Resource-allocation subproblem (paper problem (23)): given a fixed
+//! partitioning decision, jointly optimize uplink bandwidth b and local
+//! frequency f.
+//!
+//! The CCP/ECR transform (Theorem 1) turns the chance constraint (16b)
+//! into the deterministic (22); after reserving the VM mean and the
+//! uncertainty margin from the deadline, each device's constraint is
+//!
+//! ```text
+//!   L_n / f_n  +  T^off_n(b_n)  ≤  D′_n ,      L_n = w_{n,m}/g_{n,m}
+//! ```
+//!
+//! with objective Σ_n A_n f_n² + p_n·T^off_n(b_n) (eq. 23a).  The problem
+//! is convex (T^off is the reciprocal of a concave rate — see `channel`);
+//! we solve it two ways:
+//!
+//! * [`solve`] — a joint log-barrier interior point over the scaled
+//!   variables (u = b/B, f), the reference implementation whose Newton
+//!   iteration counts feed Fig. 9/11;
+//! * [`solve_dual`] — a fast O(N·log²) dual decomposition: bisection on
+//!   the bandwidth price with per-device 1-D convex subproblems.  Used as
+//!   an ablation (see `benches/ablation_resource.rs`) and cross-checked
+//!   against the barrier solution in tests.
+
+use crate::linalg::Matrix;
+use crate::solver::{self, BarrierOptions, ConvexProgram};
+
+use super::types::{Policy, Scenario};
+
+/// Lower bound on the bandwidth fraction (keeps the barrier away from the
+/// rate singularity at b = 0).
+const U_MIN: f64 = 1e-6;
+
+/// Outcome of the resource subproblem.
+#[derive(Clone, Debug)]
+pub struct ResourceSolution {
+    pub bandwidth_hz: Vec<f64>,
+    pub freq_ghz: Vec<f64>,
+    /// Optimal expected energy (objective (23a)).
+    pub energy: f64,
+    /// Newton iterations spent (phase-I + phase-II).
+    pub newton_iters: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum ResourceError {
+    /// No (b, f) satisfies the deterministic deadlines — the partition is
+    /// too aggressive for this bandwidth/deadline/risk combination.
+    Infeasible { worst_device: usize, slack: f64 },
+    Solver(String),
+}
+
+impl std::fmt::Display for ResourceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResourceError::Infeasible { worst_device, slack } => write!(
+                f,
+                "resource problem infeasible (device {worst_device}, phase-I slack {slack:.4})"
+            ),
+            ResourceError::Solver(e) => write!(f, "solver failure: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ResourceError {}
+
+/// Per-device constants extracted from the scenario for a fixed partition.
+struct DeviceData {
+    /// Local-energy coefficient: E_loc = a_e f² (f in GHz).
+    a_e: f64,
+    /// Local Giga-cycles: t_loc = l / f.
+    l: f64,
+    /// Offloaded bits.
+    d_bits: f64,
+    /// Deadline budget D′ for local + offload.
+    slack: f64,
+    f_min: f64,
+    f_max: f64,
+    uplink: crate::channel::Uplink,
+}
+
+/// The convex program over z = [u_0..u_{N-1}, f_0..f_{N-1}]
+/// (+ an optional phase-I slack variable appended at the end).
+struct ResourceProgram {
+    dev: Vec<DeviceData>,
+    b_total: f64,
+    /// Phase-I mode: minimize s with deadlines relaxed by s.
+    phase1: bool,
+    /// Feasible start to use.
+    start: Vec<f64>,
+}
+
+impl ResourceProgram {
+    fn n(&self) -> usize {
+        self.dev.len()
+    }
+
+    #[inline]
+    fn t_off(&self, i: usize, u: f64) -> f64 {
+        self.dev[i].uplink.t_off(self.dev[i].d_bits, u * self.b_total)
+    }
+
+    /// First and second derivatives of t_off w.r.t. the fraction u
+    /// (analytic — see channel::Uplink; chain rule adds B and B²).
+    fn t_off_d(&self, i: usize, u: f64) -> (f64, f64) {
+        let b = u * self.b_total;
+        let d1 = self.dev[i].uplink.t_off_derivative(self.dev[i].d_bits, b) * self.b_total;
+        let d2 = self.dev[i].uplink.t_off_second_derivative(self.dev[i].d_bits, b)
+            * self.b_total
+            * self.b_total;
+        (d1, d2)
+    }
+}
+
+// Constraint layout:
+//   0                      : Σu − 1 ≤ 0
+//   1 + 6i + 0             : deadline_i  (− s in phase-I)
+//   1 + 6i + 1..=2         : f bounds (min, max)
+//   1 + 6i + 3..=4         : u bounds (U_MIN, 1)
+//   1 + 6i + 5             : spare — u_i ≤ 1 kept explicit for barrier
+// phase-I adds no extra inequality on s (s free, minimized).
+impl ConvexProgram for ResourceProgram {
+    fn num_vars(&self) -> usize {
+        2 * self.n() + usize::from(self.phase1)
+    }
+
+    fn num_ineq(&self) -> usize {
+        1 + 5 * self.n()
+    }
+
+    fn objective(&self, z: &[f64]) -> f64 {
+        if self.phase1 {
+            return z[2 * self.n()];
+        }
+        let n = self.n();
+        let mut e = 0.0;
+        for i in 0..n {
+            let (u, f) = (z[i], z[n + i]);
+            e += self.dev[i].a_e * f * f + self.dev[i].uplink.p_tx * self.t_off(i, u);
+        }
+        e
+    }
+
+    fn gradient(&self, z: &[f64], g: &mut [f64]) {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        let n = self.n();
+        if self.phase1 {
+            g[2 * n] = 1.0;
+            return;
+        }
+        for i in 0..n {
+            let (u, f) = (z[i], z[n + i]);
+            let (d1, _) = self.t_off_d(i, u);
+            g[i] = self.dev[i].uplink.p_tx * d1;
+            g[n + i] = 2.0 * self.dev[i].a_e * f;
+        }
+    }
+
+    fn hessian_accum(&self, z: &[f64], scale: f64, h: &mut Matrix) {
+        if self.phase1 {
+            return;
+        }
+        let n = self.n();
+        for i in 0..n {
+            let (u, _f) = (z[i], z[n + i]);
+            let (_, d2) = self.t_off_d(i, u);
+            h[(i, i)] += scale * self.dev[i].uplink.p_tx * d2;
+            h[(n + i, n + i)] += scale * 2.0 * self.dev[i].a_e;
+        }
+    }
+
+    fn constraint(&self, c: usize, z: &[f64]) -> f64 {
+        let n = self.n();
+        if c == 0 {
+            return z[..n].iter().sum::<f64>() - 1.0;
+        }
+        let i = (c - 1) / 5;
+        let kind = (c - 1) % 5;
+        let (u, f) = (z[i], z[n + i]);
+        let d = &self.dev[i];
+        match kind {
+            0 => {
+                let t_loc = if d.l == 0.0 { 0.0 } else { d.l / f };
+                let mut v = t_loc + self.t_off(i, u) - d.slack;
+                if self.phase1 {
+                    v -= z[2 * n];
+                }
+                v
+            }
+            1 => d.f_min - f,
+            2 => f - d.f_max,
+            3 => U_MIN - u,
+            _ => u - 1.0,
+        }
+    }
+
+    fn constraint_grad(&self, c: usize, z: &[f64], g: &mut [f64]) {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        let n = self.n();
+        if c == 0 {
+            g[..n].iter_mut().for_each(|v| *v = 1.0);
+            return;
+        }
+        let i = (c - 1) / 5;
+        let kind = (c - 1) % 5;
+        let (u, f) = (z[i], z[n + i]);
+        let d = &self.dev[i];
+        match kind {
+            0 => {
+                if d.l != 0.0 {
+                    g[n + i] = -d.l / (f * f);
+                }
+                let (d1, _) = self.t_off_d(i, u);
+                g[i] = d1;
+                if self.phase1 {
+                    g[2 * n] = -1.0;
+                }
+            }
+            1 => g[n + i] = -1.0,
+            2 => g[n + i] = 1.0,
+            3 => g[i] = -1.0,
+            _ => g[i] = 1.0,
+        }
+    }
+
+    fn constraint_hess_accum(&self, c: usize, z: &[f64], scale: f64, h: &mut Matrix) {
+        if c == 0 {
+            return;
+        }
+        let n = self.n();
+        let i = (c - 1) / 5;
+        if (c - 1) % 5 != 0 {
+            return;
+        }
+        let (u, f) = (z[i], z[n + i]);
+        let d = &self.dev[i];
+        if d.l != 0.0 {
+            h[(n + i, n + i)] += scale * 2.0 * d.l / (f * f * f);
+        }
+        let (_, d2) = self.t_off_d(i, u);
+        h[(i, i)] += scale * d2;
+    }
+
+    fn initial_point(&self) -> Vec<f64> {
+        self.start.clone()
+    }
+}
+
+fn device_data(sc: &Scenario, partition: &[usize], policy: Policy) -> Vec<DeviceData> {
+    sc.devices
+        .iter()
+        .zip(partition)
+        .map(|(d, &m)| {
+            let p = &d.model.points[m];
+            DeviceData {
+                a_e: crate::energy::e_loc_mean(
+                    d.model.device.kappa,
+                    1.0,
+                    p.w_gflops,
+                    if m == 0 { 1.0 } else { p.g_flops_cycle },
+                ),
+                l: if m == 0 { 0.0 } else { p.w_gflops / p.g_flops_cycle },
+                d_bits: d.model.d_bits(m),
+                slack: d.deadline_slack(m, policy),
+                f_min: d.model.device.f_min_ghz,
+                f_max: d.model.device.f_max_ghz,
+                uplink: d.uplink,
+            }
+        })
+        .collect()
+}
+
+/// Heuristic strictly-feasible start: f at max (fastest local), bandwidth
+/// split ∝ offload demand.  Returns None if it is not strictly feasible.
+fn heuristic_start(prog: &ResourceProgram) -> Option<Vec<f64>> {
+    let n = prog.n();
+    let demand: Vec<f64> = prog.dev.iter().map(|d| d.d_bits.max(1.0)).collect();
+    let total: f64 = demand.iter().sum();
+    let mut z = vec![0.0; 2 * n];
+    for i in 0..n {
+        z[i] = (0.95 * demand[i] / total).max(2.0 * U_MIN);
+        z[n + i] = prog.dev[i].f_max * 0.999;
+    }
+    if z[..n].iter().sum::<f64>() >= 1.0 {
+        return None;
+    }
+    let feasible = (0..prog.num_ineq()).all(|c| prog.constraint(c, &z) < -1e-12);
+    feasible.then_some(z)
+}
+
+/// Phase-I: minimize s with deadlines relaxed by s; returns a strictly
+/// feasible phase-II start or an infeasibility certificate.
+fn phase1_start(
+    dev: Vec<DeviceData>,
+    b_total: f64,
+    opts: &BarrierOptions,
+) -> Result<(Vec<f64>, usize), ResourceError> {
+    let n = dev.len();
+    let mut start = vec![0.0; 2 * n + 1];
+    for i in 0..n {
+        start[i] = 0.9 / n as f64;
+        start[n + i] = 0.5 * (dev[i].f_min + dev[i].f_max);
+    }
+    let prog = ResourceProgram { dev, b_total, phase1: true, start: vec![] };
+    // s0 = max violation + margin
+    let mut s0 = 0.0f64;
+    for c in 0..prog.num_ineq() {
+        // deadline constraints only; bounds are satisfied by construction
+        if c >= 1 && (c - 1) % 5 == 0 {
+            let i = (c - 1) / 5;
+            let t_loc = if prog.dev[i].l == 0.0 { 0.0 } else { prog.dev[i].l / start[n + i] };
+            s0 = s0.max(t_loc + prog.t_off(i, start[i]) - prog.dev[i].slack);
+        }
+    }
+    start[2 * n] = s0 + 1.0;
+    let prog = ResourceProgram { start, ..prog };
+    let sol = solver::solve(&prog, opts).map_err(|e| ResourceError::Solver(e.to_string()))?;
+    let s_star = sol.x[2 * n];
+    if s_star >= -1e-9 {
+        // find the tightest device for the error message
+        let worst = (0..n)
+            .min_by(|&a, &b| prog.dev[a].slack.partial_cmp(&prog.dev[b].slack).unwrap())
+            .unwrap_or(0);
+        return Err(ResourceError::Infeasible { worst_device: worst, slack: s_star });
+    }
+    Ok((sol.x[..2 * n].to_vec(), sol.newton_iters))
+}
+
+/// Solve problem (23) with the joint barrier interior point.
+pub fn solve(
+    sc: &Scenario,
+    partition: &[usize],
+    policy: Policy,
+) -> Result<ResourceSolution, ResourceError> {
+    assert_eq!(partition.len(), sc.n());
+    let opts = BarrierOptions::default();
+    let dev = device_data(sc, partition, policy);
+
+    // Quick per-device infeasibility check: even with all bandwidth and
+    // max frequency the deadline cannot be met.
+    for (i, d) in dev.iter().enumerate() {
+        let best = (if d.l == 0.0 { 0.0 } else { d.l / d.f_max })
+            + d.uplink.t_off(d.d_bits, sc.total_bandwidth_hz);
+        if best >= d.slack {
+            return Err(ResourceError::Infeasible { worst_device: i, slack: best - d.slack });
+        }
+    }
+
+    let mut prog =
+        ResourceProgram { dev, b_total: sc.total_bandwidth_hz, phase1: false, start: vec![] };
+    let mut extra_iters = 0;
+    prog.start = match heuristic_start(&prog) {
+        Some(z) => z,
+        None => {
+            let dev2 = device_data(sc, partition, policy);
+            let (z, it) = phase1_start(dev2, sc.total_bandwidth_hz, &opts)?;
+            extra_iters = it;
+            z
+        }
+    };
+
+    let sol = solver::solve(&prog, &opts).map_err(|e| ResourceError::Solver(e.to_string()))?;
+    let n = sc.n();
+    Ok(ResourceSolution {
+        bandwidth_hz: sol.x[..n].iter().map(|u| u * sc.total_bandwidth_hz).collect(),
+        freq_ghz: sol.x[n..2 * n].to_vec(),
+        energy: sol.objective,
+        newton_iters: sol.newton_iters + extra_iters,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Dual decomposition fast path
+// ---------------------------------------------------------------------------
+
+/// Solve problem (23) by dual bisection on the bandwidth price λ:
+/// `L(λ) = Σ_n min_{f,b} [E_n + λ b_n] − λB`; Σb*(λ) is decreasing in λ,
+/// so bisection finds the market-clearing price.  Per-device subproblems
+/// are 1-D convex solves (golden-section over f with b eliminated through
+/// the deadline).
+pub fn solve_dual(
+    sc: &Scenario,
+    partition: &[usize],
+    policy: Policy,
+) -> Result<ResourceSolution, ResourceError> {
+    let dev = device_data(sc, partition, policy);
+    let b_total = sc.total_bandwidth_hz;
+    for (i, d) in dev.iter().enumerate() {
+        let best =
+            (if d.l == 0.0 { 0.0 } else { d.l / d.f_max }) + d.uplink.t_off(d.d_bits, b_total);
+        if best >= d.slack {
+            return Err(ResourceError::Infeasible { worst_device: i, slack: best - d.slack });
+        }
+    }
+
+    // Per-device best response to a price: returns (b, f, energy).
+    let best_response = |d: &DeviceData, lambda: f64| -> (f64, f64) {
+        // For fixed f, the deadline leaves T_off ≤ r(f) = slack − l/f; the
+        // cheapest b satisfying it balances p·T_off' + λ = 0 unless the
+        // deadline binds first.  We search over f by golden section on the
+        // (convex) reduced cost  q(f) = a f² + p·T_off(b*(f,λ)) + λ b*(f,λ).
+        let b_for = |f: f64| -> f64 {
+            let r = d.slack - if d.l == 0.0 { 0.0 } else { d.l / f };
+            if r <= 0.0 {
+                return f64::INFINITY; // infeasible at this f
+            }
+            // unconstrained minimizer of p·T_off(b) + λ b  (T_off' = −λ/p)
+            let mut lo = 1.0f64; // 1 Hz
+            let mut hi = b_total * 4.0;
+            // 48 bisection steps resolve b to ~1e-13 of the range
+            // T_off' is negative increasing (convex T_off); find where
+            // p·T_off'(b) = −λ by bisection.
+            let target = -lambda / d.uplink.p_tx;
+            let b_uncon = if lambda <= 0.0 {
+                hi
+            } else {
+                for _ in 0..48 {
+                    let mid = 0.5 * (lo + hi);
+                    if d.uplink.t_off_derivative(d.d_bits, mid) < target {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                0.5 * (lo + hi)
+            };
+            // deadline floor: smallest b with T_off(b) ≤ r
+            let need = if d.uplink.t_off(d.d_bits, b_uncon) <= r {
+                b_uncon
+            } else {
+                let (mut lo, mut hi) = (1.0f64, b_total * 4.0);
+                for _ in 0..48 {
+                    let mid = 0.5 * (lo + hi);
+                    if d.uplink.t_off(d.d_bits, mid) > r {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                0.5 * (lo + hi)
+            };
+            need
+        };
+        let cost = |f: f64| -> f64 {
+            let b = b_for(f);
+            if !b.is_finite() {
+                return f64::INFINITY;
+            }
+            d.a_e * f * f + d.uplink.p_tx * d.uplink.t_off(d.d_bits, b) + lambda * b
+        };
+        // Golden-section over f in [f_min, f_max].
+        let gr = (5f64.sqrt() - 1.0) / 2.0;
+        let (mut a, mut b) = (d.f_min, d.f_max);
+        let (mut x1, mut x2) = (b - gr * (b - a), a + gr * (b - a));
+        let (mut c1, mut c2) = (cost(x1), cost(x2));
+        for _ in 0..40 {
+            if c1 < c2 {
+                b = x2;
+                x2 = x1;
+                c2 = c1;
+                x1 = b - gr * (b - a);
+                c1 = cost(x1);
+            } else {
+                a = x1;
+                x1 = x2;
+                c1 = c2;
+                x2 = a + gr * (b - a);
+                c2 = cost(x2);
+            }
+        }
+        let f = 0.5 * (a + b);
+        (b_for(f), f)
+    };
+
+    // Bisection on λ ≥ 0 for Σ b*(λ) = B (or λ = 0 if under-subscribed).
+    let total_at = |lambda: f64, dev: &[DeviceData]| -> (f64, Vec<f64>, Vec<f64>) {
+        let mut bs = Vec::with_capacity(dev.len());
+        let mut fs = Vec::with_capacity(dev.len());
+        for d in dev {
+            let (b, f) = best_response(d, lambda);
+            bs.push(b);
+            fs.push(f);
+        }
+        (bs.iter().sum(), bs, fs)
+    };
+
+    let (sum0, bs0, fs0) = total_at(0.0, &dev);
+    let (bs, fs) = if sum0 <= b_total {
+        (bs0, fs0)
+    } else {
+        let (mut lo, mut hi) = (0.0f64, 1e-6);
+        while total_at(hi, &dev).0 > b_total {
+            hi *= 4.0;
+            if hi > 1e6 {
+                break;
+            }
+        }
+        let mut best = None;
+        for _ in 0..40 {
+            let mid = 0.5 * (lo + hi);
+            let (s, bs, fs) = total_at(mid, &dev);
+            if s > b_total {
+                lo = mid;
+            } else {
+                best = Some((bs, fs));
+                hi = mid;
+            }
+        }
+        best.unwrap_or_else(|| {
+            let (_, bs, fs) = total_at(hi, &dev);
+            (bs, fs)
+        })
+    };
+
+    // Rescale a hair under B to guard the constraint against bisection
+    // residue.
+    let sum: f64 = bs.iter().sum();
+    let scale = if sum > b_total { b_total / sum * (1.0 - 1e-9) } else { 1.0 };
+    let bs: Vec<f64> = bs.iter().map(|b| b * scale).collect();
+
+    let energy = dev
+        .iter()
+        .zip(bs.iter().zip(&fs))
+        .map(|(d, (&b, &f))| d.a_e * f * f + d.uplink.p_tx * d.uplink.t_off(d.d_bits, b))
+        .sum();
+    Ok(ResourceSolution { bandwidth_hz: bs, freq_ghz: fs, energy, newton_iters: 0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelProfile;
+    use crate::optim::types::{Plan, Scenario};
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    fn scenario(n: usize, seed: u64) -> Scenario {
+        let mut rng = Rng::new(seed);
+        Scenario::uniform(&ModelProfile::alexnet_paper(), n, 10e6, 0.20, 0.05, &mut rng)
+    }
+
+    fn plan_of(sc: &Scenario, partition: Vec<usize>, r: &ResourceSolution) -> Plan {
+        assert_eq!(partition.len(), sc.n());
+        Plan {
+            partition,
+            bandwidth_hz: r.bandwidth_hz.clone(),
+            freq_ghz: r.freq_ghz.clone(),
+        }
+    }
+
+    #[test]
+    fn solves_and_is_feasible() {
+        let sc = scenario(6, 1);
+        let partition = vec![2; 6];
+        let r = solve(&sc, &partition, Policy::Robust).unwrap();
+        let plan = plan_of(&sc, partition, &r);
+        assert!(plan.bandwidth_ok(&sc));
+        assert!(plan.freq_ok(&sc));
+        assert!(plan.feasible(&sc, Policy::Robust), "{:?}", plan.violations(&sc, Policy::Robust));
+        assert!(r.energy > 0.0 && r.energy.is_finite());
+    }
+
+    #[test]
+    fn matches_plan_energy_accounting() {
+        let mut rng = Rng::new(2);
+        let sc =
+            Scenario::uniform(&ModelProfile::alexnet_paper(), 4, 10e6, 0.26, 0.05, &mut rng);
+        let partition = vec![0, 2, 5, 7];
+        let r = solve(&sc, &partition, Policy::Robust).unwrap();
+        let plan = plan_of(&sc, partition, &r);
+        let e = plan.expected_energy(&sc);
+        assert!((e - r.energy).abs() / e < 1e-6, "{e} vs {}", r.energy);
+    }
+
+    #[test]
+    fn infeasible_when_deadline_impossible() {
+        let mut sc = scenario(3, 3);
+        for d in &mut sc.devices {
+            d.deadline_s = 0.001; // 1 ms: impossible
+        }
+        assert!(matches!(
+            solve(&sc, &vec![4; 3], Policy::Robust),
+            Err(ResourceError::Infeasible { .. })
+        ));
+    }
+
+    #[test]
+    fn energy_decreases_with_looser_deadline() {
+        let partition = vec![7; 5];
+        let mut last = f64::INFINITY;
+        for deadline in [0.16, 0.20, 0.26, 0.34] {
+            let mut rng = Rng::new(9);
+            let sc = Scenario::uniform(
+                &ModelProfile::alexnet_paper(),
+                5,
+                10e6,
+                deadline,
+                0.05,
+                &mut rng,
+            );
+            let r = solve(&sc, &partition, Policy::Robust).unwrap();
+            assert!(
+                r.energy <= last * (1.0 + 1e-6),
+                "deadline {deadline}: {} > {last}",
+                r.energy
+            );
+            last = r.energy;
+        }
+    }
+
+    #[test]
+    fn energy_decreases_with_higher_risk() {
+        let partition = vec![4; 5];
+        let mut last = f64::INFINITY;
+        for risk in [0.02, 0.04, 0.06, 0.08] {
+            let mut rng = Rng::new(11);
+            let sc =
+                Scenario::uniform(&ModelProfile::alexnet_paper(), 5, 10e6, 0.19, risk, &mut rng);
+            let r = solve(&sc, &partition, Policy::Robust).unwrap();
+            assert!(r.energy <= last * (1.0 + 1e-6), "risk {risk}");
+            last = r.energy;
+        }
+    }
+
+    #[test]
+    fn replay_negative_pivot_case() {
+        // Regression: partition [1,6,7] on seed ...362 drove the barrier
+        // into a non-PSD Hessian via the phase-I path.
+        let mut rng = Rng::new(14484861180009783362u64);
+        let n = 2 + rng.below(5);
+        let mut srng = Rng::new(rng.next_u64());
+        let sc = Scenario::uniform(
+            &ModelProfile::alexnet_paper(),
+            n,
+            10e6,
+            rng.range(0.18, 0.3),
+            rng.range(0.02, 0.1),
+            &mut srng,
+        );
+        let partition: Vec<usize> =
+            (0..n).map(|_| rng.below(sc.devices[0].model.num_points())).collect();
+        let dev = device_data(&sc, &partition, Policy::Robust);
+        let mut prog =
+            ResourceProgram { dev, b_total: sc.total_bandwidth_hz, phase1: false, start: vec![] };
+        let heur = heuristic_start(&prog);
+        eprintln!("heuristic_start present: {}", heur.is_some());
+        if let Some(z) = &heur {
+            prog.start = z.clone();
+            for c in 0..prog.num_ineq() {
+                let v = prog.constraint(c, z);
+                assert!(v < 0.0, "constraint {c} = {v}");
+            }
+        }
+        // probe the phase-I Hessian assembly at its start point
+        let dev2 = device_data(&sc, &partition, Policy::Robust);
+        let n = dev2.len();
+        let mut start = vec![0.0; 2 * n + 1];
+        for i in 0..n {
+            start[i] = 0.9 / n as f64;
+            start[n + i] = 0.5 * (dev2[i].f_min + dev2[i].f_max);
+        }
+        let p1 = ResourceProgram { dev: dev2, b_total: sc.total_bandwidth_hz, phase1: true, start: vec![] };
+        let mut s0 = 0.0f64;
+        for i in 0..n {
+            let t_loc = if p1.dev[i].l == 0.0 { 0.0 } else { p1.dev[i].l / start[n + i] };
+            s0 = s0.max(t_loc + p1.t_off(i, start[i]) - p1.dev[i].slack);
+        }
+        start[2 * n] = s0 + 1.0;
+        let mut h = crate::linalg::Matrix::zeros(2 * n + 1, 2 * n + 1);
+        let mut cg = vec![0.0; 2 * n + 1];
+        for c in 0..p1.num_ineq() {
+            let gi = p1.constraint(c, &start);
+            eprintln!("c={c} g={gi:.4e}");
+            assert!(gi < 0.0, "phase-I start infeasible at {c}");
+            p1.constraint_grad(c, &start, &mut cg);
+            h.rank1_update(1.0 / (gi * gi), &cg);
+            p1.constraint_hess_accum(c, &start, -1.0 / gi, &mut h);
+        }
+        for i in 0..2 * n + 1 {
+            eprintln!("H[{i}][{i}] = {:.4e}", h[(i, i)]);
+        }
+        let r = solve(&sc, &partition, Policy::Robust);
+        assert!(r.is_ok(), "{:?}", r.err().map(|e| e.to_string()));
+    }
+
+    #[test]
+    fn dual_matches_barrier() {
+        forall("dual == barrier on random scenarios", 8, |rng| {
+            let n = 2 + rng.below(5);
+            let mut srng = Rng::new(rng.next_u64());
+            let sc = Scenario::uniform(
+                &ModelProfile::alexnet_paper(),
+                n,
+                10e6,
+                rng.range(0.18, 0.3),
+                rng.range(0.02, 0.1),
+                &mut srng,
+            );
+            let partition: Vec<usize> =
+                (0..n).map(|_| rng.below(sc.devices[0].model.num_points())).collect();
+            let a = solve(&sc, &partition, Policy::Robust);
+            let b = solve_dual(&sc, &partition, Policy::Robust);
+            match (a, b) {
+                (Ok(a), Ok(b)) => {
+                    crate::util::check::close(b.energy, a.energy, 2e-2, 1e-6)
+                        .map_err(|e| format!("energy mismatch: {e}"))?;
+                    let plan = Plan {
+                        partition,
+                        bandwidth_hz: b.bandwidth_hz,
+                        freq_ghz: b.freq_ghz,
+                    };
+                    if !plan.bandwidth_ok(&sc) {
+                        return Err("dual exceeded bandwidth".into());
+                    }
+                    if !plan.feasible(&sc, Policy::Robust) {
+                        return Err("dual infeasible".into());
+                    }
+                    Ok(())
+                }
+                (Err(_), Err(_)) => Ok(()),
+                (a, b) => Err(format!(
+                    "feasibility disagreement: barrier ok={} dual ok={}",
+                    a.is_ok(),
+                    b.is_ok()
+                )),
+            }
+        });
+    }
+
+    #[test]
+    fn full_offload_uses_min_frequency_energy() {
+        // m = 0 everywhere: local energy must be ~0 and all energy offload.
+        let sc = scenario(3, 5);
+        let r = solve(&sc, &vec![0; 3], Policy::Robust).unwrap();
+        for (i, d) in sc.devices.iter().enumerate() {
+            let e_loc = d.energy_mean(0, r.freq_ghz[i], r.bandwidth_hz[i])
+                - d.uplink.e_off(d.model.d_bits(0), r.bandwidth_hz[i]);
+            assert!(e_loc.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn worst_case_policy_is_costlier() {
+        let sc = scenario(5, 6);
+        let partition = vec![2; 5];
+        let robust = solve(&sc, &partition, Policy::Robust).unwrap();
+        let worst = solve(&sc, &partition, Policy::WorstCase).unwrap();
+        let mean = solve(&sc, &partition, Policy::MeanOnly).unwrap();
+        // tighter margins cost energy: mean-only <= robust <= worst-case
+        assert!(mean.energy <= robust.energy * (1.0 + 1e-9));
+        assert!(robust.energy <= worst.energy * (1.0 + 1e-9));
+    }
+}

@@ -1,0 +1,256 @@
+//! Planner data model: scenarios (devices + shared uplink budget),
+//! decisions (partition / bandwidth / frequency), and policies.
+
+use crate::channel::Uplink;
+use crate::energy;
+use crate::models::ModelProfile;
+use crate::util::rng::Rng;
+
+use super::ecr;
+
+/// Decision policy under inference-time uncertainty (§VI benchmarks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's proposal: ECR margin σ_n·√(v^loc + v^vm) (eq. 22/28).
+    Robust,
+    /// Baseline 1: upper-bound times, hard deadline (no violations
+    /// tolerated) — margin is the empirical max deviation observed in
+    /// profiling: `worst_dev_factor`·√v^loc + 3.5·√v^vm (the VM is far
+    /// more regular than the device; see models::ModelProfile).
+    WorstCase,
+    /// Baseline 3: ignore uncertainty entirely (margin 0) — used to show
+    /// why robustness is needed in the violation-probability figures.
+    MeanOnly,
+}
+
+/// One mobile device: its DNN/hardware profile, uplink, and task QoS.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub model: ModelProfile,
+    pub uplink: Uplink,
+    /// Task deadline D_n, seconds.
+    pub deadline_s: f64,
+    /// Risk level ε_n (tolerated violation probability).
+    pub risk: f64,
+}
+
+impl Device {
+    /// σ_n = √((1−ε)/ε) (Theorem 1).
+    pub fn sigma(&self) -> f64 {
+        ecr::sigma(self.risk)
+    }
+
+    /// Uncertainty margin at partition point m under `policy` (the second
+    /// term on the LHS of (22), or its baseline analogue).
+    pub fn margin(&self, m: usize, policy: Policy) -> f64 {
+        let vl = self.model.v_loc(m);
+        let vv = self.model.v_vm(m);
+        match policy {
+            Policy::Robust => self.sigma() * (vl + vv).sqrt(),
+            Policy::WorstCase => {
+                self.model.worst_dev_factor * vl.sqrt() + 3.5 * vv.sqrt()
+            }
+            Policy::MeanOnly => 0.0,
+        }
+    }
+
+    /// D′_n(m): deadline budget left for local + offload after the VM mean
+    /// and the uncertainty margin are reserved.
+    pub fn deadline_slack(&self, m: usize, policy: Policy) -> f64 {
+        self.deadline_s - self.model.t_vm_mean(m) - self.margin(m, policy)
+    }
+
+    /// Mean total time at (m, f, b) — eq. 7 with eq. 10/(3)/(5) means.
+    pub fn t_total_mean(&self, m: usize, f_ghz: f64, b_hz: f64) -> f64 {
+        self.model.t_loc_mean(m, f_ghz)
+            + self.uplink.t_off(self.model.d_bits(m), b_hz)
+            + self.model.t_vm_mean(m)
+    }
+
+    /// Expected device energy at (m, f, b) — eq. 6 with (2)/(4).
+    pub fn energy_mean(&self, m: usize, f_ghz: f64, b_hz: f64) -> f64 {
+        let p = &self.model.points[m];
+        energy::e_loc_mean(self.model.device.kappa, f_ghz, p.w_gflops, p.g_flops_cycle)
+            + self.uplink.e_off(self.model.d_bits(m), b_hz)
+    }
+
+    /// Deterministic (ECR-transformed) deadline test at (m, f, b) —
+    /// constraint (22) and its baseline analogues.
+    pub fn deadline_ok(&self, m: usize, f_ghz: f64, b_hz: f64, policy: Policy) -> bool {
+        // Small numerical tolerance: interior-point solutions sit on the
+        // boundary to within solver tolerance.
+        self.deadline_margin(m, f_ghz, b_hz, policy) >= -1e-7 * self.deadline_s
+    }
+
+    /// D_n − LHS of (22): ≥ 0 iff the deterministic constraint holds.
+    pub fn deadline_margin(&self, m: usize, f_ghz: f64, b_hz: f64, policy: Policy) -> f64 {
+        self.deadline_s - self.t_total_mean(m, f_ghz, b_hz) - self.margin(m, policy)
+    }
+}
+
+/// A multi-device scenario (problem (9) instance).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub devices: Vec<Device>,
+    /// Total uplink bandwidth B, Hz.
+    pub total_bandwidth_hz: f64,
+}
+
+impl Scenario {
+    pub fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// The paper's §VI-A setup: N devices uniform in the 400 m square, all
+    /// running `model` with common deadline/risk, bandwidth B.
+    pub fn uniform(
+        model: &ModelProfile,
+        n: usize,
+        total_bandwidth_hz: f64,
+        deadline_s: f64,
+        risk: f64,
+        rng: &mut Rng,
+    ) -> Scenario {
+        let dists = crate::channel::random_distances(n, rng);
+        Scenario {
+            devices: dists
+                .into_iter()
+                .map(|r| Device {
+                    model: model.clone(),
+                    uplink: Uplink::from_distance(r),
+                    deadline_s,
+                    risk,
+                })
+                .collect(),
+            total_bandwidth_hz,
+        }
+    }
+}
+
+/// A complete decision for a scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    /// Partition point m_n per device.
+    pub partition: Vec<usize>,
+    /// Uplink bandwidth b_n per device, Hz.
+    pub bandwidth_hz: Vec<f64>,
+    /// Local CPU/GPU frequency f_n per device, GHz.
+    pub freq_ghz: Vec<f64>,
+}
+
+impl Plan {
+    /// Σ_n E[E_n] — objective (9a).
+    pub fn expected_energy(&self, sc: &Scenario) -> f64 {
+        sc.devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| d.energy_mean(self.partition[i], self.freq_ghz[i], self.bandwidth_hz[i]))
+            .sum()
+    }
+
+    /// All deterministic deadline constraints hold under `policy`.
+    pub fn feasible(&self, sc: &Scenario, policy: Policy) -> bool {
+        self.violations(sc, policy).is_empty()
+    }
+
+    /// Indices of devices whose ECR constraint is violated.
+    pub fn violations(&self, sc: &Scenario, policy: Policy) -> Vec<usize> {
+        sc.devices
+            .iter()
+            .enumerate()
+            .filter(|(i, d)| {
+                !d.deadline_ok(self.partition[*i], self.freq_ghz[*i], self.bandwidth_hz[*i], policy)
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Bandwidth conservation: Σ b_n ≤ B (constraint (9d)).
+    pub fn bandwidth_ok(&self, sc: &Scenario) -> bool {
+        self.bandwidth_hz.iter().sum::<f64>() <= sc.total_bandwidth_hz * (1.0 + 1e-9)
+    }
+
+    /// Frequency bounds (9g).
+    pub fn freq_ok(&self, sc: &Scenario) -> bool {
+        self.freq_ghz.iter().zip(&sc.devices).all(|(&f, d)| {
+            f >= d.model.device.f_min_ghz - 1e-9 && f <= d.model.device.f_max_ghz + 1e-9
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn device(deadline: f64, risk: f64) -> Device {
+        Device {
+            model: ModelProfile::alexnet_paper(),
+            uplink: Uplink::from_distance(100.0),
+            deadline_s: deadline,
+            risk,
+        }
+    }
+
+    #[test]
+    fn margins_ordered_by_policy() {
+        let d = device(0.2, 0.05);
+        for m in 0..d.model.num_points() {
+            let robust = d.margin(m, Policy::Robust);
+            let worst = d.margin(m, Policy::WorstCase);
+            let mean = d.margin(m, Policy::MeanOnly);
+            assert_eq!(mean, 0.0);
+            assert!(robust >= 0.0);
+            if m > 0 {
+                // AlexNet/CPU: worst factor 8 > σ(0.05) ≈ 4.36, so the
+                // worst-case margin dominates the robust one.
+                assert!(worst > robust);
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_margin_sign_matches_ok() {
+        let d = device(0.2, 0.05);
+        for m in [0, 4, 8] {
+            for policy in [Policy::Robust, Policy::WorstCase, Policy::MeanOnly] {
+                let margin = d.deadline_margin(m, 1.0, 1e6, policy);
+                assert_eq!(margin >= 0.0, d.deadline_ok(m, 1.0, 1e6, policy));
+            }
+        }
+    }
+
+    #[test]
+    fn energy_splits_local_and_offload() {
+        let d = device(0.2, 0.05);
+        // m = 0: pure offload (no local energy)
+        let e0 = d.energy_mean(0, 0.1, 1e6);
+        assert_eq!(e0, d.uplink.e_off(d.model.d_bits(0), 1e6));
+        // m = M: tiny offload, dominated by local compute at high f
+        let e_full = d.energy_mean(8, 1.2, 1e6);
+        assert!(e_full > 0.2, "e_full={e_full}");
+    }
+
+    #[test]
+    fn scenario_uniform_shapes() {
+        let mut rng = Rng::new(3);
+        let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 12, 10e6, 0.18, 0.02, &mut rng);
+        assert_eq!(sc.n(), 12);
+        assert!(sc.devices.iter().all(|d| d.deadline_s == 0.18));
+    }
+
+    #[test]
+    fn plan_checks() {
+        let mut rng = Rng::new(4);
+        let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 3, 10e6, 0.25, 0.05, &mut rng);
+        let plan = Plan {
+            partition: vec![2, 2, 2],
+            bandwidth_hz: vec![3e6, 3e6, 3e6],
+            freq_ghz: vec![1.0, 1.0, 1.0],
+        };
+        assert!(plan.bandwidth_ok(&sc));
+        assert!(plan.freq_ok(&sc));
+        assert!(plan.expected_energy(&sc) > 0.0);
+        let over = Plan { bandwidth_hz: vec![5e6, 5e6, 5e6], ..plan.clone() };
+        assert!(!over.bandwidth_ok(&sc));
+    }
+}

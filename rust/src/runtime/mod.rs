@@ -1,0 +1,358 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client from the rust hot path (python is never involved at runtime).
+//!
+//! * Interchange format is HLO **text** — see `python/compile/aot.py` and
+//!   /opt/xla-example/README for why serialized protos are rejected by
+//!   xla_extension 0.5.1.
+//! * Weights are uploaded **once** per partition side as persistent
+//!   `PjRtBuffer`s (the RWTS sidecar from aot.py) and reused by every
+//!   `execute_b` call; only the activation crosses host↔device per
+//!   request.
+//! * Executables are compiled lazily and cached per (role, m, batch).
+//!
+//! PJRT handles are raw pointers (`!Send`), so a serving system must own
+//! an `Engine` inside a dedicated runtime thread — `coordinator` does
+//! exactly that.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::models::manifest::{ArtifactEntry, Manifest, ManifestModel, Role};
+
+/// A parsed RWTS weight tensor.
+#[derive(Clone, Debug)]
+pub struct WeightTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Parse the RWTS sidecar written by `aot.py::_write_weights`.
+pub fn load_weights(path: &Path) -> Result<Vec<WeightTensor>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut off = 0usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        let s = raw.get(*off..*off + n).ok_or_else(|| anyhow!("truncated RWTS file"))?;
+        *off += n;
+        Ok(s)
+    };
+    if take(&mut off, 4)? != b"RWTS" {
+        bail!("bad RWTS magic in {}", path.display());
+    }
+    let u32_at = |b: &[u8]| u32::from_le_bytes(b.try_into().unwrap());
+    let version = u32_at(take(&mut off, 4)?);
+    if version != 1 {
+        bail!("unsupported RWTS version {version}");
+    }
+    let count = u32_at(take(&mut off, 4)?) as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = u32_at(take(&mut off, 4)?) as usize;
+        let name = String::from_utf8(take(&mut off, nlen)?.to_vec())?;
+        let ndim = u32_at(take(&mut off, 4)?) as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let b = take(&mut off, 8)?;
+            dims.push(u64::from_le_bytes(b.try_into().unwrap()) as usize);
+        }
+        let dtype = u32_at(take(&mut off, 4)?);
+        if dtype != 0 {
+            bail!("tensor {name}: unsupported dtype {dtype}");
+        }
+        let elems: usize = dims.iter().product::<usize>().max(1);
+        let bytes = take(&mut off, 4 * elems)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        tensors.push(WeightTensor { name, dims, data });
+    }
+    if off != raw.len() {
+        bail!("{} trailing bytes in {}", raw.len() - off, path.display());
+    }
+    Ok(tensors)
+}
+
+/// One compiled partition side with its weights resident on device.
+pub struct LoadedPart {
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::PjRtBuffer>,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub role: Role,
+    pub m: usize,
+    pub batch: usize,
+}
+
+impl LoadedPart {
+    /// Execute on a flat activation (row-major, must match input_shape).
+    pub fn run(&self, activation: &[f32]) -> Result<Vec<f32>> {
+        let want: usize = self.input_shape.iter().product();
+        if activation.len() != want {
+            bail!(
+                "activation has {} elements, artifact expects {:?} = {want}",
+                activation.len(),
+                self.input_shape
+            );
+        }
+        let client = self.exe.client();
+        let input = client.buffer_from_host_buffer::<f32>(activation, &self.input_shape, None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&input);
+        args.extend(self.weights.iter());
+        let result = self.exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// All loaded parts of one model + the host-side weight store.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    manifest_model: ManifestModel,
+    artifacts_dir: std::path::PathBuf,
+    weights: HashMap<String, WeightTensor>,
+    parts: HashMap<(Role, usize, usize), LoadedPart>,
+}
+
+impl ModelRuntime {
+    /// Number of classes (= last dim of any edge output).
+    pub fn num_classes(&self) -> usize {
+        self.manifest_model
+            .points
+            .last()
+            .map(|p| p.feat_shape.last().copied().unwrap_or(0))
+            .unwrap_or(0)
+    }
+
+    pub fn model(&self) -> &ManifestModel {
+        &self.manifest_model
+    }
+
+    /// Compile-and-cache the given partition side.
+    pub fn load_part(&mut self, role: Role, m: usize, batch: usize) -> Result<&LoadedPart> {
+        if !self.parts.contains_key(&(role, m, batch)) {
+            let entry = self
+                .manifest_model
+                .artifact(role, m, batch)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no artifact for {role:?} m={m} batch={batch} in model {}",
+                        self.manifest_model.name
+                    )
+                })?
+                .clone();
+            let part = self.compile_part(&entry)?;
+            self.parts.insert((role, m, batch), part);
+        }
+        Ok(&self.parts[&(role, m, batch)])
+    }
+
+    fn compile_part(&self, entry: &ArtifactEntry) -> Result<LoadedPart> {
+        let path = self.artifacts_dir.join(&entry.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let mut weights = Vec::with_capacity(entry.weight_names.len());
+        for name in &entry.weight_names {
+            let t = self
+                .weights
+                .get(name)
+                .ok_or_else(|| anyhow!("weight {name} missing from sidecar"))?;
+            let dims = if t.dims.is_empty() { vec![1] } else { t.dims.clone() };
+            weights.push(self.client.buffer_from_host_buffer::<f32>(&t.data, &dims, None)?);
+        }
+        Ok(LoadedPart {
+            exe,
+            weights,
+            input_shape: entry.input_shape.clone(),
+            output_shape: entry.output_shape.clone(),
+            role: entry.role,
+            m: entry.m,
+            batch: entry.batch,
+        })
+    }
+
+    /// Run the device side (blocks [0, m)) for one request.
+    pub fn run_device(&mut self, m: usize, input: &[f32]) -> Result<Vec<f32>> {
+        self.load_part(Role::Device, m, 1)?.run(input)
+    }
+
+    /// Run the edge side (blocks [m, M)) on a batch of features.
+    pub fn run_edge(&mut self, m: usize, batch: usize, features: &[f32]) -> Result<Vec<f32>> {
+        self.load_part(Role::Edge, m, batch)?.run(features)
+    }
+
+    /// Wall-clock probe: median latency of a part over `iters` runs
+    /// (feeds the Fig. 1/5 characterization on *real* PJRT jitter).
+    pub fn probe_latency(
+        &mut self,
+        role: Role,
+        m: usize,
+        batch: usize,
+        iters: usize,
+    ) -> Result<Vec<f64>> {
+        let part = self.load_part(role, m, batch)?;
+        let n_in: usize = part.input_shape.iter().product();
+        let input = vec![0.5f32; n_in];
+        let mut samples = Vec::with_capacity(iters);
+        // warm-up
+        part.run(&input)?;
+        for _ in 0..iters {
+            let t0 = std::time::Instant::now();
+            part.run(&input)?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Ok(samples)
+    }
+}
+
+/// PJRT engine: one CPU client + per-model runtimes.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn cpu(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Build a runtime for one model (weights parsed host-side once).
+    pub fn model_runtime(&self, name: &str) -> Result<ModelRuntime> {
+        let mm = self.manifest.model(name).map_err(|e| anyhow!(e))?.clone();
+        let weights_path = self.manifest.dir.join(&mm.weights_path);
+        let weights = load_weights(&weights_path)?
+            .into_iter()
+            .map(|t| (t.name.clone(), t))
+            .collect();
+        Ok(ModelRuntime {
+            // PjRtClient is internally reference-counted in the C layer;
+            // cloning shares the same client.
+            client: self.client.clone(),
+            manifest_model: mm,
+            artifacts_dir: self.manifest.dir.clone(),
+            weights,
+            parts: HashMap::new(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = Manifest::default_dir();
+        dir.join("manifest.json").exists().then(|| Engine::cpu(&dir).unwrap())
+    }
+
+    #[test]
+    fn weights_sidecar_parses() {
+        let Some(e) = engine() else { return };
+        for name in ["alexnet", "resnet152"] {
+            let mm = e.manifest().model(name).unwrap();
+            let w = load_weights(&e.manifest().dir.join(&mm.weights_path)).unwrap();
+            assert!(!w.is_empty());
+            // every artifact's weight names resolve
+            let have: std::collections::HashSet<_> =
+                w.iter().map(|t| t.name.clone()).collect();
+            for a in &mm.artifacts {
+                for n in &a.weight_names {
+                    assert!(have.contains(n), "{name}: missing {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn device_part_runs_and_produces_finite_features() {
+        let Some(e) = engine() else { return };
+        let mut rt = e.model_runtime("alexnet").unwrap();
+        let input = vec![0.25f32; 32 * 32 * 3];
+        let feat = rt.run_device(2, &input).unwrap();
+        let expect: usize =
+            rt.model().points[2].feat_shape.iter().product();
+        assert_eq!(feat.len(), expect);
+        assert!(feat.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn split_equals_full_chain() {
+        // device(m) ∘ edge(m) must equal edge(0)'s full chain on the same
+        // input — the PJRT-level partition-consistency check.
+        let Some(e) = engine() else { return };
+        let mut rt = e.model_runtime("alexnet").unwrap();
+        let input: Vec<f32> =
+            (0..32 * 32 * 3).map(|i| ((i % 17) as f32) / 17.0 - 0.5).collect();
+        let full = rt.run_edge(0, 1, &input).unwrap();
+        for m in [2, 5] {
+            let feat = rt.run_device(m, &input).unwrap();
+            let split = rt.run_edge(m, 1, &feat).unwrap();
+            assert_eq!(split.len(), full.len());
+            for (a, b) in split.iter().zip(&full) {
+                assert!((a - b).abs() < 1e-3, "m={m}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_edge_matches_singles() {
+        let Some(e) = engine() else { return };
+        let mut rt = e.model_runtime("resnet152").unwrap();
+        let m = 4;
+        let feat_len: usize = rt.model().points[m].feat_shape.iter().product();
+        let batch = 8usize;
+        let feats: Vec<f32> =
+            (0..feat_len * batch).map(|i| ((i % 23) as f32) / 23.0).collect();
+        let batched = rt.run_edge(m, batch, &feats).unwrap();
+        let classes = rt.num_classes();
+        assert_eq!(batched.len(), batch * classes);
+        for b in 0..3 {
+            let single =
+                rt.run_edge(m, 1, &feats[b * feat_len..(b + 1) * feat_len]).unwrap();
+            for (a, bb) in single.iter().zip(&batched[b * classes..(b + 1) * classes]) {
+                assert!((a - bb).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let Some(e) = engine() else { return };
+        let mut rt = e.model_runtime("alexnet").unwrap();
+        assert!(rt.load_part(Role::Edge, 3, 999).is_err());
+    }
+
+    #[test]
+    fn wrong_activation_size_is_an_error() {
+        let Some(e) = engine() else { return };
+        let mut rt = e.model_runtime("alexnet").unwrap();
+        assert!(rt.run_device(2, &[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn latency_probe_returns_samples() {
+        let Some(e) = engine() else { return };
+        let mut rt = e.model_runtime("alexnet").unwrap();
+        let s = rt.probe_latency(Role::Device, 1, 1, 5).unwrap();
+        assert_eq!(s.len(), 5);
+        assert!(s.iter().all(|&x| x > 0.0));
+    }
+}

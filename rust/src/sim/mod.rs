@@ -1,0 +1,178 @@
+//! Monte-Carlo uncertainty simulator.
+//!
+//! Executes a plan against the synthetic hardware's *actual* random
+//! inference times (which the planner never saw — it only got means and
+//! variances) and measures the empirical deadline-violation probability
+//! and energy.  This regenerates Fig. 13(c)/14(c): the violation
+//! probability of the robust plan must stay below the risk level ε for
+//! every distribution family with the declared moments.
+
+use crate::optim::types::{Plan, Scenario};
+use crate::profile::{Dist, SyntheticHardware};
+use crate::util::rng::Rng;
+use crate::util::stats::Moments;
+
+/// Simulation options.
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    pub trials: usize,
+    pub dist: Dist,
+    pub seed: u64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { trials: 10_000, dist: Dist::Lognormal, seed: 0x5eed }
+    }
+}
+
+/// Per-device and aggregate outcome of a Monte-Carlo run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Empirical P{T_n > D_n} per device.
+    pub violation_prob: Vec<f64>,
+    /// Max over devices (the number compared against ε).
+    pub worst_violation: f64,
+    /// Mean over devices.
+    pub mean_violation: f64,
+    /// Mean measured total energy per trial (J) — includes the *actual*
+    /// local time draw, so it can differ slightly from the planner's
+    /// expectation.
+    pub mean_energy: f64,
+    /// Per-device mean end-to-end latency (s).
+    pub mean_latency: Vec<f64>,
+    /// Per-device 99th-percentile latency (s).
+    pub p99_latency: Vec<f64>,
+}
+
+/// Run the plan `opts.trials` times against sampled inference times.
+pub fn evaluate(sc: &Scenario, plan: &Plan, opts: &SimOptions) -> SimReport {
+    assert_eq!(plan.partition.len(), sc.n());
+    let mut rng = Rng::new(opts.seed);
+    let hardware: Vec<SyntheticHardware> = sc
+        .devices
+        .iter()
+        .map(|d| SyntheticHardware::new(d.model.clone(), opts.dist))
+        .collect();
+
+    let mut violations = vec![0usize; sc.n()];
+    let mut lat_acc: Vec<Moments> = (0..sc.n()).map(|_| Moments::new()).collect();
+    let mut lat_samples: Vec<Vec<f64>> = vec![Vec::with_capacity(opts.trials); sc.n()];
+    let mut energy_acc = Moments::new();
+
+    for _ in 0..opts.trials {
+        let mut total_energy = 0.0;
+        for (i, dev) in sc.devices.iter().enumerate() {
+            let m = plan.partition[i];
+            let f = plan.freq_ghz[i];
+            let b = plan.bandwidth_hz[i];
+            let t_loc = hardware[i].sample_t_loc(m, f, &mut rng);
+            let t_off = dev.uplink.t_off(dev.model.d_bits(m), b);
+            let t_vm = hardware[i].sample_t_vm(m, &mut rng);
+            let latency = t_loc + t_off + t_vm;
+            if latency > dev.deadline_s {
+                violations[i] += 1;
+            }
+            lat_acc[i].push(latency);
+            lat_samples[i].push(latency);
+            total_energy += crate::energy::e_loc(dev.model.device.kappa, f, t_loc)
+                + dev.uplink.e_off(dev.model.d_bits(m), b);
+        }
+        energy_acc.push(total_energy);
+    }
+
+    let violation_prob: Vec<f64> =
+        violations.iter().map(|&v| v as f64 / opts.trials as f64).collect();
+    let p99_latency = lat_samples
+        .iter()
+        .map(|s| crate::util::stats::percentile_of(s, 99.0))
+        .collect();
+    SimReport {
+        worst_violation: violation_prob.iter().cloned().fold(0.0, f64::max),
+        mean_violation: violation_prob.iter().sum::<f64>() / sc.n() as f64,
+        violation_prob,
+        mean_energy: energy_acc.mean(),
+        mean_latency: lat_acc.iter().map(Moments::mean).collect(),
+        p99_latency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelProfile;
+    use crate::optim::{alternating, baselines, AlternatingOptions};
+
+    fn scenario(seed: u64) -> Scenario {
+        let mut rng = Rng::new(seed);
+        Scenario::uniform(&ModelProfile::alexnet_paper(), 6, 10e6, 0.20, 0.05, &mut rng)
+    }
+
+    #[test]
+    fn robust_plan_respects_risk_level_all_distributions() {
+        // The core soundness claim (Fig. 13c): empirical violation ≤ ε.
+        let sc = scenario(21);
+        let plan =
+            alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap().plan;
+        for dist in [Dist::Lognormal, Dist::Gamma, Dist::ShiftedExp] {
+            let r = evaluate(&sc, &plan, &SimOptions { trials: 8000, dist, seed: 7 });
+            assert!(
+                r.worst_violation <= sc.devices[0].risk + 0.01,
+                "{dist:?}: violation {} > eps {}",
+                r.worst_violation,
+                sc.devices[0].risk
+            );
+        }
+    }
+
+    #[test]
+    fn mean_only_plan_violates_more_than_robust() {
+        let sc = scenario(22);
+        let robust =
+            alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap().plan;
+        let mean = baselines::mean_only(&sc).unwrap().plan;
+        let opts = SimOptions { trials: 8000, ..Default::default() };
+        let r_rob = evaluate(&sc, &robust, &opts);
+        let r_mean = evaluate(&sc, &mean, &opts);
+        assert!(
+            r_mean.worst_violation > r_rob.worst_violation,
+            "mean-only {} vs robust {}",
+            r_mean.worst_violation,
+            r_rob.worst_violation
+        );
+    }
+
+    #[test]
+    fn worst_case_plan_nearly_never_violates() {
+        let sc = scenario(23);
+        let worst = baselines::worst_case(&sc).unwrap().plan;
+        let r = evaluate(&sc, &worst, &SimOptions { trials: 8000, ..Default::default() });
+        assert!(r.worst_violation < 0.01, "violation {}", r.worst_violation);
+    }
+
+    #[test]
+    fn energy_estimate_matches_planner_expectation() {
+        let sc = scenario(24);
+        let rp = alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap();
+        let r = evaluate(&sc, &rp.plan, &SimOptions { trials: 20_000, ..Default::default() });
+        // sampled energy uses actual t_loc draws; means should agree ~5%
+        assert!(
+            (r.mean_energy - rp.energy).abs() / rp.energy < 0.05,
+            "sim {} vs plan {}",
+            r.mean_energy,
+            rp.energy
+        );
+    }
+
+    #[test]
+    fn latencies_below_deadline_on_average() {
+        let sc = scenario(25);
+        let plan =
+            alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap().plan;
+        let r = evaluate(&sc, &plan, &SimOptions::default());
+        for (i, dev) in sc.devices.iter().enumerate() {
+            assert!(r.mean_latency[i] < dev.deadline_s);
+            assert!(r.p99_latency[i] >= r.mean_latency[i]);
+        }
+    }
+}

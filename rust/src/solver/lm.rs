@@ -1,0 +1,184 @@
+//! Levenberg–Marquardt nonlinear least squares.
+//!
+//! §IV of the paper fits the mean-inference-time model t̄(f) = w/(g·f)
+//! to measured (frequency, time) pairs with "the nonlinear least squares
+//! method"; this is that method.  Generic over the residual function with
+//! a forward-difference Jacobian, so the profiler can also fit richer
+//! models (e.g. t = a/f + c) for the ablation figures.
+
+use crate::linalg::{self, Cholesky, Matrix};
+
+/// LM options.
+#[derive(Clone, Debug)]
+pub struct LmOptions {
+    pub max_iters: usize,
+    /// Initial damping λ.
+    pub lambda0: f64,
+    /// Stop when the step or the cost improvement is below this.
+    pub tol: f64,
+    /// Finite-difference step for the Jacobian.
+    pub fd_eps: f64,
+}
+
+impl Default for LmOptions {
+    fn default() -> Self {
+        LmOptions { max_iters: 200, lambda0: 1e-3, tol: 1e-12, fd_eps: 1e-7 }
+    }
+}
+
+/// Fit result.
+#[derive(Clone, Debug)]
+pub struct LmFit {
+    pub params: Vec<f64>,
+    /// Final sum of squared residuals (the paper reports this as the
+    /// "squared 2-norm of the residual", Fig. 6).
+    pub sse: f64,
+    pub iters: usize,
+    pub converged: bool,
+}
+
+/// Minimize ||r(θ)||² over θ.  `residuals(θ, out)` writes the residual
+/// vector (fixed length = out.len()).
+pub fn fit<R>(n_resid: usize, theta0: &[f64], opts: &LmOptions, mut residuals: R) -> LmFit
+where
+    R: FnMut(&[f64], &mut [f64]),
+{
+    let p = theta0.len();
+    let mut theta = theta0.to_vec();
+    let mut r = vec![0.0; n_resid];
+    let mut r_try = vec![0.0; n_resid];
+    let mut jac = Matrix::zeros(n_resid, p);
+    let mut lambda = opts.lambda0;
+
+    residuals(&theta, &mut r);
+    let mut cost = linalg::dot(&r, &r);
+
+    for iter in 0..opts.max_iters {
+        // Forward-difference Jacobian.
+        for j in 0..p {
+            let h = opts.fd_eps * theta[j].abs().max(1.0);
+            let mut tp = theta.clone();
+            tp[j] += h;
+            residuals(&tp, &mut r_try);
+            for i in 0..n_resid {
+                jac[(i, j)] = (r_try[i] - r[i]) / h;
+            }
+        }
+        // Normal equations: (JᵀJ + λ diag(JᵀJ)) δ = −Jᵀ r
+        let mut jtj = Matrix::zeros(p, p);
+        for i in 0..n_resid {
+            jtj.rank1_update(1.0, jac.row(i));
+        }
+        let jtr = jac.t_matvec(&r);
+
+        let mut improved = false;
+        for _ in 0..30 {
+            let mut a = jtj.clone();
+            for d in 0..p {
+                let scale = jtj[(d, d)].max(1e-12);
+                a[(d, d)] += lambda * scale;
+            }
+            let delta = match Cholesky::factor_regularized(&a, 1e-14, 1.0) {
+                Ok((c, _)) => {
+                    let mut d = c.solve(&jtr);
+                    linalg::scale(-1.0, &mut d);
+                    d
+                }
+                Err(_) => break,
+            };
+            let mut theta_try = theta.clone();
+            linalg::axpy(1.0, &delta, &mut theta_try);
+            residuals(&theta_try, &mut r_try);
+            let cost_try = linalg::dot(&r_try, &r_try);
+            if cost_try < cost {
+                let step_norm = linalg::norm2(&delta);
+                let gain = cost - cost_try;
+                theta = theta_try;
+                std::mem::swap(&mut r, &mut r_try);
+                cost = cost_try;
+                lambda = (lambda * 0.3).max(1e-12);
+                improved = true;
+                if step_norm < opts.tol || gain < opts.tol {
+                    return LmFit { params: theta, sse: cost, iters: iter + 1, converged: true };
+                }
+                break;
+            }
+            lambda *= 10.0;
+            if lambda > 1e12 {
+                break;
+            }
+        }
+        if !improved {
+            return LmFit { params: theta, sse: cost, iters: iter + 1, converged: true };
+        }
+    }
+    LmFit { params: theta, sse: cost, iters: opts.max_iters, converged: false }
+}
+
+/// Convenience: fit the paper's eq-(10) model  t̄(f) = w / (g f)  for known
+/// workload `w_gflops`, returning the fitted `g` (GFLOPs/cycle·GHz — the
+/// effective per-cycle throughput) and the residual SSE.
+pub fn fit_throughput(w_gflops: f64, freqs_ghz: &[f64], times_s: &[f64]) -> (f64, f64) {
+    assert_eq!(freqs_ghz.len(), times_s.len());
+    assert!(!freqs_ghz.is_empty());
+    // Closed-form warm start: g ≈ mean over samples of w/(t f).
+    let g0 = freqs_ghz
+        .iter()
+        .zip(times_s)
+        .map(|(f, t)| w_gflops / (t * f).max(1e-12))
+        .sum::<f64>()
+        / freqs_ghz.len() as f64;
+    let fitres = fit(freqs_ghz.len(), &[g0], &LmOptions::default(), |theta, out| {
+        let g = theta[0].max(1e-9);
+        for (i, (f, t)) in freqs_ghz.iter().zip(times_s).enumerate() {
+            out[i] = w_gflops / (g * f) - t;
+        }
+    });
+    (fitres.params[0], fitres.sse)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fits_exact_throughput_model() {
+        let w = 1.4214; // AlexNet full, Table III
+        let g_true = 7.1037;
+        let freqs: Vec<f64> = (1..=12).map(|i| 0.1 * i as f64).collect();
+        let times: Vec<f64> = freqs.iter().map(|f| w / (g_true * f)).collect();
+        let (g, sse) = fit_throughput(w, &freqs, &times);
+        assert!((g - g_true).abs() < 1e-6, "g={g}");
+        assert!(sse < 1e-12);
+    }
+
+    #[test]
+    fn fits_noisy_throughput_model() {
+        let mut rng = Rng::new(3);
+        let (w, g_true) = (23.1064, 307.6753); // ResNet152 full, Table IV
+        let freqs: Vec<f64> = (2..=8).map(|i| 0.1 * i as f64).collect();
+        let times: Vec<f64> = freqs
+            .iter()
+            .map(|f| w / (g_true * f) * (1.0 + 0.01 * rng.normal()))
+            .collect();
+        let (g, _sse) = fit_throughput(w, &freqs, &times);
+        assert!((g - g_true).abs() / g_true < 0.03, "g={g}");
+    }
+
+    #[test]
+    fn generic_fit_recovers_two_params() {
+        // y = a e^{-b x} sampled exactly.
+        let (a, b) = (2.5, 0.7);
+        let xs: Vec<f64> = (0..20).map(|i| 0.2 * i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| a * (-b * x).exp()).collect();
+        let fitres = fit(xs.len(), &[1.0, 0.1], &LmOptions::default(), |th, out| {
+            for (i, x) in xs.iter().enumerate() {
+                out[i] = th[0] * (-th[1] * x).exp() - ys[i];
+            }
+        });
+        assert!(fitres.converged);
+        assert!((fitres.params[0] - a).abs() < 1e-5, "{:?}", fitres.params);
+        assert!((fitres.params[1] - b).abs() < 1e-5, "{:?}", fitres.params);
+    }
+}

@@ -1,0 +1,10 @@
+//! Optimization substrate: the `ConvexProgram` interface, a log-barrier
+//! interior-point solver (used by both of the paper's subproblems), and
+//! Levenberg–Marquardt nonlinear least squares (the §IV mean-time fit).
+
+pub mod barrier;
+pub mod lm;
+pub mod program;
+
+pub use barrier::{solve, solve_from, BarrierOptions, BarrierSolution};
+pub use program::ConvexProgram;

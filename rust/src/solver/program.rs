@@ -1,0 +1,126 @@
+//! `ConvexProgram`: the interface the barrier interior-point solver
+//! consumes.
+//!
+//! A program is
+//!
+//! ```text
+//!   minimize    f(x)
+//!   subject to  g_i(x) <= 0,  i = 0..num_ineq
+//!               A x = b            (optional linear equalities)
+//! ```
+//!
+//! with `f` and every `g_i` convex and twice differentiable on the
+//! domain.  Implementors provide analytic gradients/Hessians — both
+//! subproblems of the paper (resource allocation (23) and the PCCP
+//! iterate (36)) have closed forms, so no autodiff is needed.
+
+use crate::linalg::Matrix;
+
+pub trait ConvexProgram {
+    fn num_vars(&self) -> usize;
+
+    fn num_ineq(&self) -> usize;
+
+    fn objective(&self, x: &[f64]) -> f64;
+
+    /// Write ∇f(x) into `g` (len = num_vars).
+    fn gradient(&self, x: &[f64], g: &mut [f64]);
+
+    /// Add ∇²f(x), scaled by `scale`, into `h` (num_vars × num_vars).
+    fn hessian_accum(&self, x: &[f64], scale: f64, h: &mut Matrix);
+
+    /// Value of inequality i at x (feasible iff < 0 strictly inside).
+    fn constraint(&self, i: usize, x: &[f64]) -> f64;
+
+    /// Write ∇g_i(x) into `g`.
+    fn constraint_grad(&self, i: usize, x: &[f64], g: &mut [f64]);
+
+    /// Add ∇²g_i(x), scaled by `scale`, into `h`.  Default: zero
+    /// (linear constraint).
+    fn constraint_hess_accum(&self, _i: usize, _x: &[f64], _scale: f64, _h: &mut Matrix) {
+    }
+
+    /// Optional linear equality system (A, b) with A full row rank.
+    fn equalities(&self) -> Option<(Matrix, Vec<f64>)> {
+        None
+    }
+
+    /// A strictly feasible starting point (g_i(x0) < 0 for all i and
+    /// A x0 = b).  Programs in this crate construct their own feasible
+    /// starts (cheap, structure-specific) rather than running a generic
+    /// phase-I.
+    fn initial_point(&self) -> Vec<f64>;
+}
+
+/// Max_i g_i(x): > 0 means infeasible, < 0 strictly feasible.
+pub fn max_violation<P: ConvexProgram + ?Sized>(p: &P, x: &[f64]) -> f64 {
+    (0..p.num_ineq())
+        .map(|i| p.constraint(i, x))
+        .fold(f64::NEG_INFINITY, f64::max)
+}
+
+#[cfg(test)]
+pub(crate) mod test_programs {
+    use super::*;
+
+    /// minimize ||x - target||² s.t. x_i <= cap_i, Σx = sum (if set).
+    /// Analytic solutions are easy to derive for test fixtures.
+    pub struct BoxQp {
+        pub target: Vec<f64>,
+        pub cap: Vec<f64>,
+        pub sum: Option<f64>,
+    }
+
+    impl ConvexProgram for BoxQp {
+        fn num_vars(&self) -> usize {
+            self.target.len()
+        }
+
+        fn num_ineq(&self) -> usize {
+            self.cap.len()
+        }
+
+        fn objective(&self, x: &[f64]) -> f64 {
+            x.iter().zip(&self.target).map(|(a, b)| (a - b) * (a - b)).sum()
+        }
+
+        fn gradient(&self, x: &[f64], g: &mut [f64]) {
+            for i in 0..x.len() {
+                g[i] = 2.0 * (x[i] - self.target[i]);
+            }
+        }
+
+        fn hessian_accum(&self, _x: &[f64], scale: f64, h: &mut Matrix) {
+            for i in 0..self.target.len() {
+                h[(i, i)] += 2.0 * scale;
+            }
+        }
+
+        fn constraint(&self, i: usize, x: &[f64]) -> f64 {
+            x[i] - self.cap[i]
+        }
+
+        fn constraint_grad(&self, i: usize, _x: &[f64], g: &mut [f64]) {
+            g.iter_mut().for_each(|v| *v = 0.0);
+            g[i] = 1.0;
+        }
+
+        fn equalities(&self) -> Option<(Matrix, Vec<f64>)> {
+            self.sum.map(|s| {
+                let mut a = Matrix::zeros(1, self.target.len());
+                for j in 0..self.target.len() {
+                    a[(0, j)] = 1.0;
+                }
+                (a, vec![s])
+            })
+        }
+
+        fn initial_point(&self) -> Vec<f64> {
+            match self.sum {
+                // Equal split satisfies Σx = s; assumes caps allow it.
+                Some(s) => vec![s / self.target.len() as f64; self.target.len()],
+                None => self.cap.iter().map(|c| c - 1.0).collect(),
+            }
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Criterion-like micro-bench harness (criterion is not available offline).
+//!
+//! Used by `rust/benches/*.rs` (compiled with `harness = false`): warm-up,
+//! adaptive iteration count targeting a fixed measurement window, then
+//! median / mean / p95 over per-iteration wall time.  Prints one line per
+//! benchmark in a stable, grep-friendly format:
+//!
+//! `bench <name> ... median 1.234 ms  mean 1.300 ms  p95 1.600 ms  (n=1000)`
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+/// Bench runner with a fixed time budget per benchmark.
+pub struct Bencher {
+    warmup: Duration,
+    window: Duration,
+    max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            window: Duration::from_secs(1),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Shorter windows for expensive end-to-end benches.
+    pub fn with_window(mut self, warmup: Duration, window: Duration) -> Self {
+        self.warmup = warmup;
+        self.window = window;
+        self
+    }
+
+    pub fn with_max_iters(mut self, n: u64) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Measure `f`, using `black_box` on whatever it returns.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warm-up phase (fills caches, triggers lazy init, JIT-ish effects).
+        let start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while start.elapsed() < self.warmup && warm_iters < self.max_iters {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+
+        // Measurement: per-iteration timing, capped by window + max_iters.
+        let mut samples_ns: Vec<u64> = Vec::with_capacity(1024);
+        let meas = Instant::now();
+        while meas.elapsed() < self.window && (samples_ns.len() as u64) < self.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as u64);
+        }
+        if samples_ns.is_empty() {
+            // pathological: one mandatory sample
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as u64);
+        }
+        samples_ns.sort_unstable();
+        let n = samples_ns.len();
+        let pick = |q: f64| samples_ns[((n - 1) as f64 * q) as usize];
+        let mean_ns = samples_ns.iter().sum::<u64>() / n as u64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n as u64,
+            median: Duration::from_nanos(pick(0.5)),
+            mean: Duration::from_nanos(mean_ns),
+            p95: Duration::from_nanos(pick(0.95)),
+            min: Duration::from_nanos(samples_ns[0]),
+        };
+        println!(
+            "bench {:<44} median {:>12}  mean {:>12}  p95 {:>12}  (n={})",
+            result.name,
+            fmt_dur(result.median),
+            fmt_dur(result.mean),
+            fmt_dur(result.p95),
+            result.iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Human duration with 3 significant decimals and a sensible unit.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.3} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new().with_window(
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+        );
+        let r = b
+            .bench("spin", || {
+                let mut acc = 0u64;
+                for i in 0..1000 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                acc
+            })
+            .clone();
+        assert!(r.iters >= 1);
+        assert!(r.median >= r.min);
+        assert!(r.p95 >= r.median);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.500 ms");
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

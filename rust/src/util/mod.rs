@@ -1,0 +1,9 @@
+//! Shared substrate: PRNG, JSON, statistics, property-check harness, and
+//! the micro-bench runner (offline environment: no rand/serde/proptest/
+//! criterion crates — these modules replace them).
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;

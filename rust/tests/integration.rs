@@ -1,0 +1,163 @@
+//! Integration tests: the whole pipeline across module boundaries —
+//! plan (optim) → guarantee (sim) → execute (runtime/coordinator) on the
+//! real AOT artifacts.
+
+use std::time::Duration;
+
+use ripra::coordinator::{self, ServeOptions};
+use ripra::models::manifest::{Manifest, Role};
+use ripra::models::ModelProfile;
+use ripra::optim::{alternating, baselines, AlternatingOptions, Plan, Policy, Scenario};
+use ripra::profile::Dist;
+use ripra::sim::{self, SimOptions};
+use ripra::util::check::forall;
+use ripra::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn plan_then_simulate_both_models() {
+    for model in [ModelProfile::alexnet_paper(), ModelProfile::resnet152_paper()] {
+        let (b, d, eps) = ripra::figures::default_setting(&model.name);
+        let mut rng = Rng::new(0x1917);
+        let sc = Scenario::uniform(&model, 8, b, d, eps, &mut rng);
+        let r = alternating::solve(&sc, &AlternatingOptions::default(), None)
+            .unwrap_or_else(|e| panic!("{}: {e}", model.name));
+        assert!(r.plan.feasible(&sc, Policy::Robust));
+        assert!(r.plan.bandwidth_ok(&sc) && r.plan.freq_ok(&sc));
+        let rep = sim::evaluate(&sc, &r.plan, &SimOptions { trials: 6000, ..Default::default() });
+        assert!(
+            rep.worst_violation <= eps + 0.01,
+            "{}: violation {} > {eps}",
+            model.name,
+            rep.worst_violation
+        );
+    }
+}
+
+#[test]
+fn three_policies_ordered_by_energy_and_safety() {
+    let mut rng = Rng::new(0x0D0);
+    let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 8, 10e6, 0.20, 0.04, &mut rng);
+    let rob = alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap();
+    let wc = baselines::worst_case(&sc).unwrap();
+    let mean = baselines::mean_only(&sc).unwrap();
+    // energy: mean <= robust <= worst (margins strictly ordered on alexnet)
+    assert!(mean.energy <= rob.energy * 1.001);
+    assert!(rob.energy <= wc.energy * 1.001);
+    // safety: violations ordered the other way
+    let opts = SimOptions { trials: 8000, ..Default::default() };
+    let v_mean = sim::evaluate(&sc, &mean.plan, &opts).worst_violation;
+    let v_rob = sim::evaluate(&sc, &rob.plan, &opts).worst_violation;
+    let v_wc = sim::evaluate(&sc, &wc.plan, &opts).worst_violation;
+    assert!(v_wc <= v_rob + 1e-9);
+    assert!(v_rob <= sc.devices[0].risk);
+    assert!(v_mean > v_rob);
+}
+
+#[test]
+fn planner_never_panics_on_random_scenarios() {
+    forall("planner total robustness", 10, |rng| {
+        let model = if rng.f64() < 0.5 {
+            ModelProfile::alexnet_paper()
+        } else {
+            ModelProfile::resnet152_paper()
+        };
+        let n = 1 + rng.below(10);
+        let b = rng.range(2e6, 40e6);
+        let d = rng.range(0.05, 0.4);
+        let eps = rng.range(0.01, 0.2);
+        let mut srng = Rng::new(rng.next_u64());
+        let sc = Scenario::uniform(&model, n, b, d, eps, &mut srng);
+        // Either a feasible plan or a clean error — never a panic, and a
+        // returned plan must satisfy every constraint.
+        match alternating::solve(&sc, &AlternatingOptions::default(), None) {
+            Ok(r) => {
+                if !r.plan.feasible(&sc, Policy::Robust) {
+                    return Err(format!("infeasible plan returned: {:?}", r.plan.partition));
+                }
+                if !r.plan.bandwidth_ok(&sc) {
+                    return Err("bandwidth overcommitted".into());
+                }
+                Ok(())
+            }
+            Err(_) => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn ecr_guarantee_is_distribution_free_end_to_end() {
+    let mut rng = Rng::new(0xECA);
+    let sc = Scenario::uniform(&ModelProfile::resnet152_paper(), 6, 30e6, 0.17, 0.06, &mut rng);
+    let plan = alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap().plan;
+    for dist in [Dist::Lognormal, Dist::Gamma, Dist::ShiftedExp] {
+        let rep = sim::evaluate(&sc, &plan, &SimOptions { trials: 8000, dist, seed: 5 });
+        assert!(rep.worst_violation <= 0.06, "{dist:?}: {}", rep.worst_violation);
+    }
+}
+
+// ---- artifact-backed tests (skipped when `make artifacts` hasn't run) ----
+
+#[test]
+fn artifacts_cover_every_partition_choice() {
+    if !have_artifacts() {
+        return;
+    }
+    let manifest = Manifest::load(&Manifest::default_dir()).unwrap();
+    for model in manifest.models.values() {
+        for m in 1..=model.num_blocks {
+            assert!(model.artifact(Role::Device, m, 1).is_some());
+        }
+        for m in 0..model.num_blocks {
+            assert!(model.artifact(Role::Edge, m, 1).is_some());
+            assert!(model.artifact(Role::Edge, m, 8).is_some());
+        }
+    }
+}
+
+#[test]
+fn serve_executes_planned_partition_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rng = Rng::new(0x5E);
+    let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 4, 10e6, 0.22, 0.05, &mut rng);
+    let plan = alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap().plan;
+    let opts = ServeOptions {
+        requests_per_device: 5,
+        time_scale: 0.0, // no sleeps in tests
+        batch_window: Duration::from_millis(2),
+        ..Default::default()
+    };
+    let rep = coordinator::serve(Manifest::default_dir(), &sc, &plan, &opts).unwrap();
+    assert_eq!(rep.completed, 20);
+    assert!(rep.mean_edge_exec_s >= 0.0);
+    assert!(rep.total_energy_j > 0.0);
+}
+
+#[test]
+fn serve_handles_heterogeneous_partitions() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rng = Rng::new(0x5F);
+    let sc = Scenario::uniform(&ModelProfile::resnet152_paper(), 3, 30e6, 0.2, 0.05, &mut rng);
+    // mixed plan: full offload, split, full local
+    let plan = Plan {
+        partition: vec![0, 4, 9],
+        bandwidth_hz: vec![10e6, 10e6, 9e6],
+        freq_ghz: vec![0.3, 0.5, 0.8],
+    };
+    let opts = ServeOptions {
+        model: "resnet152".into(),
+        requests_per_device: 4,
+        time_scale: 0.0,
+        batch_window: Duration::from_millis(2),
+        ..Default::default()
+    };
+    let rep = coordinator::serve(Manifest::default_dir(), &sc, &plan, &opts).unwrap();
+    assert_eq!(rep.completed, 12);
+}

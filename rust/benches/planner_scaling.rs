@@ -1,9 +1,15 @@
 //! Algorithm-2 end-to-end scaling: regenerates the numbers behind Fig. 9
-//! (PCCP iterations) and Fig. 11 (runtime vs N) as benchmark output.
+//! (PCCP iterations) and Fig. 11 (runtime vs N) as benchmark output, for
+//! the sequential baseline (`threads = 1`) and the parallel fan-out side
+//! by side.  Timings plus iteration counts are merged into
+//! `BENCH_planner.json` at the repo root — the perf trajectory future PRs
+//! diff against (see EXPERIMENTS.md §Perf for the methodology).
 
+use std::path::Path;
 use std::time::Duration;
 
 use ripra::models::ModelProfile;
+use ripra::optim::pccp::PccpOptions;
 use ripra::optim::{alternating, AlternatingOptions, Scenario};
 use ripra::util::bench::Bencher;
 use ripra::util::rng::Rng;
@@ -11,18 +17,46 @@ use ripra::util::rng::Rng;
 fn main() {
     let mut bench =
         Bencher::new().with_window(Duration::from_millis(300), Duration::from_secs(3));
+    let seq = AlternatingOptions {
+        threads: 1,
+        pccp: PccpOptions { threads: 1, ..PccpOptions::default() },
+        ..Default::default()
+    };
+    let par = AlternatingOptions::default(); // threads = 0: all cores
+
     for model in [ModelProfile::alexnet_paper(), ModelProfile::resnet152_paper()] {
         let (b0, d, eps) = ripra::figures::default_setting(&model.name);
         for n in [5usize, 10, 20, 30] {
             let b = b0 * (n as f64 / 12.0).max(1.0);
             let mut rng = Rng::new(0xBE + n as u64);
             let sc = Scenario::uniform(&model, n, b, d, eps, &mut rng);
-            let r = bench.bench(&format!("alg2_{}_n{n}", model.name), || {
-                alternating::solve(&sc, &AlternatingOptions::default(), None)
-                    .map(|r| r.energy)
-                    .unwrap_or(f64::NAN)
-            });
-            let _ = r;
+            for (tag, opts) in [("seq", &seq), ("par", &par)] {
+                let name = format!("alg2_{}_n{n}_{tag}", model.name);
+                bench.bench(&name, || {
+                    alternating::solve(&sc, opts, None).map(|r| r.energy).unwrap_or(f64::NAN)
+                });
+                // Iteration counts for the Fig. 9/11 reproduction (one
+                // deterministic solve — identical to every timed run).
+                if let Ok(r) = alternating::solve(&sc, opts, None) {
+                    bench.attach(&name, "newton_iters", r.newton_iters as f64);
+                    bench.attach(&name, "outer_iters", r.outer_iters as f64);
+                    bench.attach(&name, "avg_pccp_iters", r.avg_pccp_iters);
+                    bench.attach(&name, "energy", r.energy);
+                }
+            }
+            let median = |tag: &str| {
+                bench
+                    .results()
+                    .iter()
+                    .find(|r| r.name == format!("alg2_{}_n{n}_{tag}", model.name))
+                    .map(|r| r.median.as_secs_f64())
+            };
+            if let (Some(s), Some(p)) = (median("seq"), median("par")) {
+                println!("  -> {} n={n}: parallel speedup {:.2}x", model.name, s / p);
+            }
         }
     }
+
+    bench.write_json(Path::new("BENCH_planner.json")).expect("writing BENCH_planner.json");
+    println!("wrote BENCH_planner.json");
 }

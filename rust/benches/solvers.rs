@@ -1,9 +1,14 @@
 //! Solver micro/meso benchmarks: the optimizer's hot paths.
 //!
-//! - Cholesky + barrier Newton micro-costs (the IPT inner loop)
+//! - Cholesky factor/solve, allocating vs in-place (the IPT inner loop)
 //! - resource allocation: joint barrier vs dual decomposition (ablation
 //!   for DESIGN.md §6 — the O(N^3) vs O(N log^2) trade)
-//! - per-device PCCP solve (Algorithm 1 unit of work)
+//! - per-device PCCP solve (Algorithm 1 unit of work) and the scenario
+//!   fan-out, sequential vs parallel
+//!
+//! Results merge into `BENCH_planner.json` (see EXPERIMENTS.md §Perf).
+
+use std::path::Path;
 
 use ripra::linalg::{Cholesky, Matrix};
 use ripra::models::ModelProfile;
@@ -31,11 +36,19 @@ fn main() {
     for n in [16usize, 64, 128] {
         let a = random_spd(n, &mut rng);
         let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        bench.bench(&format!("cholesky_factor_{n}"), || {
-            Cholesky::factor(&a).unwrap()
+        bench.bench(&format!("cholesky_factor_{n}"), || Cholesky::factor(&a).unwrap());
+        let mut ws = Cholesky::empty();
+        bench.bench(&format!("cholesky_factor_into_{n}"), || {
+            ws.factor_into(&a).unwrap();
+            ws.l()[(0, 0)] // observe the factor so the stores survive opt
         });
         let c = Cholesky::factor(&a).unwrap();
         bench.bench(&format!("cholesky_solve_{n}"), || c.solve(&rhs));
+        let mut out = vec![0.0; n];
+        bench.bench(&format!("cholesky_solve_into_{n}"), || {
+            c.solve_into(&rhs, &mut out);
+            out[0]
+        });
     }
 
     for n in [4usize, 12, 24] {
@@ -52,6 +65,11 @@ fn main() {
         bench.bench(&format!("resource_barrier_n{n}"), || {
             resource::solve(&sc, &partition, Policy::Robust).unwrap().energy
         });
+        // warm start from the previous optimum (Algorithm 2's steady state)
+        let prev = resource::solve(&sc, &partition, Policy::Robust).unwrap();
+        bench.bench(&format!("resource_barrier_warm_n{n}"), || {
+            resource::solve_warm(&sc, &partition, Policy::Robust, Some(&prev)).unwrap().energy
+        });
         bench.bench(&format!("resource_dual_n{n}"), || {
             resource::solve_dual(&sc, &partition, Policy::Robust).unwrap().energy
         });
@@ -66,4 +84,25 @@ fn main() {
             pccp::solve_device(&sc.devices[0], 1.0, 3e6, &opts, None).unwrap().m
         });
     }
+
+    {
+        // scenario-level PCCP: the embarrassingly parallel fan-out
+        let mut srng = Rng::new(9);
+        let n = 12usize;
+        let sc =
+            Scenario::uniform(&ModelProfile::alexnet_paper(), n, 10e6, 0.25, 0.05, &mut srng);
+        let f = vec![1.1; n];
+        let b = vec![10e6 / 6.0; n];
+        let seq = pccp::PccpOptions { threads: 1, ..pccp::PccpOptions::default() };
+        let par = pccp::PccpOptions::default();
+        bench.bench(&format!("pccp_scenario_n{n}_seq"), || {
+            pccp::solve(&sc, &f, &b, &seq, None).unwrap().newton_iters
+        });
+        bench.bench(&format!("pccp_scenario_n{n}_par"), || {
+            pccp::solve(&sc, &f, &b, &par, None).unwrap().newton_iters
+        });
+    }
+
+    bench.write_json(Path::new("BENCH_planner.json")).expect("writing BENCH_planner.json");
+    println!("wrote BENCH_planner.json");
 }

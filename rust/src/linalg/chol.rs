@@ -31,14 +31,46 @@ impl std::fmt::Display for NotPositiveDefinite {
 impl std::error::Error for NotPositiveDefinite {}
 
 impl Cholesky {
+    /// An empty factorization to use as a reusable workspace slot: feed it
+    /// matrices through [`Cholesky::factor_into`] /
+    /// [`Cholesky::factor_regularized_into`]; the internal buffer is
+    /// recycled across factorizations of the same size.
+    pub fn empty() -> Cholesky {
+        Cholesky { l: Matrix::zeros(0, 0) }
+    }
+
     /// Plain factorization; fails if a pivot is non-positive.
     pub fn factor(a: &Matrix) -> Result<Cholesky, NotPositiveDefinite> {
+        let mut c = Cholesky::empty();
+        c.factor_into(a)?;
+        Ok(c)
+    }
+
+    /// Factor `a` into this factorization's storage (no allocation when
+    /// the shape matches the previous factorization).  On error the
+    /// stored factor is invalid and must not be used for solves.
+    pub fn factor_into(&mut self, a: &Matrix) -> Result<(), NotPositiveDefinite> {
+        self.factor_jittered_into(a, 0.0)
+    }
+
+    /// Factor `a + jitter*I` without materializing the shifted matrix:
+    /// the jitter is added to the diagonal as the factorization reads it.
+    fn factor_jittered_into(&mut self, a: &Matrix, jitter: f64) -> Result<(), NotPositiveDefinite> {
         assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
         let n = a.rows();
-        let mut l = Matrix::zeros(n, n);
+        if self.l.rows() != n || self.l.cols() != n {
+            // Shape change: re-zero so the never-written upper triangle is
+            // clean.  Same-shape reuse skips this (the previous factor
+            // only ever wrote the lower triangle).
+            self.l.reset_zeroed(n, n);
+        }
+        let l = &mut self.l;
         for i in 0..n {
             for j in 0..=i {
                 let mut sum = a[(i, j)];
+                if i == j && jitter != 0.0 {
+                    sum += jitter;
+                }
                 for k in 0..j {
                     sum -= l[(i, k)] * l[(j, k)];
                 }
@@ -52,18 +84,33 @@ impl Cholesky {
                 }
             }
         }
-        Ok(Cholesky { l })
+        Ok(())
     }
 
     /// Factor `a + jitter*I`, growing jitter by 10x (up to `max_jitter`)
     /// until the factorization succeeds.  Returns the used jitter.
     pub fn factor_regularized(
         a: &Matrix,
-        mut jitter: f64,
+        jitter: f64,
         max_jitter: f64,
     ) -> Result<(Cholesky, f64), NotPositiveDefinite> {
-        match Cholesky::factor(a) {
-            Ok(c) => return Ok((c, 0.0)),
+        let mut c = Cholesky::empty();
+        let used = c.factor_regularized_into(a, jitter, max_jitter)?;
+        Ok((c, used))
+    }
+
+    /// In-place variant of [`Cholesky::factor_regularized`]: reuses this
+    /// factorization's storage and never clones `a` (the retry ladder
+    /// re-reads `a` and adds the jitter on the fly).  Returns the jitter
+    /// that succeeded.
+    pub fn factor_regularized_into(
+        &mut self,
+        a: &Matrix,
+        mut jitter: f64,
+        max_jitter: f64,
+    ) -> Result<f64, NotPositiveDefinite> {
+        match self.factor_jittered_into(a, 0.0) {
+            Ok(()) => return Ok(0.0),
             Err(e) => {
                 if jitter <= 0.0 {
                     return Err(e);
@@ -71,10 +118,8 @@ impl Cholesky {
             }
         }
         loop {
-            let mut b = a.clone();
-            b.add_diag(jitter);
-            match Cholesky::factor(&b) {
-                Ok(c) => return Ok((c, jitter)),
+            match self.factor_jittered_into(a, jitter) {
+                Ok(()) => return Ok(jitter),
                 Err(e) => {
                     jitter *= 10.0;
                     if jitter > max_jitter {
@@ -85,11 +130,19 @@ impl Cholesky {
         }
     }
 
-    /// Solve A x = b.
+    /// Solve A x = b (allocating convenience wrapper over
+    /// [`Cholesky::solve_into`]; hot paths should hold their own output
+    /// buffer and call `solve_into` / `solve_in_place` directly).
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        let mut x = b.to_vec();
-        self.solve_in_place(&mut x);
+        let mut x = vec![0.0; b.len()];
+        self.solve_into(b, &mut x);
         x
+    }
+
+    /// Solve A x = b writing into a caller-owned buffer (no allocation).
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64]) {
+        x.copy_from_slice(b);
+        self.solve_in_place(x);
     }
 
     /// Solve A x = b in place (forward then backward substitution).
@@ -193,5 +246,37 @@ mod tests {
         let a = Matrix::from_rows(&[&[4.0, 0.0], &[0.0, 9.0]]);
         let c = Cholesky::factor(&a).unwrap();
         assert!((c.log_det() - (36.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn factor_into_reuse_matches_fresh() {
+        // A recycled factorization must be bitwise-identical to a fresh
+        // one, across shape changes and regularized retries.
+        let mut rng = Rng::new(7);
+        let mut ws = Cholesky::empty();
+        for n in [4usize, 9, 4, 17, 9] {
+            let a = random_spd(n, &mut rng);
+            ws.factor_into(&a).unwrap();
+            let fresh = Cholesky::factor(&a).unwrap();
+            assert_eq!(ws.l(), fresh.l(), "n={n}");
+        }
+        // regularized path on a singular matrix
+        let a = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        let used = ws.factor_regularized_into(&a, 1e-10, 1.0).unwrap();
+        let (fresh, used_fresh) = Cholesky::factor_regularized(&a, 1e-10, 1.0).unwrap();
+        assert_eq!(used, used_fresh);
+        assert_eq!(ws.l(), fresh.l());
+    }
+
+    #[test]
+    fn solve_into_matches_solve() {
+        let mut rng = Rng::new(5);
+        let a = random_spd(12, &mut rng);
+        let c = Cholesky::factor(&a).unwrap();
+        let b: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let x = c.solve(&b);
+        let mut y = vec![0.0; 12];
+        c.solve_into(&b, &mut y);
+        assert_eq!(x, y);
     }
 }

@@ -83,6 +83,18 @@ impl Matrix {
         }
     }
 
+    /// Reshape to `rows × cols` reusing the existing buffer (grows the
+    /// allocation only when the new shape exceeds the current capacity)
+    /// and reset every entry to zero.  This is the workspace-reuse
+    /// primitive: a warmed-up buffer cycles through differently-shaped
+    /// Newton systems without touching the allocator.
+    pub fn reset_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
     /// self += alpha * I (diagonal regularization).
     pub fn add_diag(&mut self, alpha: f64) {
         debug_assert_eq!(self.rows, self.cols);
@@ -268,5 +280,15 @@ mod tests {
     #[should_panic]
     fn from_rows_rejects_ragged() {
         Matrix::from_rows(&[&[1.0], &[1.0, 2.0]]);
+    }
+
+    #[test]
+    fn reset_zeroed_reshapes_and_clears() {
+        let mut m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        m.reset_zeroed(3, 1);
+        assert_eq!((m.rows(), m.cols()), (3, 1));
+        assert!(m.data().iter().all(|&v| v == 0.0));
+        m.reset_zeroed(2, 2);
+        assert_eq!(m, Matrix::zeros(2, 2));
     }
 }

@@ -30,8 +30,21 @@ pub struct AlternatingOptions {
     /// objective (the paper's Fig. 10 behaviour).  Costs O(N·M) barrier
     /// solves per round (the joint barrier is ~0.5 ms at N=12 — measured
     /// faster than the dual decomposition at every N we run, see
-    /// EXPERIMENTS.md §Perf).
+    /// EXPERIMENTS.md §Perf); the candidate sweep fans out over
+    /// [`AlternatingOptions::threads`] workers.
     pub polish: bool,
+    /// Warm-start each outer iteration: seed every device's Algorithm-1
+    /// linearization with its previous relaxed iterate, and start the
+    /// resource barrier from the previous (b, f) when it is still
+    /// strictly feasible.  (The paper re-initializes Algorithm 1 each
+    /// call; warm starting converges to the same fixed points — the
+    /// iterates only skip the re-discovery of the previous basin.)
+    pub warm_start: bool,
+    /// Worker threads for the polish candidate sweep (0 = one per
+    /// available core, 1 = sequential).  Candidate evaluation is
+    /// side-effect-free and the accept loop is sequential in a fixed
+    /// order, so the thread count never changes the returned plan.
+    pub threads: usize,
 }
 
 impl Default for AlternatingOptions {
@@ -42,6 +55,8 @@ impl Default for AlternatingOptions {
             pccp: PccpOptions::default(),
             dual_resource: false,
             polish: true,
+            warm_start: true,
+            threads: 0,
         }
     }
 }
@@ -111,21 +126,32 @@ pub fn solve(
     let mut partition = init_partition.unwrap_or_else(|| heuristic_partition(sc));
     assert_eq!(partition.len(), sc.n());
 
-    let resource_solve = |x: &[usize]| -> Result<resource::ResourceSolution, ResourceError> {
+    // One Newton workspace for every resource solve the alternation
+    // itself issues (the polish sweep's workers hold their own).
+    let mut res_ws = crate::solver::NewtonWorkspace::new();
+    let mut resource_solve = |x: &[usize],
+                              warm: Option<&resource::ResourceSolution>|
+     -> Result<resource::ResourceSolution, ResourceError> {
         if opts.dual_resource {
             resource::solve_dual(sc, x, Policy::Robust)
         } else {
-            resource::solve(sc, x, Policy::Robust)
+            resource::solve_warm_with(
+                sc,
+                x,
+                Policy::Robust,
+                if opts.warm_start { warm } else { None },
+                &mut res_ws,
+            )
         }
     };
 
     // Initial resources; if the starting partition is infeasible fall back
     // to the fastest-time heuristic, then fail.
-    let mut res = match resource_solve(&partition) {
+    let mut res = match resource_solve(&partition, None) {
         Ok(r) => r,
         Err(_) => {
             partition = heuristic_partition(sc);
-            resource_solve(&partition).map_err(|e| PlanError::Infeasible(e.to_string()))?
+            resource_solve(&partition, None).map_err(|e| PlanError::Infeasible(e.to_string()))?
         }
     };
 
@@ -133,18 +159,21 @@ pub fn solve(
     let mut newton = res.newton_iters;
     let mut pccp_iter_sum = 0.0;
     let mut outer = 0;
+    // Previous relaxed PCCP iterates: Algorithm 1's warm start for the
+    // next outer iteration (each device resumes from its own basin).
+    let mut warm_x: Option<Vec<Vec<f64>>> = None;
 
     for k in 0..opts.max_outer {
         outer = k + 1;
-        // -- partitioning step (Algorithm 1 at fixed resources; the paper
-        // re-initializes Algorithm 1 each call — no warm lock-in) ----------
-        let part = pccp::solve(sc, &res.freq_ghz, &res.bandwidth_hz, &opts.pccp, None)
+        // -- partitioning step (Algorithm 1 at fixed resources) ------------
+        let warm_ref = if opts.warm_start { warm_x.as_deref() } else { None };
+        let part = pccp::solve(sc, &res.freq_ghz, &res.bandwidth_hz, &opts.pccp, warm_ref)
             .map_err(|e| PlanError::Solver(e.to_string()))?;
         pccp_iter_sum += part.avg_iters;
         newton += part.newton_iters;
 
         // -- resource step at the new partition ----------------------------
-        let new_res = match resource_solve(&part.partition) {
+        let new_res = match resource_solve(&part.partition, Some(&res)) {
             Ok(r) => r,
             // PCCP's rounding can rarely produce a jointly infeasible
             // bandwidth demand; keep the previous iterate and stop.
@@ -154,6 +183,9 @@ pub fn solve(
         let prev = *trajectory.last().unwrap();
         let changed = part.partition != partition;
         partition = part.partition;
+        if opts.warm_start {
+            warm_x = Some(part.x_relaxed);
+        }
         res = new_res;
         newton += res.newton_iters;
         trajectory.push(res.energy);
@@ -164,28 +196,97 @@ pub fn solve(
         }
     }
 
-    // -- polish: single-device improvement moves (fast dual re-solves) -----
+    // -- polish: single-device improvement moves ---------------------------
+    // The sequential polish's candidate walk, with the O(N·M) evaluation
+    // parallelized as a *resumable chunked sweep*: fan a chunk of
+    // candidates out against the current partition, accept the first
+    // improving one, then resume after it with a fresh fan-out (results
+    // are stale once a move lands — moves interact through the shared
+    // bandwidth).  Every candidate is judged against the exact partition
+    // of its walk position, so the accepted sequence is the sequential
+    // walk's and the outcome is identical at any thread count; each
+    // chunk's wall-clock divides by the core count, and every sweep
+    // worker holds its own Newton workspace.
     if opts.polish {
         let mut rounds = 0;
         loop {
             rounds += 1;
-            let mut improved = false;
+            let mut cands: Vec<(usize, usize)> = Vec::new();
             for i in 0..sc.n() {
-                let mp1 = sc.devices[i].model.num_points();
-                let current = partition[i];
-                for m in 0..mp1 {
-                    if m == current || partition[i] == m {
+                for m in 0..sc.devices[i].model.num_points() {
+                    if m != partition[i] {
+                        cands.push((i, m));
+                    }
+                }
+            }
+            let mut improved = false;
+            let threads = crate::util::par::threads_for(opts.threads, cands.len());
+            if threads <= 1 {
+                // Lazy sequential walk (the pre-PR loop) with one hoisted
+                // workspace across every candidate solve.
+                let mut ws = crate::solver::NewtonWorkspace::new();
+                for &(i, m) in &cands {
+                    if partition[i] == m {
                         continue;
                     }
                     let mut cand = partition.clone();
                     cand[i] = m;
-                    if let Ok(r) = resource::solve(sc, &cand, Policy::Robust) {
+                    if let Ok(r) =
+                        resource::solve_warm_with(sc, &cand, Policy::Robust, None, &mut ws)
+                    {
                         if r.energy < res.energy * (1.0 - 1e-6) {
                             partition = cand;
                             res = r;
                             improved = true;
                         }
                     }
+                }
+            } else {
+                // Chunked fan-out: the speculative work discarded on an
+                // acceptance is bounded by one chunk (~4 solves/worker).
+                let chunk = threads * 4;
+                let mut start = 0;
+                while start < cands.len() {
+                    let seg = &cands[start..(start + chunk).min(cands.len())];
+                    let base = &partition;
+                    let sweep: Vec<Option<resource::ResourceSolution>> =
+                        crate::util::par::par_map_indexed_with(
+                            seg.len(),
+                            threads.min(seg.len()),
+                            crate::solver::NewtonWorkspace::new,
+                            |ws, k| {
+                                let (i, m) = seg[k];
+                                if base[i] == m {
+                                    return None; // device already moved
+                                }
+                                let mut cand = base.clone();
+                                cand[i] = m;
+                                resource::solve_warm_with(sc, &cand, Policy::Robust, None, ws)
+                                    .ok()
+                            },
+                        );
+                    let mut accepted = None;
+                    for (k, &(i, m)) in seg.iter().enumerate() {
+                        if partition[i] == m {
+                            continue;
+                        }
+                        let Some(r0) = &sweep[k] else { continue };
+                        if r0.energy < res.energy * (1.0 - 1e-6) {
+                            let mut cand = partition.clone();
+                            cand[i] = m;
+                            partition = cand;
+                            res = r0.clone();
+                            improved = true;
+                            accepted = Some(k);
+                            break;
+                        }
+                    }
+                    // Resume after the accepted candidate (the rest of the
+                    // chunk is stale), or after the whole clean chunk.
+                    start += match accepted {
+                        Some(k) => k + 1,
+                        None => seg.len(),
+                    };
                 }
             }
             if improved {
@@ -196,7 +297,7 @@ pub fn solve(
             }
         }
         // Final high-precision resource solve at the polished partition.
-        if let Ok(r) = resource_solve(&partition) {
+        if let Ok(r) = resource_solve(&partition, Some(&res)) {
             if r.energy <= res.energy * (1.0 + 1e-6) {
                 res = r;
             }
@@ -330,6 +431,52 @@ mod tests {
         assert!(
             (max - min) / min < 0.25,
             "initial-point sensitivity too high: {energies:?}"
+        );
+    }
+
+    #[test]
+    fn solve_is_deterministic_with_threads() {
+        // The fan-out writes into pre-sized per-device slots and the
+        // polish accepts in fixed order, so repeated runs — and runs at
+        // different thread counts — must return the identical plan.
+        let sc = scenario(&ModelProfile::alexnet_paper(), 12, 10e6, 0.18, 0.02, 77);
+        let par = AlternatingOptions {
+            threads: 4,
+            pccp: PccpOptions { threads: 4, ..PccpOptions::default() },
+            ..Default::default()
+        };
+        let seq = AlternatingOptions {
+            threads: 1,
+            pccp: PccpOptions { threads: 1, ..PccpOptions::default() },
+            ..Default::default()
+        };
+        let a = solve(&sc, &par, None).unwrap();
+        let b = solve(&sc, &par, None).unwrap();
+        let c = solve(&sc, &seq, None).unwrap();
+        assert_eq!(a.plan, b.plan);
+        assert!(a.energy == b.energy, "{} vs {}", a.energy, b.energy);
+        assert_eq!(a.newton_iters, b.newton_iters);
+        assert_eq!(a.plan, c.plan, "thread count changed the plan");
+        assert!(a.energy == c.energy, "{} vs {}", a.energy, c.energy);
+    }
+
+    #[test]
+    fn warm_start_toggle_reaches_similar_energy() {
+        // Warm starting accelerates the alternation; it must not change
+        // the quality of the fixed point materially.
+        let sc = scenario(&ModelProfile::alexnet_paper(), 8, 10e6, 0.2, 0.04, 78);
+        let warm = solve(&sc, &AlternatingOptions::default(), None).unwrap();
+        let cold = solve(
+            &sc,
+            &AlternatingOptions { warm_start: false, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        assert!(
+            (warm.energy - cold.energy).abs() / cold.energy < 0.05,
+            "warm {} vs cold {}",
+            warm.energy,
+            cold.energy
         );
     }
 

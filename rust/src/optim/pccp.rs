@@ -16,7 +16,11 @@
 //! Algorithm 1 on each device's own (2M+5)-variable program instead of
 //! one N(2M+5)-variable monolith; the iterates are identical to the
 //! joint algorithm's (the joint Newton system is block-diagonal) and the
-//! wall-clock is linear in N — this is what Fig. 11 measures.
+//! wall-clock is linear in N — this is what Fig. 11 measures.  The same
+//! separability makes the scenario-level [`solve`] embarrassingly
+//! parallel: devices fan out over scoped worker threads (deterministic
+//! per-device slots, see `util::par`), dividing the linear-in-N
+//! wall-clock by the core count.
 
 use crate::linalg::Matrix;
 use crate::solver::{self, BarrierOptions, ConvexProgram};
@@ -33,6 +37,11 @@ pub struct PccpOptions {
     pub max_iters: usize,
     /// Interior-point options for the inner convex solves.
     pub barrier: BarrierOptions,
+    /// Worker threads for the per-device fan-out in [`solve`]
+    /// (0 = one per available core, 1 = sequential).  Devices are
+    /// independent subproblems, so the thread count never changes the
+    /// result — only the wall-clock.
+    pub threads: usize,
 }
 
 impl Default for PccpOptions {
@@ -44,6 +53,7 @@ impl Default for PccpOptions {
             theta_err: 1e-4,
             max_iters: 60,
             barrier: BarrierOptions { tol: 1e-7, ..BarrierOptions::default() },
+            threads: 0,
         }
     }
 }
@@ -65,6 +75,9 @@ pub struct PccpDeviceResult {
 #[derive(Clone, Debug)]
 pub struct PccpResult {
     pub partition: Vec<usize>,
+    /// Per-device relaxed iterates — Algorithm 2 feeds these back as the
+    /// next outer iteration's warm start.
+    pub x_relaxed: Vec<Vec<f64>>,
     /// Mean Algorithm-1 iterations across devices (Fig. 9).
     pub avg_iters: f64,
     pub newton_iters: usize,
@@ -457,10 +470,17 @@ pub fn solve_device(
     let mut newton_total = 0;
     let mut iters = 0;
 
+    // The problem data (cost / t̄ / w) is fixed across Algorithm-1
+    // iterations — only the linearization point (x_prev, y_prev) and the
+    // penalty ρ move — so build it once and update in place.  One Newton
+    // workspace serves every inner barrier solve of this device.
+    let mut prob = device_problem(dev, mp1, f_ghz, b_hz, rho);
+    let mut ws = solver::NewtonWorkspace::new();
+
     for i in 0..opts.max_iters {
         iters = i + 1;
-        let mut prob = device_problem(dev, mp1, f_ghz, b_hz, rho);
-        prob.x_prev = x.clone();
+        prob.rho = rho;
+        prob.x_prev.copy_from_slice(&x);
         prob.y_prev = y;
         if !feasible_start(&mut prob, &x) {
             // The relaxed iterate drifted infeasible for (33c) — restart
@@ -468,13 +488,13 @@ pub fn solve_device(
             let best = feas[0];
             let mut xr = vec![0.02 / (mp1 - 1) as f64; mp1];
             xr[best] = 0.98;
-            prob.x_prev = xr.clone();
+            prob.x_prev.copy_from_slice(&xr);
             prob.y_prev = (dev.model.w_diag(best)).sqrt().max(1e-7);
             if !feasible_start(&mut prob, &xr) {
                 return Err(PccpError::Infeasible { device: usize::MAX });
             }
         }
-        let sol = solver::solve(&prob, &opts.barrier)
+        let sol = solver::solve_with(&prob, &opts.barrier, &mut ws)
             .map_err(|e| PccpError::Solver(e.to_string()))?;
         newton_total += sol.newton_iters;
         let x_new = sol.x[..mp1].to_vec();
@@ -520,6 +540,12 @@ pub fn solve_device(
 
 /// Run Algorithm 1 across a scenario at fixed resources (the partitioning
 /// half of Algorithm 2's alternation).
+///
+/// The per-device subproblems are independent (see the module docs), so
+/// they fan out over `opts.threads` scoped workers.  Results land in
+/// per-device slots and are folded in device order, so the outcome —
+/// including which device's error is reported — is identical to the
+/// sequential path at any thread count.
 pub fn solve(
     sc: &Scenario,
     freq_ghz: &[f64],
@@ -527,22 +553,40 @@ pub fn solve(
     opts: &PccpOptions,
     warm: Option<&[Vec<f64>]>,
 ) -> Result<PccpResult, PccpError> {
-    let mut partition = Vec::with_capacity(sc.n());
-    let mut iter_sum = 0usize;
-    let mut newton = 0usize;
+    let n = sc.n();
+    // Cheap O(N·M) pre-scan for the dominant error mode so a
+    // deadline-infeasible device short-circuits before the fan-out pays
+    // for the other devices' full Algorithm-1 runs.  Reports the lowest
+    // infeasible device index; a rarer in-solve failure (numerical error
+    // on an earlier device) is surfaced by the index-ordered fold below.
     for (i, dev) in sc.devices.iter().enumerate() {
+        if feasible_points(dev, freq_ghz[i], bandwidth_hz[i], Policy::Robust).is_empty() {
+            return Err(PccpError::Infeasible { device: i });
+        }
+    }
+    let threads = crate::util::par::threads_for(opts.threads, n);
+    let results = crate::util::par::par_map_indexed(n, threads, |i| {
         let w = warm.and_then(|w| w.get(i)).map(|v| v.as_slice());
-        let r = solve_device(dev, freq_ghz[i], bandwidth_hz[i], opts, w).map_err(|e| match e {
+        solve_device(&sc.devices[i], freq_ghz[i], bandwidth_hz[i], opts, w).map_err(|e| match e {
             PccpError::Infeasible { .. } => PccpError::Infeasible { device: i },
             e => e,
-        })?;
-        iter_sum += r.iters;
-        newton += r.newton_iters;
-        partition.push(r.m);
+        })
+    });
+    let mut partition = Vec::with_capacity(n);
+    let mut x_relaxed = Vec::with_capacity(n);
+    let mut iter_sum = 0usize;
+    let mut newton = 0usize;
+    for r in results {
+        let PccpDeviceResult { m, x_relaxed: xr, iters, newton_iters } = r?;
+        iter_sum += iters;
+        newton += newton_iters;
+        partition.push(m);
+        x_relaxed.push(xr);
     }
     Ok(PccpResult {
         partition,
-        avg_iters: iter_sum as f64 / sc.n() as f64,
+        x_relaxed,
+        avg_iters: iter_sum as f64 / n as f64,
         newton_iters: newton,
     })
 }
@@ -650,6 +694,26 @@ mod tests {
         let sc = scenario(1, 0.002, 0.05, 5); // 2 ms deadline: impossible
         let r = solve(&sc, &[1.2], &[10e6], &PccpOptions::default(), None);
         assert!(matches!(r, Err(PccpError::Infeasible { device: 0 })));
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        // 12 devices solved sequentially and with the thread-pool fan-out
+        // must agree exactly: same partitions, bitwise-equal relaxed
+        // iterates, same iteration accounting.
+        let sc = scenario(12, 0.25, 0.05, 21);
+        let f = vec![1.1; 12];
+        let b = vec![10e6 / 6.0; 12];
+        let seq_opts = PccpOptions { threads: 1, ..PccpOptions::default() };
+        let par_opts = PccpOptions { threads: 4, ..PccpOptions::default() };
+        let seq = solve(&sc, &f, &b, &seq_opts, None).unwrap();
+        let par = solve(&sc, &f, &b, &par_opts, None).unwrap();
+        assert_eq!(seq.partition, par.partition);
+        assert_eq!(seq.newton_iters, par.newton_iters);
+        assert_eq!(seq.avg_iters, par.avg_iters);
+        for (i, (a, b)) in seq.x_relaxed.iter().zip(&par.x_relaxed).enumerate() {
+            assert_eq!(a, b, "device {i} relaxed iterate differs");
+        }
     }
 
     #[test]

@@ -294,6 +294,7 @@ fn phase1_start(
     dev: Vec<DeviceData>,
     b_total: f64,
     opts: &BarrierOptions,
+    ws: &mut solver::NewtonWorkspace,
 ) -> Result<(Vec<f64>, usize), ResourceError> {
     let n = dev.len();
     let mut start = vec![0.0; 2 * n + 1];
@@ -314,7 +315,8 @@ fn phase1_start(
     }
     start[2 * n] = s0 + 1.0;
     let prog = ResourceProgram { start, ..prog };
-    let sol = solver::solve(&prog, opts).map_err(|e| ResourceError::Solver(e.to_string()))?;
+    let sol =
+        solver::solve_with(&prog, opts, ws).map_err(|e| ResourceError::Solver(e.to_string()))?;
     let s_star = sol.x[2 * n];
     if s_star >= -1e-9 {
         // find the tightest device for the error message
@@ -332,9 +334,40 @@ pub fn solve(
     partition: &[usize],
     policy: Policy,
 ) -> Result<ResourceSolution, ResourceError> {
+    solve_warm(sc, partition, policy, None)
+}
+
+/// [`solve`] with an optional warm start from a previous solution
+/// (Algorithm 2 passes the last outer iteration's (b, f)).  The previous
+/// point is used only when it is strictly feasible for the *new*
+/// partition's deadlines; otherwise the cold-start ladder (heuristic,
+/// then phase-I) runs as usual, so a warm start can never change
+/// feasibility — only skip the phase-I solve and shorten centering.
+pub fn solve_warm(
+    sc: &Scenario,
+    partition: &[usize],
+    policy: Policy,
+    warm: Option<&ResourceSolution>,
+) -> Result<ResourceSolution, ResourceError> {
+    let mut ws = solver::NewtonWorkspace::new();
+    solve_warm_with(sc, partition, policy, warm, &mut ws)
+}
+
+/// [`solve_warm`] with a caller-owned Newton workspace.  The alternation
+/// and its polish sweep issue many resource solves of identical shape, so
+/// holding one workspace per caller (or per sweep worker) makes every
+/// solve after the first allocation-free inside the centering loop.
+pub fn solve_warm_with(
+    sc: &Scenario,
+    partition: &[usize],
+    policy: Policy,
+    warm: Option<&ResourceSolution>,
+    ws: &mut solver::NewtonWorkspace,
+) -> Result<ResourceSolution, ResourceError> {
     assert_eq!(partition.len(), sc.n());
     let opts = BarrierOptions::default();
     let dev = device_data(sc, partition, policy);
+    let n = sc.n();
 
     // Quick per-device infeasibility check: even with all bandwidth and
     // max frequency the deadline cannot be met.
@@ -349,18 +382,34 @@ pub fn solve(
     let mut prog =
         ResourceProgram { dev, b_total: sc.total_bandwidth_hz, phase1: false, start: vec![] };
     let mut extra_iters = 0;
-    prog.start = match heuristic_start(&prog) {
+
+    // Warm start: the previous solution scaled back to fractions, if it
+    // is strictly interior for the new partition.
+    let warm_z = warm.and_then(|w| {
+        if w.bandwidth_hz.len() != n || w.freq_ghz.len() != n {
+            return None;
+        }
+        let mut z = vec![0.0; 2 * n];
+        for i in 0..n {
+            z[i] = (w.bandwidth_hz[i] / sc.total_bandwidth_hz).clamp(2.0 * U_MIN, 1.0);
+            z[n + i] = w.freq_ghz[i];
+        }
+        let strictly_feasible = (0..prog.num_ineq()).all(|c| prog.constraint(c, &z) < -1e-12);
+        strictly_feasible.then_some(z)
+    });
+
+    prog.start = match warm_z.or_else(|| heuristic_start(&prog)) {
         Some(z) => z,
         None => {
             let dev2 = device_data(sc, partition, policy);
-            let (z, it) = phase1_start(dev2, sc.total_bandwidth_hz, &opts)?;
+            let (z, it) = phase1_start(dev2, sc.total_bandwidth_hz, &opts, ws)?;
             extra_iters = it;
             z
         }
     };
 
-    let sol = solver::solve(&prog, &opts).map_err(|e| ResourceError::Solver(e.to_string()))?;
-    let n = sc.n();
+    let sol =
+        solver::solve_with(&prog, &opts, ws).map_err(|e| ResourceError::Solver(e.to_string()))?;
     Ok(ResourceSolution {
         bandwidth_hz: sol.x[..n].iter().map(|u| u * sc.total_bandwidth_hz).collect(),
         freq_ghz: sol.x[n..2 * n].to_vec(),
@@ -570,6 +619,27 @@ mod tests {
         let plan = plan_of(&sc, partition, &r);
         let e = plan.expected_energy(&sc);
         assert!((e - r.energy).abs() / e < 1e-6, "{e} vs {}", r.energy);
+    }
+
+    #[test]
+    fn warm_start_agrees_with_cold() {
+        let sc = scenario(6, 8);
+        let p1 = vec![2; 6];
+        let cold = solve(&sc, &p1, Policy::Robust).unwrap();
+        // Warm start from the optimum of the same partition.
+        let warm = solve_warm(&sc, &p1, Policy::Robust, Some(&cold)).unwrap();
+        crate::util::check::close(warm.energy, cold.energy, 1e-5, 1e-9).unwrap();
+        let plan = plan_of(&sc, p1, &warm);
+        assert!(plan.feasible(&sc, Policy::Robust) && plan.bandwidth_ok(&sc));
+        // Warm start across a partition change: the stale point may be
+        // infeasible for the new deadlines — the solve must fall back and
+        // still match the cold answer.
+        let p2 = vec![5; 6];
+        let w2 = solve_warm(&sc, &p2, Policy::Robust, Some(&cold)).unwrap();
+        let c2 = solve(&sc, &p2, Policy::Robust).unwrap();
+        crate::util::check::close(w2.energy, c2.energy, 1e-5, 1e-9).unwrap();
+        let plan2 = plan_of(&sc, p2, &w2);
+        assert!(plan2.feasible(&sc, Policy::Robust) && plan2.bandwidth_ok(&sc));
     }
 
     #[test]

@@ -87,19 +87,127 @@ impl std::fmt::Display for BarrierError {
 
 impl std::error::Error for BarrierError {}
 
+/// Preallocated buffers for the Newton centering loop.
+///
+/// One workspace serves any number of solves (shapes may differ between
+/// solves; buffers are recycled and only grow).  After the first solve of
+/// a given shape the centering loop performs **zero heap allocations** —
+/// verified by the counting-allocator test in `rust/tests/alloc.rs` — so
+/// hot callers (PCCP's per-device Algorithm-1 loop, the alternation's
+/// resource re-solves) should hold one workspace and thread it through
+/// [`solve_with`] / [`solve_from_with`].
+pub struct NewtonWorkspace {
+    /// Barrier Hessian t∇²f + Σ[∇g∇gᵀ/g² − ∇²g/g].
+    h: Matrix,
+    /// Barrier gradient t∇f − Σ∇g/g.
+    grad: Vec<f64>,
+    /// Per-constraint gradient scratch.
+    cgrad: Vec<f64>,
+    /// Constraint values g_i(x) cached from Hessian assembly; the line
+    /// search's φ(x) reuses them instead of re-evaluating every g_i.
+    gval: Vec<f64>,
+    /// Newton direction (also holds y = H⁻¹∇φ in the KKT path).
+    dx: Vec<f64>,
+    /// Line-search trial point.
+    xn: Vec<f64>,
+    /// Z = H⁻¹Aᵀ as rows (k × n, flat storage).
+    z: Matrix,
+    /// Schur complement S = A Z (k × k).
+    s: Matrix,
+    /// A·y and the Schur solve output w.
+    ay: Vec<f64>,
+    w: Vec<f64>,
+    /// Factorization storage for H and S.
+    chol: Cholesky,
+    schol: Cholesky,
+}
+
+impl Default for NewtonWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NewtonWorkspace {
+    pub fn new() -> Self {
+        NewtonWorkspace {
+            h: Matrix::zeros(0, 0),
+            grad: Vec::new(),
+            cgrad: Vec::new(),
+            gval: Vec::new(),
+            dx: Vec::new(),
+            xn: Vec::new(),
+            z: Matrix::zeros(0, 0),
+            s: Matrix::zeros(0, 0),
+            ay: Vec::new(),
+            w: Vec::new(),
+            chol: Cholesky::empty(),
+            schol: Cholesky::empty(),
+        }
+    }
+
+    /// Size every buffer for an (n vars, m ineqs, k equalities) program.
+    /// `Vec::resize` never reallocates when shrinking and reuses spare
+    /// capacity when growing, so alternating between program shapes stays
+    /// allocation-free once the largest shape has been seen.
+    fn ensure(&mut self, n: usize, m: usize, k: usize) {
+        if self.h.rows() != n || self.h.cols() != n {
+            self.h.reset_zeroed(n, n);
+        }
+        self.grad.resize(n, 0.0);
+        self.cgrad.resize(n, 0.0);
+        self.gval.resize(m, 0.0);
+        self.dx.resize(n, 0.0);
+        self.xn.resize(n, 0.0);
+        if k > 0 {
+            if self.z.rows() != k || self.z.cols() != n {
+                self.z.reset_zeroed(k, n);
+            }
+            if self.s.rows() != k || self.s.cols() != k {
+                self.s.reset_zeroed(k, k);
+            }
+        }
+        self.ay.resize(k, 0.0);
+        self.w.resize(k, 0.0);
+    }
+}
+
 pub fn solve<P: ConvexProgram + ?Sized>(
     p: &P,
     opts: &BarrierOptions,
 ) -> Result<BarrierSolution, BarrierError> {
-    solve_from(p, p.initial_point(), opts)
+    let mut ws = NewtonWorkspace::new();
+    solve_from_with(p, p.initial_point(), opts, &mut ws)
 }
 
 /// Solve starting from a caller-provided strictly feasible point (used for
 /// warm starts between PCCP iterations).
 pub fn solve_from<P: ConvexProgram + ?Sized>(
     p: &P,
+    x: Vec<f64>,
+    opts: &BarrierOptions,
+) -> Result<BarrierSolution, BarrierError> {
+    let mut ws = NewtonWorkspace::new();
+    solve_from_with(p, x, opts, &mut ws)
+}
+
+/// [`solve`] with a caller-owned workspace (allocation-free hot path).
+pub fn solve_with<P: ConvexProgram + ?Sized>(
+    p: &P,
+    opts: &BarrierOptions,
+    ws: &mut NewtonWorkspace,
+) -> Result<BarrierSolution, BarrierError> {
+    solve_from_with(p, p.initial_point(), opts, ws)
+}
+
+/// [`solve_from`] with a caller-owned workspace.  Results are identical
+/// (bitwise) to the workspace-free entry points: the workspace only
+/// changes where intermediates are stored, never the arithmetic.
+pub fn solve_from_with<P: ConvexProgram + ?Sized>(
+    p: &P,
     mut x: Vec<f64>,
     opts: &BarrierOptions,
+    ws: &mut NewtonWorkspace,
 ) -> Result<BarrierSolution, BarrierError> {
     let n = p.num_vars();
     let m = p.num_ineq();
@@ -113,15 +221,12 @@ pub fn solve_from<P: ConvexProgram + ?Sized>(
     }
 
     let eq = p.equalities();
+    let k = eq.as_ref().map_or(0, |(a, _)| a.rows());
+    ws.ensure(n, m, k);
+
     let mut t = opts.t0;
     let mut newton_iters = 0;
     let mut outer_iters = 0;
-
-    // Workspaces reused across Newton iterations (hot-path: no per-iter
-    // allocation of the Hessian).
-    let mut h = Matrix::zeros(n, n);
-    let mut grad = vec![0.0; n];
-    let mut cgrad = vec![0.0; n];
 
     if m == 0 {
         // Pure Newton on t f(x) once (t irrelevant without a barrier).
@@ -134,109 +239,111 @@ pub fn solve_from<P: ConvexProgram + ?Sized>(
         for _ in 0..opts.max_newton {
             newton_iters += 1;
             // Gradient: t ∇f − Σ ∇g_i / g_i
-            p.gradient(&x, &mut grad);
-            linalg::scale(t, &mut grad);
+            p.gradient(&x, &mut ws.grad);
+            linalg::scale(t, &mut ws.grad);
             // Hessian: t ∇²f + Σ [∇g∇gᵀ/g² − ∇²g/g]
-            h.fill(0.0);
-            p.hessian_accum(&x, t, &mut h);
+            ws.h.fill(0.0);
+            p.hessian_accum(&x, t, &mut ws.h);
             for i in 0..m {
                 let gi = p.constraint(i, &x);
-                p.constraint_grad(i, &x, &mut cgrad);
-                linalg::axpy(-1.0 / gi, &cgrad, &mut grad);
-                h.rank1_update(1.0 / (gi * gi), &cgrad);
-                p.constraint_hess_accum(i, &x, -1.0 / gi, &mut h);
+                ws.gval[i] = gi;
+                p.constraint_grad(i, &x, &mut ws.cgrad);
+                linalg::axpy(-1.0 / gi, &ws.cgrad, &mut ws.grad);
+                ws.h.rank1_update(1.0 / (gi * gi), &ws.cgrad);
+                p.constraint_hess_accum(i, &x, -1.0 / gi, &mut ws.h);
             }
 
             // Jitter must scale with the matrix norm: near the central
             // path's end the barrier Hessian carries 1/g² terms of ~1e16,
             // where roundoff alone produces O(1e2) negative pivots.
-            let max_diag = (0..n).map(|i| h[(i, i)].abs()).fold(1.0, f64::max);
-            let (chol, _jit) =
-                Cholesky::factor_regularized(&h, 1e-14 * max_diag, 1e-4 * max_diag)
-                    .map_err(|e| BarrierError::Numerical(e.to_string()))?;
+            let max_diag = (0..n).map(|i| ws.h[(i, i)].abs()).fold(1.0, f64::max);
+            ws.chol
+                .factor_regularized_into(&ws.h, 1e-14 * max_diag, 1e-4 * max_diag)
+                .map_err(|e| BarrierError::Numerical(e.to_string()))?;
 
             // Newton direction (with optional equality KKT via Schur).
-            let dx = match &eq {
+            match &eq {
                 None => {
-                    let mut d = chol.solve(&grad);
-                    linalg::scale(-1.0, &mut d);
-                    d
+                    ws.dx.copy_from_slice(&ws.grad);
+                    ws.chol.solve_in_place(&mut ws.dx);
+                    linalg::scale(-1.0, &mut ws.dx);
                 }
                 Some((a, _b)) => {
                     // x0 already satisfies A x = b and steps keep A dx = 0.
-                    let k = a.rows();
-                    let y = chol.solve(&grad); // H y = grad
-                    // Z = H^{-1} Aᵀ, S = A Z
-                    let mut s = Matrix::zeros(k, k);
-                    let mut z_cols: Vec<Vec<f64>> = Vec::with_capacity(k);
+                    // y = H⁻¹ grad (held in dx until the final combination)
+                    ws.dx.copy_from_slice(&ws.grad);
+                    ws.chol.solve_in_place(&mut ws.dx);
+                    // Z = H⁻¹ Aᵀ, S = A Z
                     for r in 0..k {
-                        let zc = chol.solve(a.row(r));
-                        z_cols.push(zc);
+                        ws.z.row_mut(r).copy_from_slice(a.row(r));
+                        ws.chol.solve_in_place(ws.z.row_mut(r));
                     }
                     for r in 0..k {
                         for c in 0..k {
-                            s[(r, c)] = linalg::dot(a.row(r), &z_cols[c]);
+                            ws.s[(r, c)] = linalg::dot(a.row(r), ws.z.row(c));
                         }
                     }
-                    let s_diag = (0..k).map(|i| s[(i, i)].abs()).fold(1.0, f64::max);
-                    let schol =
-                        Cholesky::factor_regularized(&s, 1e-14 * s_diag, 1e-4 * s_diag)
-                            .map_err(|e| BarrierError::Numerical(e.to_string()))?
-                            .0;
+                    let s_diag = (0..k).map(|i| ws.s[(i, i)].abs()).fold(1.0, f64::max);
+                    ws.schol
+                        .factor_regularized_into(&ws.s, 1e-14 * s_diag, 1e-4 * s_diag)
+                        .map_err(|e| BarrierError::Numerical(e.to_string()))?;
                     // S w = A y
-                    let ay: Vec<f64> = (0..k).map(|r| linalg::dot(a.row(r), &y)).collect();
-                    let w = schol.solve(&ay);
-                    // dx = −(y − Z w)
-                    let mut d = y;
                     for r in 0..k {
-                        linalg::axpy(-w[r], &z_cols[r], &mut d);
+                        ws.ay[r] = linalg::dot(a.row(r), &ws.dx);
                     }
-                    linalg::scale(-1.0, &mut d);
-                    d
+                    ws.w.copy_from_slice(&ws.ay);
+                    ws.schol.solve_in_place(&mut ws.w);
+                    // dx = −(y − Z w)
+                    for r in 0..k {
+                        let wr = ws.w[r];
+                        linalg::axpy(-wr, ws.z.row(r), &mut ws.dx);
+                    }
+                    linalg::scale(-1.0, &mut ws.dx);
                 }
-            };
+            }
 
             // Newton decrement λ² = −∇φᵀ dx
-            let lambda2 = -linalg::dot(&grad, &dx);
+            let lambda2 = -linalg::dot(&ws.grad, &ws.dx);
             if lambda2 / 2.0 <= opts.newton_tol || !lambda2.is_finite() {
                 break;
             }
 
             // Backtracking line search on φ_t, maintaining strict
-            // feasibility.
-            let phi = |xx: &[f64]| -> f64 {
-                let mut v = t * p.objective(xx);
-                for i in 0..m {
-                    let gi = p.constraint(i, xx);
-                    if gi >= 0.0 {
-                        return f64::INFINITY;
-                    }
-                    v -= (-gi).ln();
-                }
-                v
-            };
-            let phi0 = phi(&x);
+            // feasibility.  φ(x) comes from the constraint values cached
+            // during Hessian assembly — only trial points re-evaluate g.
+            let mut phi0 = t * p.objective(&x);
+            for i in 0..m {
+                phi0 -= (-ws.gval[i]).ln();
+            }
             let mut step = 1.0;
-            let mut xn: Vec<f64>;
+            let mut accepted = false;
             loop {
-                xn = x.clone();
-                linalg::axpy(step, &dx, &mut xn);
-                let phin = phi(&xn);
+                ws.xn.copy_from_slice(&x);
+                linalg::axpy(step, &ws.dx, &mut ws.xn);
+                let mut phin = t * p.objective(&ws.xn);
+                for i in 0..m {
+                    let gi = p.constraint(i, &ws.xn);
+                    if gi >= 0.0 {
+                        phin = f64::INFINITY;
+                        break;
+                    }
+                    phin -= (-gi).ln();
+                }
                 if phin <= phi0 - opts.ls_alpha * step * lambda2 {
+                    accepted = true;
                     break;
                 }
                 step *= opts.ls_beta;
                 if step < 1e-14 {
-                    // Stalled: accept current iterate, centering is done to
-                    // numerical precision.
-                    xn = x.clone();
+                    // Stalled: keep the current iterate, centering is done
+                    // to numerical precision.
                     break;
                 }
             }
-            if xn == x {
+            if !accepted || ws.xn == x {
                 break;
             }
-            x = xn;
+            x.copy_from_slice(&ws.xn);
         }
 
         // ---- Outer stopping rule -----------------------------------------
@@ -349,5 +456,33 @@ mod tests {
         let s = solve(&p, &BarrierOptions::default()).unwrap();
         assert!(s.newton_iters >= s.outer_iters);
         assert!(s.gap < 1e-8);
+    }
+
+    #[test]
+    fn workspace_reuse_is_bitwise_identical() {
+        // The same workspace cycled through differently-shaped programs
+        // (with and without equalities) must reproduce the fresh-workspace
+        // solution exactly — solution, objective, and iteration counts.
+        let programs = vec![
+            BoxQp { target: vec![5.0], cap: vec![2.0], sum: None },
+            BoxQp { target: vec![3.0, 0.0], cap: vec![10.0, 10.0], sum: Some(1.0) },
+            BoxQp {
+                target: vec![1.0, -2.0, 0.5, 4.0],
+                cap: vec![10.0, 0.4, 10.0, 1.5],
+                sum: None,
+            },
+            BoxQp { target: vec![5.0], cap: vec![2.0], sum: None },
+        ];
+        let opts = BarrierOptions::default();
+        let mut ws = NewtonWorkspace::new();
+        for (idx, p) in programs.iter().enumerate() {
+            // warm the workspace on an unrelated shape first
+            let reused = solve_with(p, &opts, &mut ws).unwrap();
+            let fresh = solve(p, &opts).unwrap();
+            assert_eq!(reused.x, fresh.x, "program {idx}");
+            assert_eq!(reused.newton_iters, fresh.newton_iters, "program {idx}");
+            assert_eq!(reused.outer_iters, fresh.outer_iters, "program {idx}");
+            assert!(reused.objective == fresh.objective, "program {idx}");
+        }
     }
 }

@@ -6,5 +6,8 @@ pub mod barrier;
 pub mod lm;
 pub mod program;
 
-pub use barrier::{solve, solve_from, BarrierOptions, BarrierSolution};
+pub use barrier::{
+    solve, solve_from, solve_from_with, solve_with, BarrierOptions, BarrierSolution,
+    NewtonWorkspace,
+};
 pub use program::ConvexProgram;

@@ -6,8 +6,16 @@
 //! benchmark in a stable, grep-friendly format:
 //!
 //! `bench <name> ... median 1.234 ms  mean 1.300 ms  p95 1.600 ms  (n=1000)`
+//!
+//! Results (plus any [`Bencher::attach`]ed scalars such as Newton/PCCP
+//! iteration counts) can be merged into a machine-readable JSON file with
+//! [`Bencher::write_json`] — `BENCH_planner.json` at the repo root is the
+//! perf trajectory future PRs diff against (see EXPERIMENTS.md §Perf).
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use super::json::Json;
 
 /// One measured benchmark result.
 #[derive(Clone, Debug)]
@@ -18,6 +26,9 @@ pub struct BenchResult {
     pub mean: Duration,
     pub p95: Duration,
     pub min: Duration,
+    /// Attached scalars ((key, value), e.g. iteration counts) emitted
+    /// alongside the timings in the JSON record.
+    pub extra: Vec<(String, f64)>,
 }
 
 /// Bench runner with a fixed time budget per benchmark.
@@ -92,6 +103,7 @@ impl Bencher {
             mean: Duration::from_nanos(mean_ns),
             p95: Duration::from_nanos(pick(0.95)),
             min: Duration::from_nanos(samples_ns[0]),
+            extra: Vec::new(),
         };
         println!(
             "bench {:<44} median {:>12}  mean {:>12}  p95 {:>12}  (n={})",
@@ -107,6 +119,85 @@ impl Bencher {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// Attach a named scalar (iteration count, configuration, derived
+    /// metric) to the most recent result named `name`.
+    pub fn attach(&mut self, name: &str, key: &str, value: f64) {
+        if let Some(r) = self.results.iter_mut().rev().find(|r| r.name == name) {
+            r.extra.push((key.to_string(), value));
+        }
+    }
+
+    /// Merge every recorded result into a JSON file of the shape
+    /// `{"benches": {"<name>": {"median_ns": …, …}}}`.
+    ///
+    /// Entries from previous runs (or from other bench binaries sharing
+    /// the file) are preserved unless re-recorded here, so
+    /// `cargo bench --bench solvers && cargo bench --bench planner_scaling`
+    /// accumulate into one trajectory file.
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        // Round-trip the existing root object so sibling keys (commit/env
+        // metadata added by other tooling) survive the merge.  An existing
+        // file that fails to parse is an error, not a silent restart —
+        // the file's purpose is cross-run accumulation.
+        let mut root: Vec<(String, Json)> = match std::fs::read_to_string(path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e),
+            Ok(text) => {
+                let invalid = |why: String| {
+                    std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!(
+                            "refusing to overwrite {}: {why}; delete it to start a fresh \
+                             trajectory",
+                            path.display()
+                        ),
+                    )
+                };
+                let parsed = Json::parse(&text)
+                    .map_err(|e| invalid(format!("existing file is not valid JSON ({e})")))?;
+                parsed
+                    .as_obj()
+                    .map(|o| o.to_vec())
+                    .ok_or_else(|| invalid("existing JSON root is not an object".to_string()))?
+            }
+        };
+        let mut entries: Vec<(String, Json)> = match root.iter().find(|(k, _)| k == "benches") {
+            None => Vec::new(),
+            Some((_, b)) => b.as_obj().map(|o| o.to_vec()).ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!(
+                        "refusing to overwrite {}: existing \"benches\" value is not an object",
+                        path.display()
+                    ),
+                )
+            })?,
+        };
+        for r in &self.results {
+            let mut obj = vec![
+                ("median_ns".to_string(), Json::Num(r.median.as_nanos() as f64)),
+                ("mean_ns".to_string(), Json::Num(r.mean.as_nanos() as f64)),
+                ("p95_ns".to_string(), Json::Num(r.p95.as_nanos() as f64)),
+                ("min_ns".to_string(), Json::Num(r.min.as_nanos() as f64)),
+                ("iters".to_string(), Json::Num(r.iters as f64)),
+            ];
+            for (k, v) in &r.extra {
+                obj.push((k.clone(), Json::Num(*v)));
+            }
+            let val = Json::Obj(obj);
+            match entries.iter_mut().find(|(n, _)| *n == r.name) {
+                Some(e) => e.1 = val,
+                None => entries.push((r.name.clone(), val)),
+            }
+        }
+        let benches = Json::Obj(entries);
+        match root.iter_mut().find(|(k, _)| k == "benches") {
+            Some(e) => e.1 = benches,
+            None => root.push(("benches".to_string(), benches)),
+        }
+        std::fs::write(path, Json::Obj(root).to_string_pretty())
     }
 }
 
@@ -153,5 +244,30 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
         assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.500 ms");
         assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+    }
+
+    #[test]
+    fn write_json_merges_across_runs() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ripra_bench_test_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+
+        let fast = Duration::from_millis(1);
+        let mut b = Bencher::new().with_window(fast, fast).with_max_iters(3);
+        b.bench("first", || 1u64);
+        b.attach("first", "newton_iters", 42.0);
+        b.write_json(&path).unwrap();
+
+        let mut b2 = Bencher::new().with_window(fast, fast).with_max_iters(3);
+        b2.bench("second", || 2u64);
+        b2.write_json(&path).unwrap();
+
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let benches = j.get("benches").unwrap();
+        let first = benches.get("first").unwrap();
+        assert_eq!(first.get("newton_iters").and_then(|v| v.as_f64()), Some(42.0));
+        assert!(first.get("median_ns").and_then(|v| v.as_f64()).is_some());
+        assert!(benches.get("second").is_some());
+        let _ = std::fs::remove_file(&path);
     }
 }

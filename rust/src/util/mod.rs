@@ -1,9 +1,11 @@
-//! Shared substrate: PRNG, JSON, statistics, property-check harness, and
-//! the micro-bench runner (offline environment: no rand/serde/proptest/
-//! criterion crates — these modules replace them).
+//! Shared substrate: PRNG, JSON, statistics, property-check harness, the
+//! micro-bench runner, and the scoped-thread fan-out helper (offline
+//! environment: no rand/serde/proptest/criterion/rayon crates — these
+//! modules replace them).
 
 pub mod bench;
 pub mod check;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;

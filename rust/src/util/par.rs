@@ -1,0 +1,131 @@
+//! Scoped-thread fan-out for embarrassingly parallel planner loops
+//! (per-device PCCP solves, the alternation's polish sweep).
+//!
+//! No external thread-pool crate is available offline, so this is a tiny
+//! work-stealing harness on `std::thread::scope`: workers pull job
+//! indices from a shared atomic counter and results land in pre-sized
+//! slots, so the output order — and therefore every downstream fold — is
+//! **deterministic**, independent of scheduling.  Worker panics propagate
+//! to the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Resolve a thread-count preference: 0 = all available cores, otherwise
+/// the preference itself; never more threads than jobs, never zero.
+pub fn threads_for(pref: usize, jobs: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let t = if pref == 0 { hw } else { pref };
+    t.min(jobs).max(1)
+}
+
+/// Evaluate `f(0..jobs)` across `threads` scoped workers and return the
+/// results in index order.  `threads <= 1` runs inline (no spawn), which
+/// is also the reference sequential order — results are identical either
+/// way because each job is independent and slot placement is by index.
+pub fn par_map_indexed<T, F>(jobs: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    par_map_indexed_with(jobs, threads, || (), |_: &mut (), i| f(i))
+}
+
+/// [`par_map_indexed`] with per-worker scratch state: every worker calls
+/// `init` once and threads the state through all jobs it steals (e.g. a
+/// `NewtonWorkspace` reused across a sweep's barrier solves, making the
+/// per-job hot path allocation-free after each worker's first job).
+pub fn par_map_indexed_with<S, T, I, F>(jobs: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    if threads <= 1 || jobs <= 1 {
+        let mut state = init();
+        return (0..jobs).map(|i| f(&mut state, i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(jobs);
+    slots.resize_with(jobs, || None);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let init = &init;
+        let next = &next;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut state = init();
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs {
+                            break;
+                        }
+                        out.push((i, f(&mut state, i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            // Re-raise a worker panic with its original payload so a
+            // threaded failure diagnoses like the same failure inline.
+            let worker = match h.join() {
+                Ok(v) => v,
+                Err(payload) => std::panic::resume_unwind(payload),
+            };
+            for (i, v) in worker {
+                slots[i] = Some(v);
+            }
+        }
+    });
+    slots.into_iter().map(|v| v.expect("parallel slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_in_index_order() {
+        for threads in [1, 2, 4, 8] {
+            let out = par_map_indexed(37, threads, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        assert!(par_map_indexed(0, 4, |i| i).is_empty());
+        assert_eq!(par_map_indexed(1, 4, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn per_worker_state_is_reused_within_a_worker() {
+        // Each worker's state counts its own jobs; results stay indexed.
+        for threads in [1, 3] {
+            let out = par_map_indexed_with(
+                20,
+                threads,
+                || 0usize,
+                |seen, i| {
+                    *seen += 1;
+                    (i, *seen >= 1)
+                },
+            );
+            assert_eq!(out.len(), 20, "threads={threads}");
+            for (idx, (i, counted)) in out.iter().enumerate() {
+                assert_eq!(*i, idx);
+                assert!(counted);
+            }
+        }
+    }
+
+    #[test]
+    fn threads_for_clamps() {
+        assert_eq!(threads_for(3, 100), 3);
+        assert_eq!(threads_for(8, 2), 2);
+        assert_eq!(threads_for(5, 0), 1);
+        assert!(threads_for(0, 100) >= 1);
+    }
+}

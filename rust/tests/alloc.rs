@@ -1,0 +1,152 @@
+//! Allocation accounting for the barrier solver's hot path.
+//!
+//! A counting global allocator wraps `System`; the single test below (one
+//! test fn so no concurrent test pollutes the counter) verifies the
+//! PR-level guarantee: with a warmed-up [`NewtonWorkspace`], the Newton
+//! centering loop performs **zero** heap allocations for an
+//! inequality-only program, and only the per-solve equality-system
+//! construction allocates for an equality-constrained one.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use ripra::linalg::Matrix;
+use ripra::solver::{self, BarrierOptions, ConvexProgram, NewtonWorkspace};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// minimize ||x - target||² s.t. x_i <= cap_i (+ optional Σx = sum) —
+/// the same shape as the in-crate BoxQp test fixture; constraint
+/// callbacks are allocation-free, so any allocation measured below comes
+/// from the solver itself.
+struct Qp {
+    target: Vec<f64>,
+    cap: Vec<f64>,
+    sum: Option<f64>,
+}
+
+impl ConvexProgram for Qp {
+    fn num_vars(&self) -> usize {
+        self.target.len()
+    }
+
+    fn num_ineq(&self) -> usize {
+        self.cap.len()
+    }
+
+    fn objective(&self, x: &[f64]) -> f64 {
+        x.iter().zip(&self.target).map(|(a, b)| (a - b) * (a - b)).sum()
+    }
+
+    fn gradient(&self, x: &[f64], g: &mut [f64]) {
+        for i in 0..x.len() {
+            g[i] = 2.0 * (x[i] - self.target[i]);
+        }
+    }
+
+    fn hessian_accum(&self, _x: &[f64], scale: f64, h: &mut Matrix) {
+        for i in 0..self.target.len() {
+            h[(i, i)] += 2.0 * scale;
+        }
+    }
+
+    fn constraint(&self, i: usize, x: &[f64]) -> f64 {
+        x[i] - self.cap[i]
+    }
+
+    fn constraint_grad(&self, i: usize, _x: &[f64], g: &mut [f64]) {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        g[i] = 1.0;
+    }
+
+    fn equalities(&self) -> Option<(Matrix, Vec<f64>)> {
+        self.sum.map(|s| {
+            let mut a = Matrix::zeros(1, self.target.len());
+            for j in 0..self.target.len() {
+                a[(0, j)] = 1.0;
+            }
+            (a, vec![s])
+        })
+    }
+
+    fn initial_point(&self) -> Vec<f64> {
+        match self.sum {
+            Some(s) => vec![s / self.target.len() as f64; self.target.len()],
+            None => self.cap.iter().map(|c| c - 1.0).collect(),
+        }
+    }
+}
+
+#[test]
+fn newton_centering_is_allocation_free_after_warmup() {
+    let opts = BarrierOptions::default();
+
+    // ---- inequality-only: strictly zero allocations ----------------------
+    let p = Qp {
+        target: vec![5.0, -3.0, 2.0, 0.5, 9.0],
+        cap: vec![2.0, 2.0, 2.0, 2.0, 2.0],
+        sum: None,
+    };
+    let mut ws = NewtonWorkspace::new();
+    let warm = solver::solve_from_with(&p, p.initial_point(), &opts, &mut ws).unwrap();
+
+    let x0 = p.initial_point(); // allocated before the measured window
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let sol = solver::solve_from_with(&p, x0, &opts, &mut ws).unwrap();
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "warmed-up barrier solve allocated {} times",
+        after - before
+    );
+
+    // and the workspace path is bitwise-identical to the allocating one
+    let fresh = solver::solve_from(&p, p.initial_point(), &opts).unwrap();
+    assert_eq!(sol.x, fresh.x);
+    assert_eq!(sol.newton_iters, fresh.newton_iters);
+    assert_eq!(sol.x, warm.x);
+
+    // ---- with equalities: only the equality-system build allocates -------
+    let pe = Qp { target: vec![3.0, 0.0, -1.0], cap: vec![10.0, 10.0, 10.0], sum: Some(1.0) };
+    let mut wse = NewtonWorkspace::new();
+    solver::solve_from_with(&pe, pe.initial_point(), &opts, &mut wse).unwrap();
+    let x0 = pe.initial_point();
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let se = solver::solve_from_with(&pe, x0, &opts, &mut wse).unwrap();
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert!(
+        after - before <= 4,
+        "equality-constrained solve allocated {} times (expected only the \
+         per-solve equalities() build, independent of iteration count)",
+        after - before
+    );
+    let fe = solver::solve_from(&pe, pe.initial_point(), &opts).unwrap();
+    assert_eq!(se.x, fe.x);
+}

@@ -1,0 +1,192 @@
+//! Minimal offline stand-in for the `anyhow` crate (the real crate is not
+//! available in this environment).  Implements exactly the API surface
+//! this workspace uses: [`Error`], [`Result`], the `anyhow!` / `bail!`
+//! macros, and the [`Context`] extension trait.
+//!
+//! Mirrors the real crate's contract where it matters:
+//! * `Error` does **not** implement `std::error::Error` (that would
+//!   conflict with the blanket `From<E: Error>` used by `?`);
+//! * `?` converts any `E: std::error::Error + Send + Sync + 'static`;
+//! * context wraps are prepended to the message, source preserved.
+
+use std::fmt;
+
+/// Boxed dynamic error with a human-readable message chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error, preserving it as the source.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+
+    /// Prepend a context line (what the real crate's `.context` does).
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg), source: self.source }
+    }
+
+    /// The underlying source error, if one was preserved.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + Send + Sync + 'static)> {
+        self.source.as_deref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with the boxed error as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a fallible result.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an [`Error`] when the condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let key = "x";
+        let a: Error = anyhow!("flag --{key} needs a value");
+        assert_eq!(a.to_string(), "flag --x needs a value");
+        let b: Error = anyhow!(String::from("already a string"));
+        assert_eq!(b.to_string(), "already a string");
+        let c: Error = anyhow!("{} + {}", 1, 2);
+        assert_eq!(c.to_string(), "1 + 2");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f() -> Result<()> {
+            bail!("nope {}", 7);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().source().is_some());
+    }
+
+    #[test]
+    fn ensure_checks_condition() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted {}", true);
+            Ok(5)
+        }
+        assert_eq!(f(true).unwrap(), 5);
+        assert_eq!(f(false).unwrap_err().to_string(), "wanted true");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "f.txt")).unwrap_err();
+        assert_eq!(e.to_string(), "reading f.txt: boom");
+    }
+}

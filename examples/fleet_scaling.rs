@@ -6,10 +6,9 @@
 //! cargo run --release --example fleet_scaling
 //! ```
 
-use std::time::Instant;
-
+use ripra::engine::{PlanRequest, PlannerBuilder, Policy};
 use ripra::models::ModelProfile;
-use ripra::optim::{alternating, AlternatingOptions, Scenario};
+use ripra::optim::Scenario;
 use ripra::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -19,14 +18,16 @@ fn main() -> anyhow::Result<()> {
         "{:>4} {:>10} {:>10} {:>12} {:>10} {:>24}",
         "N", "energy_J", "J_per_dev", "runtime_s", "pccp_iter", "partition histogram"
     );
+    // One long-lived planner for the whole fleet sweep: its Newton
+    // workspace stays warm across scales.
+    let mut planner = PlannerBuilder::new().build();
     for n in [4, 8, 12, 16, 20, 24, 30] {
         let b = 10e6 * (n as f64 / 12.0).max(1.0);
         let mut rng = Rng::new(5);
         let sc = Scenario::uniform(&model, n, b, 0.20, 0.02, &mut rng);
-        let t0 = Instant::now();
-        let r = alternating::solve(&sc, &AlternatingOptions::default(), None)
+        let r = planner
+            .plan(&PlanRequest::new(sc, Policy::Robust))
             .map_err(|e| anyhow::anyhow!(e.to_string()))?;
-        let dt = t0.elapsed().as_secs_f64();
 
         let mut hist = vec![0usize; model.num_points()];
         for &m in &r.plan.partition {
@@ -44,8 +45,8 @@ fn main() -> anyhow::Result<()> {
             n,
             r.energy,
             r.energy / n as f64,
-            dt,
-            r.avg_pccp_iters,
+            r.diagnostics.wall_time.as_secs_f64(),
+            r.diagnostics.avg_pccp_iters,
             hist_s
         );
     }

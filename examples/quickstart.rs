@@ -5,8 +5,9 @@
 //! cargo run --release --example quickstart
 //! ```
 
+use ripra::engine::{PlanRequest, PlannerBuilder, Policy as PlanPolicy};
 use ripra::models::ModelProfile;
-use ripra::optim::{alternating, AlternatingOptions, Policy, Scenario};
+use ripra::optim::{Policy, Scenario};
 use ripra::sim::{self, SimOptions};
 use ripra::util::rng::Rng;
 
@@ -17,13 +18,16 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(42);
     let sc = Scenario::uniform(&model, 6, 10e6, 0.20, 0.05, &mut rng);
 
-    // Algorithm 2: CCP/ECR + interior-point resources + PCCP partitioning.
-    let result = alternating::solve(&sc, &AlternatingOptions::default(), None)
+    // The engine facade runs Algorithm 2 (CCP/ECR + interior-point
+    // resources + PCCP partitioning) behind one entrypoint.
+    let mut planner = PlannerBuilder::new().build();
+    let result = planner
+        .plan(&PlanRequest::new(sc.clone(), PlanPolicy::Robust))
         .map_err(|e| anyhow::anyhow!(e.to_string()))?;
     println!("expected total device energy: {:.4} J", result.energy);
     println!("converged in {} outer iterations; trajectory: {:?}",
-        result.outer_iters,
-        result.trajectory.iter().map(|e| format!("{e:.3}")).collect::<Vec<_>>());
+        result.diagnostics.outer_iters,
+        result.diagnostics.trajectory.iter().map(|e| format!("{e:.3}")).collect::<Vec<_>>());
 
     println!("\n dev   partition m   bandwidth    frequency   ECR margin");
     for i in 0..sc.n() {

@@ -9,8 +9,9 @@
 //! cargo run --release --example robust_planning
 //! ```
 
+use ripra::engine::{PlanRequest, PlannerBuilder, Policy};
 use ripra::models::ModelProfile;
-use ripra::optim::{alternating, baselines, AlternatingOptions, Scenario};
+use ripra::optim::Scenario;
 use ripra::sim::{self, SimOptions};
 use ripra::util::rng::Rng;
 
@@ -21,13 +22,19 @@ fn main() -> anyhow::Result<()> {
         "{:>6} | {:>10} {:>10} {:>10} | {:>9} {:>9} {:>9}",
         "eps", "robust_J", "worst_J", "mean_J", "viol_rob", "viol_wc", "viol_mean"
     );
+    // One planner dispatches all three policies through the same path.
+    let mut planner = PlannerBuilder::new().build();
     for eps in [0.02, 0.04, 0.06, 0.08] {
         let mut rng = Rng::new(7);
         let sc = Scenario::uniform(&model, 10, 10e6, 0.19, eps, &mut rng);
-        let rob = alternating::solve(&sc, &AlternatingOptions::default(), None)
-            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
-        let wc = baselines::worst_case(&sc).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-        let mean = baselines::mean_only(&sc).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let mut plan_with = |policy: Policy| {
+            planner
+                .plan(&PlanRequest::new(sc.clone(), policy))
+                .map_err(|e| anyhow::anyhow!(e.to_string()))
+        };
+        let rob = plan_with(Policy::Robust)?;
+        let wc = plan_with(Policy::WorstCase)?;
+        let mean = plan_with(Policy::MeanOnly)?;
 
         let opts = SimOptions { trials: 10_000, ..Default::default() };
         let v_rob = sim::evaluate(&sc, &rob.plan, &opts).worst_violation;

@@ -12,9 +12,10 @@
 use std::time::Duration;
 
 use ripra::coordinator::{self, ServeOptions};
+use ripra::engine::{PlanRequest, PlannerBuilder, Policy};
 use ripra::models::manifest::Manifest;
 use ripra::models::ModelProfile;
-use ripra::optim::{alternating, AlternatingOptions, Scenario};
+use ripra::optim::Scenario;
 use ripra::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -32,12 +33,14 @@ fn main() -> anyhow::Result<()> {
         let mut rng = Rng::new(1234);
         let sc = Scenario::uniform(&model, 6, bandwidth, deadline, risk, &mut rng);
 
-        // L3 planning: Algorithm 2 over the paper's hardware model.
-        let plan = alternating::solve(&sc, &AlternatingOptions::default(), None)
+        // L3 planning: the engine facade (Algorithm 2 under the hood).
+        let mut planner = PlannerBuilder::new().build();
+        let plan = planner
+            .plan(&PlanRequest::new(sc.clone(), Policy::Robust))
             .map_err(|e| anyhow::anyhow!(e.to_string()))?;
         println!(
             "plan: partition={:?}  energy={:.4} J  ({} outer iters)",
-            plan.plan.partition, plan.energy, plan.outer_iters
+            plan.plan.partition, plan.energy, plan.diagnostics.outer_iters
         );
 
         // Serve: device agents run the *real* compiled device parts, the

@@ -10,18 +10,21 @@
 //! cargo run --release --example uncertainty_sweep
 //! ```
 
+use ripra::engine::{PlanRequest, Planner, Policy};
 use ripra::models::ModelProfile;
-use ripra::optim::{alternating, AlternatingOptions, Scenario};
+use ripra::optim::Scenario;
 use ripra::profile::Dist;
 use ripra::sim::{self, SimOptions};
 use ripra::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
+    let mut planner = Planner::default();
     for model in [ModelProfile::alexnet_paper(), ModelProfile::resnet152_paper()] {
         let (b, d, eps) = ripra::figures::default_setting(&model.name);
         let mut rng = Rng::new(11);
         let sc = Scenario::uniform(&model, 8, b, d + 0.02, eps, &mut rng);
-        let plan = alternating::solve(&sc, &AlternatingOptions::default(), None)
+        let plan = planner
+            .plan(&PlanRequest::new(sc.clone(), Policy::Robust))
             .map_err(|e| anyhow::anyhow!(e.to_string()))?
             .plan;
 

@@ -1,28 +1,24 @@
-//! Algorithm-2 end-to-end scaling: regenerates the numbers behind Fig. 9
-//! (PCCP iterations) and Fig. 11 (runtime vs N) as benchmark output, for
-//! the sequential baseline (`threads = 1`) and the parallel fan-out side
-//! by side.  Timings plus iteration counts are merged into
-//! `BENCH_planner.json` at the repo root — the perf trajectory future PRs
-//! diff against (see EXPERIMENTS.md §Perf for the methodology).
+//! Algorithm-2 end-to-end scaling through the engine facade: regenerates
+//! the numbers behind Fig. 9 (PCCP iterations) and Fig. 11 (runtime vs
+//! N) for the sequential baseline (`threads = 1`) and the parallel
+//! fan-out side by side, plus the engine's service-path wins: plan-cache
+//! hits and incremental replanning (device join/leave) vs a cold solve.
+//! Timings and iteration counts merge into `BENCH_planner.json` at the
+//! repo root — the perf trajectory future PRs diff against (see
+//! EXPERIMENTS.md §Perf).
 
 use std::path::Path;
 use std::time::Duration;
 
+use ripra::engine::{PlanRequest, PlannerBuilder, Policy, ScenarioDelta};
 use ripra::models::ModelProfile;
-use ripra::optim::pccp::PccpOptions;
-use ripra::optim::{alternating, AlternatingOptions, Scenario};
+use ripra::optim::Scenario;
 use ripra::util::bench::Bencher;
 use ripra::util::rng::Rng;
 
 fn main() {
     let mut bench =
         Bencher::new().with_window(Duration::from_millis(300), Duration::from_secs(3));
-    let seq = AlternatingOptions {
-        threads: 1,
-        pccp: PccpOptions { threads: 1, ..PccpOptions::default() },
-        ..Default::default()
-    };
-    let par = AlternatingOptions::default(); // threads = 0: all cores
 
     for model in [ModelProfile::alexnet_paper(), ModelProfile::resnet152_paper()] {
         let (b0, d, eps) = ripra::figures::default_setting(&model.name);
@@ -30,18 +26,24 @@ fn main() {
             let b = b0 * (n as f64 / 12.0).max(1.0);
             let mut rng = Rng::new(0xBE + n as u64);
             let sc = Scenario::uniform(&model, n, b, d, eps, &mut rng);
-            for (tag, opts) in [("seq", &seq), ("par", &par)] {
+            for (tag, threads) in [("seq", 1usize), ("par", 0usize)] {
+                // Cache off: every timed iteration is a genuine solve.
+                let mut planner =
+                    PlannerBuilder::new().threads(threads).cache_capacity(0).build();
                 let name = format!("alg2_{}_n{n}_{tag}", model.name);
                 bench.bench(&name, || {
-                    alternating::solve(&sc, opts, None).map(|r| r.energy).unwrap_or(f64::NAN)
+                    planner
+                        .plan(&PlanRequest::new(sc.clone(), Policy::Robust))
+                        .map(|o| o.energy)
+                        .unwrap_or(f64::NAN)
                 });
                 // Iteration counts for the Fig. 9/11 reproduction (one
                 // deterministic solve — identical to every timed run).
-                if let Ok(r) = alternating::solve(&sc, opts, None) {
-                    bench.attach(&name, "newton_iters", r.newton_iters as f64);
-                    bench.attach(&name, "outer_iters", r.outer_iters as f64);
-                    bench.attach(&name, "avg_pccp_iters", r.avg_pccp_iters);
-                    bench.attach(&name, "energy", r.energy);
+                if let Ok(o) = planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust)) {
+                    bench.attach(&name, "newton_iters", o.diagnostics.newton_iters as f64);
+                    bench.attach(&name, "outer_iters", o.diagnostics.outer_iters as f64);
+                    bench.attach(&name, "avg_pccp_iters", o.diagnostics.avg_pccp_iters);
+                    bench.attach(&name, "energy", o.energy);
                 }
             }
             let median = |tag: &str| {
@@ -54,6 +56,40 @@ fn main() {
             if let (Some(s), Some(p)) = (median("seq"), median("par")) {
                 println!("  -> {} n={n}: parallel speedup {:.2}x", model.name, s / p);
             }
+        }
+    }
+
+    // ---- engine service paths: cache hits and incremental replanning ----
+    {
+        let model = ModelProfile::alexnet_paper();
+        let (b0, d, eps) = ripra::figures::default_setting(&model.name);
+        let n = 12usize;
+        let mut rng = Rng::new(0xCAFE);
+        // Headroom over the N=12 paper setting so the join replan (13
+        // devices) stays feasible.
+        let sc = Scenario::uniform(&model, n, b0 * 1.25, d + 0.02, eps, &mut rng);
+        let joiner = sc.devices[0].clone();
+
+        let mut planner = PlannerBuilder::new().build();
+        planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).expect("seed solve");
+        bench.bench("engine_cache_hit_n12", || {
+            planner
+                .plan(&PlanRequest::new(sc.clone(), Policy::Robust))
+                .map(|o| o.energy)
+                .unwrap_or(f64::NAN)
+        });
+
+        // Each iteration replans a join then the matching leave, so the
+        // planner returns to the N-device scenario every time.
+        bench.bench("engine_replan_join_leave_n12", || {
+            let a = planner.replan(&ScenarioDelta::Join(joiner.clone())).expect("join");
+            let b = planner.replan(&ScenarioDelta::Leave(n)).expect("leave");
+            a.energy + b.energy
+        });
+        if let Ok(o) = planner.replan(&ScenarioDelta::Join(joiner.clone())) {
+            let newton = o.diagnostics.newton_iters as f64;
+            bench.attach("engine_replan_join_leave_n12", "join_newton_iters", newton);
+            let _ = planner.replan(&ScenarioDelta::Leave(n));
         }
     }
 

@@ -116,6 +116,23 @@ struct Completion {
     deadline_s: f64,
 }
 
+/// Plan through the engine facade, then serve the result: the one-call
+/// path `ripra serve` uses.  The planner is borrowed (not constructed
+/// here) so a long-lived coordinator keeps its plan cache and solver
+/// workspaces warm across scenario changes.
+pub fn plan_and_serve(
+    artifacts_dir: PathBuf,
+    sc: &Scenario,
+    planner: &mut crate::engine::Planner,
+    opts: &ServeOptions,
+) -> Result<(crate::engine::PlanOutcome, ServeReport)> {
+    let outcome = planner
+        .plan(&crate::engine::PlanRequest::new(sc.clone(), crate::engine::Policy::Robust))
+        .map_err(|e| anyhow!(e.to_string()))?;
+    let report = serve(artifacts_dir, sc, &outcome.plan, opts)?;
+    Ok((outcome, report))
+}
+
 /// Run the serving loop for one scenario + plan on real artifacts.
 pub fn serve(
     artifacts_dir: PathBuf,

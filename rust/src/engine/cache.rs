@@ -1,0 +1,143 @@
+//! LRU plan cache keyed by scenario fingerprints.
+//!
+//! Capacities are small (a planner serves one coordinator; distinct
+//! scenario fingerprints number in the tens), so the cache is a recency
+//! ordered `Vec` — linear probes beat a hash map + separate recency list
+//! at this size and keep the engine dependency-free.
+
+use super::outcome::PlanOutcome;
+
+/// Hit/miss counters plus occupancy, exposed by
+/// [`super::Planner::cache_stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+/// Bounded LRU store: most-recently-used entry last.
+pub(crate) struct PlanCache {
+    capacity: usize,
+    entries: Vec<(u64, PlanOutcome)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    /// `capacity = 0` disables caching entirely.
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache { capacity, entries: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    pub fn get(&mut self, key: u64) -> Option<PlanOutcome> {
+        match self.entries.iter().position(|(k, _)| *k == key) {
+            Some(i) => {
+                self.hits += 1;
+                // refresh recency: move to the back
+                let entry = self.entries.remove(i);
+                let out = entry.1.clone();
+                self.entries.push(entry);
+                Some(out)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, key: u64, outcome: PlanOutcome) {
+        if self.capacity == 0 {
+            return;
+        }
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(i);
+        }
+        self.entries.push((key, outcome));
+        if self.entries.len() > self.capacity {
+            self.entries.remove(0); // least-recently-used
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            len: self.entries.len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::outcome::Diagnostics;
+    use super::super::request::Policy;
+    use super::*;
+    use crate::optim::types::Plan;
+
+    fn outcome(energy: f64) -> PlanOutcome {
+        PlanOutcome {
+            plan: Plan { partition: vec![1], bandwidth_hz: vec![1e6], freq_ghz: vec![1.0] },
+            energy,
+            policy: Policy::Robust,
+            diagnostics: Diagnostics::default(),
+        }
+    }
+
+    #[test]
+    fn hit_miss_and_counters() {
+        let mut c = PlanCache::new(4);
+        assert!(c.get(1).is_none());
+        c.insert(1, outcome(1.0));
+        assert_eq!(c.get(1).unwrap().energy, 1.0);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.len, s.capacity), (1, 1, 1, 4));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = PlanCache::new(2);
+        c.insert(1, outcome(1.0));
+        c.insert(2, outcome(2.0));
+        assert!(c.get(1).is_some()); // 1 is now the most recent
+        c.insert(3, outcome(3.0)); // evicts 2
+        assert!(c.get(2).is_none());
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+        assert_eq!(c.stats().len, 2);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_growing() {
+        let mut c = PlanCache::new(2);
+        c.insert(1, outcome(1.0));
+        c.insert(1, outcome(9.0));
+        assert_eq!(c.stats().len, 1);
+        assert_eq!(c.get(1).unwrap().energy, 9.0);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = PlanCache::new(0);
+        c.insert(1, outcome(1.0));
+        assert!(c.get(1).is_none());
+        assert_eq!(c.stats().len, 0);
+    }
+
+    #[test]
+    fn clear_keeps_counters() {
+        let mut c = PlanCache::new(2);
+        c.insert(1, outcome(1.0));
+        c.get(1);
+        c.clear();
+        assert_eq!(c.stats().len, 0);
+        assert_eq!(c.stats().hits, 1);
+    }
+}

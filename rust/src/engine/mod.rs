@@ -1,0 +1,55 @@
+//! The planning engine facade: **one entrypoint for every policy**, plan
+//! caching, and incremental replanning.
+//!
+//! The paper's Algorithm 2 and its §VI benchmarks used to be exposed as
+//! scattered free functions with three incompatible result types; this
+//! module replaces them with a long-lived [`Planner`] built from a
+//! [`PlannerBuilder`]:
+//!
+//! * [`Planner::plan`] dispatches [`Policy::Robust`],
+//!   [`Policy::WorstCase`], [`Policy::MeanOnly`], [`Policy::Exhaustive`]
+//!   and [`Policy::Multistart`] through a single code path and returns a
+//!   unified [`PlanOutcome`] (plan + energy + [`Diagnostics`]: outer
+//!   iterations, PCCP/Newton counts, wall time, cache/warm-start flags).
+//! * The planner owns long-lived state — a reusable
+//!   [`crate::solver::NewtonWorkspace`], the thread fan-out
+//!   configuration from [`crate::util::par`], and an LRU plan cache
+//!   keyed by a quantized scenario fingerprint (model, N, bandwidth,
+//!   deadlines, risk levels, channel gains) — so repeated planning is a
+//!   service call, not a per-request cold start.
+//! * [`Planner::replan`] consumes a [`ScenarioDelta`] (device
+//!   join/leave, channel, deadline, risk, or bandwidth change) and
+//!   warm-starts from the cached plan, falling back to a cold solve when
+//!   the adapted decision is infeasible — replanning for an online fleet
+//!   costs a few warm resource solves instead of a fresh MINLP run.
+//!
+//! ```
+//! use ripra::engine::{PlannerBuilder, PlanRequest, Policy, ScenarioDelta};
+//! use ripra::models::ModelProfile;
+//! use ripra::optim::Scenario;
+//! use ripra::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(3);
+//! let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 3, 10e6, 0.25, 0.05, &mut rng);
+//! let mut planner = PlannerBuilder::new().threads(1).build();
+//! let out = planner.plan(&PlanRequest::new(sc, Policy::Robust)).unwrap();
+//!
+//! // A device leaves: incremental replan, warm-started from `out`.
+//! let re = planner.replan(&ScenarioDelta::Leave(1)).unwrap();
+//! assert!(re.diagnostics.warm_started);
+//! assert!(re.energy <= out.energy * (1.0 + 1e-6));
+//! ```
+//!
+//! The legacy free functions (`optim::alternating::solve`,
+//! `optim::baselines::worst_case`, ...) remain as thin `#[deprecated]`
+//! shims for one release; new code should construct a planner.
+
+pub mod cache;
+pub mod outcome;
+pub mod planner;
+pub mod request;
+
+pub use cache::CacheStats;
+pub use outcome::{Diagnostics, PlanError, PlanOutcome};
+pub use planner::{Planner, PlannerBuilder};
+pub use request::{scenario_fingerprint, CliFlag, PlanRequest, Policy, ScenarioDelta};

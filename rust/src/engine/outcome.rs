@@ -1,0 +1,163 @@
+//! Unified planner result types: every policy returns the same
+//! [`PlanOutcome`] (plan + objective + solver diagnostics) and fails with
+//! the same [`PlanError`], replacing the three incompatible result types
+//! (`RobustPlan`, `BaselinePlan`, bare `Plan`) of the legacy free
+//! functions.
+
+use std::time::Duration;
+
+use crate::optim::types::Plan;
+use crate::util::json::Json;
+
+use super::request::Policy;
+
+/// Solver-side diagnostics attached to every [`PlanOutcome`].
+///
+/// Counter semantics per policy: `avg_pccp_iters` and `trajectory` are
+/// only populated by the PCCP-based policies (`Robust`, `Multistart`);
+/// the enumeration baselines report `outer_iters` (alternation rounds)
+/// and `newton_iters` (interior-point work inside their resource
+/// solves).
+#[derive(Clone, Debug, Default)]
+pub struct Diagnostics {
+    /// Outer (Algorithm-2 alternation / enumeration) iterations.
+    pub outer_iters: usize,
+    /// Mean Algorithm-1 iterations per device (Fig. 9's metric).
+    pub avg_pccp_iters: f64,
+    /// Total Newton iterations across every inner interior-point solve.
+    pub newton_iters: usize,
+    /// Objective after each outer iteration (Fig. 10's trajectory).
+    pub trajectory: Vec<f64>,
+    /// Wall-clock of the solve that produced this outcome.  A cache hit
+    /// reports the original solve's wall time, not the lookup's.
+    pub wall_time: Duration,
+    /// The outcome was served from the planner's LRU cache.
+    pub cache_hit: bool,
+    /// The outcome was produced by [`super::Planner::replan`]'s
+    /// warm-started path (not a cold solve).
+    pub warm_started: bool,
+}
+
+/// One unified outcome for every planning policy.
+#[derive(Clone, Debug)]
+pub struct PlanOutcome {
+    /// The decision: partition point, bandwidth, and frequency per device.
+    pub plan: Plan,
+    /// Expected total device energy of `plan` (objective (9a)).
+    pub energy: f64,
+    /// Policy that produced the plan.
+    pub policy: Policy,
+    pub diagnostics: Diagnostics,
+}
+
+impl PlanOutcome {
+    /// Machine-readable encoding (the `ripra plan --json` payload).
+    pub fn to_json(&self) -> Json {
+        let nums = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+        Json::Obj(vec![
+            ("policy".into(), Json::Str(self.policy.name().into())),
+            ("energy_j".into(), Json::Num(self.energy)),
+            (
+                "partition".into(),
+                Json::Arr(self.plan.partition.iter().map(|&m| Json::Num(m as f64)).collect()),
+            ),
+            ("bandwidth_hz".into(), nums(&self.plan.bandwidth_hz)),
+            ("freq_ghz".into(), nums(&self.plan.freq_ghz)),
+            (
+                "diagnostics".into(),
+                Json::Obj(vec![
+                    ("outer_iters".into(), Json::Num(self.diagnostics.outer_iters as f64)),
+                    ("avg_pccp_iters".into(), Json::Num(self.diagnostics.avg_pccp_iters)),
+                    ("newton_iters".into(), Json::Num(self.diagnostics.newton_iters as f64)),
+                    ("wall_time_s".into(), Json::Num(self.diagnostics.wall_time.as_secs_f64())),
+                    ("cache_hit".into(), Json::Bool(self.diagnostics.cache_hit)),
+                    ("warm_started".into(), Json::Bool(self.diagnostics.warm_started)),
+                    ("trajectory".into(), nums(&self.diagnostics.trajectory)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Unified planner failure.
+#[derive(Debug, Clone)]
+pub enum PlanError {
+    /// No feasible decision exists for the scenario under the policy.
+    Infeasible(String),
+    /// An inner solver failed numerically.
+    Solver(String),
+    /// The request itself is malformed (empty scenario, bad delta index,
+    /// mismatched initial partition, ...).
+    InvalidRequest(String),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Infeasible(s) => write!(f, "scenario infeasible: {s}"),
+            PlanError::Solver(s) => write!(f, "solver failure: {s}"),
+            PlanError::InvalidRequest(s) => write!(f, "invalid request: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+impl From<crate::optim::alternating::PlanError> for PlanError {
+    fn from(e: crate::optim::alternating::PlanError) -> Self {
+        match e {
+            crate::optim::alternating::PlanError::Infeasible(s) => PlanError::Infeasible(s),
+            crate::optim::alternating::PlanError::Solver(s) => PlanError::Solver(s),
+        }
+    }
+}
+
+impl From<crate::optim::baselines::BaselineError> for PlanError {
+    fn from(e: crate::optim::baselines::BaselineError) -> Self {
+        // The enumeration baselines fail (almost) exclusively on resource
+        // infeasibility; their error type keeps the detail as a string.
+        if e.0.contains("infeasible") {
+            PlanError::Infeasible(e.0)
+        } else {
+            PlanError::Solver(e.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrips_and_carries_fields() {
+        let out = PlanOutcome {
+            plan: Plan {
+                partition: vec![2, 0],
+                bandwidth_hz: vec![3e6, 4e6],
+                freq_ghz: vec![1.0, 0.5],
+            },
+            energy: 1.25,
+            policy: Policy::Robust,
+            diagnostics: Diagnostics {
+                outer_iters: 3,
+                newton_iters: 120,
+                cache_hit: true,
+                ..Default::default()
+            },
+        };
+        let j = out.to_json();
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back.get("policy").unwrap().as_str().unwrap(), "robust");
+        assert_eq!(back.get("energy_j").unwrap().as_f64().unwrap(), 1.25);
+        assert_eq!(back.get("partition").unwrap().usize_array().unwrap(), vec![2, 0]);
+        let d = back.get("diagnostics").unwrap();
+        assert_eq!(d.get("newton_iters").unwrap().as_usize().unwrap(), 120);
+        assert!(d.get("cache_hit").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn error_display_tags_kind() {
+        assert!(PlanError::Infeasible("x".into()).to_string().contains("infeasible"));
+        assert!(PlanError::InvalidRequest("y".into()).to_string().contains("invalid"));
+    }
+}

@@ -1,0 +1,482 @@
+//! The [`Planner`] facade: one long-lived engine object that owns the
+//! solver workspaces, the thread-fan-out configuration, and the plan
+//! cache, and dispatches every policy through a single `plan` entrypoint
+//! plus an incremental `replan` path.
+
+use std::time::Instant;
+
+use crate::optim::types::{Device, Plan, Policy as MarginPolicy, Scenario};
+use crate::optim::{alternating, baselines, resource, AlternatingOptions};
+use crate::solver::NewtonWorkspace;
+
+use super::cache::{CacheStats, PlanCache};
+use super::outcome::{Diagnostics, PlanError, PlanOutcome};
+use super::request::{scenario_fingerprint, PlanRequest, Policy, ScenarioDelta};
+
+/// Bound on the enumeration-refinement rounds a warm replan runs; each
+/// round costs one warm-started resource solve, so the replan's total
+/// interior-point work stays far below a cold Algorithm-2 run.
+const REPLAN_REFINE_ROUNDS: usize = 3;
+
+/// Default LRU capacity (distinct scenario fingerprints a coordinator
+/// juggles at once are typically few).
+const DEFAULT_CACHE_CAPACITY: usize = 32;
+
+/// Configures and builds a [`Planner`].
+///
+/// # Example
+///
+/// ```
+/// use ripra::engine::{PlannerBuilder, PlanRequest, Policy};
+/// use ripra::models::ModelProfile;
+/// use ripra::optim::Scenario;
+/// use ripra::util::rng::Rng;
+///
+/// let mut rng = Rng::new(7);
+/// let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 2, 10e6, 0.25, 0.05, &mut rng);
+/// let mut planner = PlannerBuilder::new().threads(1).cache_capacity(8).build();
+///
+/// let out = planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+/// assert!(out.energy > 0.0 && !out.diagnostics.cache_hit);
+///
+/// // The identical request is served from the LRU cache.
+/// let hit = planner.plan(&PlanRequest::new(sc, Policy::Robust)).unwrap();
+/// assert!(hit.diagnostics.cache_hit);
+/// assert_eq!(hit.plan, out.plan);
+/// ```
+#[derive(Clone, Debug)]
+pub struct PlannerBuilder {
+    opts: AlternatingOptions,
+    cache_capacity: usize,
+}
+
+impl Default for PlannerBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlannerBuilder {
+    pub fn new() -> PlannerBuilder {
+        PlannerBuilder {
+            opts: AlternatingOptions::default(),
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
+        }
+    }
+
+    /// Replace the full Algorithm-2 option set (convergence thresholds,
+    /// PCCP knobs, warm-start toggle, ...).  Call before [`Self::threads`]
+    /// if combining both — `threads` overrides the option set's worker
+    /// counts.
+    pub fn alternating(mut self, opts: AlternatingOptions) -> PlannerBuilder {
+        self.opts = opts;
+        self
+    }
+
+    /// Worker threads for the per-device PCCP fan-out and the polish
+    /// sweep (0 = one per core, 1 = sequential).  Thread count never
+    /// changes results, only wall-clock.
+    pub fn threads(mut self, n: usize) -> PlannerBuilder {
+        self.opts.threads = n;
+        self.opts.pccp.threads = n;
+        self
+    }
+
+    /// Toggle Algorithm-2 warm starts between outer iterations.
+    pub fn warm_start(mut self, on: bool) -> PlannerBuilder {
+        self.opts.warm_start = on;
+        self
+    }
+
+    /// Plan-cache capacity in entries; 0 disables caching.
+    pub fn cache_capacity(mut self, n: usize) -> PlannerBuilder {
+        self.cache_capacity = n;
+        self
+    }
+
+    pub fn build(self) -> Planner {
+        Planner {
+            opts: self.opts,
+            cache: PlanCache::new(self.cache_capacity),
+            ws: NewtonWorkspace::new(),
+            last: None,
+        }
+    }
+}
+
+/// The last successful solve, kept for incremental replanning.
+struct LastSolve {
+    scenario: Scenario,
+    policy: Policy,
+    outcome: PlanOutcome,
+}
+
+/// Long-lived planning engine: the one entrypoint every caller
+/// (CLI, figures, coordinator, benches) goes through.
+///
+/// Owns a reusable [`NewtonWorkspace`] (so repeated solves stay
+/// allocation-free in the barrier hot path), the fan-out thread
+/// configuration, and an LRU plan cache keyed by a quantized scenario
+/// fingerprint.  Construct with [`PlannerBuilder`].
+pub struct Planner {
+    opts: AlternatingOptions,
+    cache: PlanCache,
+    ws: NewtonWorkspace,
+    last: Option<LastSolve>,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        PlannerBuilder::new().build()
+    }
+}
+
+impl Planner {
+    pub fn builder() -> PlannerBuilder {
+        PlannerBuilder::new()
+    }
+
+    /// The Algorithm-2 options this planner solves with.
+    pub fn options(&self) -> &AlternatingOptions {
+        &self.opts
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Scenario of the last successful `plan`/`replan`, if any.
+    pub fn last_scenario(&self) -> Option<&Scenario> {
+        self.last.as_ref().map(|l| &l.scenario)
+    }
+
+    /// Plan a scenario under a policy.
+    ///
+    /// On a cache-miss this solves cold and the result is bit-identical
+    /// to the corresponding legacy free function (same options, same
+    /// arithmetic — the shared workspace only changes where intermediates
+    /// live).  On a hit the cached outcome is returned with
+    /// `diagnostics.cache_hit = true`.
+    pub fn plan(&mut self, req: &PlanRequest) -> Result<PlanOutcome, PlanError> {
+        req.validate()?;
+        let fp = req.fingerprint();
+        if req.use_cache {
+            if let Some(mut hit) = self.cache.get(fp) {
+                hit.diagnostics.cache_hit = true;
+                self.remember(req.scenario.clone(), req.policy.clone(), &hit);
+                return Ok(hit);
+            }
+        }
+        let t0 = Instant::now();
+        let mut outcome = self.solve_cold(req)?;
+        outcome.diagnostics.wall_time = t0.elapsed();
+        if req.use_cache {
+            self.cache.insert(fp, outcome.clone());
+        }
+        self.remember(req.scenario.clone(), req.policy.clone(), &outcome);
+        Ok(outcome)
+    }
+
+    /// Incrementally replan after a scenario change, warm-starting from
+    /// the last plan.
+    ///
+    /// The warm path keeps the previous partition (adapted to the delta:
+    /// a leaver's entries dropped, a joiner assigned its cheapest
+    /// feasible point at an equal bandwidth share), re-solves resources
+    /// from the previous `(b, f)`, and runs a few exact per-device
+    /// enumeration refinement rounds — orders of magnitude fewer Newton
+    /// iterations than a cold Algorithm-2 run.  The path is
+    /// feasibility-gated: if the adapted decision admits no feasible
+    /// resources, the planner falls back to a cold [`Planner::plan`] of
+    /// the new scenario (and only errors if that fails too).
+    pub fn replan(&mut self, delta: &ScenarioDelta) -> Result<PlanOutcome, PlanError> {
+        let (prev_sc, policy, prev_plan) = match &self.last {
+            Some(l) => (l.scenario.clone(), l.policy.clone(), l.outcome.plan.clone()),
+            None => {
+                return Err(PlanError::InvalidRequest(
+                    "replan requires a previous plan() on this planner".into(),
+                ))
+            }
+        };
+        let new_sc = delta.apply(&prev_sc)?;
+        let mpol = policy.margin_policy();
+        let t0 = Instant::now();
+
+        let (mut partition, warm) = adapt_decision(delta, &prev_sc, &prev_plan, &new_sc, mpol);
+        let first =
+            resource::solve_warm_with(&new_sc, &partition, mpol, warm.as_ref(), &mut self.ws);
+        let mut res = match first {
+            Ok(r) => r,
+            // Feasibility gate: the adapted decision cannot be repaired
+            // by resources alone — solve the new scenario cold.
+            Err(_) => return self.plan(&PlanRequest::new(new_sc, policy)),
+        };
+
+        let mut newton = res.newton_iters;
+        let mut outer = 0;
+        let mut trajectory = vec![res.energy];
+        for _ in 0..REPLAN_REFINE_ROUNDS {
+            outer += 1;
+            let refined: Vec<usize> = (0..new_sc.n())
+                .map(|i| {
+                    baselines::best_point(&new_sc, i, res.freq_ghz[i], res.bandwidth_hz[i], mpol)
+                        .unwrap_or(partition[i])
+                })
+                .collect();
+            if refined == partition {
+                break;
+            }
+            match resource::solve_warm_with(&new_sc, &refined, mpol, Some(&res), &mut self.ws) {
+                Ok(r) if r.energy <= res.energy * (1.0 + 1e-9) => {
+                    newton += r.newton_iters;
+                    partition = refined;
+                    res = r;
+                    trajectory.push(res.energy);
+                }
+                Ok(r) => {
+                    newton += r.newton_iters;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+
+        let outcome = PlanOutcome {
+            plan: Plan {
+                partition,
+                bandwidth_hz: res.bandwidth_hz.clone(),
+                freq_ghz: res.freq_ghz.clone(),
+            },
+            energy: res.energy,
+            policy: policy.clone(),
+            diagnostics: Diagnostics {
+                outer_iters: outer,
+                avg_pccp_iters: 0.0,
+                newton_iters: newton,
+                trajectory,
+                wall_time: t0.elapsed(),
+                cache_hit: false,
+                warm_started: true,
+            },
+        };
+        // A follow-up plan() of the same scenario now hits the cache.
+        self.cache.insert(scenario_fingerprint(&new_sc, &policy), outcome.clone());
+        self.remember(new_sc, policy, &outcome);
+        Ok(outcome)
+    }
+
+    fn remember(&mut self, scenario: Scenario, policy: Policy, outcome: &PlanOutcome) {
+        self.last = Some(LastSolve { scenario, policy, outcome: outcome.clone() });
+    }
+
+    fn solve_cold(&mut self, req: &PlanRequest) -> Result<PlanOutcome, PlanError> {
+        let sc = &req.scenario;
+        match &req.policy {
+            Policy::Robust => {
+                let init = req.init_partition.clone();
+                let r = alternating::solve_core(sc, &self.opts, init, &mut self.ws)?;
+                Ok(robust_outcome(r, Policy::Robust))
+            }
+            Policy::Multistart { extra_starts } => {
+                let r =
+                    alternating::solve_multistart_core(sc, &self.opts, extra_starts, &mut self.ws)?;
+                Ok(robust_outcome(r, req.policy.clone()))
+            }
+            Policy::WorstCase | Policy::MeanOnly => {
+                let r = baselines::alternate_enumeration_core(
+                    sc,
+                    req.policy.margin_policy(),
+                    req.init_partition.clone(),
+                    20,
+                    &mut self.ws,
+                )?;
+                Ok(baseline_outcome(r, req.policy.clone()))
+            }
+            Policy::Exhaustive => {
+                let r = baselines::exhaustive_core(sc, &mut self.ws)?;
+                Ok(baseline_outcome(r, Policy::Exhaustive))
+            }
+        }
+    }
+}
+
+fn robust_outcome(r: alternating::RobustPlan, policy: Policy) -> PlanOutcome {
+    PlanOutcome {
+        plan: r.plan,
+        energy: r.energy,
+        policy,
+        diagnostics: Diagnostics {
+            outer_iters: r.outer_iters,
+            avg_pccp_iters: r.avg_pccp_iters,
+            newton_iters: r.newton_iters,
+            trajectory: r.trajectory,
+            ..Default::default()
+        },
+    }
+}
+
+fn baseline_outcome(r: baselines::BaselinePlan, policy: Policy) -> PlanOutcome {
+    PlanOutcome {
+        plan: r.plan,
+        energy: r.energy,
+        policy,
+        diagnostics: Diagnostics {
+            outer_iters: r.outer_iters,
+            newton_iters: r.newton_iters,
+            ..Default::default()
+        },
+    }
+}
+
+/// Feasibility-friendliest point (minimum margin-adjusted total time at
+/// f_max) — the joiner's fallback when nothing is feasible at an equal
+/// share.
+fn min_time_point(dev: &Device, b_hz: f64, policy: MarginPolicy) -> usize {
+    let f = dev.model.device.f_max_ghz;
+    (0..dev.model.num_points())
+        .min_by(|&a, &b| {
+            let ta = dev.t_total_mean(a, f, b_hz) + dev.margin(a, policy);
+            let tb = dev.t_total_mean(b, f, b_hz) + dev.margin(b, policy);
+            ta.partial_cmp(&tb).unwrap()
+        })
+        .unwrap_or(0)
+}
+
+/// Adapt the previous (partition, bandwidth, frequency) to a delta: the
+/// returned partition seeds the warm resource solve, and the returned
+/// resource guess is used only if strictly feasible for the new scenario
+/// (`resource::solve_warm_with` checks and otherwise cold-starts).
+fn adapt_decision(
+    delta: &ScenarioDelta,
+    prev_sc: &Scenario,
+    prev: &Plan,
+    new_sc: &Scenario,
+    mpol: MarginPolicy,
+) -> (Vec<usize>, Option<resource::ResourceSolution>) {
+    let warm_of = |b: Vec<f64>, f: Vec<f64>| {
+        Some(resource::ResourceSolution {
+            bandwidth_hz: b,
+            freq_ghz: f,
+            energy: 0.0,
+            newton_iters: 0,
+        })
+    };
+    match delta {
+        ScenarioDelta::Leave(i) => {
+            let mut part = prev.partition.clone();
+            let mut b = prev.bandwidth_hz.clone();
+            let mut f = prev.freq_ghz.clone();
+            part.remove(*i);
+            b.remove(*i);
+            f.remove(*i);
+            (part, warm_of(b, f))
+        }
+        ScenarioDelta::Join(_) => {
+            let n_new = new_sc.n();
+            let joiner = &new_sc.devices[n_new - 1];
+            let b_each = new_sc.total_bandwidth_hz / n_new as f64;
+            let f_max = joiner.model.device.f_max_ghz;
+            let m_new = baselines::best_point(new_sc, n_new - 1, f_max, b_each, mpol)
+                .unwrap_or_else(|| min_time_point(joiner, b_each, mpol));
+            let mut part = prev.partition.clone();
+            part.push(m_new);
+            // Shrink the incumbents' shares to fund the joiner while
+            // keeping Σb strictly under B.
+            let shrink = (n_new as f64 - 1.0) / n_new as f64;
+            let mut b: Vec<f64> = prev.bandwidth_hz.iter().map(|&x| x * shrink).collect();
+            let mut f = prev.freq_ghz.clone();
+            b.push(0.95 * b_each);
+            f.push(joiner.model.device.f_max_ghz * 0.999);
+            (part, warm_of(b, f))
+        }
+        ScenarioDelta::TotalBandwidth(b_new) => {
+            let scale = if *b_new < prev_sc.total_bandwidth_hz {
+                b_new / prev_sc.total_bandwidth_hz
+            } else {
+                1.0
+            };
+            let b = prev.bandwidth_hz.iter().map(|&x| x * scale).collect();
+            (prev.partition.clone(), warm_of(b, prev.freq_ghz.clone()))
+        }
+        // Deadline/risk/channel changes keep the whole previous decision
+        // as the warm start; the solver's strict-feasibility check gates
+        // its reuse.
+        _ => (
+            prev.partition.clone(),
+            warm_of(prev.bandwidth_hz.clone(), prev.freq_ghz.clone()),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelProfile;
+    use crate::util::rng::Rng;
+
+    fn scenario(n: usize, d: f64, eps: f64, seed: u64) -> Scenario {
+        let mut rng = Rng::new(seed);
+        Scenario::uniform(&ModelProfile::alexnet_paper(), n, 10e6, d, eps, &mut rng)
+    }
+
+    #[test]
+    fn plan_caches_and_reports_hits() {
+        let sc = scenario(4, 0.22, 0.05, 1);
+        let mut p = Planner::default();
+        let a = p.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+        assert!(!a.diagnostics.cache_hit);
+        let b = p.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+        assert!(b.diagnostics.cache_hit);
+        assert_eq!(a.plan, b.plan);
+        assert!(a.energy.to_bits() == b.energy.to_bits());
+        assert_eq!(p.cache_stats().hits, 1);
+        // bypass flag skips both lookup and insert
+        let c = p.plan(&PlanRequest::new(sc, Policy::Robust).without_cache()).unwrap();
+        assert!(!c.diagnostics.cache_hit);
+        assert_eq!(p.cache_stats().hits, 1);
+    }
+
+    #[test]
+    fn replan_without_history_is_rejected() {
+        let mut p = Planner::default();
+        assert!(matches!(
+            p.replan(&ScenarioDelta::TotalBandwidth(5e6)),
+            Err(PlanError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn replan_leave_warm_starts_and_stays_feasible() {
+        let sc = scenario(6, 0.22, 0.05, 2);
+        let mut p = Planner::default();
+        let cold = p.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+        let re = p.replan(&ScenarioDelta::Leave(3)).unwrap();
+        assert!(re.diagnostics.warm_started);
+        assert_eq!(re.plan.partition.len(), 5);
+        let smaller = p.last_scenario().unwrap().clone();
+        assert_eq!(smaller.n(), 5);
+        assert!(re.plan.feasible(&smaller, MarginPolicy::Robust));
+        assert!(re.plan.bandwidth_ok(&smaller));
+        assert!(re.energy <= cold.energy * (1.0 + 1e-6), "leaving cannot cost energy");
+        // a follow-up plan() of the replanned scenario hits the cache
+        let again = p.plan(&PlanRequest::new(smaller, Policy::Robust)).unwrap();
+        assert!(again.diagnostics.cache_hit);
+    }
+
+    #[test]
+    fn replan_falls_back_cold_when_warm_path_is_infeasible() {
+        let sc = scenario(5, 0.22, 0.05, 3);
+        let mut p = Planner::default();
+        p.plan(&PlanRequest::new(sc, Policy::Robust)).unwrap();
+        // Crushing the deadline makes every warm/cold path infeasible:
+        // the error must be the cold solver's, not a panic.
+        assert!(matches!(
+            p.replan(&ScenarioDelta::Deadline { device: None, deadline_s: 0.003 }),
+            Err(PlanError::Infeasible(_))
+        ));
+    }
+}

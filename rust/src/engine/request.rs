@@ -1,0 +1,476 @@
+//! Planning requests: the policy enum, the [`PlanRequest`] the engine's
+//! single entrypoint consumes, the scenario fingerprint that keys the
+//! plan cache, and the [`ScenarioDelta`]s incremental replanning accepts.
+
+use crate::channel::Uplink;
+use crate::optim::types::{Device, Scenario};
+
+use super::outcome::PlanError;
+
+/// Planning policy — the engine's single dispatch axis, covering the
+/// paper's proposal and every §VI benchmark.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    /// Algorithm 2 (CCP/ECR + interior point + PCCP) — the paper's
+    /// proposal.
+    Robust,
+    /// Benchmark 1: upper-bound inference times, no violation tolerated.
+    WorstCase,
+    /// Benchmark 3: ignore uncertainty entirely (margin 0).
+    MeanOnly,
+    /// Exhaustive (M+1)^N search with a resource solve per assignment —
+    /// only viable for tiny N.
+    Exhaustive,
+    /// Algorithm 2 from several structurally different initial
+    /// partitions, keeping the best plan; `extra_starts` adds
+    /// caller-provided initial partitions to the built-in ones.
+    Multistart { extra_starts: Vec<Vec<usize>> },
+}
+
+impl Policy {
+    /// Stable lowercase name (CLI / JSON encoding).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Robust => "robust",
+            Policy::WorstCase => "worst-case",
+            Policy::MeanOnly => "mean-only",
+            Policy::Exhaustive => "exhaustive",
+            Policy::Multistart { .. } => "multistart",
+        }
+    }
+
+    /// Parse a CLI spelling (accepts the legacy short names).
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "robust" => Some(Policy::Robust),
+            "worst" | "worst-case" | "worstcase" => Some(Policy::WorstCase),
+            "mean" | "mean-only" | "meanonly" => Some(Policy::MeanOnly),
+            "exhaustive" | "optimal" => Some(Policy::Exhaustive),
+            "multistart" => Some(Policy::Multistart { extra_starts: Vec::new() }),
+            _ => None,
+        }
+    }
+
+    /// The deadline-margin policy this planning policy evaluates
+    /// constraints under (the robust family all uses ECR margins).
+    pub fn margin_policy(&self) -> crate::optim::Policy {
+        match self {
+            Policy::WorstCase => crate::optim::Policy::WorstCase,
+            Policy::MeanOnly => crate::optim::Policy::MeanOnly,
+            _ => crate::optim::Policy::Robust,
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            Policy::Robust => 0,
+            Policy::WorstCase => 1,
+            Policy::MeanOnly => 2,
+            Policy::Exhaustive => 3,
+            Policy::Multistart { .. } => 4,
+        }
+    }
+}
+
+/// One CLI flag binding for a [`PlanRequest`] field; `main.rs` derives
+/// the `ripra plan` usage text and its flag parser from
+/// [`PlanRequest::CLI_FLAGS`] so the CLI can never drift from the API.
+#[derive(Clone, Copy, Debug)]
+pub struct CliFlag {
+    pub name: &'static str,
+    /// Value placeholder; `None` marks a boolean flag.
+    pub value: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// A planning request: scenario + policy (+ optional overrides).
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub scenario: Scenario,
+    pub policy: Policy,
+    /// Initial partition override for the alternation (Fig. 10 sweeps
+    /// this); `None` uses the feasibility-friendly heuristic start.
+    pub init_partition: Option<Vec<usize>>,
+    /// Consult/populate the planner's LRU cache (default true; timing
+    /// harnesses turn it off).
+    pub use_cache: bool,
+}
+
+impl PlanRequest {
+    /// Flags the `ripra plan` subcommand exposes (scenario fields first,
+    /// then output controls).
+    pub const CLI_FLAGS: &[CliFlag] = &[
+        CliFlag { name: "model", value: Some("alexnet|resnet152"), help: "DNN/hardware profile" },
+        CliFlag { name: "n", value: Some("N"), help: "number of devices (default 12)" },
+        CliFlag { name: "bandwidth", value: Some("HZ"), help: "total uplink bandwidth" },
+        CliFlag { name: "deadline", value: Some("S"), help: "per-task deadline, seconds" },
+        CliFlag { name: "risk", value: Some("E"), help: "tolerated violation probability" },
+        CliFlag {
+            name: "policy",
+            value: Some("robust|worst|mean|exhaustive|multistart"),
+            help: "planning policy (default robust)",
+        },
+        CliFlag { name: "seed", value: Some("S"), help: "device-placement seed" },
+        CliFlag { name: "trials", value: Some("T"), help: "Monte-Carlo trials (0 disables)" },
+        CliFlag { name: "no-cache", value: None, help: "bypass the plan cache" },
+        CliFlag { name: "json", value: None, help: "emit the PlanOutcome as JSON" },
+    ];
+
+    pub fn new(scenario: Scenario, policy: Policy) -> PlanRequest {
+        PlanRequest { scenario, policy, init_partition: None, use_cache: true }
+    }
+
+    /// Override the initial partition.
+    pub fn with_init(mut self, init: Vec<usize>) -> PlanRequest {
+        self.init_partition = Some(init);
+        self
+    }
+
+    /// Bypass the plan cache for this request.
+    pub fn without_cache(mut self) -> PlanRequest {
+        self.use_cache = false;
+        self
+    }
+
+    pub(crate) fn validate(&self) -> Result<(), PlanError> {
+        if self.scenario.n() == 0 {
+            return Err(PlanError::InvalidRequest("scenario has no devices".into()));
+        }
+        if self.policy == Policy::Exhaustive {
+            // Mirror the search's own refusal limit so an oversized
+            // request is a clean error, not a downstream panic (and
+            // checked_mul guards the (M+1)^N product against overflow).
+            let mut total = 1usize;
+            for d in &self.scenario.devices {
+                total = total
+                    .checked_mul(d.model.num_points())
+                    .filter(|&t| t <= EXHAUSTIVE_LIMIT)
+                    .ok_or_else(|| {
+                        PlanError::InvalidRequest(format!(
+                            "exhaustive search over (M+1)^N assignments exceeds {EXHAUSTIVE_LIMIT}; \
+                             use Policy::Multistart for this N"
+                        ))
+                    })?;
+            }
+        }
+        if let Some(init) = &self.init_partition {
+            if init.len() != self.scenario.n() {
+                return Err(PlanError::InvalidRequest(format!(
+                    "init partition has {} entries for {} devices",
+                    init.len(),
+                    self.scenario.n()
+                )));
+            }
+            for (i, (&m, d)) in init.iter().zip(&self.scenario.devices).enumerate() {
+                if m >= d.model.num_points() {
+                    return Err(PlanError::InvalidRequest(format!(
+                        "init partition point {m} out of range for device {i}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Cache key: policy + init + quantized scenario fingerprint.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.u8(self.policy.tag());
+        if let Policy::Multistart { extra_starts } = &self.policy {
+            h.usize(extra_starts.len());
+            for s in extra_starts {
+                h.usize(s.len());
+                for &m in s {
+                    h.usize(m);
+                }
+            }
+        }
+        match &self.init_partition {
+            None => h.u8(0),
+            Some(init) => {
+                h.u8(1);
+                for &m in init {
+                    h.usize(m);
+                }
+            }
+        }
+        hash_scenario(&mut h, &self.scenario);
+        h.finish()
+    }
+}
+
+/// Assignment-count cap for [`Policy::Exhaustive`] (the same refusal
+/// limit the search itself enforces).
+const EXHAUSTIVE_LIMIT: usize = 1_000_000;
+
+/// Quantization grid for the scenario fingerprint: two scenarios whose
+/// parameters agree to within these quanta hash identically, so channel
+/// jitter below the planner's own sensitivity reuses cached plans.
+mod quanta {
+    /// Total/per-device bandwidth, Hz.
+    pub const BANDWIDTH_HZ: f64 = 1e3;
+    /// Deadlines, seconds (0.1 ms).
+    pub const DEADLINE_S: f64 = 1e-4;
+    /// Risk level ε.
+    pub const RISK: f64 = 1e-4;
+    /// Channel gain, dB (0.1 dB steps on the path-loss scale).
+    pub const GAIN_DB: f64 = 0.1;
+    /// Transmit power, W.
+    pub const POWER_W: f64 = 1e-3;
+}
+
+fn hash_scenario(h: &mut Fnv, sc: &Scenario) {
+    h.usize(sc.n());
+    h.q(sc.total_bandwidth_hz, quanta::BANDWIDTH_HZ);
+    for d in &sc.devices {
+        h.bytes(d.model.name.as_bytes());
+        h.q(d.deadline_s, quanta::DEADLINE_S);
+        h.q(d.risk, quanta::RISK);
+        h.q(10.0 * d.uplink.gain.log10(), quanta::GAIN_DB);
+        h.q(d.uplink.p_tx, quanta::POWER_W);
+        // noise PSD on the same dB grid as the gain — all three Uplink
+        // fields shape the rate, so all three key the cache
+        h.q(10.0 * d.uplink.n0.log10(), quanta::GAIN_DB);
+    }
+}
+
+/// Fingerprint of a bare scenario under a policy (what `replan` inserts
+/// its warm results under, so a follow-up `plan` for the same scenario
+/// hits the cache).
+pub fn scenario_fingerprint(sc: &Scenario, policy: &Policy) -> u64 {
+    PlanRequest::new(sc.clone(), policy.clone()).fingerprint()
+}
+
+/// FNV-1a, 64-bit — tiny, dependency-free, stable across runs.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.bytes(&[v]);
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.bytes(&(v as u64).to_le_bytes());
+    }
+
+    /// Hash `x` rounded to the nearest multiple of `quantum`.
+    fn q(&mut self, x: f64, quantum: f64) {
+        let q = (x / quantum).round();
+        // Canonicalize -0.0 and keep non-finite values distinct.
+        let bits = if q == 0.0 { 0u64 } else { q.to_bits() };
+        self.bytes(&bits.to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// An incremental change to the last-planned scenario, consumed by
+/// [`super::Planner::replan`].
+#[derive(Clone, Debug)]
+pub enum ScenarioDelta {
+    /// A new device joins (appended at index N).
+    Join(Device),
+    /// Device `i` leaves.
+    Leave(usize),
+    /// Deadline change (one device, or all when `device` is `None`).
+    Deadline { device: Option<usize>, deadline_s: f64 },
+    /// Risk-level change (one device, or all when `device` is `None`).
+    Risk { device: Option<usize>, risk: f64 },
+    /// Channel change for one device (e.g. it moved).
+    Channel { device: usize, uplink: Uplink },
+    /// Total uplink budget change.
+    TotalBandwidth(f64),
+}
+
+impl ScenarioDelta {
+    /// Apply the delta to a scenario, validating indices and ranges.
+    pub fn apply(&self, sc: &Scenario) -> Result<Scenario, PlanError> {
+        let check = |i: usize| -> Result<(), PlanError> {
+            if i < sc.n() {
+                Ok(())
+            } else {
+                Err(PlanError::InvalidRequest(format!(
+                    "device index {i} out of range (n = {})",
+                    sc.n()
+                )))
+            }
+        };
+        let mut out = sc.clone();
+        match self {
+            ScenarioDelta::Join(dev) => out.devices.push(dev.clone()),
+            ScenarioDelta::Leave(i) => {
+                check(*i)?;
+                if sc.n() == 1 {
+                    return Err(PlanError::InvalidRequest(
+                        "cannot remove the last device".into(),
+                    ));
+                }
+                out.devices.remove(*i);
+            }
+            ScenarioDelta::Deadline { device, deadline_s } => {
+                if !deadline_s.is_finite() || *deadline_s <= 0.0 {
+                    return Err(PlanError::InvalidRequest(format!(
+                        "deadline must be positive, got {deadline_s}"
+                    )));
+                }
+                match device {
+                    Some(i) => {
+                        check(*i)?;
+                        out.devices[*i].deadline_s = *deadline_s;
+                    }
+                    None => out.devices.iter_mut().for_each(|d| d.deadline_s = *deadline_s),
+                }
+            }
+            ScenarioDelta::Risk { device, risk } => {
+                if !risk.is_finite() || *risk <= 0.0 || *risk >= 1.0 {
+                    return Err(PlanError::InvalidRequest(format!(
+                        "risk must be in (0, 1), got {risk}"
+                    )));
+                }
+                match device {
+                    Some(i) => {
+                        check(*i)?;
+                        out.devices[*i].risk = *risk;
+                    }
+                    None => out.devices.iter_mut().for_each(|d| d.risk = *risk),
+                }
+            }
+            ScenarioDelta::Channel { device, uplink } => {
+                check(*device)?;
+                out.devices[*device].uplink = *uplink;
+            }
+            ScenarioDelta::TotalBandwidth(b) => {
+                if !b.is_finite() || *b <= 0.0 {
+                    return Err(PlanError::InvalidRequest(format!(
+                        "bandwidth must be positive, got {b}"
+                    )));
+                }
+                out.total_bandwidth_hz = *b;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelProfile;
+    use crate::util::rng::Rng;
+
+    fn scenario(seed: u64) -> Scenario {
+        let mut rng = Rng::new(seed);
+        Scenario::uniform(&ModelProfile::alexnet_paper(), 4, 10e6, 0.2, 0.05, &mut rng)
+    }
+
+    #[test]
+    fn fingerprint_is_deterministic_and_policy_sensitive() {
+        let sc = scenario(1);
+        let a = PlanRequest::new(sc.clone(), Policy::Robust).fingerprint();
+        let b = PlanRequest::new(sc.clone(), Policy::Robust).fingerprint();
+        let c = PlanRequest::new(sc.clone(), Policy::MeanOnly).fingerprint();
+        let d = PlanRequest::new(sc, Policy::Robust).with_init(vec![0; 4]).fingerprint();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn fingerprint_quantizes_sub_grid_jitter_but_sees_real_changes() {
+        let sc = scenario(2);
+        let base = PlanRequest::new(sc.clone(), Policy::Robust).fingerprint();
+        // sub-quantum jitter: identical key
+        let mut jig = sc.clone();
+        jig.total_bandwidth_hz += 1.0; // << 1 kHz quantum
+        jig.devices[0].deadline_s += 1e-6; // << 0.1 ms quantum
+        assert_eq!(base, PlanRequest::new(jig, Policy::Robust).fingerprint());
+        // real changes: different keys
+        let mut moved = sc.clone();
+        moved.devices[1].uplink = Uplink::from_distance(250.0);
+        assert_ne!(base, PlanRequest::new(moved, Policy::Robust).fingerprint());
+        let mut tighter = sc;
+        tighter.devices[2].deadline_s -= 0.01;
+        assert_ne!(base, PlanRequest::new(tighter, Policy::Robust).fingerprint());
+    }
+
+    #[test]
+    fn validate_rejects_oversized_exhaustive() {
+        // 12 AlexNet devices: 9^12 assignments — must be a clean error,
+        // not a panic (or an overflowing product) in the search itself.
+        let mut rng = Rng::new(9);
+        let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 12, 10e6, 0.2, 0.05, &mut rng);
+        assert!(matches!(
+            PlanRequest::new(sc.clone(), Policy::Exhaustive).validate(),
+            Err(PlanError::InvalidRequest(_))
+        ));
+        assert!(PlanRequest::new(sc, Policy::Robust).validate().is_ok());
+    }
+
+    #[test]
+    fn fingerprint_sees_noise_floor_changes() {
+        let sc = scenario(7);
+        let base = PlanRequest::new(sc.clone(), Policy::Robust).fingerprint();
+        let mut noisy = sc;
+        noisy.devices[0].uplink.n0 *= 10.0;
+        assert_ne!(base, PlanRequest::new(noisy, Policy::Robust).fingerprint());
+    }
+
+    #[test]
+    fn validate_rejects_bad_init() {
+        let sc = scenario(3);
+        let m = sc.devices[0].model.num_points();
+        assert!(PlanRequest::new(sc.clone(), Policy::Robust).validate().is_ok());
+        assert!(matches!(
+            PlanRequest::new(sc.clone(), Policy::Robust).with_init(vec![0; 3]).validate(),
+            Err(PlanError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            PlanRequest::new(sc, Policy::Robust).with_init(vec![m; 4]).validate(),
+            Err(PlanError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn deltas_apply_and_validate() {
+        let sc = scenario(4);
+        let joined = ScenarioDelta::Join(sc.devices[0].clone()).apply(&sc).unwrap();
+        assert_eq!(joined.n(), 5);
+        let left = ScenarioDelta::Leave(2).apply(&sc).unwrap();
+        assert_eq!(left.n(), 3);
+        assert!(ScenarioDelta::Leave(9).apply(&sc).is_err());
+        let slow = ScenarioDelta::Deadline { device: None, deadline_s: 0.3 }.apply(&sc).unwrap();
+        assert!(slow.devices.iter().all(|d| d.deadline_s == 0.3));
+        assert!(ScenarioDelta::Deadline { device: None, deadline_s: -1.0 }.apply(&sc).is_err());
+        assert!(ScenarioDelta::Risk { device: Some(1), risk: 0.08 }.apply(&sc).is_ok());
+        assert!(ScenarioDelta::Risk { device: None, risk: 1.5 }.apply(&sc).is_err());
+        let wider = ScenarioDelta::TotalBandwidth(20e6).apply(&sc).unwrap();
+        assert_eq!(wider.total_bandwidth_hz, 20e6);
+    }
+
+    #[test]
+    fn policy_parse_and_names_roundtrip() {
+        for (s, name) in [
+            ("robust", "robust"),
+            ("worst", "worst-case"),
+            ("mean", "mean-only"),
+            ("exhaustive", "exhaustive"),
+            ("multistart", "multistart"),
+        ] {
+            assert_eq!(Policy::parse(s).unwrap().name(), name);
+        }
+        assert!(Policy::parse("bogus").is_none());
+    }
+}

@@ -11,9 +11,10 @@ pub mod table;
 
 use std::path::Path;
 
+use crate::engine::{PlanRequest, Planner, PlannerBuilder, Policy as PlanPolicy};
 use crate::models::manifest::{Manifest, Role};
 use crate::models::ModelProfile;
-use crate::optim::{alternating, baselines, AlternatingOptions, Scenario};
+use crate::optim::{baselines, AlternatingOptions, Scenario};
 use crate::profile::{self, Dist, SyntheticHardware};
 use crate::sim::{self, SimOptions};
 use crate::util::rng::Rng;
@@ -60,6 +61,13 @@ pub fn default_setting(model: &str) -> (f64, f64, f64) {
 /// `threads` to 1).
 fn paper_opts() -> AlternatingOptions {
     AlternatingOptions { warm_start: false, ..Default::default() }
+}
+
+/// Engine facade configured for the paper protocol.  Each figure holds
+/// its own planner; scenarios inside one figure differ (other ε / D /
+/// seed), so the plan cache only coalesces genuinely identical requests.
+fn paper_planner() -> Planner {
+    PlannerBuilder::new().alternating(paper_opts()).build()
 }
 
 // ---------------------------------------------------------------------------
@@ -314,6 +322,7 @@ pub fn fig9(effort: Effort) -> Vec<Table> {
         &["N", "alexnet_iters", "resnet152_iters"],
     )
     .with_notes("Paper: terminates in a few iterations, nearly flat in N.");
+    let mut planner = paper_planner();
     for &n in ns {
         let mut row = vec![n as f64];
         for model in both_models() {
@@ -322,8 +331,9 @@ pub fn fig9(effort: Effort) -> Vec<Table> {
             let b = b * (n as f64 / 12.0).max(1.0);
             let mut rng = Rng::new(0xF19 + n as u64);
             let sc = Scenario::uniform(&model, n, b, d, eps, &mut rng);
-            let it = alternating::solve(&sc, &paper_opts(), None)
-                .map(|r| r.avg_pccp_iters)
+            let it = planner
+                .plan(&PlanRequest::new(sc, PlanPolicy::Robust))
+                .map(|o| o.diagnostics.avg_pccp_iters)
                 .unwrap_or(f64::NAN);
             row.push(it);
         }
@@ -348,11 +358,12 @@ pub fn fig10() -> Vec<Table> {
             &["outer_iter", "init_a", "init_b", "init_c"],
         )
         .with_notes("Paper: fast early convergence, (nearly) the same final objective.");
+        let mut planner = paper_planner();
         let mut trajs = Vec::new();
         for &p in &inits {
             let init = vec![p.min(model.num_points() - 1); sc.n()];
-            let r = alternating::solve(&sc, &paper_opts(), Some(init));
-            trajs.push(r.map(|r| r.trajectory).unwrap_or_default());
+            let r = planner.plan(&PlanRequest::new(sc.clone(), PlanPolicy::Robust).with_init(init));
+            trajs.push(r.map(|o| o.diagnostics.trajectory).unwrap_or_default());
         }
         let len = trajs.iter().map(Vec::len).max().unwrap_or(0);
         for i in 0..len {
@@ -394,18 +405,15 @@ pub fn fig11(effort: Effort) -> Vec<Table> {
                 let mut rng = Rng::new(0xF11 + n as u64 + rep as u64 * 977);
                 let sc = Scenario::uniform(&model, n, b, d, eps, &mut rng);
                 // Paper protocol: sequential, cold-started Algorithm 2
-                // (the warm-started parallel wall-clock is tracked
-                // separately by benches/planner_scaling.rs).
-                let opts = AlternatingOptions {
-                    threads: 1,
-                    pccp: crate::optim::pccp::PccpOptions {
-                        threads: 1,
-                        ..Default::default()
-                    },
-                    ..paper_opts()
-                };
+                // with the plan cache off (the warm-started parallel
+                // wall-clock is tracked by benches/planner_scaling.rs).
+                let mut planner = PlannerBuilder::new()
+                    .alternating(paper_opts())
+                    .threads(1)
+                    .cache_capacity(0)
+                    .build();
                 let t0 = std::time::Instant::now();
-                let _ = alternating::solve(&sc, &opts, None);
+                let _ = planner.plan(&PlanRequest::new(sc, PlanPolicy::Robust));
                 acc += t0.elapsed().as_secs_f64();
             }
             row.push(acc / reps as f64);
@@ -443,14 +451,22 @@ pub fn fig12(effort: Effort) -> Vec<Table> {
             "optimal = exhaustive (N=2) / multi-start enumeration (documented substitution).\n\
              Paper: proposed tracks optimal closely; energy grows with N.",
         );
+        let mut planner = paper_planner();
         for &n in ns {
             let mut rng = Rng::new(0xF12 + n as u64);
             let sc = Scenario::uniform(&model, n, b0, d, eps, &mut rng);
-            let prop = alternating::solve_multistart(&sc, &paper_opts(), &[])
-                .map(|r| r.energy)
+            let prop = planner
+                .plan(&PlanRequest::new(
+                    sc.clone(),
+                    PlanPolicy::Multistart { extra_starts: Vec::new() },
+                ))
+                .map(|o| o.energy)
                 .unwrap_or(f64::NAN);
             let opt = if n == 2 {
-                baselines::exhaustive_optimal(&sc).map(|r| r.energy).unwrap_or(f64::NAN)
+                planner
+                    .plan(&PlanRequest::new(sc.clone(), PlanPolicy::Exhaustive))
+                    .map(|o| o.energy)
+                    .unwrap_or(f64::NAN)
             } else {
                 // best over both search families: the enumeration
                 // multi-start is itself a heuristic at N>2, so the best
@@ -481,13 +497,18 @@ pub fn fig_energy_vs_risk(model: &ModelProfile) -> Table {
          AlexNet: robust wins at all eps; ResNet152: worst-case wins at small eps\n\
          (conservative eq-11/12 approximations), robust overtakes as eps grows.",
     );
+    let mut planner = paper_planner();
     for eps in [0.02, 0.04, 0.06, 0.08] {
         let mut rng = Rng::new(0xF13A);
         let sc = Scenario::uniform(model, n, b, d, eps, &mut rng);
-        let rob = alternating::solve(&sc, &paper_opts(), None)
-            .map(|r| r.energy)
+        let rob = planner
+            .plan(&PlanRequest::new(sc.clone(), PlanPolicy::Robust))
+            .map(|o| o.energy)
             .unwrap_or(f64::NAN);
-        let wc = baselines::worst_case(&sc).map(|r| r.energy).unwrap_or(f64::NAN);
+        let wc = planner
+            .plan(&PlanRequest::new(sc, PlanPolicy::WorstCase))
+            .map(|o| o.energy)
+            .unwrap_or(f64::NAN);
         t.push_nums(&[eps, rob, wc, (1.0 - rob / wc) * 100.0]);
     }
     t
@@ -509,13 +530,18 @@ pub fn fig_energy_vs_deadline(model: &ModelProfile) -> Table {
         &["D_ms", "robust_J", "worst_case_J", "saving_pct"],
     )
     .with_notes("Paper: energy decreases monotonically as the deadline loosens.");
+    let mut planner = paper_planner();
     for d in deadlines {
         let mut rng = Rng::new(0xF13B);
         let sc = Scenario::uniform(model, n, b, d, eps, &mut rng);
-        let rob = alternating::solve(&sc, &paper_opts(), None)
-            .map(|r| r.energy)
+        let rob = planner
+            .plan(&PlanRequest::new(sc.clone(), PlanPolicy::Robust))
+            .map(|o| o.energy)
             .unwrap_or(f64::NAN);
-        let wc = baselines::worst_case(&sc).map(|r| r.energy).unwrap_or(f64::NAN);
+        let wc = planner
+            .plan(&PlanRequest::new(sc, PlanPolicy::WorstCase))
+            .map(|o| o.energy)
+            .unwrap_or(f64::NAN);
         t.push_nums(&[d * 1e3, rob, wc, (1.0 - rob / wc) * 100.0]);
     }
     t
@@ -541,29 +567,27 @@ pub fn fig_violation(model: &ModelProfile, effort: Effort) -> Table {
          column shows the unprotected policy for contrast.",
     );
     let trials = effort.trials(10_000);
+    let mut planner = paper_planner();
+    let mut violation_of = |sc: &Scenario, policy: PlanPolicy| -> f64 {
+        planner
+            .plan(&PlanRequest::new(sc.clone(), policy))
+            .map(|o| {
+                sim::evaluate(sc, &o.plan, &SimOptions { trials, ..Default::default() })
+                    .worst_violation
+            })
+            .unwrap_or(f64::NAN)
+    };
     for eps in [0.02, 0.04, 0.06, 0.08] {
         let mut row = vec![eps];
         for (i, &d) in deadlines.iter().enumerate() {
             let mut rng = Rng::new(0xF13C + i as u64);
             let sc = Scenario::uniform(model, n, b, d, eps, &mut rng);
-            let v = alternating::solve(&sc, &paper_opts(), None)
-                .map(|r| {
-                    sim::evaluate(&sc, &r.plan, &SimOptions { trials, ..Default::default() })
-                        .worst_violation
-                })
-                .unwrap_or(f64::NAN);
-            row.push(v);
+            row.push(violation_of(&sc, PlanPolicy::Robust));
         }
         // mean-only contrast at the middle deadline
         let mut rng = Rng::new(0xF13C + 1);
         let sc = Scenario::uniform(model, n, b, deadlines[1], eps, &mut rng);
-        let v = baselines::mean_only(&sc)
-            .map(|r| {
-                sim::evaluate(&sc, &r.plan, &SimOptions { trials, ..Default::default() })
-                    .worst_violation
-            })
-            .unwrap_or(f64::NAN);
-        row.push(v);
+        row.push(violation_of(&sc, PlanPolicy::MeanOnly));
         t.push_nums(&row);
     }
     t

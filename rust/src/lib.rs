@@ -15,13 +15,42 @@
 //!   here through the PJRT CPU client (`runtime`); python is never on the
 //!   request path.
 //!
-//! Start at [`optim::alternating`] (Algorithm 2) for the planner, or
-//! [`coordinator`] for the serving runtime.  `DESIGN.md` maps every paper
-//! table/figure to a module; `figures` regenerates them.
+//! ## Module map
+//!
+//! **Start at [`engine`]** — the planning facade every caller goes
+//! through: `PlannerBuilder` → `Planner::plan` dispatches all policies
+//! (robust / worst-case / mean-only / exhaustive / multistart) through
+//! one entrypoint with plan caching, and `Planner::replan` handles
+//! incremental scenario changes (device join/leave, channel/deadline
+//! moves) by warm-starting from the cached plan.
+//!
+//! The layers underneath:
+//!
+//! * [`optim`] — the paper's algorithms: [`optim::alternating`]
+//!   (Algorithm 2), [`optim::pccp`] (Algorithm 1), [`optim::resource`]
+//!   (problem (23)), [`optim::ecr`] (Theorem 1), [`optim::baselines`]
+//!   (§VI benchmarks).  The old free-function entry points are
+//!   `#[deprecated]` shims over the engine for one release.
+//! * [`solver`] / [`linalg`] — log-barrier interior point over
+//!   `ConvexProgram`s with reusable `NewtonWorkspace`s, dense Cholesky,
+//!   Levenberg–Marquardt.
+//! * [`models`] / [`profile`] / [`channel`] / [`energy`] — the scenario
+//!   substrate: DNN/hardware profiles, synthetic profiling, FDMA uplink,
+//!   DVFS energy.
+//! * [`sim`] — Monte-Carlo validation of the chance constraint.
+//! * [`coordinator`] / [`runtime`] — the serving runtime executing plans
+//!   on AOT-compiled PJRT artifacts.
+//! * [`figures`] — regenerates every paper table/figure; [`util`] holds
+//!   the offline substrate (PRNG, stats, JSON, bench harness, scoped
+//!   thread fan-out).
+//!
+//! `DESIGN.md` maps every paper table/figure to a module; `figures`
+//! regenerates them.
 
 pub mod channel;
 pub mod coordinator;
 pub mod energy;
+pub mod engine;
 pub mod figures;
 pub mod linalg;
 pub mod models;

@@ -2,11 +2,13 @@
 //!
 //! Subcommands (hand-rolled parsing; no clap offline):
 //!
-//! * `ripra plan    --model M --n N --bandwidth HZ --deadline S --risk E [--policy P]`
+//! * `ripra plan    ...` — flags derived from [`PlanRequest::CLI_FLAGS`]
 //! * `ripra figure  <fig13a|...|all> [--out DIR] [--quick]`
 //! * `ripra serve   --model M --n N [--requests K] [--time-scale X]`
 //! * `ripra profile --model M [--trials T]`
 //! * `ripra selftest`
+//!
+//! All planning routes through the [`ripra::engine`] facade.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -15,11 +17,13 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use ripra::coordinator::{self, ServeOptions};
+use ripra::engine::{PlanRequest, Planner, PlannerBuilder, Policy};
 use ripra::figures::{self, Effort};
 use ripra::models::manifest::Manifest;
 use ripra::models::ModelProfile;
-use ripra::optim::{alternating, baselines, AlternatingOptions, Policy, Scenario};
+use ripra::optim::Scenario;
 use ripra::sim::{self, SimOptions};
+use ripra::util::json::Json;
 use ripra::util::rng::Rng;
 
 fn main() {
@@ -34,28 +38,68 @@ fn main() {
     std::process::exit(code);
 }
 
+/// The `plan` usage section (flag list + per-flag help) is generated
+/// from [`PlanRequest::CLI_FLAGS`] so the CLI surface cannot drift from
+/// the engine API.
 fn usage() -> String {
-    "usage: ripra <plan|figure|serve|profile|selftest> [options]\n\
-     \n\
-     plan     --model alexnet|resnet152 --n N [--bandwidth HZ] [--deadline S]\n\
-     \x20        [--risk E] [--policy robust|worst|mean] [--seed S] [--trials T]\n\
-     figure   <name|all> [--out DIR] [--quick]\n\
-     serve    --model alexnet|resnet152 [--n N] [--requests K] [--time-scale X]\n\
-     \x20        [--deadline S] [--risk E] [--bandwidth HZ] [--seed S]\n\
-     profile  [--model M] [--trials T]\n\
-     selftest"
-        .into()
+    let mut plan_line = String::from("plan    ");
+    let mut width = plan_line.len();
+    for f in PlanRequest::CLI_FLAGS {
+        let piece = match f.value {
+            Some(v) => format!(" [--{} {}]", f.name, v),
+            None => format!(" [--{}]", f.name),
+        };
+        if width + piece.len() > 76 {
+            plan_line.push_str("\n\x20       ");
+            width = 8;
+        }
+        width += piece.len();
+        plan_line.push_str(&piece);
+    }
+    let mut plan_help = String::new();
+    for f in PlanRequest::CLI_FLAGS {
+        let left = match f.value {
+            Some(v) => format!("--{} {}", f.name, v),
+            None => format!("--{}", f.name),
+        };
+        plan_help.push_str(&format!("\x20          {:<42} {}\n", left, f.help));
+    }
+    format!(
+        "usage: ripra <plan|figure|serve|profile|selftest> [options]\n\
+         \n\
+         {plan_line}\n\
+         {plan_help}\
+         figure   <name|all> [--out DIR] [--quick]\n\
+         serve    --model alexnet|resnet152 [--n N] [--requests K] [--time-scale X]\n\
+         \x20        [--deadline S] [--risk E] [--bandwidth HZ] [--seed S]\n\
+         profile  [--model M] [--trials T]\n\
+         selftest"
+    )
 }
 
-/// `--key value` flags into a map; returns (positional, flags).
-fn parse_flags(args: &[String]) -> Result<(Vec<String>, HashMap<String, String>)> {
+/// Boolean flags (no value) accepted by the `plan` subcommand, derived
+/// from the same table as the usage text.
+fn plan_bool_flags() -> Vec<&'static str> {
+    PlanRequest::CLI_FLAGS.iter().filter(|f| f.value.is_none()).map(|f| f.name).collect()
+}
+
+/// `--key value` / `--key=value` flags into a map; flags listed in
+/// `bool_flags` take no value and parse to `"true"`.  Returns
+/// (positional, flags).
+fn parse_flags(
+    args: &[String],
+    bool_flags: &[&str],
+) -> Result<(Vec<String>, HashMap<String, String>)> {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
     let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
         if let Some(key) = a.strip_prefix("--") {
-            // boolean flags
-            if key == "quick" {
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+                continue;
+            }
+            if bool_flags.contains(&key) {
                 flags.insert(key.to_string(), "true".into());
                 continue;
             }
@@ -100,6 +144,20 @@ fn scenario_of(flags: &HashMap<String, String>) -> Result<Scenario> {
     Ok(Scenario::uniform(&model, n, b, d, eps, &mut rng))
 }
 
+/// Assemble a [`PlanRequest`] from parsed `plan` flags.
+fn plan_request_of(flags: &HashMap<String, String>) -> Result<PlanRequest> {
+    let scenario = scenario_of(flags)?;
+    let spelling = flags.get("policy").map(String::as_str).unwrap_or("robust");
+    let policy = Policy::parse(spelling).ok_or_else(|| {
+        anyhow!("unknown policy {spelling:?} (robust | worst | mean | exhaustive | multistart)")
+    })?;
+    let mut req = PlanRequest::new(scenario, policy);
+    if flags.contains_key("no-cache") {
+        req = req.without_cache();
+    }
+    Ok(req)
+}
+
 fn dispatch(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else { bail!("{}", usage()) };
     let rest = &args[1..];
@@ -118,10 +176,34 @@ fn dispatch(args: &[String]) -> Result<()> {
 }
 
 fn cmd_plan(args: &[String]) -> Result<()> {
-    let (_, flags) = parse_flags(args)?;
-    let sc = scenario_of(&flags)?;
-    let policy = flags.get("policy").map(String::as_str).unwrap_or("robust");
+    let (_, flags) = parse_flags(args, &plan_bool_flags())?;
+    let req = plan_request_of(&flags)?;
     let trials = flag_usize(&flags, "trials", 10_000)?;
+    let as_json = flags.contains_key("json");
+    let sc = req.scenario.clone();
+
+    let mut planner: Planner = PlannerBuilder::new().build();
+    let out = planner.plan(&req).map_err(|e| anyhow!(e.to_string()))?;
+
+    let rep = (trials > 0)
+        .then(|| sim::evaluate(&sc, &out.plan, &SimOptions { trials, ..Default::default() }));
+
+    if as_json {
+        let mut j = out.to_json();
+        if let (Json::Obj(pairs), Some(rep)) = (&mut j, &rep) {
+            pairs.push((
+                "monte_carlo".into(),
+                Json::Obj(vec![
+                    ("trials".into(), Json::Num(trials as f64)),
+                    ("worst_violation".into(), Json::Num(rep.worst_violation)),
+                    ("mean_violation".into(), Json::Num(rep.mean_violation)),
+                    ("mean_energy_j".into(), Json::Num(rep.mean_energy)),
+                ]),
+            ));
+        }
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
 
     println!(
         "scenario: {} devices, model={}, B={:.1} MHz, D={} ms, eps={}",
@@ -131,57 +213,48 @@ fn cmd_plan(args: &[String]) -> Result<()> {
         sc.devices[0].deadline_s * 1e3,
         sc.devices[0].risk
     );
+    let d = &out.diagnostics;
+    println!(
+        "{}: {} outer iters, {:.2} avg PCCP iters, {} Newton steps, {:.1} ms{}",
+        out.policy.name(),
+        d.outer_iters,
+        d.avg_pccp_iters,
+        d.newton_iters,
+        d.wall_time.as_secs_f64() * 1e3,
+        if d.cache_hit { " (cache hit)" } else { "" }
+    );
 
-    let (plan, energy) = match policy {
-        "robust" => {
-            let r = alternating::solve(&sc, &AlternatingOptions::default(), None)
-                .map_err(|e| anyhow!(e.to_string()))?;
-            println!(
-                "Algorithm 2: {} outer iters, {:.2} avg PCCP iters, {} Newton steps",
-                r.outer_iters, r.avg_pccp_iters, r.newton_iters
-            );
-            (r.plan, r.energy)
-        }
-        "worst" => {
-            let r = baselines::worst_case(&sc).map_err(|e| anyhow!(e.to_string()))?;
-            (r.plan, r.energy)
-        }
-        "mean" => {
-            let r = baselines::mean_only(&sc).map_err(|e| anyhow!(e.to_string()))?;
-            (r.plan, r.energy)
-        }
-        other => bail!("unknown policy {other:?} (robust | worst | mean)"),
-    };
-
-    println!("expected total energy: {energy:.4} J");
+    println!("expected total energy: {:.4} J", out.energy);
     println!("  dev  m   b_MHz   f_GHz   margin_ms");
+    let mpol = out.policy.margin_policy();
     for i in 0..sc.n() {
-        let d = &sc.devices[i];
+        let dev = &sc.devices[i];
         println!(
             "  {:>3} {:>2}  {:>6.3}  {:>6.3}  {:>9.2}",
             i,
-            plan.partition[i],
-            plan.bandwidth_hz[i] / 1e6,
-            plan.freq_ghz[i],
-            d.deadline_margin(
-                plan.partition[i],
-                plan.freq_ghz[i],
-                plan.bandwidth_hz[i],
-                Policy::Robust
+            out.plan.partition[i],
+            out.plan.bandwidth_hz[i] / 1e6,
+            out.plan.freq_ghz[i],
+            dev.deadline_margin(
+                out.plan.partition[i],
+                out.plan.freq_ghz[i],
+                out.plan.bandwidth_hz[i],
+                mpol
             ) * 1e3
         );
     }
 
-    let rep = sim::evaluate(&sc, &plan, &SimOptions { trials, ..Default::default() });
-    println!(
-        "Monte-Carlo ({} trials): worst violation {:.4} (risk {}), mean energy {:.4} J",
-        trials, rep.worst_violation, sc.devices[0].risk, rep.mean_energy
-    );
+    if let Some(rep) = rep {
+        println!(
+            "Monte-Carlo ({} trials): worst violation {:.4} (risk {}), mean energy {:.4} J",
+            trials, rep.worst_violation, sc.devices[0].risk, rep.mean_energy
+        );
+    }
     Ok(())
 }
 
 fn cmd_figure(args: &[String]) -> Result<()> {
-    let (pos, flags) = parse_flags(args)?;
+    let (pos, flags) = parse_flags(args, &["quick"])?;
     let name = pos.first().map(String::as_str).unwrap_or("all");
     let out = flags.get("out").map(PathBuf::from);
     let effort = if flags.contains_key("quick") { Effort::Quick } else { Effort::Full };
@@ -190,14 +263,11 @@ fn cmd_figure(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let (_, flags) = parse_flags(args)?;
+    let (_, flags) = parse_flags(args, &[])?;
     let mut f2 = flags.clone();
     f2.entry("n".into()).or_insert_with(|| "6".into());
     let sc = scenario_of(&f2)?;
     let model = sc.devices[0].model.name.clone();
-    let r = alternating::solve(&sc, &AlternatingOptions::default(), None)
-        .map_err(|e| anyhow!(e.to_string()))?;
-    println!("plan: partition={:?}, energy {:.4} J", r.plan.partition, r.energy);
 
     let opts = ServeOptions {
         model,
@@ -208,7 +278,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         max_batch: 8,
         seed: flag_usize(&flags, "seed", 7)? as u64,
     };
-    let rep = coordinator::serve(Manifest::default_dir(), &sc, &r.plan, &opts)?;
+    let mut planner = PlannerBuilder::new().build();
+    let (out, rep) =
+        coordinator::plan_and_serve(Manifest::default_dir(), &sc, &mut planner, &opts)?;
+    println!("plan: partition={:?}, energy {:.4} J", out.plan.partition, out.energy);
     println!(
         "served {} requests in {:.2}s  ({:.1} req/s)",
         rep.completed,
@@ -233,7 +306,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 }
 
 fn cmd_profile(args: &[String]) -> Result<()> {
-    let (_, flags) = parse_flags(args)?;
+    let (_, flags) = parse_flags(args, &[])?;
     let model = model_of(&flags)?;
     let trials = flag_usize(&flags, "trials", 500)?;
     let hw =

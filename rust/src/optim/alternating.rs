@@ -118,17 +118,28 @@ pub fn heuristic_partition(sc: &Scenario) -> Vec<usize> {
 
 /// Run Algorithm 2.  `init_partition` overrides the heuristic start
 /// (Fig. 10 sweeps it).
+#[deprecated(note = "construct an engine::Planner and call plan() with engine::Policy::Robust")]
 pub fn solve(
     sc: &Scenario,
     opts: &AlternatingOptions,
     init_partition: Option<Vec<usize>>,
 ) -> Result<RobustPlan, PlanError> {
+    solve_core(sc, opts, init_partition, &mut crate::solver::NewtonWorkspace::new())
+}
+
+/// Algorithm 2 with a caller-owned Newton workspace for every resource
+/// solve the alternation itself issues (the polish sweep's workers hold
+/// their own).  The engine facade threads its long-lived workspace
+/// through here; results are bit-identical at any workspace history.
+pub(crate) fn solve_core(
+    sc: &Scenario,
+    opts: &AlternatingOptions,
+    init_partition: Option<Vec<usize>>,
+    res_ws: &mut crate::solver::NewtonWorkspace,
+) -> Result<RobustPlan, PlanError> {
     let mut partition = init_partition.unwrap_or_else(|| heuristic_partition(sc));
     assert_eq!(partition.len(), sc.n());
 
-    // One Newton workspace for every resource solve the alternation
-    // itself issues (the polish sweep's workers hold their own).
-    let mut res_ws = crate::solver::NewtonWorkspace::new();
     let mut resource_solve = |x: &[usize],
                               warm: Option<&resource::ResourceSolution>|
      -> Result<resource::ResourceSolution, ResourceError> {
@@ -140,7 +151,7 @@ pub fn solve(
                 x,
                 Policy::Robust,
                 if opts.warm_start { warm } else { None },
-                &mut res_ws,
+                &mut *res_ws,
             )
         }
     };
@@ -325,10 +336,21 @@ pub fn solve(
 /// individual runs can stop at local optima; a handful of starts recovers
 /// the near-optimal behaviour the paper reports in Fig. 12 while staying
 /// polynomial (starts × Algorithm-2 cost).
+#[deprecated(note = "construct an engine::Planner and call plan() with engine::Policy::Multistart")]
 pub fn solve_multistart(
     sc: &Scenario,
     opts: &AlternatingOptions,
     extra_starts: &[Vec<usize>],
+) -> Result<RobustPlan, PlanError> {
+    solve_multistart_core(sc, opts, extra_starts, &mut crate::solver::NewtonWorkspace::new())
+}
+
+/// [`solve_multistart`]'s implementation with a caller-owned workspace.
+pub(crate) fn solve_multistart_core(
+    sc: &Scenario,
+    opts: &AlternatingOptions,
+    extra_starts: &[Vec<usize>],
+    res_ws: &mut crate::solver::NewtonWorkspace,
 ) -> Result<RobustPlan, PlanError> {
     let mut inits: Vec<Option<Vec<usize>>> = vec![
         None,                       // heuristic (fastest margin-adjusted time)
@@ -357,7 +379,7 @@ pub fn solve_multistart(
     let mut best: Option<RobustPlan> = None;
     let mut last_err: Option<PlanError> = None;
     for init in inits {
-        match solve(sc, opts, init) {
+        match solve_core(sc, opts, init, res_ws) {
             Ok(p) => {
                 if best.as_ref().map_or(true, |b| p.energy < b.energy) {
                     best = Some(p);
@@ -371,6 +393,8 @@ pub fn solve_multistart(
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the legacy entry points stay covered until removal
+
     use super::*;
     use crate::models::ModelProfile;
     use crate::util::rng::Rng;

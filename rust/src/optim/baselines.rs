@@ -18,6 +18,7 @@
 
 use super::resource::{self, ResourceError};
 use super::types::{Plan, Policy, Scenario};
+use crate::solver;
 use crate::util::rng::Rng;
 
 /// Outcome of a baseline policy.
@@ -26,6 +27,9 @@ pub struct BaselinePlan {
     pub plan: Plan,
     pub energy: f64,
     pub outer_iters: usize,
+    /// Total Newton iterations across every resource solve the policy
+    /// issued (the engine facade reports this in its diagnostics).
+    pub newton_iters: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -39,8 +43,10 @@ impl std::fmt::Display for BaselineError {
 
 impl std::error::Error for BaselineError {}
 
-/// Per-device optimal point at fixed resources under `policy`.
-fn best_point(
+/// Per-device optimal point at fixed resources under `policy` (also the
+/// engine's replan-refinement step — shared so the accept logic cannot
+/// drift between the two).
+pub(crate) fn best_point(
     sc: &Scenario,
     i: usize,
     f_ghz: f64,
@@ -84,14 +90,31 @@ pub fn alternate_enumeration(
     init: Option<Vec<usize>>,
     max_outer: usize,
 ) -> Result<BaselinePlan, BaselineError> {
+    alternate_enumeration_core(sc, policy, init, max_outer, &mut solver::NewtonWorkspace::new())
+}
+
+/// [`alternate_enumeration`] with a caller-owned Newton workspace (the
+/// engine facade threads its long-lived workspace through; every
+/// resource solve stays cold-started so iterates match the legacy path
+/// bit-for-bit).
+pub(crate) fn alternate_enumeration_core(
+    sc: &Scenario,
+    policy: Policy,
+    init: Option<Vec<usize>>,
+    max_outer: usize,
+    ws: &mut solver::NewtonWorkspace,
+) -> Result<BaselinePlan, BaselineError> {
     let mut partition = init.unwrap_or_else(|| start_partition(sc, policy));
-    let mut res = match resource::solve(sc, &partition, policy) {
+    let mut newton = 0usize;
+    let mut res = match resource::solve_warm_with(sc, &partition, policy, None, ws) {
         Ok(r) => r,
         Err(_) => {
             partition = start_partition(sc, policy);
-            resource::solve(sc, &partition, policy).map_err(|e| BaselineError(e.to_string()))?
+            resource::solve_warm_with(sc, &partition, policy, None, ws)
+                .map_err(|e| BaselineError(e.to_string()))?
         }
     };
+    newton += res.newton_iters;
     let mut outer = 0;
     for k in 0..max_outer {
         outer = k + 1;
@@ -104,12 +127,17 @@ pub fn alternate_enumeration(
         if new_partition == partition {
             break;
         }
-        match resource::solve(sc, &new_partition, policy) {
+        match resource::solve_warm_with(sc, &new_partition, policy, None, ws) {
             Ok(r) if r.energy <= res.energy * (1.0 + 1e-9) => {
+                newton += r.newton_iters;
                 partition = new_partition;
                 res = r;
             }
-            _ => break,
+            Ok(r) => {
+                newton += r.newton_iters;
+                break;
+            }
+            Err(_) => break,
         }
     }
     Ok(BaselinePlan {
@@ -120,26 +148,39 @@ pub fn alternate_enumeration(
         },
         energy: res.energy,
         outer_iters: outer,
+        newton_iters: newton,
     })
 }
 
 /// Worst-case policy (§VI-A benchmark 1).
+#[deprecated(note = "construct an engine::Planner and call plan() with engine::Policy::WorstCase")]
 pub fn worst_case(sc: &Scenario) -> Result<BaselinePlan, BaselineError> {
     alternate_enumeration(sc, Policy::WorstCase, None, 20)
 }
 
 /// Mean-only policy (no uncertainty margin).
+#[deprecated(note = "construct an engine::Planner and call plan() with engine::Policy::MeanOnly")]
 pub fn mean_only(sc: &Scenario) -> Result<BaselinePlan, BaselineError> {
     alternate_enumeration(sc, Policy::MeanOnly, None, 20)
 }
 
 /// True exhaustive optimal: every xᴺ assignment with a resource solve.
 /// O((M+1)ᴺ·IPT) — callable only for tiny N (tests / Fig. 12 left edge).
+#[deprecated(note = "construct an engine::Planner and call plan() with engine::Policy::Exhaustive")]
 pub fn exhaustive_optimal(sc: &Scenario) -> Result<BaselinePlan, BaselineError> {
+    exhaustive_core(sc, &mut solver::NewtonWorkspace::new())
+}
+
+/// [`exhaustive_optimal`]'s implementation with a caller-owned workspace.
+pub(crate) fn exhaustive_core(
+    sc: &Scenario,
+    ws: &mut solver::NewtonWorkspace,
+) -> Result<BaselinePlan, BaselineError> {
     let mp1: Vec<usize> = sc.devices.iter().map(|d| d.model.num_points()).collect();
     let total: usize = mp1.iter().product();
     assert!(total <= 1_000_000, "exhaustive search over {total} assignments refused");
     let mut best: Option<BaselinePlan> = None;
+    let mut newton = 0usize;
     let mut assignment = vec![0usize; sc.n()];
     for idx in 0..total {
         let mut rem = idx;
@@ -147,7 +188,8 @@ pub fn exhaustive_optimal(sc: &Scenario) -> Result<BaselinePlan, BaselineError> 
             assignment[i] = rem % mp1[i];
             rem /= mp1[i];
         }
-        if let Ok(r) = resource::solve(sc, &assignment, Policy::Robust) {
+        if let Ok(r) = resource::solve_warm_with(sc, &assignment, Policy::Robust, None, ws) {
+            newton += r.newton_iters;
             if best.as_ref().map_or(true, |b| r.energy < b.energy) {
                 best = Some(BaselinePlan {
                     plan: Plan {
@@ -157,11 +199,17 @@ pub fn exhaustive_optimal(sc: &Scenario) -> Result<BaselinePlan, BaselineError> 
                     },
                     energy: r.energy,
                     outer_iters: 1,
+                    newton_iters: 0,
                 });
             }
         }
     }
-    best.ok_or_else(|| BaselineError("no feasible assignment".into()))
+    best.map(|mut b| {
+        // the search's total interior-point work, not just the winner's
+        b.newton_iters = newton;
+        b
+    })
+    .ok_or_else(|| BaselineError("infeasible: no assignment satisfies the deadlines".into()))
 }
 
 /// Practical "optimal" at larger N: multi-start alternation with exact
@@ -213,6 +261,8 @@ pub fn policy_feasible(sc: &Scenario, policy: Policy) -> ResourceFeasibility {
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the legacy entry points stay covered until removal
+
     use super::*;
     use crate::models::ModelProfile;
     use crate::optim::alternating::{self, AlternatingOptions};

@@ -6,6 +6,10 @@
 //! interior-point for resources ([`resource`]) and PCCP for partitioning
 //! ([`pccp`]) → alternation ([`alternating`], Algorithm 2).  Benchmark
 //! policies live in [`baselines`].
+//!
+//! The preferred entry point to this pipeline is the [`crate::engine`]
+//! facade (`PlannerBuilder` → `Planner::plan`); the free functions here
+//! remain as deprecated shims for one release.
 
 pub mod alternating;
 pub mod baselines;
@@ -14,5 +18,6 @@ pub mod pccp;
 pub mod resource;
 pub mod types;
 
+#[allow(deprecated)] // legacy re-export kept for one release
 pub use alternating::{solve as plan, AlternatingOptions, RobustPlan};
 pub use types::{Device, Plan, Policy, Scenario};

@@ -100,20 +100,23 @@ pub fn evaluate(sc: &Scenario, plan: &Plan, opts: &SimOptions) -> SimReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{PlanOutcome, PlanRequest, Planner, Policy};
     use crate::models::ModelProfile;
-    use crate::optim::{alternating, baselines, AlternatingOptions};
 
     fn scenario(seed: u64) -> Scenario {
         let mut rng = Rng::new(seed);
         Scenario::uniform(&ModelProfile::alexnet_paper(), 6, 10e6, 0.20, 0.05, &mut rng)
     }
 
+    fn plan_with(sc: &Scenario, policy: Policy) -> PlanOutcome {
+        Planner::default().plan(&PlanRequest::new(sc.clone(), policy)).unwrap()
+    }
+
     #[test]
     fn robust_plan_respects_risk_level_all_distributions() {
         // The core soundness claim (Fig. 13c): empirical violation ≤ ε.
         let sc = scenario(21);
-        let plan =
-            alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap().plan;
+        let plan = plan_with(&sc, Policy::Robust).plan;
         for dist in [Dist::Lognormal, Dist::Gamma, Dist::ShiftedExp] {
             let r = evaluate(&sc, &plan, &SimOptions { trials: 8000, dist, seed: 7 });
             assert!(
@@ -128,9 +131,8 @@ mod tests {
     #[test]
     fn mean_only_plan_violates_more_than_robust() {
         let sc = scenario(22);
-        let robust =
-            alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap().plan;
-        let mean = baselines::mean_only(&sc).unwrap().plan;
+        let robust = plan_with(&sc, Policy::Robust).plan;
+        let mean = plan_with(&sc, Policy::MeanOnly).plan;
         let opts = SimOptions { trials: 8000, ..Default::default() };
         let r_rob = evaluate(&sc, &robust, &opts);
         let r_mean = evaluate(&sc, &mean, &opts);
@@ -145,7 +147,7 @@ mod tests {
     #[test]
     fn worst_case_plan_nearly_never_violates() {
         let sc = scenario(23);
-        let worst = baselines::worst_case(&sc).unwrap().plan;
+        let worst = plan_with(&sc, Policy::WorstCase).plan;
         let r = evaluate(&sc, &worst, &SimOptions { trials: 8000, ..Default::default() });
         assert!(r.worst_violation < 0.01, "violation {}", r.worst_violation);
     }
@@ -153,7 +155,7 @@ mod tests {
     #[test]
     fn energy_estimate_matches_planner_expectation() {
         let sc = scenario(24);
-        let rp = alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap();
+        let rp = plan_with(&sc, Policy::Robust);
         let r = evaluate(&sc, &rp.plan, &SimOptions { trials: 20_000, ..Default::default() });
         // sampled energy uses actual t_loc draws; means should agree ~5%
         assert!(
@@ -167,8 +169,7 @@ mod tests {
     #[test]
     fn latencies_below_deadline_on_average() {
         let sc = scenario(25);
-        let plan =
-            alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap().plan;
+        let plan = plan_with(&sc, Policy::Robust).plan;
         let r = evaluate(&sc, &plan, &SimOptions::default());
         for (i, dev) in sc.devices.iter().enumerate() {
             assert!(r.mean_latency[i] < dev.deadline_s);

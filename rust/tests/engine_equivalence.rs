@@ -1,0 +1,193 @@
+//! Engine-facade equivalence: for every policy, `Planner::plan` must
+//! bit-match the legacy free function it replaces on fixed-seed
+//! scenarios; the cache must be deterministic; and `replan` must beat a
+//! cold solve on iteration count while matching its energy.
+
+#![allow(deprecated)] // this suite exists to pin the legacy shims' behavior
+
+use ripra::engine::{PlanRequest, Planner, PlannerBuilder, Policy, ScenarioDelta};
+use ripra::models::ModelProfile;
+use ripra::optim::types::Device;
+use ripra::optim::{alternating, baselines, AlternatingOptions, Policy as MarginPolicy, Scenario};
+use ripra::util::rng::Rng;
+
+fn scenario(n: usize, b: f64, d: f64, eps: f64, seed: u64) -> Scenario {
+    let mut rng = Rng::new(seed);
+    Scenario::uniform(&ModelProfile::alexnet_paper(), n, b, d, eps, &mut rng)
+}
+
+fn bits(x: f64) -> u64 {
+    x.to_bits()
+}
+
+#[test]
+fn robust_policy_bit_matches_legacy_solve() {
+    let sc = scenario(8, 10e6, 0.20, 0.04, 41);
+    let legacy = alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap();
+    let out = Planner::default().plan(&PlanRequest::new(sc, Policy::Robust)).unwrap();
+    assert_eq!(out.plan, legacy.plan);
+    assert_eq!(bits(out.energy), bits(legacy.energy));
+    assert_eq!(out.diagnostics.outer_iters, legacy.outer_iters);
+    assert_eq!(out.diagnostics.newton_iters, legacy.newton_iters);
+    assert_eq!(bits(out.diagnostics.avg_pccp_iters), bits(legacy.avg_pccp_iters));
+    assert_eq!(out.diagnostics.trajectory, legacy.trajectory);
+}
+
+#[test]
+fn robust_policy_with_init_bit_matches_legacy_solve() {
+    let sc = scenario(6, 10e6, 0.22, 0.04, 42);
+    let init = vec![3; 6];
+    let legacy =
+        alternating::solve(&sc, &AlternatingOptions::default(), Some(init.clone())).unwrap();
+    let out =
+        Planner::default().plan(&PlanRequest::new(sc, Policy::Robust).with_init(init)).unwrap();
+    assert_eq!(out.plan, legacy.plan);
+    assert_eq!(bits(out.energy), bits(legacy.energy));
+}
+
+#[test]
+fn multistart_policy_bit_matches_legacy() {
+    let sc = scenario(4, 10e6, 0.22, 0.05, 43);
+    let extra = vec![vec![5; 4]];
+    let legacy =
+        alternating::solve_multistart(&sc, &AlternatingOptions::default(), &extra).unwrap();
+    let out = Planner::default()
+        .plan(&PlanRequest::new(sc, Policy::Multistart { extra_starts: extra }))
+        .unwrap();
+    assert_eq!(out.plan, legacy.plan);
+    assert_eq!(bits(out.energy), bits(legacy.energy));
+    assert_eq!(out.diagnostics.newton_iters, legacy.newton_iters);
+}
+
+#[test]
+fn baseline_policies_bit_match_legacy() {
+    let sc = scenario(6, 10e6, 0.22, 0.03, 44);
+    let wc_legacy = baselines::worst_case(&sc).unwrap();
+    let wc = Planner::default().plan(&PlanRequest::new(sc.clone(), Policy::WorstCase)).unwrap();
+    assert_eq!(wc.plan, wc_legacy.plan);
+    assert_eq!(bits(wc.energy), bits(wc_legacy.energy));
+    assert_eq!(wc.diagnostics.outer_iters, wc_legacy.outer_iters);
+
+    let mean_legacy = baselines::mean_only(&sc).unwrap();
+    let mean = Planner::default().plan(&PlanRequest::new(sc, Policy::MeanOnly)).unwrap();
+    assert_eq!(mean.plan, mean_legacy.plan);
+    assert_eq!(bits(mean.energy), bits(mean_legacy.energy));
+}
+
+#[test]
+fn exhaustive_policy_bit_matches_legacy() {
+    let sc = scenario(2, 10e6, 0.24, 0.05, 45);
+    let legacy = baselines::exhaustive_optimal(&sc).unwrap();
+    let out = Planner::default().plan(&PlanRequest::new(sc, Policy::Exhaustive)).unwrap();
+    assert_eq!(out.plan, legacy.plan);
+    assert_eq!(bits(out.energy), bits(legacy.energy));
+}
+
+#[test]
+fn infeasible_scenario_reports_unified_error() {
+    let sc = scenario(4, 10e6, 0.004, 0.02, 46);
+    let err = Planner::default().plan(&PlanRequest::new(sc, Policy::Robust)).unwrap_err();
+    assert!(matches!(err, ripra::engine::PlanError::Infeasible(_)), "{err}");
+}
+
+#[test]
+fn cache_hit_is_deterministic_and_flagged() {
+    let sc = scenario(6, 10e6, 0.21, 0.04, 47);
+    let mut planner = PlannerBuilder::new().cache_capacity(4).build();
+    let first = planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+    assert!(!first.diagnostics.cache_hit);
+    let second = planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+    assert!(second.diagnostics.cache_hit, "second identical request must hit the cache");
+    assert_eq!(first.plan, second.plan);
+    assert_eq!(bits(first.energy), bits(second.energy));
+    assert_eq!(first.diagnostics.newton_iters, second.diagnostics.newton_iters);
+    assert_eq!(planner.cache_stats().hits, 1);
+    // a different policy for the same scenario is a different key
+    let other = planner.plan(&PlanRequest::new(sc, Policy::MeanOnly)).unwrap();
+    assert!(!other.diagnostics.cache_hit);
+}
+
+#[test]
+fn replan_leave_reuses_cached_solution() {
+    let sc = scenario(8, 10e6, 0.20, 0.04, 48);
+    let mut planner = Planner::default();
+    planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+    let re = planner.replan(&ScenarioDelta::Leave(5)).unwrap();
+    assert!(re.diagnostics.warm_started);
+
+    // Cold-solve baseline on the identical reduced scenario.
+    let reduced = ScenarioDelta::Leave(5).apply(&sc).unwrap();
+    let cold =
+        Planner::default().plan(&PlanRequest::new(reduced.clone(), Policy::Robust)).unwrap();
+
+    // The acceptance bar: strictly fewer solver iterations than cold.
+    assert!(
+        re.diagnostics.newton_iters < cold.diagnostics.newton_iters,
+        "replan {} !< cold {}",
+        re.diagnostics.newton_iters,
+        cold.diagnostics.newton_iters
+    );
+    // Energy parity with the cold solve, and full feasibility.
+    assert!(re.plan.feasible(&reduced, MarginPolicy::Robust));
+    assert!(re.plan.bandwidth_ok(&reduced) && re.plan.freq_ok(&reduced));
+    assert!(
+        (re.energy - cold.energy).abs() / cold.energy < 0.10,
+        "replan {} vs cold {}",
+        re.energy,
+        cold.energy
+    );
+}
+
+#[test]
+fn replan_join_reuses_cached_solution() {
+    let sc = scenario(7, 10e6, 0.21, 0.04, 49);
+    let joiner = Device {
+        model: ModelProfile::alexnet_paper(),
+        uplink: ripra::channel::Uplink::from_distance(120.0),
+        deadline_s: 0.21,
+        risk: 0.04,
+    };
+    let mut planner = Planner::default();
+    planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+    let re = planner.replan(&ScenarioDelta::Join(joiner.clone())).unwrap();
+    assert!(re.diagnostics.warm_started);
+    assert_eq!(re.plan.partition.len(), 8);
+
+    let grown = ScenarioDelta::Join(joiner).apply(&sc).unwrap();
+    let cold = Planner::default().plan(&PlanRequest::new(grown.clone(), Policy::Robust)).unwrap();
+    assert!(
+        re.diagnostics.newton_iters < cold.diagnostics.newton_iters,
+        "replan {} !< cold {}",
+        re.diagnostics.newton_iters,
+        cold.diagnostics.newton_iters
+    );
+    assert!(re.plan.feasible(&grown, MarginPolicy::Robust));
+    assert!(re.plan.bandwidth_ok(&grown) && re.plan.freq_ok(&grown));
+    assert!(
+        (re.energy - cold.energy).abs() / cold.energy < 0.10,
+        "replan {} vs cold {}",
+        re.energy,
+        cold.energy
+    );
+}
+
+#[test]
+fn replan_deadline_change_tracks_cold_solve() {
+    let sc = scenario(6, 10e6, 0.20, 0.04, 50);
+    let mut planner = Planner::default();
+    planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+    let re =
+        planner.replan(&ScenarioDelta::Deadline { device: None, deadline_s: 0.23 }).unwrap();
+    let relaxed =
+        ScenarioDelta::Deadline { device: None, deadline_s: 0.23 }.apply(&sc).unwrap();
+    let cold =
+        Planner::default().plan(&PlanRequest::new(relaxed.clone(), Policy::Robust)).unwrap();
+    assert!(re.plan.feasible(&relaxed, MarginPolicy::Robust));
+    assert!(re.diagnostics.newton_iters < cold.diagnostics.newton_iters);
+    assert!(
+        (re.energy - cold.energy).abs() / cold.energy < 0.10,
+        "replan {} vs cold {}",
+        re.energy,
+        cold.energy
+    );
+}

@@ -1,13 +1,14 @@
 //! Integration tests: the whole pipeline across module boundaries —
-//! plan (optim) → guarantee (sim) → execute (runtime/coordinator) on the
-//! real AOT artifacts.
+//! plan (engine facade) → guarantee (sim) → execute (runtime/coordinator)
+//! on the real AOT artifacts.
 
 use std::time::Duration;
 
 use ripra::coordinator::{self, ServeOptions};
+use ripra::engine::{PlanOutcome, PlanRequest, Planner, PlannerBuilder, Policy};
 use ripra::models::manifest::{Manifest, Role};
 use ripra::models::ModelProfile;
-use ripra::optim::{alternating, baselines, AlternatingOptions, Plan, Policy, Scenario};
+use ripra::optim::{Plan, Policy as MarginPolicy, Scenario};
 use ripra::profile::Dist;
 use ripra::sim::{self, SimOptions};
 use ripra::util::check::forall;
@@ -17,15 +18,18 @@ fn have_artifacts() -> bool {
     Manifest::default_dir().join("manifest.json").exists()
 }
 
+fn plan_with(sc: &Scenario, policy: Policy) -> Result<PlanOutcome, ripra::engine::PlanError> {
+    Planner::default().plan(&PlanRequest::new(sc.clone(), policy))
+}
+
 #[test]
 fn plan_then_simulate_both_models() {
     for model in [ModelProfile::alexnet_paper(), ModelProfile::resnet152_paper()] {
         let (b, d, eps) = ripra::figures::default_setting(&model.name);
         let mut rng = Rng::new(0x1917);
         let sc = Scenario::uniform(&model, 8, b, d, eps, &mut rng);
-        let r = alternating::solve(&sc, &AlternatingOptions::default(), None)
-            .unwrap_or_else(|e| panic!("{}: {e}", model.name));
-        assert!(r.plan.feasible(&sc, Policy::Robust));
+        let r = plan_with(&sc, Policy::Robust).unwrap_or_else(|e| panic!("{}: {e}", model.name));
+        assert!(r.plan.feasible(&sc, MarginPolicy::Robust));
         assert!(r.plan.bandwidth_ok(&sc) && r.plan.freq_ok(&sc));
         let rep = sim::evaluate(&sc, &r.plan, &SimOptions { trials: 6000, ..Default::default() });
         assert!(
@@ -41,9 +45,11 @@ fn plan_then_simulate_both_models() {
 fn three_policies_ordered_by_energy_and_safety() {
     let mut rng = Rng::new(0x0D0);
     let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 8, 10e6, 0.20, 0.04, &mut rng);
-    let rob = alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap();
-    let wc = baselines::worst_case(&sc).unwrap();
-    let mean = baselines::mean_only(&sc).unwrap();
+    // One planner serves all three policies (distinct cache keys).
+    let mut planner = Planner::default();
+    let rob = planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+    let wc = planner.plan(&PlanRequest::new(sc.clone(), Policy::WorstCase)).unwrap();
+    let mean = planner.plan(&PlanRequest::new(sc.clone(), Policy::MeanOnly)).unwrap();
     // energy: mean <= robust <= worst (margins strictly ordered on alexnet)
     assert!(mean.energy <= rob.energy * 1.001);
     assert!(rob.energy <= wc.energy * 1.001);
@@ -73,9 +79,9 @@ fn planner_never_panics_on_random_scenarios() {
         let sc = Scenario::uniform(&model, n, b, d, eps, &mut srng);
         // Either a feasible plan or a clean error — never a panic, and a
         // returned plan must satisfy every constraint.
-        match alternating::solve(&sc, &AlternatingOptions::default(), None) {
+        match plan_with(&sc, Policy::Robust) {
             Ok(r) => {
-                if !r.plan.feasible(&sc, Policy::Robust) {
+                if !r.plan.feasible(&sc, MarginPolicy::Robust) {
                     return Err(format!("infeasible plan returned: {:?}", r.plan.partition));
                 }
                 if !r.plan.bandwidth_ok(&sc) {
@@ -92,7 +98,7 @@ fn planner_never_panics_on_random_scenarios() {
 fn ecr_guarantee_is_distribution_free_end_to_end() {
     let mut rng = Rng::new(0xECA);
     let sc = Scenario::uniform(&ModelProfile::resnet152_paper(), 6, 30e6, 0.17, 0.06, &mut rng);
-    let plan = alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap().plan;
+    let plan = plan_with(&sc, Policy::Robust).unwrap().plan;
     for dist in [Dist::Lognormal, Dist::Gamma, Dist::ShiftedExp] {
         let rep = sim::evaluate(&sc, &plan, &SimOptions { trials: 8000, dist, seed: 5 });
         assert!(rep.worst_violation <= 0.06, "{dist:?}: {}", rep.worst_violation);
@@ -125,14 +131,17 @@ fn serve_executes_planned_partition_end_to_end() {
     }
     let mut rng = Rng::new(0x5E);
     let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 4, 10e6, 0.22, 0.05, &mut rng);
-    let plan = alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap().plan;
     let opts = ServeOptions {
         requests_per_device: 5,
         time_scale: 0.0, // no sleeps in tests
         batch_window: Duration::from_millis(2),
         ..Default::default()
     };
-    let rep = coordinator::serve(Manifest::default_dir(), &sc, &plan, &opts).unwrap();
+    // The one-call engine-backed serving path.
+    let mut planner = PlannerBuilder::new().build();
+    let (out, rep) =
+        coordinator::plan_and_serve(Manifest::default_dir(), &sc, &mut planner, &opts).unwrap();
+    assert!(out.plan.feasible(&sc, MarginPolicy::Robust));
     assert_eq!(rep.completed, 20);
     assert!(rep.mean_edge_exec_s >= 0.0);
     assert!(rep.total_energy_j > 0.0);

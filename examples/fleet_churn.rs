@@ -1,0 +1,83 @@
+//! Fleet churn walkthrough: drive one long-lived planner through a
+//! seeded stream of device joins/leaves, Gauss–Markov channel fades, and
+//! deadline/risk renegotiations, and watch the engine's incremental
+//! machinery (plan cache, warm replans, cold fallbacks) absorb them.
+//!
+//! ```bash
+//! cargo run --release --example fleet_churn
+//! ```
+//!
+//! Equivalent CLI: `ripra simulate --duration 20 --arrival-rate 0.4
+//! --churn 1.5 --seed 7` (add `--json` for the machine-readable series).
+
+use ripra::fleet::{self, FleetOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = FleetOptions {
+        n0: 5,
+        duration_s: 20.0,
+        arrival_rate_hz: 0.4,
+        churn: 1.5,
+        trials: 500,
+        seed: 7,
+        ..FleetOptions::default()
+    };
+    println!(
+        "fleet churn: model={}, n0={}, {:.0}s, arrivals {:.1}/s, churn x{:.1}, seed {}\n",
+        opts.model.name, opts.n0, opts.duration_s, opts.arrival_rate_hz, opts.churn, opts.seed
+    );
+    let rep = fleet::run(&opts).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+
+    println!(
+        "{:>7}  {:<11} {:>3}  {:<10} {:>7} {:>10}  {:>9}",
+        "t_s", "event", "n", "served by", "newton", "energy_J", "viol-eps"
+    );
+    let shown = 25usize;
+    for st in rep.metrics.steps().iter().take(shown) {
+        let served = if st.absorbed {
+            "absorbed"
+        } else if !st.accepted {
+            "rejected"
+        } else if st.cache_hit {
+            "cache"
+        } else if st.warm_started {
+            "warm"
+        } else {
+            "cold"
+        };
+        let energy = st.energy_j.map_or("-".into(), |e| format!("{e:.4}"));
+        let viol = st.violation_excess.map_or("-".into(), |v| format!("{v:+.4}"));
+        println!(
+            "{:>7.3}  {:<11} {:>3}  {:<10} {:>7} {:>10}  {:>9}",
+            st.t_s, st.kind, st.n, served, st.newton_iters, energy, viol
+        );
+    }
+    if rep.metrics.steps().len() > shown {
+        println!("   ... {} more steps", rep.metrics.steps().len() - shown);
+    }
+
+    let s = rep.metrics.summary();
+    println!(
+        "\nsummary: {} events ({} accepted / {} rejected / {} absorbed); \
+         {} cache hits + {} warm replans + {} cold solves",
+        s.events, s.accepted, s.rejected, s.absorbed, s.cache_hits, s.warm_replans, s.cold_solves
+    );
+    println!(
+        "cache hit rate {:.1}%; {} Newton iterations total; mean planned energy {:.4} J",
+        100.0 * s.cache_hit_rate,
+        s.newton_total,
+        s.mean_energy_j
+    );
+    if let Some(w) = s.worst_violation_excess {
+        println!(
+            "Monte-Carlo: worst violation excess over eps {w:+.4} \
+             (<= 0 means every device met its risk level)"
+        );
+    }
+    println!(
+        "\nreading: fades inside the fingerprint's 0.1 dB bucket are served\n\
+         from the plan cache for free; the rest cost a few warm Newton\n\
+         iterations; only infeasibility-triggering events pay a cold solve."
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Fleet-churn end-to-end benchmark: one full discrete-event simulation
+//! (events → `Planner::replan` → Monte-Carlo check) per iteration, run
+//! sequentially and with the default thread fan-out.  Timings plus the
+//! run's deterministic health scalars (cache hit rate, warm/cold split,
+//! Newton totals, violation excess) merge into `BENCH_planner.json` at
+//! the repo root alongside the `alg2_*` planner cases — the perf
+//! trajectory future PRs diff against (see EXPERIMENTS.md §Fleet churn).
+
+use std::path::Path;
+use std::time::Duration;
+
+use ripra::fleet::{self, FleetOptions};
+use ripra::util::bench::Bencher;
+
+fn main() {
+    let mut bench =
+        Bencher::new().with_window(Duration::from_millis(300), Duration::from_secs(3));
+
+    for (tag, threads) in [("seq", 1usize), ("par", 0usize)] {
+        let opts = FleetOptions {
+            n0: 6,
+            duration_s: 6.0,
+            arrival_rate_hz: 0.5,
+            churn: 2.0,
+            trials: 200,
+            seed: 0xF1EE7,
+            threads,
+            ..FleetOptions::default()
+        };
+        let name = format!("fleet_churn_6s_{tag}");
+        bench.bench(&name, || {
+            fleet::run(&opts)
+                .map(|r| r.metrics.summary().newton_total as f64)
+                .unwrap_or(f64::NAN)
+        });
+        // Health scalars from one deterministic run (identical to every
+        // timed iteration — same seed, no wall-clock in the metrics).
+        if let Ok(rep) = fleet::run(&opts) {
+            let s = rep.metrics.summary();
+            bench.attach(&name, "events", s.events as f64);
+            bench.attach(&name, "accepted", s.accepted as f64);
+            bench.attach(&name, "cache_hit_rate", s.cache_hit_rate);
+            bench.attach(&name, "warm_replans", s.warm_replans as f64);
+            bench.attach(&name, "cold_solves", s.cold_solves as f64);
+            bench.attach(&name, "newton_total", s.newton_total as f64);
+            if let Some(w) = s.worst_violation_excess {
+                bench.attach(&name, "worst_violation_excess", w);
+            }
+        }
+    }
+
+    bench.write_json(Path::new("BENCH_planner.json")).expect("writing BENCH_planner.json");
+    println!("wrote BENCH_planner.json");
+}

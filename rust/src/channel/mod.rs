@@ -29,7 +29,20 @@ impl Uplink {
     pub fn from_distance(r_m: f64) -> Self {
         assert!(r_m > 0.0);
         let pl_db = 38.0 + 30.0 * r_m.log10();
-        Uplink { p_tx: TX_POWER_W, gain: 10f64.powf(-pl_db / 10.0), n0: noise_psd_w_per_hz() }
+        Uplink::from_gain_db(-pl_db)
+    }
+
+    /// Build from a channel gain on the dB scale (negative for path loss),
+    /// with the paper's transmit power and noise floor.  This is the entry
+    /// point fading processes use: they evolve the gain in dB and rebuild
+    /// the uplink each step.
+    pub fn from_gain_db(gain_db: f64) -> Self {
+        Uplink { p_tx: TX_POWER_W, gain: 10f64.powf(gain_db / 10.0), n0: noise_psd_w_per_hz() }
+    }
+
+    /// Channel gain on the dB scale (the inverse of [`Uplink::from_gain_db`]).
+    pub fn gain_db(&self) -> f64 {
+        10.0 * self.gain.log10()
     }
 
     /// SNR at bandwidth b (Hz).
@@ -89,6 +102,51 @@ impl Uplink {
         let rate_p = eta - snr / ((1.0 + snr) * ln2);
         let rate_pp = -c * c / (b_hz * (b_hz + c) * (b_hz + c) * ln2);
         d_bits * (2.0 * rate_p * rate_p - rate * rate_pp) / (rate * rate * rate)
+    }
+}
+
+/// First-order Gauss–Markov (AR(1)) shadowing process on the dB scale,
+/// the standard temporally correlated fading model for mobile users:
+///
+/// ```text
+///   g_{k+1} = μ + α (g_k − μ) + √(1 − α²) · σ · w_k ,   w_k ~ N(0, 1)
+/// ```
+///
+/// where `μ` is the path-loss mean from the device's position, `σ` the
+/// stationary shadowing standard deviation, and `α ∈ [0, 1)` the memory.
+/// The innovation scaling keeps the *stationary* distribution at
+/// N(μ, σ²) for any α, so the per-step move size and the long-run spread
+/// can be chosen independently.  The process starts at its mean.
+#[derive(Clone, Debug)]
+pub struct GaussMarkov {
+    /// Stationary mean gain, dB (the path-loss value).
+    pub mean_db: f64,
+    /// Stationary shadowing standard deviation, dB.
+    pub sigma_db: f64,
+    /// AR(1) memory coefficient in [0, 1).
+    pub alpha: f64,
+    state_db: f64,
+}
+
+impl GaussMarkov {
+    /// Start the process at its stationary mean.
+    pub fn new(mean_db: f64, sigma_db: f64, alpha: f64) -> GaussMarkov {
+        assert!(sigma_db >= 0.0, "sigma_db must be non-negative");
+        assert!((0.0..1.0).contains(&alpha), "alpha must be in [0, 1)");
+        GaussMarkov { mean_db, sigma_db, alpha, state_db: mean_db }
+    }
+
+    /// Current gain, dB.
+    pub fn gain_db(&self) -> f64 {
+        self.state_db
+    }
+
+    /// Advance one step, drawing the innovation from `rng`; returns the
+    /// new *linear* gain (what [`Uplink::from_gain_db`] consumes).
+    pub fn step(&mut self, rng: &mut crate::util::rng::Rng) -> f64 {
+        let innovation = (1.0 - self.alpha * self.alpha).sqrt() * self.sigma_db * rng.normal();
+        self.state_db = self.mean_db + self.alpha * (self.state_db - self.mean_db) + innovation;
+        10f64.powf(self.state_db / 10.0)
     }
 }
 
@@ -202,6 +260,73 @@ mod tests {
         let u = Uplink::from_distance(75.0);
         assert_eq!(u.t_off(0.0, 1e6), 0.0);
         assert_eq!(u.e_off(0.0, 1e6), 0.0);
+    }
+
+    #[test]
+    fn gain_db_roundtrips_from_gain_db() {
+        for db in [-120.0, -98.0, -60.0, 0.0, 3.0] {
+            let u = Uplink::from_gain_db(db);
+            assert!((u.gain_db() - db).abs() < 1e-9, "db={db}");
+        }
+        // from_distance agrees with the explicit dB constructor.
+        let a = Uplink::from_distance(100.0);
+        let b = Uplink::from_gain_db(-98.0);
+        assert!((a.gain - b.gain).abs() / b.gain < 1e-12);
+    }
+
+    #[test]
+    fn gauss_markov_is_stationary_with_target_moments() {
+        let mut rng = Rng::new(31);
+        let (mu, sigma, alpha) = (-95.0, 2.0, 0.9);
+        let mut gm = GaussMarkov::new(mu, sigma, alpha);
+        // Burn in past the deterministic start, then measure.
+        for _ in 0..200 {
+            gm.step(&mut rng);
+        }
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n)
+            .map(|_| {
+                gm.step(&mut rng);
+                gm.gain_db()
+            })
+            .collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - mu).abs() < 0.05, "mean={mean}");
+        assert!((var - sigma * sigma).abs() / (sigma * sigma) < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gauss_markov_is_deterministic_per_seed_and_step_returns_linear_gain() {
+        let mut a = GaussMarkov::new(-98.0, 2.0, 0.99);
+        let mut b = GaussMarkov::new(-98.0, 2.0, 0.99);
+        let (mut ra, mut rb) = (Rng::new(9), Rng::new(9));
+        for _ in 0..50 {
+            let ga = a.step(&mut ra);
+            let gb = b.step(&mut rb);
+            assert_eq!(ga.to_bits(), gb.to_bits());
+            assert!((10.0 * ga.log10() - a.gain_db()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gauss_markov_high_alpha_moves_little_per_step() {
+        // The fleet fingerprint buckets gains at 0.1 dB; with α = 0.992 and
+        // σ = 2 dB the per-step move is ≈ 0.25 dB, so a fair share of steps
+        // stay inside one bucket (those replans become plan-cache hits).
+        let mut gm = GaussMarkov::new(-98.0, 2.0, 0.992);
+        let mut rng = Rng::new(77);
+        let mut within = 0usize;
+        let steps = 2000;
+        for _ in 0..steps {
+            let before = gm.gain_db();
+            gm.step(&mut rng);
+            if ((gm.gain_db() / 0.1).round() - (before / 0.1).round()).abs() < 0.5 {
+                within += 1;
+            }
+        }
+        let frac = within as f64 / steps as f64;
+        assert!(frac > 0.05 && frac < 0.9, "same-bucket fraction {frac}");
     }
 
     #[test]

@@ -114,12 +114,12 @@ impl From<crate::optim::alternating::PlanError> for PlanError {
 
 impl From<crate::optim::baselines::BaselineError> for PlanError {
     fn from(e: crate::optim::baselines::BaselineError) -> Self {
-        // The enumeration baselines fail (almost) exclusively on resource
-        // infeasibility; their error type keeps the detail as a string.
-        if e.0.contains("infeasible") {
-            PlanError::Infeasible(e.0)
+        // The baseline error carries its kind structurally, so this
+        // classification cannot drift with message wording.
+        if e.infeasible {
+            PlanError::Infeasible(e.message)
         } else {
-            PlanError::Solver(e.0)
+            PlanError::Solver(e.message)
         }
     }
 }

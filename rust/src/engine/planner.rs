@@ -5,7 +5,7 @@
 
 use std::time::Instant;
 
-use crate::optim::types::{Device, Plan, Policy as MarginPolicy, Scenario};
+use crate::optim::types::{Plan, Policy as MarginPolicy, Scenario};
 use crate::optim::{alternating, baselines, resource, AlternatingOptions};
 use crate::solver::NewtonWorkspace;
 
@@ -163,22 +163,70 @@ impl Planner {
     /// `diagnostics.cache_hit = true`.
     pub fn plan(&mut self, req: &PlanRequest) -> Result<PlanOutcome, PlanError> {
         req.validate()?;
-        let fp = req.fingerprint();
-        if req.use_cache {
-            if let Some(mut hit) = self.cache.get(fp) {
-                hit.diagnostics.cache_hit = true;
-                self.remember(req.scenario.clone(), req.policy.clone(), &hit);
-                return Ok(hit);
-            }
+        // One implementation of the hit path: the probe marks the hit,
+        // counts it, and registers history.
+        if let Some(hit) = self.plan_cached(req) {
+            return Ok(hit);
         }
         let t0 = Instant::now();
         let mut outcome = self.solve_cold(req)?;
         outcome.diagnostics.wall_time = t0.elapsed();
         if req.use_cache {
-            self.cache.insert(fp, outcome.clone());
+            self.cache.insert(req.fingerprint(), outcome.clone());
         }
         self.remember(req.scenario.clone(), req.policy.clone(), &outcome);
         Ok(outcome)
+    }
+
+    /// Probe the plan cache without ever solving.
+    ///
+    /// Returns the cached outcome for the request's quantized fingerprint
+    /// (marked `cache_hit`) and registers it as the planner's last solve,
+    /// so a follow-up [`Planner::replan`] continues from it — or `None`
+    /// on a miss (counted in [`Planner::cache_stats`]), leaving the
+    /// planner untouched.  Online drivers use this to serve sub-quantum
+    /// scenario jitter (e.g. channel fades below the fingerprint's 0.1 dB
+    /// bucket) from the cache and fall back to `replan`/`plan` only when
+    /// the scenario has genuinely moved.
+    pub fn plan_cached(&mut self, req: &PlanRequest) -> Option<PlanOutcome> {
+        if !req.use_cache || req.validate().is_err() {
+            return None;
+        }
+        let mut hit = self.cache.get(req.fingerprint())?;
+        hit.diagnostics.cache_hit = true;
+        self.remember(req.scenario.clone(), req.policy.clone(), &hit);
+        Some(hit)
+    }
+
+    /// Adopt `scenario` as the planner's current state while keeping the
+    /// previous decision — no solve happens.
+    ///
+    /// An environmental change that admits no feasible plan (a deep
+    /// fade, an uplink-budget collapse) is a fact, not a request that
+    /// can be refused: the fleet keeps executing its old decision, and
+    /// subsequent [`Planner::replan`] deltas must apply to reality, not
+    /// to the last plannable scenario.  Rebase re-prices the old plan's
+    /// energy under the new scenario and moves the replan base forward;
+    /// nothing is inserted into the plan cache (the outcome was not
+    /// produced by a solve, and the old plan may violate the new
+    /// scenario's constraints).  Returns the kept plan's re-priced
+    /// energy; errors without history or when the plan's shape doesn't
+    /// fit the scenario.
+    pub fn rebase(&mut self, scenario: Scenario) -> Result<f64, PlanError> {
+        let last = self.last.as_mut().ok_or_else(|| {
+            PlanError::InvalidRequest("rebase requires a previous plan() on this planner".into())
+        })?;
+        if last.outcome.plan.partition.len() != scenario.n() {
+            return Err(PlanError::InvalidRequest(format!(
+                "cannot rebase a {}-device plan onto {} devices",
+                last.outcome.plan.partition.len(),
+                scenario.n()
+            )));
+        }
+        let energy = last.outcome.plan.expected_energy(&scenario);
+        last.outcome.energy = energy;
+        last.scenario = scenario;
+        Ok(energy)
     }
 
     /// Incrementally replan after a scenario change, warm-starting from
@@ -332,20 +380,6 @@ fn baseline_outcome(r: baselines::BaselinePlan, policy: Policy) -> PlanOutcome {
     }
 }
 
-/// Feasibility-friendliest point (minimum margin-adjusted total time at
-/// f_max) — the joiner's fallback when nothing is feasible at an equal
-/// share.
-fn min_time_point(dev: &Device, b_hz: f64, policy: MarginPolicy) -> usize {
-    let f = dev.model.device.f_max_ghz;
-    (0..dev.model.num_points())
-        .min_by(|&a, &b| {
-            let ta = dev.t_total_mean(a, f, b_hz) + dev.margin(a, policy);
-            let tb = dev.t_total_mean(b, f, b_hz) + dev.margin(b, policy);
-            ta.partial_cmp(&tb).unwrap()
-        })
-        .unwrap_or(0)
-}
-
 /// Adapt the previous (partition, bandwidth, frequency) to a delta: the
 /// returned partition seeds the warm resource solve, and the returned
 /// resource guess is used only if strictly feasible for the new scenario
@@ -381,7 +415,7 @@ fn adapt_decision(
             let b_each = new_sc.total_bandwidth_hz / n_new as f64;
             let f_max = joiner.model.device.f_max_ghz;
             let m_new = baselines::best_point(new_sc, n_new - 1, f_max, b_each, mpol)
-                .unwrap_or_else(|| min_time_point(joiner, b_each, mpol));
+                .unwrap_or_else(|| joiner.min_margin_time_point(b_each, mpol));
             let mut part = prev.partition.clone();
             part.push(m_new);
             // Shrink the incumbents' shares to fund the joiner while
@@ -441,6 +475,32 @@ mod tests {
     }
 
     #[test]
+    fn plan_cached_probes_without_solving_and_seeds_replan() {
+        let sc = scenario(4, 0.22, 0.05, 8);
+        let mut p = Planner::default();
+        // Cold cache: probe misses, planner state untouched.
+        assert!(p.plan_cached(&PlanRequest::new(sc.clone(), Policy::Robust)).is_none());
+        assert!(p.last_scenario().is_none());
+        assert_eq!(p.cache_stats().misses, 1);
+
+        let cold = p.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+        // Warm cache: probe hits bit-identically and registers history...
+        let hit = p.plan_cached(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+        assert!(hit.diagnostics.cache_hit);
+        assert_eq!(hit.plan, cold.plan);
+        assert_eq!(hit.energy.to_bits(), cold.energy.to_bits());
+        // ...so replan can continue from the probed outcome.
+        let re = p.replan(&ScenarioDelta::Leave(0)).unwrap();
+        assert_eq!(re.plan.partition.len(), 3);
+        // A different policy misses (fingerprint includes the policy tag).
+        assert!(p.plan_cached(&PlanRequest::new(sc.clone(), Policy::MeanOnly)).is_none());
+        // The bypass flag skips the probe entirely (no miss counted).
+        let misses = p.cache_stats().misses;
+        assert!(p.plan_cached(&PlanRequest::new(sc, Policy::Robust).without_cache()).is_none());
+        assert_eq!(p.cache_stats().misses, misses);
+    }
+
+    #[test]
     fn replan_without_history_is_rejected() {
         let mut p = Planner::default();
         assert!(matches!(
@@ -465,6 +525,40 @@ mod tests {
         // a follow-up plan() of the replanned scenario hits the cache
         let again = p.plan(&PlanRequest::new(smaller, Policy::Robust)).unwrap();
         assert!(again.diagnostics.cache_hit);
+    }
+
+    #[test]
+    fn rebase_moves_the_replan_base_without_solving() {
+        use crate::channel::Uplink;
+        let sc = scenario(4, 0.22, 0.05, 12);
+        // No history: a fresh planner refuses to rebase.
+        let mut fresh = Planner::default();
+        assert!(matches!(fresh.rebase(sc.clone()), Err(PlanError::InvalidRequest(_))));
+
+        let mut p = Planner::default();
+        p.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+        // The environment shifts (3 dB fade on device 0): adopt it.
+        let mut faded = sc.clone();
+        faded.devices[0].uplink = Uplink::from_gain_db(faded.devices[0].uplink.gain_db() - 3.0);
+        assert!(p.rebase(faded.clone()).unwrap() > 0.0, "rebase re-prices the kept plan");
+        let adopted = p.last_scenario().unwrap();
+        assert_eq!(
+            adopted.devices[0].uplink.gain.to_bits(),
+            faded.devices[0].uplink.gain.to_bits()
+        );
+        // A follow-up replan applies its delta to the rebased scenario.
+        let re = p.replan(&ScenarioDelta::TotalBandwidth(sc.total_bandwidth_hz * 2.0)).unwrap();
+        assert_eq!(re.plan.partition.len(), 4);
+        let after = p.last_scenario().unwrap();
+        assert_eq!(
+            after.devices[0].uplink.gain.to_bits(),
+            faded.devices[0].uplink.gain.to_bits(),
+            "replan must build on the rebased channel, not the stale one"
+        );
+        // Shape mismatch is rejected.
+        let mut smaller = faded;
+        smaller.devices.pop();
+        assert!(matches!(p.rebase(smaller), Err(PlanError::InvalidRequest(_))));
     }
 
     #[test]

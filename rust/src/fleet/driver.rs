@@ -1,0 +1,654 @@
+//! The fleet driver: maps discrete events to [`ScenarioDelta`]s, drives
+//! one long-lived [`Planner`] through the resulting stream, and validates
+//! every accepted plan with the Monte-Carlo simulator.
+//!
+//! Per popped event the driver
+//!
+//! 1. translates it to a `ScenarioDelta` and applies it to the current
+//!    scenario;
+//! 2. probes the plan cache ([`Planner::plan_cached`]) — sub-quantum
+//!    jitter (a fade inside the fingerprint's 0.1 dB bucket, a risk
+//!    renegotiation back to its previous value) is served without any
+//!    solver work;
+//! 3. on a miss calls [`Planner::replan`], whose warm path costs a few
+//!    Newton iterations and which falls back to a cold solve when the
+//!    adapted decision is infeasible;
+//! 4. if even the cold fallback is infeasible, *negotiable* events
+//!    (join/leave, deadline/risk renegotiation) are **rejected** —
+//!    admission control: the request is refused and nothing rolls
+//!    forward — while *environmental* events (channel fade, uplink
+//!    budget) are **absorbed**: the scenario rolls forward via
+//!    [`Planner::rebase`], the fleet keeps executing its old plan, and
+//!    the step records the violation excess that plan now incurs;
+//! 5. on acceptance runs [`sim::evaluate`] (distribution family rotating
+//!    over lognormal / gamma / shifted-exponential) and records the
+//!    worst empirical violation excess over the per-device risk levels.
+//!
+//! Determinism: every random draw comes from a stream forked off the
+//! fleet seed (arrivals, lifetimes, placement, per-device fading,
+//! renegotiation, bandwidth, Monte-Carlo), so the full event trace, the
+//! metrics JSON, and the final fleet state are byte-identical for a
+//! given seed at any `util::par` thread count.
+
+use crate::channel::{GaussMarkov, Uplink};
+use crate::engine::{
+    CliFlag, PlanError, PlanOutcome, PlanRequest, Planner, PlannerBuilder, Policy, ScenarioDelta,
+};
+use crate::models::ModelProfile;
+use crate::optim::types::{Device, Scenario};
+use crate::profile::Dist;
+use crate::sim::{self, SimOptions};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::events::{EventQueue, FleetEvent};
+use super::metrics::{FleetMetrics, StepRecord, INITIAL_KIND};
+
+/// Stationary shadowing standard deviation of the Gauss–Markov gain
+/// process, dB (urban shadowing scale).
+const SHADOW_SIGMA_DB: f64 = 2.0;
+
+/// AR(1) memory of the fading process.  With σ = 2 dB this yields a
+/// per-tick move of ≈ 0.25 dB, so a meaningful share of fades stays
+/// inside the plan fingerprint's 0.1 dB bucket (those replans become
+/// plan-cache hits) while the rest genuinely moves the channel.
+const GM_ALPHA: f64 = 0.992;
+
+/// Renegotiation events per second at churn 1.
+const RENEGOTIATE_RATE_HZ: f64 = 0.15;
+
+/// Bandwidth-change events per second at churn 1.
+const BANDWIDTH_RATE_HZ: f64 = 0.08;
+
+/// Fading-tick interval per device at churn 1, seconds.
+const FADE_INTERVAL_S: f64 = 2.0;
+
+/// Risk multipliers a renegotiation draws from (×1 returns a device to
+/// its base risk — when nothing else changed, that replan is an exact
+/// fingerprint repeat and is served from the plan cache).
+const RISK_STEPS: [f64; 3] = [0.5, 1.0, 2.0];
+
+/// Configuration for one simulated fleet run.
+///
+/// `threads` is deliberately excluded from [`FleetOptions::to_json`]:
+/// thread count never changes results (PR 1's determinism contract), so
+/// the exported config — like every other exported field — identifies
+/// the trace.
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// DNN/hardware profile every device runs.
+    pub model: ModelProfile,
+    /// Initial fleet size (≥ 1).
+    pub n0: usize,
+    /// Simulated duration, seconds.
+    pub duration_s: f64,
+    /// Poisson device-arrival rate, Hz.
+    pub arrival_rate_hz: f64,
+    /// Churn multiplier: scales departure, fading-tick, renegotiation,
+    /// and bandwidth-change rates together (0 freezes all of them).
+    pub churn: f64,
+    /// Initial total uplink bandwidth, Hz.
+    pub total_bandwidth_hz: f64,
+    /// Base per-task deadline, seconds (renegotiations jitter around it).
+    pub deadline_s: f64,
+    /// Base risk level ε (renegotiations step it by ×{0.5, 1, 2}).
+    pub risk: f64,
+    /// Monte-Carlo trials per accepted step (0 disables the check).
+    pub trials: usize,
+    /// Seed for every event stream.
+    pub seed: u64,
+    /// Planner worker threads (0 = one per core; never changes results).
+    pub threads: usize,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            model: ModelProfile::alexnet_paper(),
+            n0: 6,
+            duration_s: 30.0,
+            arrival_rate_hz: 0.2,
+            churn: 1.0,
+            total_bandwidth_hz: 12.5e6,
+            deadline_s: 0.20,
+            risk: 0.02,
+            trials: 1000,
+            seed: 7,
+            threads: 0,
+        }
+    }
+}
+
+impl FleetOptions {
+    /// Flags the `ripra simulate` subcommand exposes; `main.rs` derives
+    /// its usage text and parser from this table, exactly as `ripra
+    /// plan` does from [`PlanRequest::CLI_FLAGS`].
+    pub const CLI_FLAGS: &[CliFlag] = &[
+        CliFlag { name: "model", value: Some("alexnet|resnet152"), help: "DNN/hardware profile" },
+        CliFlag { name: "n", value: Some("N"), help: "initial fleet size (default 6)" },
+        CliFlag {
+            name: "duration",
+            value: Some("S"),
+            help: "simulated time, seconds (default 30)",
+        },
+        CliFlag {
+            name: "arrival-rate",
+            value: Some("HZ"),
+            help: "Poisson device-arrival rate (default 0.2)",
+        },
+        CliFlag {
+            name: "churn",
+            value: Some("X"),
+            help: "churn multiplier: departures, fades, renegotiations (default 1)",
+        },
+        CliFlag { name: "bandwidth", value: Some("HZ"), help: "initial total uplink bandwidth" },
+        CliFlag { name: "deadline", value: Some("S"), help: "base per-task deadline, seconds" },
+        CliFlag { name: "risk", value: Some("E"), help: "base tolerated violation probability" },
+        CliFlag {
+            name: "trials",
+            value: Some("T"),
+            help: "Monte-Carlo trials per replan (0 disables)",
+        },
+        CliFlag { name: "seed", value: Some("S"), help: "event-stream seed" },
+        CliFlag { name: "json", value: None, help: "emit the metrics time series as JSON" },
+    ];
+
+    /// Per-device departure rate targeting an equilibrium fleet size of
+    /// roughly `n0 / churn` (arrivals λ balance departures n·μ there).
+    fn departure_rate_per_device(&self) -> f64 {
+        self.churn * self.arrival_rate_hz / self.n0.max(1) as f64
+    }
+
+    fn fade_interval_s(&self) -> Option<f64> {
+        if self.churn > 0.0 {
+            Some(FADE_INTERVAL_S / self.churn)
+        } else {
+            None
+        }
+    }
+
+    fn renegotiate_rate_hz(&self) -> f64 {
+        RENEGOTIATE_RATE_HZ * self.churn
+    }
+
+    fn bandwidth_rate_hz(&self) -> f64 {
+        BANDWIDTH_RATE_HZ * self.churn
+    }
+
+    fn validate(&self) -> Result<(), PlanError> {
+        let bad = |msg: String| Err(PlanError::InvalidRequest(msg));
+        if self.n0 == 0 {
+            return bad("fleet needs at least one initial device".into());
+        }
+        if !(self.duration_s.is_finite() && self.duration_s > 0.0) {
+            return bad(format!("duration must be positive, got {}", self.duration_s));
+        }
+        for (name, v) in [
+            ("arrival-rate", self.arrival_rate_hz),
+            ("churn", self.churn),
+            ("bandwidth", self.total_bandwidth_hz),
+            ("deadline", self.deadline_s),
+            ("risk", self.risk),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return bad(format!("{name} must be finite and non-negative, got {v}"));
+            }
+        }
+        if self.total_bandwidth_hz <= 0.0 || self.deadline_s <= 0.0 {
+            return bad("bandwidth and deadline must be positive".into());
+        }
+        if self.risk <= 0.0 || self.risk >= 1.0 {
+            return bad(format!("risk must be in (0, 1), got {}", self.risk));
+        }
+        Ok(())
+    }
+
+    /// Config block of the metrics JSON (deterministic; excludes
+    /// `threads`, which never changes results).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("model".into(), Json::Str(self.model.name.clone())),
+            ("n0".into(), Json::Num(self.n0 as f64)),
+            ("duration_s".into(), Json::Num(self.duration_s)),
+            ("arrival_rate_hz".into(), Json::Num(self.arrival_rate_hz)),
+            ("churn".into(), Json::Num(self.churn)),
+            ("bandwidth_hz".into(), Json::Num(self.total_bandwidth_hz)),
+            ("deadline_s".into(), Json::Num(self.deadline_s)),
+            ("risk".into(), Json::Num(self.risk)),
+            ("trials".into(), Json::Num(self.trials as f64)),
+            ("seed".into(), Json::Num(self.seed as f64)),
+        ])
+    }
+}
+
+/// Driver-side state of one admitted device.
+struct DeviceState {
+    id: u64,
+    gm: GaussMarkov,
+    /// Per-device stream for fading innovations and tick stagger.
+    rng: Rng,
+}
+
+/// Everything a fleet run produces.
+pub struct FleetReport {
+    /// The options the run was configured with.
+    pub options: FleetOptions,
+    /// Per-step time series + aggregates.
+    pub metrics: FleetMetrics,
+    /// Fleet scenario at the end of the run.
+    pub final_scenario: Scenario,
+    /// Last accepted plan outcome.
+    pub final_outcome: PlanOutcome,
+}
+
+impl FleetReport {
+    /// Full machine-readable encoding: `{"config", "metrics", "final"}`.
+    /// Byte-identical for identical seeds (see module docs).
+    pub fn to_json(&self) -> Json {
+        let partition = Json::Arr(
+            self.final_outcome.plan.partition.iter().map(|&m| Json::Num(m as f64)).collect(),
+        );
+        Json::Obj(vec![
+            ("config".into(), self.options.to_json()),
+            ("metrics".into(), self.metrics.to_json()),
+            (
+                "final".into(),
+                Json::Obj(vec![
+                    ("n".into(), Json::Num(self.final_scenario.n() as f64)),
+                    (
+                        "total_bandwidth_hz".into(),
+                        Json::Num(self.final_scenario.total_bandwidth_hz),
+                    ),
+                    ("energy_j".into(), Json::Num(self.final_outcome.energy)),
+                    ("partition".into(), partition),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Create a device at a uniform position in the paper's 400 m square,
+/// with its Gauss–Markov fading process started at the path-loss mean
+/// and its own innovation stream forked off `channels`.
+fn new_device(
+    opts: &FleetOptions,
+    placement: &mut Rng,
+    channels: &mut Rng,
+    next_id: &mut u64,
+) -> (DeviceState, Device) {
+    let id = *next_id;
+    *next_id += 1;
+    let x = placement.range(-200.0, 200.0);
+    let y = placement.range(-200.0, 200.0);
+    let r = (x * x + y * y).sqrt().max(1.0);
+    let mean_db = -(38.0 + 30.0 * r.log10());
+    let gm = GaussMarkov::new(mean_db, SHADOW_SIGMA_DB, GM_ALPHA);
+    let dev = Device {
+        model: opts.model.clone(),
+        uplink: Uplink::from_gain_db(gm.gain_db()),
+        deadline_s: opts.deadline_s,
+        risk: opts.risk,
+    };
+    (DeviceState { id, gm, rng: channels.fork(id) }, dev)
+}
+
+fn index_of(states: &[DeviceState], id: u64) -> Option<usize> {
+    states.iter().position(|s| s.id == id)
+}
+
+/// Run one simulated fleet.  Errors only if the *initial* scenario is
+/// unplannable or the options are malformed; later infeasible events are
+/// rejected and recorded, not fatal.
+pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
+    opts.validate()?;
+    let mut master = Rng::new(opts.seed);
+    // One independent stream per event source, forked in fixed order so
+    // the trace is a pure function of the seed.
+    let mut arrivals = master.fork(0xA1);
+    let mut lifetimes = master.fork(0xDE);
+    let mut placement = master.fork(0x10C);
+    let mut channels = master.fork(0xC4);
+    let mut reneg = master.fork(0x5E);
+    let mut bw = master.fork(0xB0);
+    let mc_base = master.next_u64();
+
+    let mut next_id: u64 = 0;
+    let mut states: Vec<DeviceState> = Vec::new();
+    let mut devices: Vec<Device> = Vec::new();
+    for _ in 0..opts.n0 {
+        let (st, dev) = new_device(opts, &mut placement, &mut channels, &mut next_id);
+        states.push(st);
+        devices.push(dev);
+    }
+    let mut sc = Scenario { devices, total_bandwidth_hz: opts.total_bandwidth_hz };
+
+    let mut planner = PlannerBuilder::new().threads(opts.threads).build();
+    let mut outcome = planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust))?;
+
+    let mut metrics = FleetMetrics::new();
+    let mut step_no: u64 = 0;
+    let mc_excess = |sc: &Scenario, plan: &crate::optim::types::Plan, step_no: u64| {
+        (opts.trials > 0).then(|| {
+            let dist = match step_no % 3 {
+                0 => Dist::Lognormal,
+                1 => Dist::Gamma,
+                _ => Dist::ShiftedExp,
+            };
+            let seed = mc_base ^ step_no.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let rep = sim::evaluate(sc, plan, &SimOptions { trials: opts.trials, dist, seed });
+            rep.violation_prob
+                .iter()
+                .zip(&sc.devices)
+                .map(|(&v, d)| v - d.risk)
+                .fold(f64::NEG_INFINITY, f64::max)
+        })
+    };
+
+    metrics.record(StepRecord {
+        t_s: 0.0,
+        kind: INITIAL_KIND,
+        n: sc.n(),
+        accepted: true,
+        absorbed: false,
+        cache_hit: false,
+        warm_started: false,
+        energy_j: Some(outcome.energy),
+        newton_iters: outcome.diagnostics.newton_iters,
+        outer_iters: outcome.diagnostics.outer_iters,
+        violation_excess: mc_excess(&sc, &outcome.plan, step_no),
+    });
+
+    // Seed the event streams.
+    let mut queue = EventQueue::new();
+    if opts.arrival_rate_hz > 0.0 {
+        queue.push(arrivals.exponential(opts.arrival_rate_hz), FleetEvent::Arrival);
+    }
+    let dep_rate = opts.departure_rate_per_device();
+    if dep_rate > 0.0 {
+        for st in &states {
+            queue.push(lifetimes.exponential(dep_rate), FleetEvent::Departure { id: st.id });
+        }
+    }
+    let fade_dt = opts.fade_interval_s();
+    if let Some(dt) = fade_dt {
+        for st in &mut states {
+            // Stagger first ticks so devices don't all fade at once.
+            queue.push(st.rng.f64() * dt, FleetEvent::Fade { id: st.id });
+        }
+    }
+    if opts.renegotiate_rate_hz() > 0.0 {
+        queue.push(reneg.exponential(opts.renegotiate_rate_hz()), FleetEvent::Renegotiate);
+    }
+    if opts.bandwidth_rate_hz() > 0.0 {
+        queue.push(bw.exponential(opts.bandwidth_rate_hz()), FleetEvent::Bandwidth);
+    }
+
+    while let Some((t, ev)) = queue.pop() {
+        if t > opts.duration_s {
+            break;
+        }
+        // Translate the event to a delta; recurring sources reschedule
+        // themselves here whether or not the delta is later accepted.
+        let translated: Option<(&'static str, ScenarioDelta, Option<DeviceState>)> = match ev {
+            FleetEvent::Arrival => {
+                queue.push(t + arrivals.exponential(opts.arrival_rate_hz), FleetEvent::Arrival);
+                let (st, dev) = new_device(opts, &mut placement, &mut channels, &mut next_id);
+                Some(("join", ScenarioDelta::Join(dev), Some(st)))
+            }
+            FleetEvent::Departure { id } => {
+                index_of(&states, id).map(|i| ("leave", ScenarioDelta::Leave(i), None))
+            }
+            FleetEvent::Fade { id } => match index_of(&states, id) {
+                // Device already left: drop the tick and stop rescheduling.
+                None => None,
+                Some(i) => {
+                    let st = &mut states[i];
+                    let gain = st.gm.step(&mut st.rng);
+                    if let Some(dt) = fade_dt {
+                        queue.push(t + dt, FleetEvent::Fade { id });
+                    }
+                    let cur = sc.devices[i].uplink;
+                    let uplink = Uplink { p_tx: cur.p_tx, gain, n0: cur.n0 };
+                    Some(("channel", ScenarioDelta::Channel { device: i, uplink }, None))
+                }
+            },
+            FleetEvent::Renegotiate => {
+                let next = t + reneg.exponential(opts.renegotiate_rate_hz());
+                queue.push(next, FleetEvent::Renegotiate);
+                let i = reneg.below(sc.n());
+                if reneg.f64() < 0.5 {
+                    let deadline_s = opts.deadline_s * reneg.range(0.85, 1.4);
+                    let delta = ScenarioDelta::Deadline { device: Some(i), deadline_s };
+                    Some(("deadline", delta, None))
+                } else {
+                    let step = RISK_STEPS[reneg.below(RISK_STEPS.len())];
+                    let risk = (opts.risk * step).clamp(1e-3, 0.5);
+                    Some(("risk", ScenarioDelta::Risk { device: Some(i), risk }, None))
+                }
+            }
+            FleetEvent::Bandwidth => {
+                queue.push(t + bw.exponential(opts.bandwidth_rate_hz()), FleetEvent::Bandwidth);
+                let b = opts.total_bandwidth_hz * bw.range(0.8, 1.25);
+                Some(("bandwidth", ScenarioDelta::TotalBandwidth(b), None))
+            }
+        };
+        let Some((kind, delta, joiner)) = translated else { continue };
+        step_no += 1;
+
+        let rejected = |metrics: &mut FleetMetrics, n: usize| {
+            metrics.record(StepRecord {
+                t_s: t,
+                kind,
+                n,
+                accepted: false,
+                absorbed: false,
+                cache_hit: false,
+                warm_started: false,
+                energy_j: None,
+                newton_iters: 0,
+                outer_iters: 0,
+                violation_excess: None,
+            });
+        };
+
+        let new_sc = match delta.apply(&sc) {
+            Ok(s) => s,
+            // e.g. a departure would empty the fleet: refuse it, but
+            // reschedule the departure so the device isn't immortal.
+            Err(_) => {
+                if let ScenarioDelta::Leave(i) = &delta {
+                    if dep_rate > 0.0 {
+                        let id = states[*i].id;
+                        let at = t + lifetimes.exponential(dep_rate);
+                        queue.push(at, FleetEvent::Departure { id });
+                    }
+                }
+                rejected(&mut metrics, sc.n());
+                continue;
+            }
+        };
+        let req = PlanRequest::new(new_sc.clone(), Policy::Robust);
+        let out = match planner.plan_cached(&req) {
+            Some(hit) => hit,
+            None => match planner.replan(&delta) {
+                Ok(o) => o,
+                Err(_) => {
+                    // Negotiable requests are refused (admission
+                    // control); environmental facts cannot be — absorb
+                    // them: adopt the scenario, keep the old plan, and
+                    // record what it now incurs.
+                    let repriced = if matches!(kind, "channel" | "bandwidth") {
+                        planner.rebase(new_sc.clone()).ok()
+                    } else {
+                        None
+                    };
+                    match repriced {
+                        Some(energy) => {
+                            sc = new_sc;
+                            outcome.energy = energy;
+                            metrics.record(StepRecord {
+                                t_s: t,
+                                kind,
+                                n: sc.n(),
+                                accepted: false,
+                                absorbed: true,
+                                cache_hit: false,
+                                warm_started: false,
+                                energy_j: Some(energy),
+                                newton_iters: 0,
+                                outer_iters: 0,
+                                violation_excess: mc_excess(&sc, &outcome.plan, step_no),
+                            });
+                        }
+                        None => {
+                            // A refused departure must still happen
+                            // eventually: reschedule it so the device
+                            // doesn't become immortal.
+                            if let ScenarioDelta::Leave(i) = &delta {
+                                if dep_rate > 0.0 {
+                                    let id = states[*i].id;
+                                    let at = t + lifetimes.exponential(dep_rate);
+                                    queue.push(at, FleetEvent::Departure { id });
+                                }
+                            }
+                            rejected(&mut metrics, sc.n());
+                        }
+                    }
+                    continue;
+                }
+            },
+        };
+
+        // Commit fleet bookkeeping only for accepted membership changes.
+        match &delta {
+            ScenarioDelta::Join(_) => {
+                let st = joiner.expect("join events carry their device state");
+                let id = st.id;
+                if dep_rate > 0.0 {
+                    queue.push(t + lifetimes.exponential(dep_rate), FleetEvent::Departure { id });
+                }
+                states.push(st);
+                if let Some(dt) = fade_dt {
+                    let stagger = states.last_mut().expect("just pushed").rng.f64() * dt;
+                    queue.push(t + stagger, FleetEvent::Fade { id });
+                }
+            }
+            ScenarioDelta::Leave(i) => {
+                states.remove(*i);
+            }
+            _ => {}
+        }
+        sc = new_sc;
+
+        // A cache hit carries the *original* solve's diagnostics; this
+        // step itself cost no solver work, so the per-step iteration
+        // counts are zero (keeps newton_total comparable across runs
+        // with different hit rates).
+        let (newton_iters, outer_iters) = if out.diagnostics.cache_hit {
+            (0, 0)
+        } else {
+            (out.diagnostics.newton_iters, out.diagnostics.outer_iters)
+        };
+        metrics.record(StepRecord {
+            t_s: t,
+            kind,
+            n: sc.n(),
+            accepted: true,
+            absorbed: false,
+            cache_hit: out.diagnostics.cache_hit,
+            warm_started: out.diagnostics.warm_started,
+            energy_j: Some(out.energy),
+            newton_iters,
+            outer_iters,
+            violation_excess: mc_excess(&sc, &out.plan, step_no),
+        });
+        outcome = out;
+    }
+
+    metrics.set_cache_stats(planner.cache_stats());
+    Ok(FleetReport {
+        options: opts.clone(),
+        metrics,
+        final_scenario: sc,
+        final_outcome: outcome,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts(seed: u64) -> FleetOptions {
+        FleetOptions {
+            n0: 3,
+            duration_s: 2.5,
+            arrival_rate_hz: 0.8,
+            churn: 1.5,
+            total_bandwidth_hz: 10e6,
+            deadline_s: 0.22,
+            risk: 0.06,
+            trials: 120,
+            seed,
+            threads: 1,
+            ..FleetOptions::default()
+        }
+    }
+
+    #[test]
+    fn short_run_is_deterministic_and_well_formed() {
+        let a = run(&tiny_opts(5)).unwrap();
+        let b = run(&tiny_opts(5)).unwrap();
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "same seed must produce byte-identical metrics JSON"
+        );
+        let s = a.metrics.summary();
+        assert!(s.events > 1, "expected events beyond the bootstrap solve");
+        assert_eq!(s.events, s.accepted + s.rejected + s.absorbed);
+        assert_eq!(a.final_scenario.n(), a.final_outcome.plan.partition.len());
+        // Plan invariants hold at the end of the run — unless an
+        // absorbed environmental event deliberately left the old plan
+        // in violation of the new scenario (documented semantics).
+        if s.absorbed == 0 {
+            assert!(a.final_outcome.plan.bandwidth_ok(&a.final_scenario));
+            assert!(a.final_outcome.plan.freq_ok(&a.final_scenario));
+        }
+    }
+
+    #[test]
+    fn different_seeds_produce_different_traces() {
+        let a = run(&tiny_opts(1)).unwrap();
+        let b = run(&tiny_opts(2)).unwrap();
+        assert_ne!(a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn no_event_sources_leaves_only_the_bootstrap_step() {
+        let opts = FleetOptions {
+            churn: 0.0,
+            arrival_rate_hz: 0.0,
+            duration_s: 5.0,
+            trials: 0,
+            n0: 2,
+            threads: 1,
+            ..FleetOptions::default()
+        };
+        let rep = run(&opts).unwrap();
+        // Only the bootstrap step: no event source is active.
+        assert_eq!(rep.metrics.summary().events, 1);
+        assert_eq!(rep.final_scenario.n(), 2);
+    }
+
+    #[test]
+    fn malformed_options_are_rejected_cleanly() {
+        for bad in [
+            FleetOptions { n0: 0, ..FleetOptions::default() },
+            FleetOptions { duration_s: -1.0, ..FleetOptions::default() },
+            FleetOptions { risk: 0.0, ..FleetOptions::default() },
+            FleetOptions { churn: f64::NAN, ..FleetOptions::default() },
+        ] {
+            assert!(matches!(run(&bad), Err(PlanError::InvalidRequest(_))));
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Deterministic discrete-event substrate for the fleet simulator.
+//!
+//! A binary-heap future-event list ordered by `(time, insertion seq)` —
+//! simultaneous events pop in insertion order regardless of heap
+//! internals — plus the event vocabulary the driver consumes.  The queue
+//! itself draws no randomness: all stochastic times are sampled by the
+//! driver from forked [`crate::util::rng::Rng`] streams, so an event
+//! trace is a pure function of the fleet seed at any thread count.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One thing that can happen to the fleet at a scheduled instant.
+///
+/// Each variant maps to one [`crate::engine::ScenarioDelta`] family in
+/// the driver: `Arrival` → `Join`, `Departure` → `Leave`, `Fade` →
+/// `Channel`, `Renegotiate` → `Deadline` or `Risk`, `Bandwidth` →
+/// `TotalBandwidth` — together they exercise every delta variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FleetEvent {
+    /// A new device requests admission to the fleet.
+    Arrival,
+    /// The device with stable id `id` departs (skipped by the driver if
+    /// it already left or was never admitted).
+    Departure {
+        /// Stable device id assigned at creation (scenario indices shift
+        /// as devices leave; ids never do).
+        id: u64,
+    },
+    /// Gauss–Markov fading tick for device `id`.
+    Fade {
+        /// Stable device id (same id space as `Departure`).
+        id: u64,
+    },
+    /// Some device renegotiates its deadline or risk level.
+    Renegotiate,
+    /// The shared uplink budget changes.
+    Bandwidth,
+}
+
+impl FleetEvent {
+    /// Stable lowercase tag for logs (`arrival`, `departure`, `fade`,
+    /// `renegotiate`, `bandwidth`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FleetEvent::Arrival => "arrival",
+            FleetEvent::Departure { .. } => "departure",
+            FleetEvent::Fade { .. } => "fade",
+            FleetEvent::Renegotiate => "renegotiate",
+            FleetEvent::Bandwidth => "bandwidth",
+        }
+    }
+}
+
+/// Heap entry; the manual `Ord` below inverts the comparison so the
+/// *earliest* `(time, seq)` pops first from `std`'s max-heap.
+#[derive(Clone, Debug)]
+struct Scheduled {
+    time_s: f64,
+    seq: u64,
+    event: FleetEvent,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_s.total_cmp(&other.time_s) == Ordering::Equal && self.seq == other.seq
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time_s
+            .total_cmp(&self.time_s)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic future-event list (min-ordered by time, FIFO on ties).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    /// An empty queue.
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `event` at absolute simulation time `time_s` (finite).
+    pub fn push(&mut self, time_s: f64, event: FleetEvent) {
+        debug_assert!(time_s.is_finite(), "event time must be finite, got {time_s}");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { time_s, seq, event });
+    }
+
+    /// Pop the earliest event; simultaneous events pop in the order they
+    /// were pushed.
+    pub fn pop(&mut self) -> Option<(f64, FleetEvent)> {
+        self.heap.pop().map(|s| (s.time_s, s.event))
+    }
+
+    /// Number of scheduled events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether nothing is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, FleetEvent::Arrival);
+        q.push(1.0, FleetEvent::Bandwidth);
+        q.push(2.0, FleetEvent::Renegotiate);
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_pop_in_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, FleetEvent::Fade { id: 0 });
+        q.push(1.0, FleetEvent::Fade { id: 1 });
+        q.push(1.0, FleetEvent::Fade { id: 2 });
+        let ids: Vec<u64> = std::iter::from_fn(|| {
+            q.pop().map(|(_, e)| match e {
+                FleetEvent::Fade { id } => id,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, FleetEvent::Arrival);
+        q.push(1.0, FleetEvent::Arrival);
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        q.push(2.0, FleetEvent::Bandwidth);
+        q.push(0.5, FleetEvent::Renegotiate);
+        assert_eq!(q.pop().unwrap().0, 0.5);
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert_eq!(q.pop().unwrap().0, 5.0);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn kinds_are_stable() {
+        assert_eq!(FleetEvent::Arrival.kind(), "arrival");
+        assert_eq!(FleetEvent::Departure { id: 7 }.kind(), "departure");
+        assert_eq!(FleetEvent::Fade { id: 7 }.kind(), "fade");
+        assert_eq!(FleetEvent::Renegotiate.kind(), "renegotiate");
+        assert_eq!(FleetEvent::Bandwidth.kind(), "bandwidth");
+    }
+}

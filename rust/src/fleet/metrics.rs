@@ -1,0 +1,316 @@
+//! Time-series metrics for the fleet simulator.
+//!
+//! Accumulates one [`StepRecord`] per popped event and exports the whole
+//! run — per-step series plus aggregate summary — through
+//! [`crate::util::json::Json`].  **Every exported field is a
+//! deterministic function of the fleet seed**: wall-clock durations are
+//! deliberately excluded so that same-seed runs produce byte-identical
+//! JSON at any `util::par` thread count (the determinism contract pinned
+//! by `rust/tests/fleet.rs`).
+
+use crate::engine::CacheStats;
+use crate::util::json::Json;
+
+/// The six `ScenarioDelta` kinds a fleet run can exercise, in the stable
+/// order used by the JSON export's `delta_counts` object.
+pub const DELTA_KINDS: [&str; 6] = ["join", "leave", "deadline", "risk", "channel", "bandwidth"];
+
+/// Tag for the driver's one cold bootstrap solve (not a delta).
+pub const INITIAL_KIND: &str = "initial";
+
+/// One planner interaction: the outcome of one popped fleet event (or of
+/// the initial cold solve).
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    /// Simulation time of the triggering event, seconds.
+    pub t_s: f64,
+    /// Delta kind — one of [`DELTA_KINDS`], or [`INITIAL_KIND`] for the
+    /// bootstrap solve.
+    pub kind: &'static str,
+    /// Fleet size after the step (unchanged when rejected).
+    pub n: usize,
+    /// The planner produced a plan for the changed scenario; `false`
+    /// means no new plan exists: the event was rejected (negotiable
+    /// request refused) or absorbed (environmental fact adopted with the
+    /// old plan kept — see [`StepRecord::absorbed`]).
+    pub accepted: bool,
+    /// An infeasible *environmental* event (channel fade, uplink-budget
+    /// change) that cannot be refused: the scenario rolled forward, the
+    /// fleet keeps executing its previous plan, and `violation_excess`
+    /// reports what that plan now incurs.  Always `false` when
+    /// `accepted`.
+    pub absorbed: bool,
+    /// Served straight from the plan cache (sub-quantum scenario jitter).
+    pub cache_hit: bool,
+    /// Produced by the warm incremental replan path.
+    pub warm_started: bool,
+    /// Planned expected energy after the step, J: the new plan's when
+    /// accepted, the old plan re-priced under the new scenario when
+    /// absorbed, `None` when rejected.
+    pub energy_j: Option<f64>,
+    /// Newton iterations this step cost (0 for cache hits / rejections).
+    pub newton_iters: usize,
+    /// Outer (refinement / alternation) iterations this step cost.
+    pub outer_iters: usize,
+    /// Monte-Carlo check: max over devices of (empirical violation
+    /// probability − ε_n).  ≤ 0 means every device met its risk level;
+    /// `None` when the check is disabled or the event was rejected.  On
+    /// absorbed steps this measures the *old* plan against the *new*
+    /// environment and may legitimately exceed 0.
+    pub violation_excess: Option<f64>,
+}
+
+/// Aggregates over one run; all fields deterministic per seed.
+#[derive(Clone, Debug)]
+pub struct FleetSummary {
+    /// Planner interactions recorded (including the bootstrap solve).
+    pub events: usize,
+    /// Steps that produced a plan.
+    pub accepted: usize,
+    /// Negotiable events refused for infeasibility.
+    pub rejected: usize,
+    /// Environmental events adopted without a new plan (old plan kept).
+    pub absorbed: usize,
+    /// Accepted steps served from the plan cache.
+    pub cache_hits: usize,
+    /// Accepted steps served by the warm incremental replan path.
+    pub warm_replans: usize,
+    /// Accepted steps that needed a cold solve (bootstrap + feasibility
+    /// fallbacks inside `replan`).
+    pub cold_solves: usize,
+    /// Planner-cache hit rate over all lookups (hits / (hits + misses)).
+    pub cache_hit_rate: f64,
+    /// Total Newton iterations across the run.
+    pub newton_total: usize,
+    /// Mean planned energy over accepted steps, J (0 if none).
+    pub mean_energy_j: f64,
+    /// Worst Monte-Carlo violation excess over *accepted* steps — the
+    /// probabilistic-guarantee metric (`None` if never checked).
+    /// Absorbed steps are excluded: their old-plan-vs-new-environment
+    /// excess is reported per step, not against the guarantee.
+    pub worst_violation_excess: Option<f64>,
+}
+
+/// Accumulator for a fleet run's records plus the planner's final cache
+/// counters.
+#[derive(Clone, Debug, Default)]
+pub struct FleetMetrics {
+    steps: Vec<StepRecord>,
+    cache: CacheStats,
+}
+
+impl FleetMetrics {
+    /// An empty accumulator.
+    pub fn new() -> FleetMetrics {
+        FleetMetrics::default()
+    }
+
+    /// Append one step record.
+    pub fn record(&mut self, step: StepRecord) {
+        self.steps.push(step);
+    }
+
+    /// Snapshot the planner's cache counters (called once at run end).
+    pub fn set_cache_stats(&mut self, stats: CacheStats) {
+        self.cache = stats;
+    }
+
+    /// All recorded steps in event order.
+    pub fn steps(&self) -> &[StepRecord] {
+        &self.steps
+    }
+
+    /// The planner's cache counters at run end.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache
+    }
+
+    /// How many recorded steps carry `kind` (accepted or not).
+    pub fn count_of(&self, kind: &str) -> usize {
+        self.steps.iter().filter(|s| s.kind == kind).count()
+    }
+
+    /// Aggregate the recorded series.
+    ///
+    /// Served-path classification is priority-ordered: a step is a cache
+    /// hit first (even if the *cached* outcome was originally produced by
+    /// a warm replan and still carries `warm_started`), a warm replan
+    /// second, and a cold solve otherwise — so the three counts always
+    /// partition the accepted steps.
+    pub fn summary(&self) -> FleetSummary {
+        let accepted: Vec<&StepRecord> = self.steps.iter().filter(|s| s.accepted).collect();
+        let absorbed = self.steps.iter().filter(|s| s.absorbed).count();
+        let cache_hits = accepted.iter().filter(|s| s.cache_hit).count();
+        let warm_replans = accepted.iter().filter(|s| !s.cache_hit && s.warm_started).count();
+        let cold_solves = accepted.len() - cache_hits - warm_replans;
+        let lookups = self.cache.hits + self.cache.misses;
+        let energies: Vec<f64> = accepted.iter().filter_map(|s| s.energy_j).collect();
+        let mean_energy_j = if energies.is_empty() {
+            0.0
+        } else {
+            energies.iter().sum::<f64>() / energies.len() as f64
+        };
+        let worst_violation_excess = accepted
+            .iter()
+            .filter_map(|s| s.violation_excess)
+            .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))));
+        FleetSummary {
+            events: self.steps.len(),
+            accepted: accepted.len(),
+            rejected: self.steps.len() - accepted.len() - absorbed,
+            absorbed,
+            cache_hits,
+            warm_replans,
+            cold_solves,
+            cache_hit_rate: if lookups == 0 {
+                0.0
+            } else {
+                self.cache.hits as f64 / lookups as f64
+            },
+            newton_total: self.steps.iter().map(|s| s.newton_iters).sum(),
+            mean_energy_j,
+            worst_violation_excess,
+        }
+    }
+
+    /// Machine-readable encoding: `{"summary": .., "delta_counts": ..,
+    /// "cache": .., "steps": [..]}` — byte-identical for identical seeds.
+    pub fn to_json(&self) -> Json {
+        let s = self.summary();
+        let opt = |x: Option<f64>| x.map(Json::Num).unwrap_or(Json::Null);
+        let summary = Json::Obj(vec![
+            ("events".into(), Json::Num(s.events as f64)),
+            ("accepted".into(), Json::Num(s.accepted as f64)),
+            ("rejected".into(), Json::Num(s.rejected as f64)),
+            ("absorbed".into(), Json::Num(s.absorbed as f64)),
+            ("cache_hits".into(), Json::Num(s.cache_hits as f64)),
+            ("warm_replans".into(), Json::Num(s.warm_replans as f64)),
+            ("cold_solves".into(), Json::Num(s.cold_solves as f64)),
+            ("cache_hit_rate".into(), Json::Num(s.cache_hit_rate)),
+            ("newton_total".into(), Json::Num(s.newton_total as f64)),
+            ("mean_energy_j".into(), Json::Num(s.mean_energy_j)),
+            ("worst_violation_excess".into(), opt(s.worst_violation_excess)),
+        ]);
+        let delta_counts = Json::Obj(
+            DELTA_KINDS
+                .iter()
+                .map(|&k| (k.to_string(), Json::Num(self.count_of(k) as f64)))
+                .collect(),
+        );
+        let cache = Json::Obj(vec![
+            ("hits".into(), Json::Num(self.cache.hits as f64)),
+            ("misses".into(), Json::Num(self.cache.misses as f64)),
+            ("len".into(), Json::Num(self.cache.len as f64)),
+            ("capacity".into(), Json::Num(self.cache.capacity as f64)),
+        ]);
+        let steps = Json::Arr(
+            self.steps
+                .iter()
+                .map(|st| {
+                    Json::Obj(vec![
+                        ("t_s".into(), Json::Num(st.t_s)),
+                        ("kind".into(), Json::Str(st.kind.into())),
+                        ("n".into(), Json::Num(st.n as f64)),
+                        ("accepted".into(), Json::Bool(st.accepted)),
+                        ("absorbed".into(), Json::Bool(st.absorbed)),
+                        ("cache_hit".into(), Json::Bool(st.cache_hit)),
+                        ("warm_started".into(), Json::Bool(st.warm_started)),
+                        ("energy_j".into(), opt(st.energy_j)),
+                        ("newton_iters".into(), Json::Num(st.newton_iters as f64)),
+                        ("outer_iters".into(), Json::Num(st.outer_iters as f64)),
+                        ("violation_excess".into(), opt(st.violation_excess)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::Obj(vec![
+            ("summary".into(), summary),
+            ("delta_counts".into(), delta_counts),
+            ("cache".into(), cache),
+            ("steps".into(), steps),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(kind: &'static str, accepted: bool, cache_hit: bool, warm: bool) -> StepRecord {
+        StepRecord {
+            t_s: 1.0,
+            kind,
+            n: 3,
+            accepted,
+            absorbed: false,
+            cache_hit,
+            warm_started: warm,
+            energy_j: accepted.then_some(2.0),
+            newton_iters: if accepted && !cache_hit { 10 } else { 0 },
+            outer_iters: 1,
+            violation_excess: accepted.then_some(-0.03),
+        }
+    }
+
+    #[test]
+    fn summary_partitions_served_paths() {
+        let mut m = FleetMetrics::new();
+        m.record(step(INITIAL_KIND, true, false, false)); // cold
+        m.record(step("channel", true, true, false)); // cache hit
+        m.record(step("join", true, false, true)); // warm replan
+        // A cached outcome originally produced by a warm replan still
+        // carries warm_started: it must classify as a cache hit, not both.
+        m.record(step("channel", true, true, true));
+        m.record(step("leave", false, false, false)); // rejected
+        // Absorbed environmental event: old plan now violates (+0.02),
+        // but the guarantee metric only aggregates accepted steps.
+        m.record(StepRecord {
+            absorbed: true,
+            energy_j: Some(3.0),
+            violation_excess: Some(0.02),
+            ..step("channel", false, false, false)
+        });
+        m.set_cache_stats(CacheStats { hits: 1, misses: 3, len: 2, capacity: 32 });
+        let s = m.summary();
+        assert_eq!((s.events, s.accepted, s.rejected, s.absorbed), (6, 4, 1, 1));
+        assert_eq!((s.cache_hits, s.warm_replans, s.cold_solves), (2, 1, 1));
+        assert_eq!(s.newton_total, 20);
+        assert!((s.cache_hit_rate - 0.25).abs() < 1e-12);
+        // mean energy and worst violation are over accepted steps only
+        assert!((s.mean_energy_j - 2.0).abs() < 1e-12);
+        assert_eq!(s.worst_violation_excess, Some(-0.03));
+        assert_eq!(m.count_of("join"), 1);
+        assert_eq!(m.count_of("bandwidth"), 0);
+    }
+
+    #[test]
+    fn json_is_parseable_and_null_encodes_disabled_checks() {
+        let mut m = FleetMetrics::new();
+        let mut st = step("risk", false, false, false);
+        st.violation_excess = None;
+        st.energy_j = None;
+        m.record(st);
+        let j = m.to_json();
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        let steps = back.get("steps").unwrap().as_arr().unwrap();
+        assert_eq!(steps.len(), 1);
+        assert_eq!(steps[0].get("violation_excess").unwrap(), &Json::Null);
+        assert_eq!(steps[0].get("energy_j").unwrap(), &Json::Null);
+        assert_eq!(
+            back.get("summary").unwrap().get("worst_violation_excess").unwrap(),
+            &Json::Null
+        );
+        let counts = back.get("delta_counts").unwrap();
+        assert_eq!(counts.get("risk").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn empty_metrics_summarize_to_zeroes() {
+        let s = FleetMetrics::new().summary();
+        assert_eq!(s.events, 0);
+        assert_eq!(s.cache_hit_rate, 0.0);
+        assert_eq!(s.mean_energy_j, 0.0);
+        assert!(s.worst_violation_excess.is_none());
+    }
+}

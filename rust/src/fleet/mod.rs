@@ -1,0 +1,38 @@
+//! Discrete-event fleet simulator: sustained churn for the planning
+//! engine.
+//!
+//! The paper's premise is that inference time and the wireless
+//! environment are *uncertain and time-varying*, but a single
+//! [`crate::engine::Planner::plan`] call only ever sees a static
+//! snapshot.  This module closes that gap: it feeds one long-lived
+//! planner a **seeded, reproducible stream of scenario changes** —
+//! Poisson device arrivals and departures, per-device Gauss–Markov
+//! channel fading, deadline/risk renegotiations, uplink-budget changes —
+//! and measures how the engine's incremental machinery (plan cache, warm
+//! replans, cold feasibility fallbacks) behaves over time, validating
+//! every accepted plan against the Monte-Carlo uncertainty simulator.
+//!
+//! Layout:
+//!
+//! * [`events`] — the deterministic binary-heap event queue and the
+//!   event vocabulary;
+//! * [`driver`] — maps events to [`crate::engine::ScenarioDelta`]s,
+//!   drives [`crate::engine::Planner::replan`] (cache probe first, cold
+//!   fallback last), refuses infeasible *negotiable* events (admission
+//!   control) and absorbs infeasible *environmental* ones via
+//!   [`crate::engine::Planner::rebase`];
+//! * [`metrics`] — the per-step time series and aggregate summary, with
+//!   deterministic JSON export (same seed ⇒ byte-identical output at
+//!   any thread count).
+//!
+//! Entry points: [`run`] / [`FleetOptions`] from Rust, `ripra simulate`
+//! from the CLI, `benches/fleet_churn.rs` for the perf trajectory, and
+//! `examples/fleet_churn.rs` for a narrated walkthrough.
+
+pub mod driver;
+pub mod events;
+pub mod metrics;
+
+pub use driver::{run, FleetOptions, FleetReport};
+pub use events::{EventQueue, FleetEvent};
+pub use metrics::{FleetMetrics, FleetSummary, StepRecord, DELTA_KINDS, INITIAL_KIND};

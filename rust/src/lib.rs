@@ -38,6 +38,9 @@
 //!   substrate: DNN/hardware profiles, synthetic profiling, FDMA uplink,
 //!   DVFS energy.
 //! * [`sim`] — Monte-Carlo validation of the chance constraint.
+//! * [`fleet`] — discrete-event fleet simulator: seeded churn streams
+//!   (join/leave, Gauss–Markov fading, QoS renegotiation) driving
+//!   `Planner::replan` end-to-end, with deterministic metrics export.
 //! * [`coordinator`] / [`runtime`] — the serving runtime executing plans
 //!   on AOT-compiled PJRT artifacts.
 //! * [`figures`] — regenerates every paper table/figure; [`util`] holds
@@ -52,6 +55,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod engine;
 pub mod figures;
+pub mod fleet;
 pub mod linalg;
 pub mod models;
 pub mod optim;

@@ -2,10 +2,11 @@
 //!
 //! Subcommands (hand-rolled parsing; no clap offline):
 //!
-//! * `ripra plan    ...` — flags derived from [`PlanRequest::CLI_FLAGS`]
-//! * `ripra figure  <fig13a|...|all> [--out DIR] [--quick]`
-//! * `ripra serve   --model M --n N [--requests K] [--time-scale X]`
-//! * `ripra profile --model M [--trials T]`
+//! * `ripra plan     ...` — flags derived from [`PlanRequest::CLI_FLAGS`]
+//! * `ripra simulate ...` — flags derived from [`FleetOptions::CLI_FLAGS`]
+//! * `ripra figure   <fig13a|...|all> [--out DIR] [--quick]`
+//! * `ripra serve    --model M --n N [--requests K] [--time-scale X]`
+//! * `ripra profile  --model M [--trials T]`
 //! * `ripra selftest`
 //!
 //! All planning routes through the [`ripra::engine`] facade.
@@ -17,8 +18,9 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use ripra::coordinator::{self, ServeOptions};
-use ripra::engine::{PlanRequest, Planner, PlannerBuilder, Policy};
+use ripra::engine::{CliFlag, PlanRequest, Planner, PlannerBuilder, Policy};
 use ripra::figures::{self, Effort};
+use ripra::fleet::{self, FleetOptions};
 use ripra::models::manifest::Manifest;
 use ripra::models::ModelProfile;
 use ripra::optim::Scenario;
@@ -38,37 +40,47 @@ fn main() {
     std::process::exit(code);
 }
 
-/// The `plan` usage section (flag list + per-flag help) is generated
-/// from [`PlanRequest::CLI_FLAGS`] so the CLI surface cannot drift from
-/// the engine API.
-fn usage() -> String {
-    let mut plan_line = String::from("plan    ");
-    let mut width = plan_line.len();
-    for f in PlanRequest::CLI_FLAGS {
+/// Build one subcommand's usage section (wrapped flag list + per-flag
+/// help) from its [`CliFlag`] table.
+fn derived_usage(head: &str, flags: &[CliFlag]) -> (String, String) {
+    let mut line = String::from(head);
+    let mut width = line.len();
+    for f in flags {
         let piece = match f.value {
             Some(v) => format!(" [--{} {}]", f.name, v),
             None => format!(" [--{}]", f.name),
         };
         if width + piece.len() > 76 {
-            plan_line.push_str("\n\x20       ");
+            line.push_str("\n\x20       ");
             width = 8;
         }
         width += piece.len();
-        plan_line.push_str(&piece);
+        line.push_str(&piece);
     }
-    let mut plan_help = String::new();
-    for f in PlanRequest::CLI_FLAGS {
+    let mut help = String::new();
+    for f in flags {
         let left = match f.value {
             Some(v) => format!("--{} {}", f.name, v),
             None => format!("--{}", f.name),
         };
-        plan_help.push_str(&format!("\x20          {:<42} {}\n", left, f.help));
+        help.push_str(&format!("\x20          {:<42} {}\n", left, f.help));
     }
+    (line, help)
+}
+
+/// The `plan` and `simulate` usage sections are generated from
+/// [`PlanRequest::CLI_FLAGS`] / [`FleetOptions::CLI_FLAGS`] so the CLI
+/// surface cannot drift from the engine and fleet APIs.
+fn usage() -> String {
+    let (plan_line, plan_help) = derived_usage("plan    ", PlanRequest::CLI_FLAGS);
+    let (sim_line, sim_help) = derived_usage("simulate", FleetOptions::CLI_FLAGS);
     format!(
-        "usage: ripra <plan|figure|serve|profile|selftest> [options]\n\
+        "usage: ripra <plan|simulate|figure|serve|profile|selftest> [options]\n\
          \n\
          {plan_line}\n\
          {plan_help}\
+         {sim_line}\n\
+         {sim_help}\
          figure   <name|all> [--out DIR] [--quick]\n\
          serve    --model alexnet|resnet152 [--n N] [--requests K] [--time-scale X]\n\
          \x20        [--deadline S] [--risk E] [--bandwidth HZ] [--seed S]\n\
@@ -77,10 +89,14 @@ fn usage() -> String {
     )
 }
 
-/// Boolean flags (no value) accepted by the `plan` subcommand, derived
-/// from the same table as the usage text.
+/// Boolean flags (no value) in a subcommand's flag table.
+fn bool_flags_of(flags: &[CliFlag]) -> Vec<&'static str> {
+    flags.iter().filter(|f| f.value.is_none()).map(|f| f.name).collect()
+}
+
+/// Boolean flags accepted by the `plan` subcommand.
 fn plan_bool_flags() -> Vec<&'static str> {
-    PlanRequest::CLI_FLAGS.iter().filter(|f| f.value.is_none()).map(|f| f.name).collect()
+    bool_flags_of(PlanRequest::CLI_FLAGS)
 }
 
 /// `--key value` / `--key=value` flags into a map; flags listed in
@@ -163,6 +179,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match cmd.as_str() {
         "plan" => cmd_plan(rest),
+        "simulate" => cmd_simulate(rest),
         "figure" => cmd_figure(rest),
         "serve" => cmd_serve(rest),
         "profile" => cmd_profile(rest),
@@ -250,6 +267,84 @@ fn cmd_plan(args: &[String]) -> Result<()> {
             trials, rep.worst_violation, sc.devices[0].risk, rep.mean_energy
         );
     }
+    Ok(())
+}
+
+/// Assemble [`FleetOptions`] from parsed `simulate` flags.  Defaults add
+/// headroom (bandwidth ×1.25, deadline +20 ms) over the static per-model
+/// setting so device joins stay admissible under churn.
+fn fleet_options_of(flags: &HashMap<String, String>) -> Result<FleetOptions> {
+    let model = model_of(flags)?;
+    let (b_def, d_def, e_def) = figures::default_setting(&model.name);
+    Ok(FleetOptions {
+        n0: flag_usize(flags, "n", 6)?,
+        duration_s: flag_f64(flags, "duration", 30.0)?,
+        arrival_rate_hz: flag_f64(flags, "arrival-rate", 0.2)?,
+        churn: flag_f64(flags, "churn", 1.0)?,
+        total_bandwidth_hz: flag_f64(flags, "bandwidth", b_def * 1.25)?,
+        deadline_s: flag_f64(flags, "deadline", d_def + 0.02)?,
+        risk: flag_f64(flags, "risk", e_def)?,
+        trials: flag_usize(flags, "trials", 1000)?,
+        seed: flag_usize(flags, "seed", 7)? as u64,
+        threads: 0,
+        model,
+    })
+}
+
+fn cmd_simulate(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args, &bool_flags_of(FleetOptions::CLI_FLAGS))?;
+    let opts = fleet_options_of(&flags)?;
+    let t0 = std::time::Instant::now();
+    let rep = fleet::run(&opts).map_err(|e| anyhow!(e.to_string()))?;
+    if flags.contains_key("json") {
+        // The JSON payload is a deterministic function of the seed (no
+        // wall-clock fields), so repeat runs are byte-identical.
+        println!("{}", rep.to_json().to_string_pretty());
+        return Ok(());
+    }
+    let s = rep.metrics.summary();
+    println!(
+        "fleet: model={}, n0={}, {:.0}s simulated, arrivals {:.2}/s, churn x{:.2}, seed {}",
+        opts.model.name, opts.n0, opts.duration_s, opts.arrival_rate_hz, opts.churn, opts.seed
+    );
+    println!(
+        "events: {} total, {} accepted, {} rejected, {} absorbed ({:.2}s wall)",
+        s.events,
+        s.accepted,
+        s.rejected,
+        s.absorbed,
+        t0.elapsed().as_secs_f64()
+    );
+    let counts = fleet::DELTA_KINDS
+        .iter()
+        .map(|&k| format!("{k}:{}", rep.metrics.count_of(k)))
+        .collect::<Vec<_>>()
+        .join("  ");
+    println!("deltas: {counts}");
+    println!(
+        "served: {} cache hits, {} warm replans, {} cold solves (cache hit rate {:.1}%)",
+        s.cache_hits,
+        s.warm_replans,
+        s.cold_solves,
+        100.0 * s.cache_hit_rate
+    );
+    println!(
+        "solver: {} Newton iterations total; mean planned energy {:.4} J",
+        s.newton_total, s.mean_energy_j
+    );
+    match s.worst_violation_excess {
+        Some(w) => println!(
+            "Monte-Carlo ({} trials/step): worst violation excess over eps {w:+.4}",
+            opts.trials
+        ),
+        None => println!("Monte-Carlo check disabled (--trials 0)"),
+    }
+    println!(
+        "final fleet: {} devices, B={:.2} MHz, planned energy {:.4} J",
+        rep.final_scenario.n(),
+        rep.final_scenario.total_bandwidth_hz / 1e6,
+        rep.final_outcome.energy
+    );
     Ok(())
 }
 

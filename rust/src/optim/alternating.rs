@@ -100,20 +100,7 @@ impl std::error::Error for PlanError {}
 /// feasibility-friendly start (used when the caller gives none).
 pub fn heuristic_partition(sc: &Scenario) -> Vec<usize> {
     let b_each = sc.total_bandwidth_hz / sc.n() as f64;
-    sc.devices
-        .iter()
-        .map(|d| {
-            (0..d.model.num_points())
-                .min_by(|&a, &b| {
-                    let ta = d.t_total_mean(a, d.model.device.f_max_ghz, b_each)
-                        + d.margin(a, Policy::Robust);
-                    let tb = d.t_total_mean(b, d.model.device.f_max_ghz, b_each)
-                        + d.margin(b, Policy::Robust);
-                    ta.partial_cmp(&tb).unwrap()
-                })
-                .unwrap()
-        })
-        .collect()
+    sc.devices.iter().map(|d| d.min_margin_time_point(b_each, Policy::Robust)).collect()
 }
 
 /// Run Algorithm 2.  `init_partition` overrides the heuristic start

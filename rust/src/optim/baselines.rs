@@ -32,12 +32,36 @@ pub struct BaselinePlan {
     pub newton_iters: usize,
 }
 
+/// Baseline failure.  `infeasible` distinguishes "no decision satisfies
+/// the deadlines" from a numerical solver breakdown — carried
+/// structurally so downstream classification (`engine::PlanError`) never
+/// depends on message wording.
 #[derive(Debug, Clone)]
-pub struct BaselineError(pub String);
+pub struct BaselineError {
+    /// Human-readable detail.
+    pub message: String,
+    /// The failure is an infeasibility, not a solver error.
+    pub infeasible: bool,
+}
+
+impl BaselineError {
+    fn infeasibility(message: impl Into<String>) -> BaselineError {
+        BaselineError { message: message.into(), infeasible: true }
+    }
+}
+
+impl From<ResourceError> for BaselineError {
+    fn from(e: ResourceError) -> BaselineError {
+        BaselineError {
+            message: e.to_string(),
+            infeasible: matches!(e, ResourceError::Infeasible { .. }),
+        }
+    }
+}
 
 impl std::fmt::Display for BaselineError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "baseline failed: {}", self.0)
+        write!(f, "baseline failed: {}", self.message)
     }
 }
 
@@ -67,20 +91,7 @@ pub(crate) fn best_point(
 /// total time at f_max, equal bandwidth split).
 fn start_partition(sc: &Scenario, policy: Policy) -> Vec<usize> {
     let b_each = sc.total_bandwidth_hz / sc.n() as f64;
-    sc.devices
-        .iter()
-        .map(|d| {
-            (0..d.model.num_points())
-                .min_by(|&a, &b| {
-                    let ta =
-                        d.t_total_mean(a, d.model.device.f_max_ghz, b_each) + d.margin(a, policy);
-                    let tb =
-                        d.t_total_mean(b, d.model.device.f_max_ghz, b_each) + d.margin(b, policy);
-                    ta.partial_cmp(&tb).unwrap()
-                })
-                .unwrap()
-        })
-        .collect()
+    sc.devices.iter().map(|d| d.min_margin_time_point(b_each, policy)).collect()
 }
 
 /// Alternation with exact per-device enumeration for the partition step.
@@ -111,7 +122,7 @@ pub(crate) fn alternate_enumeration_core(
         Err(_) => {
             partition = start_partition(sc, policy);
             resource::solve_warm_with(sc, &partition, policy, None, ws)
-                .map_err(|e| BaselineError(e.to_string()))?
+                .map_err(BaselineError::from)?
         }
     };
     newton += res.newton_iters;
@@ -209,7 +220,7 @@ pub(crate) fn exhaustive_core(
         b.newton_iters = newton;
         b
     })
-    .ok_or_else(|| BaselineError("infeasible: no assignment satisfies the deadlines".into()))
+    .ok_or_else(|| BaselineError::infeasibility("no assignment satisfies the deadlines"))
 }
 
 /// Practical "optimal" at larger N: multi-start alternation with exact
@@ -239,7 +250,7 @@ pub fn multistart_optimal(
             }
         }
     }
-    best.ok_or_else(|| BaselineError("all restarts infeasible".into()))
+    best.ok_or_else(|| BaselineError::infeasibility("all restarts infeasible"))
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

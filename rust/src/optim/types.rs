@@ -74,6 +74,23 @@ impl Device {
             + self.uplink.e_off(self.model.d_bits(m), b_hz)
     }
 
+    /// Feasibility-friendliest partition point: minimum margin-adjusted
+    /// mean total time at f_max and bandwidth `b_hz`.  The one shared
+    /// implementation behind every heuristic start (Algorithm 2's, the
+    /// enumeration baselines', and the engine's joiner fallback) so the
+    /// selection rule cannot drift between them.  Ties keep `min_by`'s
+    /// last-minimum semantics (bit-compatible with the historical code).
+    pub(crate) fn min_margin_time_point(&self, b_hz: f64, policy: Policy) -> usize {
+        let f = self.model.device.f_max_ghz;
+        (0..self.model.num_points())
+            .min_by(|&a, &b| {
+                let ta = self.t_total_mean(a, f, b_hz) + self.margin(a, policy);
+                let tb = self.t_total_mean(b, f, b_hz) + self.margin(b, policy);
+                ta.partial_cmp(&tb).unwrap()
+            })
+            .unwrap_or(0)
+    }
+
     /// Deterministic (ECR-transformed) deadline test at (m, f, b) —
     /// constraint (22) and its baseline analogues.
     pub fn deadline_ok(&self, m: usize, f_ghz: f64, b_hz: f64, policy: Policy) -> bool {

@@ -1,0 +1,106 @@
+//! Sharded multi-tenant planner service walkthrough: admit two tenant
+//! fleets across 4 planner shards, push a coalescible burst of deltas
+//! through the bounded queue, churn membership to trigger the
+//! load-factor rebalancer, and print the service/cache counters.
+//!
+//! Run with `cargo run --release --example planner_service`.
+//! Equivalent fleet-level CLI: `ripra simulate --shards 4 --json`.
+
+use ripra::channel::Uplink;
+use ripra::engine::ScenarioDelta;
+use ripra::models::ModelProfile;
+use ripra::optim::types::{Device, Scenario};
+use ripra::service::{PlannerService, ServiceError, ServiceOptions};
+
+fn device(distance_m: f64, deadline_s: f64) -> Device {
+    Device {
+        model: ModelProfile::alexnet_paper(),
+        uplink: Uplink::from_distance(distance_m),
+        deadline_s,
+        risk: 0.05,
+    }
+}
+
+fn fleet(distances: &[f64], bandwidth_hz: f64, deadline_s: f64) -> Scenario {
+    Scenario {
+        devices: distances.iter().map(|&d| device(d, deadline_s)).collect(),
+        total_bandwidth_hz: bandwidth_hz,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut svc = PlannerService::new(ServiceOptions {
+        shards: 4,
+        queue_capacity: 8,
+        load_factor: 1.25,
+        ..ServiceOptions::default()
+    })
+    .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+
+    // Two independent tenants, routed device-by-device across the shards.
+    let a = fleet(&[60.0, 120.0, 180.0, 240.0, 300.0], 14e6, 0.25);
+    let b = fleet(&[90.0, 150.0, 210.0], 10e6, 0.28);
+    let out_a = svc.admit_tenant(1, a).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let out_b = svc.admit_tenant(2, b).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    println!("admitted tenant 1: energy {:.4} J over shards {:?}", out_a.energy_j,
+        svc.device_shards(1).unwrap());
+    println!("admitted tenant 2: energy {:.4} J over shards {:?}", out_b.energy_j,
+        svc.device_shards(2).unwrap());
+    println!("shard loads: {:?} (bound {})", svc.shard_loads(), svc.current_load_bound());
+
+    // A burst of channel jitter + bandwidth renegotiation: the later
+    // writes cover the earlier ones, so the drain coalesces the batch.
+    let gain = svc.assembled_scenario(1).unwrap().devices[0].uplink;
+    for delta in [
+        ScenarioDelta::TotalBandwidth(12e6),
+        ScenarioDelta::Channel { device: 0, uplink: Uplink::from_gain_db(gain.gain_db() - 0.5) },
+        ScenarioDelta::TotalBandwidth(13e6),
+        ScenarioDelta::Channel { device: 0, uplink: Uplink::from_gain_db(gain.gain_db() - 1.0) },
+    ] {
+        svc.submit(1, delta).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    }
+    let outs = svc.drain();
+    let applied = outs.iter().filter(|o| o.shard_ops > 0).count();
+    println!("burst of {} deltas drained as {} shard passes (coalesced {})",
+        outs.len(), applied, outs.len() - applied);
+
+    // Membership churn: joins spread by fingerprint + load bound.
+    for step in 0..3 {
+        let joiner = device(100.0 + 40.0 * step as f64, 0.25);
+        svc.submit(1, ScenarioDelta::Join(joiner))
+            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    }
+    for out in svc.drain() {
+        println!("join → {:?}, tenant energy {:.4} J, {} newton iters",
+            out.disposition, out.energy_j, out.newton_iters);
+    }
+    println!("shard loads after churn: {:?} (bound {})",
+        svc.shard_loads(), svc.current_load_bound());
+
+    // Backpressure: the bounded queue refuses loudly when full.
+    let mut refused = 0;
+    for i in 0..12 {
+        match svc.submit(2, ScenarioDelta::TotalBandwidth(10e6 + i as f64 * 1e4)) {
+            Ok(()) => {}
+            Err(ServiceError::Backpressure { capacity }) => {
+                refused += 1;
+                if refused == 1 {
+                    println!("queue full at capacity {capacity}: refusing (never dropping)");
+                }
+            }
+            Err(e) => return Err(anyhow::anyhow!(e.to_string())),
+        }
+    }
+    svc.drain();
+
+    let s = svc.stats();
+    let c = svc.cache_stats();
+    println!(
+        "stats: {} submitted, {} refused, {} superseded, {} shard ops \
+         ({} replans, {} cache hits, {} rebases), {} rebalance moves",
+        s.submitted, s.refused, s.superseded, s.shard_ops, s.replans, s.cache_hits,
+        s.rebases, s.rebalance_moves
+    );
+    println!("aggregated plan caches: {} hits / {} misses ({} entries)", c.hits, c.misses, c.len);
+    Ok(())
+}

@@ -1,10 +1,15 @@
 //! Fleet-churn end-to-end benchmark: one full discrete-event simulation
 //! (events → `Planner::replan` → Monte-Carlo check) per iteration, run
-//! sequentially and with the default thread fan-out.  Timings plus the
-//! run's deterministic health scalars (cache hit rate, warm/cold split,
-//! Newton totals, violation excess) merge into `BENCH_planner.json` at
-//! the repo root alongside the `alg2_*` planner cases — the perf
-//! trajectory future PRs diff against (see EXPERIMENTS.md §Fleet churn).
+//! sequentially, with the default thread fan-out, and through the
+//! sharded `PlannerService` at K ∈ {1, 4, 8} (`fleet_churn_6s_shards*`
+//! rows — the sharded-vs-serial speedup in the perf trajectory).
+//! Timings plus the run's deterministic health scalars (cache hit rate,
+//! warm/cold split, Newton totals, violation excess) merge into
+//! `BENCH_planner.json` at the repo root alongside the `alg2_*` planner
+//! cases (see EXPERIMENTS.md §Fleet churn and §Service).
+//!
+//! `cargo bench --bench fleet_churn -- --test` (or `BENCH_SMOKE=1`) runs
+//! every case once for CI smoke coverage.
 
 use std::path::Path;
 use std::time::Duration;
@@ -14,21 +19,29 @@ use ripra::util::bench::Bencher;
 
 fn main() {
     let mut bench =
-        Bencher::new().with_window(Duration::from_millis(300), Duration::from_secs(3));
+        Bencher::auto().with_window(Duration::from_millis(300), Duration::from_secs(3));
 
-    for (tag, threads) in [("seq", 1usize), ("par", 0usize)] {
-        let opts = FleetOptions {
-            n0: 6,
-            duration_s: 6.0,
-            arrival_rate_hz: 0.5,
-            churn: 2.0,
-            trials: 200,
-            seed: 0xF1EE7,
-            threads,
-            ..FleetOptions::default()
-        };
-        let name = format!("fleet_churn_6s_{tag}");
-        bench.bench(&name, || {
+    let base = |threads: usize, shards: usize| FleetOptions {
+        n0: 6,
+        duration_s: 6.0,
+        arrival_rate_hz: 0.5,
+        churn: 2.0,
+        trials: 200,
+        seed: 0xF1EE7,
+        threads,
+        shards,
+        ..FleetOptions::default()
+    };
+    let cases = [
+        ("fleet_churn_6s_seq", base(1, 0)),
+        ("fleet_churn_6s_par", base(0, 0)),
+        ("fleet_churn_6s_shards1", base(0, 1)),
+        ("fleet_churn_6s_shards4", base(0, 4)),
+        ("fleet_churn_6s_shards8", base(0, 8)),
+    ];
+
+    for (name, opts) in cases {
+        bench.bench(name, || {
             fleet::run(&opts)
                 .map(|r| r.metrics.summary().newton_total as f64)
                 .unwrap_or(f64::NAN)
@@ -37,14 +50,15 @@ fn main() {
         // timed iteration — same seed, no wall-clock in the metrics).
         if let Ok(rep) = fleet::run(&opts) {
             let s = rep.metrics.summary();
-            bench.attach(&name, "events", s.events as f64);
-            bench.attach(&name, "accepted", s.accepted as f64);
-            bench.attach(&name, "cache_hit_rate", s.cache_hit_rate);
-            bench.attach(&name, "warm_replans", s.warm_replans as f64);
-            bench.attach(&name, "cold_solves", s.cold_solves as f64);
-            bench.attach(&name, "newton_total", s.newton_total as f64);
+            bench.attach(name, "events", s.events as f64);
+            bench.attach(name, "accepted", s.accepted as f64);
+            bench.attach(name, "cache_hit_rate", s.cache_hit_rate);
+            bench.attach(name, "warm_replans", s.warm_replans as f64);
+            bench.attach(name, "cold_solves", s.cold_solves as f64);
+            bench.attach(name, "newton_total", s.newton_total as f64);
+            bench.attach(name, "mean_energy_j", s.mean_energy_j);
             if let Some(w) = s.worst_violation_excess {
-                bench.attach(&name, "worst_violation_excess", w);
+                bench.attach(name, "worst_violation_excess", w);
             }
         }
     }

@@ -17,8 +17,9 @@ use ripra::util::bench::Bencher;
 use ripra::util::rng::Rng;
 
 fn main() {
+    // `-- --test` / BENCH_SMOKE=1 runs every case once (CI smoke).
     let mut bench =
-        Bencher::new().with_window(Duration::from_millis(300), Duration::from_secs(3));
+        Bencher::auto().with_window(Duration::from_millis(300), Duration::from_secs(3));
 
     for model in [ModelProfile::alexnet_paper(), ModelProfile::resnet152_paper()] {
         let (b0, d, eps) = ripra::figures::default_setting(&model.name);

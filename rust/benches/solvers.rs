@@ -30,7 +30,8 @@ fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
 }
 
 fn main() {
-    let mut bench = Bencher::new();
+    // `-- --test` / BENCH_SMOKE=1 runs every case once (CI smoke).
+    let mut bench = Bencher::auto();
     let mut rng = Rng::new(1);
 
     for n in [16usize, 64, 128] {

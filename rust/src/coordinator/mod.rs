@@ -133,6 +133,42 @@ pub fn plan_and_serve(
     Ok((outcome, report))
 }
 
+/// Plan through a sharded [`crate::service::PlannerService`] — the
+/// `ripra serve --shards K` path — then serve the assembled fleet-wide
+/// decision.  The scenario is admitted as tenant `tenant`; a long-lived
+/// caller keeps the service borrowed so every shard's plan cache and
+/// Newton workspace stay warm across scenario changes, exactly like the
+/// single-planner path above.
+pub fn plan_and_serve_sharded(
+    artifacts_dir: PathBuf,
+    sc: &Scenario,
+    service: &mut crate::service::PlannerService,
+    tenant: crate::service::TenantId,
+    opts: &ServeOptions,
+) -> Result<(crate::engine::PlanOutcome, ServeReport)> {
+    // Re-serving the same tenant id replaces its fleet; the shard
+    // planners keep their caches and workspaces, so the re-admission's
+    // cold plans probe warm.
+    if service.tenant_devices(tenant).is_some() {
+        service.remove_tenant(tenant);
+    }
+    let admitted =
+        service.admit_tenant(tenant, sc.clone()).map_err(|e| anyhow!(e.to_string()))?;
+    let plan = service.assembled_plan(tenant).expect("tenant admitted above");
+    let outcome = crate::engine::PlanOutcome {
+        plan: plan.clone(),
+        energy: admitted.energy_j,
+        policy: crate::engine::Policy::Robust,
+        diagnostics: crate::engine::Diagnostics {
+            newton_iters: admitted.newton_iters,
+            outer_iters: admitted.outer_iters,
+            ..Default::default()
+        },
+    };
+    let report = serve(artifacts_dir, sc, &plan, opts)?;
+    Ok((outcome, report))
+}
+
 /// Run the serving loop for one scenario + plan on real artifacts.
 pub fn serve(
     artifacts_dir: PathBuf,

@@ -17,6 +17,18 @@ pub struct CacheStats {
     pub capacity: usize,
 }
 
+impl CacheStats {
+    /// Fold another cache's counters into this one — how the service
+    /// layer aggregates its per-shard planner caches into the single
+    /// fleet-level cache block of the metrics JSON.
+    pub fn absorb(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.len += other.len;
+        self.capacity += other.capacity;
+    }
+}
+
 /// Bounded LRU store: most-recently-used entry last.
 pub(crate) struct PlanCache {
     capacity: usize,
@@ -129,6 +141,13 @@ mod tests {
         c.insert(1, outcome(1.0));
         assert!(c.get(1).is_none());
         assert_eq!(c.stats().len, 0);
+    }
+
+    #[test]
+    fn stats_absorb_sums_every_counter() {
+        let mut a = CacheStats { hits: 1, misses: 2, len: 3, capacity: 4 };
+        a.absorb(&CacheStats { hits: 10, misses: 20, len: 30, capacity: 40 });
+        assert_eq!(a, CacheStats { hits: 11, misses: 22, len: 33, capacity: 44 });
     }
 
     #[test]

@@ -52,4 +52,6 @@ pub mod request;
 pub use cache::CacheStats;
 pub use outcome::{Diagnostics, PlanError, PlanOutcome};
 pub use planner::{Planner, PlannerBuilder};
-pub use request::{scenario_fingerprint, CliFlag, PlanRequest, Policy, ScenarioDelta};
+pub use request::{
+    device_fingerprint, scenario_fingerprint, CliFlag, PlanRequest, Policy, ScenarioDelta,
+};

@@ -154,6 +154,37 @@ impl Planner {
         self.last.as_ref().map(|l| &l.scenario)
     }
 
+    /// Outcome of the last successful `plan`/`replan`, if any.
+    pub fn last_outcome(&self) -> Option<&PlanOutcome> {
+        self.last.as_ref().map(|l| &l.outcome)
+    }
+
+    /// Install `(scenario, outcome)` as the planner's replan base without
+    /// solving — the multiplexing primitive a shard planner hosting
+    /// several tenants uses to switch which sub-fleet a follow-up
+    /// [`Planner::replan`]/[`Planner::rebase`] continues from.
+    ///
+    /// Deliberately touches nothing but the base: the plan cache, its
+    /// hit/miss counters, and the Newton workspace are untouched, so a
+    /// base restore between tenants cannot perturb any cached or counted
+    /// state.  Errors when the outcome's decision shape doesn't fit the
+    /// scenario.
+    pub fn set_base(&mut self, scenario: Scenario, outcome: PlanOutcome) -> Result<(), PlanError> {
+        let n = scenario.n();
+        if outcome.plan.partition.len() != n
+            || outcome.plan.bandwidth_hz.len() != n
+            || outcome.plan.freq_ghz.len() != n
+        {
+            return Err(PlanError::InvalidRequest(format!(
+                "cannot set a {}-device plan as the base for {n} devices",
+                outcome.plan.partition.len()
+            )));
+        }
+        let policy = outcome.policy.clone();
+        self.last = Some(LastSolve { scenario, policy, outcome });
+        Ok(())
+    }
+
     /// Plan a scenario under a policy.
     ///
     /// On a cache-miss this solves cold and the result is bit-identical

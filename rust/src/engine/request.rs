@@ -223,15 +223,19 @@ fn hash_scenario(h: &mut Fnv, sc: &Scenario) {
     h.usize(sc.n());
     h.q(sc.total_bandwidth_hz, quanta::BANDWIDTH_HZ);
     for d in &sc.devices {
-        h.bytes(d.model.name.as_bytes());
-        h.q(d.deadline_s, quanta::DEADLINE_S);
-        h.q(d.risk, quanta::RISK);
-        h.q(10.0 * d.uplink.gain.log10(), quanta::GAIN_DB);
-        h.q(d.uplink.p_tx, quanta::POWER_W);
-        // noise PSD on the same dB grid as the gain — all three Uplink
-        // fields shape the rate, so all three key the cache
-        h.q(10.0 * d.uplink.n0.log10(), quanta::GAIN_DB);
+        hash_device(h, d);
     }
+}
+
+fn hash_device(h: &mut Fnv, d: &Device) {
+    h.bytes(d.model.name.as_bytes());
+    h.q(d.deadline_s, quanta::DEADLINE_S);
+    h.q(d.risk, quanta::RISK);
+    h.q(10.0 * d.uplink.gain.log10(), quanta::GAIN_DB);
+    h.q(d.uplink.p_tx, quanta::POWER_W);
+    // noise PSD on the same dB grid as the gain — all three Uplink
+    // fields shape the rate, so all three key the cache
+    h.q(10.0 * d.uplink.n0.log10(), quanta::GAIN_DB);
 }
 
 /// Fingerprint of a bare scenario under a policy (what `replan` inserts
@@ -239,6 +243,17 @@ fn hash_scenario(h: &mut Fnv, sc: &Scenario) {
 /// hits the cache).
 pub fn scenario_fingerprint(sc: &Scenario, policy: &Policy) -> u64 {
     PlanRequest::new(sc.clone(), policy.clone()).fingerprint()
+}
+
+/// Fingerprint of one device on the same quantization grid the plan
+/// cache uses (model, deadline ±0.1 ms, risk ±1e-4, channel ±0.1 dB,
+/// power ±1 mW).  The service layer keys its device→shard routing on
+/// this, so routing inherits the cache's sub-quantum insensitivity and
+/// there is exactly one definition of "the same device".
+pub fn device_fingerprint(d: &Device) -> u64 {
+    let mut h = Fnv::new();
+    hash_device(&mut h, d);
+    h.finish()
 }
 
 /// FNV-1a, 64-bit — tiny, dependency-free, stable across runs.

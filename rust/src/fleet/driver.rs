@@ -1,6 +1,8 @@
 //! The fleet driver: maps discrete events to [`ScenarioDelta`]s, drives
-//! one long-lived [`Planner`] through the resulting stream, and validates
-//! every accepted plan with the Monte-Carlo simulator.
+//! a long-lived planning backend — one bare [`Planner`], or a sharded
+//! [`PlannerService`] when [`FleetOptions::shards`] ≥ 1 — through the
+//! resulting stream, and validates every accepted plan with the
+//! Monte-Carlo simulator.
 //!
 //! Per popped event the driver
 //!
@@ -32,11 +34,13 @@
 
 use crate::channel::{GaussMarkov, Uplink};
 use crate::engine::{
-    CliFlag, PlanError, PlanOutcome, PlanRequest, Planner, PlannerBuilder, Policy, ScenarioDelta,
+    CacheStats, CliFlag, Diagnostics, PlanError, PlanOutcome, PlanRequest, Planner,
+    PlannerBuilder, Policy, ScenarioDelta,
 };
 use crate::models::ModelProfile;
-use crate::optim::types::{Device, Scenario};
+use crate::optim::types::{Device, Plan, Scenario};
 use crate::profile::Dist;
+use crate::service::{Disposition, PlannerService, ServiceError, ServiceOptions, TenantId};
 use crate::sim::{self, SimOptions};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -99,6 +103,12 @@ pub struct FleetOptions {
     pub seed: u64,
     /// Planner worker threads (0 = one per core; never changes results).
     pub threads: usize,
+    /// Planner-service shards: 0 drives one bare [`Planner`] (the
+    /// serial path), K ≥ 1 drives a [`PlannerService`] with K shards.
+    /// Unlike `threads`, the shard count *does* change results (it
+    /// partitions the bandwidth budget), so it is part of the exported
+    /// config; a one-shard service is bit-identical to the serial path.
+    pub shards: usize,
 }
 
 impl Default for FleetOptions {
@@ -115,6 +125,7 @@ impl Default for FleetOptions {
             trials: 1000,
             seed: 7,
             threads: 0,
+            shards: 0,
         }
     }
 }
@@ -150,6 +161,11 @@ impl FleetOptions {
             help: "Monte-Carlo trials per replan (0 disables)",
         },
         CliFlag { name: "seed", value: Some("S"), help: "event-stream seed" },
+        CliFlag {
+            name: "shards",
+            value: Some("K"),
+            help: "planner-service shards (0 = one serial planner)",
+        },
         CliFlag { name: "json", value: None, help: "emit the metrics time series as JSON" },
     ];
 
@@ -204,7 +220,10 @@ impl FleetOptions {
     }
 
     /// Config block of the metrics JSON (deterministic; excludes
-    /// `threads`, which never changes results).
+    /// `threads`, which never changes results).  `shards` is exported as
+    /// the *effective* shard count — the serial path is one shard — so a
+    /// `shards = 0` run and a one-shard service run, which are
+    /// bit-identical by contract, also export identical configs.
     pub fn to_json(&self) -> Json {
         Json::Obj(vec![
             ("model".into(), Json::Str(self.model.name.clone())),
@@ -217,6 +236,7 @@ impl FleetOptions {
             ("risk".into(), Json::Num(self.risk)),
             ("trials".into(), Json::Num(self.trials as f64)),
             ("seed".into(), Json::Num(self.seed as f64)),
+            ("shards".into(), Json::Num(self.shards.max(1) as f64)),
         ])
     }
 }
@@ -229,6 +249,181 @@ struct DeviceState {
     rng: Rng,
 }
 
+/// The one tenant id a fleet run occupies on the service backend.
+const FLEET_TENANT: TenantId = 0;
+
+/// Cost and provenance of an accepted planning step.
+struct Applied {
+    energy_j: f64,
+    newton_iters: usize,
+    outer_iters: usize,
+    cache_hit: bool,
+    warm_started: bool,
+}
+
+/// What one fleet event cost the planning backend.
+enum StepResult {
+    /// A plan exists for the changed scenario.
+    Applied(Applied),
+    /// Environmental infeasibility absorbed: scenario adopted, old plan
+    /// kept, energy re-priced.
+    Absorbed { energy_j: f64 },
+    /// Negotiable request refused; nothing rolled forward.
+    Rejected,
+}
+
+/// The planning backend a fleet run drives: one bare [`Planner`]
+/// (`shards = 0`), or a [`PlannerService`] hosting the fleet as one
+/// tenant (`shards ≥ 1`).  Both expose the same probe → warm-replan →
+/// absorb/reject step, so the event loop is backend-agnostic; a
+/// one-shard service is bit-identical to the serial path (pinned by
+/// `rust/tests/service.rs`).
+// One Backend exists per fleet run, so the variant-size asymmetry is
+// irrelevant and boxing would only add indirection.
+#[allow(clippy::large_enum_variant)]
+enum Backend {
+    Serial { planner: Planner, outcome: PlanOutcome },
+    Service(PlannerService),
+}
+
+impl Backend {
+    /// Build the backend and cold-plan the initial scenario.
+    fn bootstrap(opts: &FleetOptions, sc: &Scenario) -> Result<(Backend, Applied), PlanError> {
+        if opts.shards == 0 {
+            let mut planner = PlannerBuilder::new().threads(opts.threads).build();
+            let outcome = planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust))?;
+            let applied = Applied {
+                energy_j: outcome.energy,
+                newton_iters: outcome.diagnostics.newton_iters,
+                outer_iters: outcome.diagnostics.outer_iters,
+                cache_hit: false,
+                warm_started: false,
+            };
+            Ok((Backend::Serial { planner, outcome }, applied))
+        } else {
+            let mut svc = PlannerService::new(ServiceOptions {
+                shards: opts.shards,
+                threads: opts.threads,
+                ..ServiceOptions::default()
+            })
+            .map_err(|e| PlanError::InvalidRequest(e.to_string()))?;
+            let out = match svc.admit_tenant(FLEET_TENANT, sc.clone()) {
+                Ok(o) => o,
+                Err(ServiceError::Plan(e)) => return Err(e),
+                Err(e) => return Err(PlanError::InvalidRequest(e.to_string())),
+            };
+            let applied = Applied {
+                energy_j: out.energy_j,
+                newton_iters: out.newton_iters,
+                outer_iters: out.outer_iters,
+                cache_hit: false,
+                warm_started: false,
+            };
+            Ok((Backend::Service(svc), applied))
+        }
+    }
+
+    /// Drive one event's delta through the backend (`new_sc` is the
+    /// already-validated changed scenario): plan-cache probe first, warm
+    /// replan next; on infeasibility, environmental deltas are absorbed
+    /// and negotiable ones rejected.
+    fn step(
+        &mut self,
+        delta: &ScenarioDelta,
+        new_sc: &Scenario,
+        environmental: bool,
+    ) -> StepResult {
+        match self {
+            Backend::Serial { planner, outcome } => {
+                let req = PlanRequest::new(new_sc.clone(), Policy::Robust);
+                let out = match planner.plan_cached(&req) {
+                    Some(hit) => hit,
+                    None => match planner.replan(delta) {
+                        Ok(o) => o,
+                        Err(_) => {
+                            if environmental {
+                                if let Ok(energy) = planner.rebase(new_sc.clone()) {
+                                    outcome.energy = energy;
+                                    return StepResult::Absorbed { energy_j: energy };
+                                }
+                            }
+                            return StepResult::Rejected;
+                        }
+                    },
+                };
+                // A cache hit carries the *original* solve's diagnostics;
+                // the step itself cost no solver work, so its per-step
+                // iteration counts are zero (keeps newton_total
+                // comparable across runs with different hit rates).
+                let (newton_iters, outer_iters) = if out.diagnostics.cache_hit {
+                    (0, 0)
+                } else {
+                    (out.diagnostics.newton_iters, out.diagnostics.outer_iters)
+                };
+                let applied = Applied {
+                    energy_j: out.energy,
+                    newton_iters,
+                    outer_iters,
+                    cache_hit: out.diagnostics.cache_hit,
+                    warm_started: out.diagnostics.warm_started,
+                };
+                *outcome = out;
+                StepResult::Applied(applied)
+            }
+            Backend::Service(svc) => {
+                svc.submit(FLEET_TENANT, delta.clone()).expect("driver drains every event");
+                let out = svc.drain().pop().expect("one request per drain");
+                match out.disposition {
+                    Disposition::Applied => StepResult::Applied(Applied {
+                        energy_j: out.energy_j,
+                        newton_iters: out.newton_iters,
+                        outer_iters: out.outer_iters,
+                        cache_hit: out.cache_hit,
+                        warm_started: out.warm_started,
+                    }),
+                    Disposition::Absorbed => StepResult::Absorbed { energy_j: out.energy_j },
+                    Disposition::Rejected => StepResult::Rejected,
+                    Disposition::Superseded => {
+                        unreachable!("single-request drains never coalesce")
+                    }
+                }
+            }
+        }
+    }
+
+    /// The decision the fleet is currently executing (assembled across
+    /// shards on the service backend).
+    fn current_plan(&self) -> Plan {
+        match self {
+            Backend::Serial { outcome, .. } => outcome.plan.clone(),
+            Backend::Service(svc) => {
+                svc.assembled_plan(FLEET_TENANT).expect("fleet tenant admitted")
+            }
+        }
+    }
+
+    /// Plan-cache counters (aggregated over shards on the service path).
+    fn cache_stats(&self) -> CacheStats {
+        match self {
+            Backend::Serial { planner, .. } => planner.cache_stats(),
+            Backend::Service(svc) => svc.cache_stats(),
+        }
+    }
+
+    /// The last decision as a [`PlanOutcome`] for the report.
+    fn final_outcome(&self) -> PlanOutcome {
+        match self {
+            Backend::Serial { outcome, .. } => outcome.clone(),
+            Backend::Service(svc) => PlanOutcome {
+                plan: svc.assembled_plan(FLEET_TENANT).expect("fleet tenant admitted"),
+                energy: svc.tenant_energy(FLEET_TENANT).unwrap_or(0.0),
+                policy: Policy::Robust,
+                diagnostics: Diagnostics::default(),
+            },
+        }
+    }
+}
+
 /// Everything a fleet run produces.
 pub struct FleetReport {
     /// The options the run was configured with.
@@ -237,7 +432,8 @@ pub struct FleetReport {
     pub metrics: FleetMetrics,
     /// Fleet scenario at the end of the run.
     pub final_scenario: Scenario,
-    /// Last accepted plan outcome.
+    /// Last accepted plan outcome (on the service backend: the decision
+    /// assembled across shards, with default diagnostics).
     pub final_outcome: PlanOutcome,
 }
 
@@ -322,12 +518,11 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
     }
     let mut sc = Scenario { devices, total_bandwidth_hz: opts.total_bandwidth_hz };
 
-    let mut planner = PlannerBuilder::new().threads(opts.threads).build();
-    let mut outcome = planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust))?;
+    let (mut backend, boot) = Backend::bootstrap(opts, &sc)?;
 
     let mut metrics = FleetMetrics::new();
     let mut step_no: u64 = 0;
-    let mc_excess = |sc: &Scenario, plan: &crate::optim::types::Plan, step_no: u64| {
+    let mc_excess = |sc: &Scenario, plan: &Plan, step_no: u64| {
         (opts.trials > 0).then(|| {
             let dist = match step_no % 3 {
                 0 => Dist::Lognormal,
@@ -352,10 +547,10 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
         absorbed: false,
         cache_hit: false,
         warm_started: false,
-        energy_j: Some(outcome.energy),
-        newton_iters: outcome.diagnostics.newton_iters,
-        outer_iters: outcome.diagnostics.outer_iters,
-        violation_excess: mc_excess(&sc, &outcome.plan, step_no),
+        energy_j: Some(boot.energy_j),
+        newton_iters: boot.newton_iters,
+        outer_iters: boot.outer_iters,
+        violation_excess: mc_excess(&sc, &backend.current_plan(), step_no),
     });
 
     // Seed the event streams.
@@ -467,110 +662,86 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                 continue;
             }
         };
-        let req = PlanRequest::new(new_sc.clone(), Policy::Robust);
-        let out = match planner.plan_cached(&req) {
-            Some(hit) => hit,
-            None => match planner.replan(&delta) {
-                Ok(o) => o,
-                Err(_) => {
-                    // Negotiable requests are refused (admission
-                    // control); environmental facts cannot be — absorb
-                    // them: adopt the scenario, keep the old plan, and
-                    // record what it now incurs.
-                    let repriced = if matches!(kind, "channel" | "bandwidth") {
-                        planner.rebase(new_sc.clone()).ok()
-                    } else {
-                        None
-                    };
-                    match repriced {
-                        Some(energy) => {
-                            sc = new_sc;
-                            outcome.energy = energy;
-                            metrics.record(StepRecord {
-                                t_s: t,
-                                kind,
-                                n: sc.n(),
-                                accepted: false,
-                                absorbed: true,
-                                cache_hit: false,
-                                warm_started: false,
-                                energy_j: Some(energy),
-                                newton_iters: 0,
-                                outer_iters: 0,
-                                violation_excess: mc_excess(&sc, &outcome.plan, step_no),
-                            });
+        // Negotiable requests are refused (admission control);
+        // environmental facts cannot be — they are absorbed: the
+        // scenario rolls forward, the fleet keeps its old plan, and the
+        // step records what that plan now incurs.
+        let environmental = matches!(kind, "channel" | "bandwidth");
+        match backend.step(&delta, &new_sc, environmental) {
+            StepResult::Applied(a) => {
+                // Commit fleet bookkeeping only for accepted membership
+                // changes.
+                match &delta {
+                    ScenarioDelta::Join(_) => {
+                        let st = joiner.expect("join events carry their device state");
+                        let id = st.id;
+                        if dep_rate > 0.0 {
+                            let at = t + lifetimes.exponential(dep_rate);
+                            queue.push(at, FleetEvent::Departure { id });
                         }
-                        None => {
-                            // A refused departure must still happen
-                            // eventually: reschedule it so the device
-                            // doesn't become immortal.
-                            if let ScenarioDelta::Leave(i) = &delta {
-                                if dep_rate > 0.0 {
-                                    let id = states[*i].id;
-                                    let at = t + lifetimes.exponential(dep_rate);
-                                    queue.push(at, FleetEvent::Departure { id });
-                                }
-                            }
-                            rejected(&mut metrics, sc.n());
+                        states.push(st);
+                        if let Some(dt) = fade_dt {
+                            let stagger = states.last_mut().expect("just pushed").rng.f64() * dt;
+                            queue.push(t + stagger, FleetEvent::Fade { id });
                         }
                     }
-                    continue;
+                    ScenarioDelta::Leave(i) => {
+                        states.remove(*i);
+                    }
+                    _ => {}
                 }
-            },
-        };
-
-        // Commit fleet bookkeeping only for accepted membership changes.
-        match &delta {
-            ScenarioDelta::Join(_) => {
-                let st = joiner.expect("join events carry their device state");
-                let id = st.id;
-                if dep_rate > 0.0 {
-                    queue.push(t + lifetimes.exponential(dep_rate), FleetEvent::Departure { id });
-                }
-                states.push(st);
-                if let Some(dt) = fade_dt {
-                    let stagger = states.last_mut().expect("just pushed").rng.f64() * dt;
-                    queue.push(t + stagger, FleetEvent::Fade { id });
-                }
+                sc = new_sc;
+                metrics.record(StepRecord {
+                    t_s: t,
+                    kind,
+                    n: sc.n(),
+                    accepted: true,
+                    absorbed: false,
+                    cache_hit: a.cache_hit,
+                    warm_started: a.warm_started,
+                    energy_j: Some(a.energy_j),
+                    newton_iters: a.newton_iters,
+                    outer_iters: a.outer_iters,
+                    violation_excess: mc_excess(&sc, &backend.current_plan(), step_no),
+                });
             }
-            ScenarioDelta::Leave(i) => {
-                states.remove(*i);
+            StepResult::Absorbed { energy_j } => {
+                sc = new_sc;
+                metrics.record(StepRecord {
+                    t_s: t,
+                    kind,
+                    n: sc.n(),
+                    accepted: false,
+                    absorbed: true,
+                    cache_hit: false,
+                    warm_started: false,
+                    energy_j: Some(energy_j),
+                    newton_iters: 0,
+                    outer_iters: 0,
+                    violation_excess: mc_excess(&sc, &backend.current_plan(), step_no),
+                });
             }
-            _ => {}
+            StepResult::Rejected => {
+                // A refused departure must still happen eventually:
+                // reschedule it so the device doesn't become immortal.
+                if let ScenarioDelta::Leave(i) = &delta {
+                    if dep_rate > 0.0 {
+                        let id = states[*i].id;
+                        let at = t + lifetimes.exponential(dep_rate);
+                        queue.push(at, FleetEvent::Departure { id });
+                    }
+                }
+                rejected(&mut metrics, sc.n());
+            }
         }
-        sc = new_sc;
-
-        // A cache hit carries the *original* solve's diagnostics; this
-        // step itself cost no solver work, so the per-step iteration
-        // counts are zero (keeps newton_total comparable across runs
-        // with different hit rates).
-        let (newton_iters, outer_iters) = if out.diagnostics.cache_hit {
-            (0, 0)
-        } else {
-            (out.diagnostics.newton_iters, out.diagnostics.outer_iters)
-        };
-        metrics.record(StepRecord {
-            t_s: t,
-            kind,
-            n: sc.n(),
-            accepted: true,
-            absorbed: false,
-            cache_hit: out.diagnostics.cache_hit,
-            warm_started: out.diagnostics.warm_started,
-            energy_j: Some(out.energy),
-            newton_iters,
-            outer_iters,
-            violation_excess: mc_excess(&sc, &out.plan, step_no),
-        });
-        outcome = out;
     }
 
-    metrics.set_cache_stats(planner.cache_stats());
+    metrics.set_cache_stats(backend.cache_stats());
     Ok(FleetReport {
         options: opts.clone(),
         metrics,
         final_scenario: sc,
-        final_outcome: outcome,
+        final_outcome: backend.final_outcome(),
     })
 }
 
@@ -638,6 +809,27 @@ mod tests {
         // Only the bootstrap step: no event source is active.
         assert_eq!(rep.metrics.summary().events, 1);
         assert_eq!(rep.final_scenario.n(), 2);
+    }
+
+    #[test]
+    fn sharded_backend_runs_deterministically_and_respects_the_budget() {
+        let opts = FleetOptions { shards: 3, ..tiny_opts(9) };
+        let a = run(&opts).unwrap();
+        let b = run(&opts).unwrap();
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "sharded runs must be byte-identical for the same seed"
+        );
+        let s = a.metrics.summary();
+        assert_eq!(s.events, s.accepted + s.rejected + s.absorbed);
+        assert_eq!(a.final_scenario.n(), a.final_outcome.plan.partition.len());
+        // Shard shares sum to the budget, so the assembled plan respects
+        // Σb ≤ B whenever no absorbed share update is outstanding.
+        if s.absorbed == 0 {
+            assert!(a.final_outcome.plan.bandwidth_ok(&a.final_scenario));
+            assert!(a.final_outcome.plan.freq_ok(&a.final_scenario));
+        }
     }
 
     #[test]

@@ -38,9 +38,16 @@
 //!   substrate: DNN/hardware profiles, synthetic profiling, FDMA uplink,
 //!   DVFS energy.
 //! * [`sim`] — Monte-Carlo validation of the chance constraint.
+//! * [`service`] — the scaling layer above the engine: a sharded
+//!   multi-tenant `PlannerService` (K independent planners, each with
+//!   its own cache and workspace) with deterministic fingerprint-based
+//!   device→shard routing, a bounded request queue with backpressure,
+//!   batched drains that coalesce covered deltas and fan shards out in
+//!   parallel, and load-factor rebalancing on membership churn.
 //! * [`fleet`] — discrete-event fleet simulator: seeded churn streams
 //!   (join/leave, Gauss–Markov fading, QoS renegotiation) driving
-//!   `Planner::replan` end-to-end, with deterministic metrics export.
+//!   `Planner::replan` — or the sharded service via `--shards` —
+//!   end-to-end, with deterministic metrics export.
 //! * [`coordinator`] / [`runtime`] — the serving runtime executing plans
 //!   on AOT-compiled PJRT artifacts.
 //! * [`figures`] — regenerates every paper table/figure; [`util`] holds
@@ -61,6 +68,7 @@ pub mod models;
 pub mod optim;
 pub mod profile;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod solver;
 pub mod util;

@@ -24,6 +24,7 @@ use ripra::fleet::{self, FleetOptions};
 use ripra::models::manifest::Manifest;
 use ripra::models::ModelProfile;
 use ripra::optim::Scenario;
+use ripra::service::{PlannerService, ServiceOptions};
 use ripra::sim::{self, SimOptions};
 use ripra::util::json::Json;
 use ripra::util::rng::Rng;
@@ -84,6 +85,7 @@ fn usage() -> String {
          figure   <name|all> [--out DIR] [--quick]\n\
          serve    --model alexnet|resnet152 [--n N] [--requests K] [--time-scale X]\n\
          \x20        [--deadline S] [--risk E] [--bandwidth HZ] [--seed S]\n\
+         \x20        [--shards K]   (K >= 1 plans through the sharded service)\n\
          profile  [--model M] [--trials T]\n\
          selftest"
     )
@@ -287,6 +289,7 @@ fn fleet_options_of(flags: &HashMap<String, String>) -> Result<FleetOptions> {
         trials: flag_usize(flags, "trials", 1000)?,
         seed: flag_usize(flags, "seed", 7)? as u64,
         threads: 0,
+        shards: flag_usize(flags, "shards", 0)?,
         model,
     })
 }
@@ -373,9 +376,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         max_batch: 8,
         seed: flag_usize(&flags, "seed", 7)? as u64,
     };
-    let mut planner = PlannerBuilder::new().build();
-    let (out, rep) =
-        coordinator::plan_and_serve(Manifest::default_dir(), &sc, &mut planner, &opts)?;
+    let shards = flag_usize(&flags, "shards", 0)?;
+    let (out, rep) = if shards == 0 {
+        let mut planner = PlannerBuilder::new().build();
+        coordinator::plan_and_serve(Manifest::default_dir(), &sc, &mut planner, &opts)?
+    } else {
+        let mut svc = PlannerService::new(ServiceOptions { shards, ..ServiceOptions::default() })
+            .map_err(|e| anyhow!(e.to_string()))?;
+        coordinator::plan_and_serve_sharded(Manifest::default_dir(), &sc, &mut svc, 0, &opts)?
+    };
     println!("plan: partition={:?}, energy {:.4} J", out.plan.partition, out.energy);
     println!(
         "served {} requests in {:.2}s  ({:.1} req/s)",

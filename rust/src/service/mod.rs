@@ -1,0 +1,161 @@
+//! Sharded multi-tenant planning service: the scaling layer between the
+//! single-scenario [`crate::engine::Planner`] and heavy multi-fleet
+//! traffic.
+//!
+//! A [`PlannerService`] owns **K independent planner shards**, each with
+//! its own LRU plan cache and Newton workspace.  Tenants (independent
+//! fleets, each with its own uplink budget) are spread across the shards
+//! device-by-device: a device's shard is chosen by a deterministic hash
+//! of `(tenant, device fingerprint)` — the same quantized fingerprint
+//! the plan cache keys on (see [`crate::engine::device_fingerprint`]) —
+//! and membership churn triggers rebalancing moves that keep every
+//! shard's device count within a load-factor bound.  Each shard solves
+//! its sub-fleet against a **bandwidth share proportional to its device
+//! count**, so the assembled fleet-wide decision always respects the
+//! tenant's total budget (Σ shares = B); sharding trades a bounded
+//! amount of allocation optimality for K-way planning parallelism.
+//!
+//! Requests enter as `(tenant, ScenarioDelta)` pairs through a **bounded
+//! queue**: when the queue is full, [`PlannerService::submit`] refuses
+//! with [`ServiceError::Backpressure`] — admission control; a request is
+//! never dropped silently.  [`PlannerService::drain`] then processes the
+//! backlog in batches:
+//!
+//! 1. **Coalescing** — a later pending delta supersedes an earlier one
+//!    that it fully covers (same tenant, same parameter slot: total
+//!    bandwidth, or channel/deadline/risk on the same device) as long as
+//!    no membership change for that tenant sits between them, so N
+//!    queued deltas cost at most N (and often far fewer) replans.
+//! 2. **Sharded fan-out** — surviving parameter deltas are grouped by
+//!    shard and the shards run in parallel over
+//!    [`crate::util::par::par_map_indexed_mut`] workers with
+//!    index-ordered result slots, so the drain's outcome is
+//!    **bit-identical at any thread count** (the same contract the fleet
+//!    metrics pin).  Membership changes (join/leave) act as barriers:
+//!    the owning shard decides admission sequentially, then the
+//!    bandwidth-share rebroadcast to the tenant's other shards fans out
+//!    in parallel.
+//! 3. **Admission control** — per shard op the planner is driven exactly
+//!    like the serial fleet driver: plan-cache probe first, warm
+//!    [`crate::engine::Planner::replan`] next, and for *environmental*
+//!    deltas (channel, bandwidth) an infeasible change is absorbed via
+//!    [`crate::engine::Planner::rebase`] while *negotiable* requests
+//!    (join/leave, deadline/risk) are rejected.
+//!
+//! With `shards = 1` the service reduces exactly to the serial driver
+//! flow — one shard, the full bandwidth, the same planner-call sequence —
+//! which `rust/tests/service.rs` pins byte-for-byte against the bare
+//! [`crate::engine::Planner`] path.
+
+pub mod planner_service;
+pub mod queue;
+pub mod shard;
+
+use crate::engine::PlanError;
+
+pub use planner_service::{PlannerService, ServiceOptions};
+pub use queue::{DeltaQueue, Request};
+
+/// Identifies one tenant fleet within a [`PlannerService`].
+pub type TenantId = u64;
+
+/// How the service disposed of one submitted request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Disposition {
+    /// A new plan exists for the changed scenario.
+    Applied,
+    /// An infeasible *environmental* change was adopted with the old
+    /// plan kept (scenario rolled forward via rebase).
+    Absorbed,
+    /// A *negotiable* request was refused; nothing changed.
+    Rejected,
+    /// A later request in the same batch fully covered this one, so it
+    /// was coalesced away without any planner work.
+    Superseded,
+}
+
+/// Aggregate result of one submitted request across every shard op it
+/// triggered (owner op, bandwidth-share rebroadcasts, rebalance moves).
+#[derive(Clone, Debug)]
+pub struct ServiceOutcome {
+    pub tenant: TenantId,
+    pub disposition: Disposition,
+    /// Tenant-wide planned energy after the request, J (meaningful for
+    /// `Applied` / `Absorbed`; 0 otherwise).
+    pub energy_j: f64,
+    /// Newton iterations the request cost (cache-hit ops count 0).
+    pub newton_iters: usize,
+    /// Outer (refinement / alternation) iterations the request cost.
+    pub outer_iters: usize,
+    /// Every primary shard op was served from a plan cache.
+    pub cache_hit: bool,
+    /// Some shard op used the warm incremental replan path.
+    pub warm_started: bool,
+    /// Planner-facing shard operations this request triggered.
+    pub shard_ops: usize,
+}
+
+/// Deterministic service-level counters (no wall clock), exposed by
+/// [`PlannerService::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Requests accepted into the queue.
+    pub submitted: u64,
+    /// Requests refused with [`ServiceError::Backpressure`].
+    pub refused: u64,
+    /// Requests coalesced away by a covering later delta.
+    pub superseded: u64,
+    /// Planner-facing shard operations executed.
+    pub shard_ops: u64,
+    /// Shard ops that invoked [`crate::engine::Planner::replan`].
+    pub replans: u64,
+    /// Shard ops served entirely from a shard's plan cache.
+    pub cache_hits: u64,
+    /// Shard ops absorbed via [`crate::engine::Planner::rebase`].
+    pub rebases: u64,
+    /// Requests rejected by admission control.
+    pub rejected: u64,
+    /// Devices moved between shards by load-factor rebalancing.
+    pub rebalance_moves: u64,
+}
+
+/// Service-level failure.
+#[derive(Clone, Debug)]
+pub enum ServiceError {
+    /// The bounded request queue is full; the caller must retry after a
+    /// drain.  Nothing was enqueued.
+    Backpressure {
+        /// The queue's capacity at refusal time.
+        capacity: usize,
+    },
+    /// The tenant id is not admitted.
+    UnknownTenant(TenantId),
+    /// The tenant id is already admitted.
+    DuplicateTenant(TenantId),
+    /// The service configuration is malformed.
+    InvalidOptions(String),
+    /// A planner call failed (e.g. an unplannable initial scenario).
+    Plan(PlanError),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Backpressure { capacity } => {
+                write!(f, "request queue full (capacity {capacity}); drain and retry")
+            }
+            ServiceError::UnknownTenant(t) => write!(f, "unknown tenant {t}"),
+            ServiceError::DuplicateTenant(t) => write!(f, "tenant {t} already admitted"),
+            ServiceError::InvalidOptions(s) => write!(f, "invalid service options: {s}"),
+            ServiceError::Plan(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+impl From<PlanError> for ServiceError {
+    fn from(e: PlanError) -> Self {
+        ServiceError::Plan(e)
+    }
+}

@@ -1,0 +1,879 @@
+//! The [`PlannerService`]: K planner shards behind a bounded request
+//! queue, with deterministic device→shard routing, batched coalescing
+//! drains, load-factor rebalancing, and aggregated metrics.
+//!
+//! Every result-affecting iteration walks `Vec`s in fixed order (tenants
+//! in admission order, shards ascending) and the drain fan-out places
+//! results in index-ordered slots, so for a given request sequence the
+//! service's output is bit-identical at any thread count.
+
+use crate::engine::{device_fingerprint, CacheStats, PlanError, PlannerBuilder, ScenarioDelta};
+use crate::optim::types::{Device, Plan, Scenario};
+use crate::util::par::{par_map_indexed_mut, threads_for};
+
+use super::queue::{is_membership, superseded_by, DeltaQueue, Request};
+use super::shard::{merge, Shard, ShardOpResult, SubFleet};
+use super::{Disposition, ServiceError, ServiceOutcome, ServiceStats, TenantId};
+
+/// Configuration for a [`PlannerService`].
+#[derive(Clone, Debug)]
+pub struct ServiceOptions {
+    /// Number of independent planner shards (K ≥ 1).
+    pub shards: usize,
+    /// Bounded request-queue capacity (≥ 1); a full queue refuses
+    /// submissions with [`ServiceError::Backpressure`].
+    pub queue_capacity: usize,
+    /// Load-factor bound: every shard's device count stays ≤
+    /// `max(1, ceil(load_factor · total / K))` (rebalancing moves devices
+    /// when membership churn violates it).  Must be ≥ 1.
+    pub load_factor: f64,
+    /// Worker threads for the drain's shard fan-out and each planner's
+    /// per-device fan-out (0 = one per core; never changes results).
+    pub threads: usize,
+    /// Per-shard planner LRU cache capacity.
+    pub cache_capacity: usize,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        ServiceOptions {
+            shards: 4,
+            queue_capacity: 256,
+            load_factor: 1.25,
+            threads: 0,
+            cache_capacity: 32,
+        }
+    }
+}
+
+impl ServiceOptions {
+    fn validate(&self) -> Result<(), ServiceError> {
+        if self.shards == 0 {
+            return Err(ServiceError::InvalidOptions("shards must be >= 1".into()));
+        }
+        if !(self.load_factor.is_finite() && self.load_factor >= 1.0) {
+            return Err(ServiceError::InvalidOptions(format!(
+                "load_factor must be >= 1, got {}",
+                self.load_factor
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Tenant-level bookkeeping (the authoritative per-device state lives in
+/// the shards' sub-fleets).
+struct TenantState {
+    id: TenantId,
+    total_bandwidth_hz: f64,
+    devices: usize,
+}
+
+/// One parameter op scheduled onto a shard during a drain wave.
+struct WaveOp {
+    req: usize,
+    tenant: TenantId,
+    delta: ScenarioDelta,
+    environmental: bool,
+}
+
+/// The sharded multi-tenant planning service (see the module docs of
+/// [`crate::service`] for the full protocol).
+pub struct PlannerService {
+    opts: ServiceOptions,
+    shards: Vec<Shard>,
+    tenants: Vec<TenantState>,
+    queue: DeltaQueue,
+    stats: ServiceStats,
+}
+
+/// Mix a tenant id into a device fingerprint so two tenants' identical
+/// devices spread independently.
+fn route_mix(tenant: TenantId, dev: &Device) -> u64 {
+    device_fingerprint(dev) ^ tenant.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Bandwidth share of a shard holding `k` of the tenant's `n` devices.
+/// The sole-shard case returns the budget exactly (no roundtrip through
+/// `b·k/n`), which is what makes a one-shard service bit-identical to
+/// the serial planner path.
+fn share_hz(b: f64, k: usize, n: usize) -> f64 {
+    if k == n {
+        b
+    } else {
+        b * k as f64 / n as f64
+    }
+}
+
+fn argmin(loads: &[usize]) -> usize {
+    let mut best = 0;
+    for (i, &l) in loads.iter().enumerate() {
+        if l < loads[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn argmax(loads: &[usize]) -> usize {
+    let mut best = 0;
+    for (i, &l) in loads.iter().enumerate() {
+        if l > loads[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl PlannerService {
+    pub fn new(opts: ServiceOptions) -> Result<PlannerService, ServiceError> {
+        opts.validate()?;
+        let shards = (0..opts.shards)
+            .map(|_| {
+                Shard::new(
+                    PlannerBuilder::new()
+                        .threads(opts.threads)
+                        .cache_capacity(opts.cache_capacity)
+                        .build(),
+                )
+            })
+            .collect();
+        let queue = DeltaQueue::new(opts.queue_capacity);
+        let stats = ServiceStats::default();
+        Ok(PlannerService { opts, shards, tenants: Vec::new(), queue, stats })
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn options(&self) -> &ServiceOptions {
+        &self.opts
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Devices hosted per shard, ascending shard order.
+    pub fn shard_loads(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.load()).collect()
+    }
+
+    /// The load bound at the current total device count.
+    pub fn current_load_bound(&self) -> usize {
+        self.load_bound(self.shard_loads().iter().sum())
+    }
+
+    fn load_bound(&self, total: usize) -> usize {
+        let k = self.shards.len() as f64;
+        ((self.opts.load_factor * total as f64 / k).ceil() as usize).max(1)
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    fn tenant_index(&self, id: TenantId) -> Option<usize> {
+        self.tenants.iter().position(|t| t.id == id)
+    }
+
+    pub fn tenant_devices(&self, id: TenantId) -> Option<usize> {
+        self.tenant_index(id).map(|t| self.tenants[t].devices)
+    }
+
+    pub fn tenant_bandwidth(&self, id: TenantId) -> Option<f64> {
+        self.tenant_index(id).map(|t| self.tenants[t].total_bandwidth_hz)
+    }
+
+    /// Tenant-wide planned energy: Σ over shards of the sub-fleet's last
+    /// outcome energy (ascending shard order — deterministic summation).
+    pub fn tenant_energy(&self, id: TenantId) -> Option<f64> {
+        self.tenant_index(id)?;
+        let mut e = 0.0;
+        for shard in &self.shards {
+            if let Some(sub) = shard.sub(id) {
+                e += sub.outcome.energy;
+            }
+        }
+        Some(e)
+    }
+
+    /// The tenant's fleet-wide decision, assembled from the shard plans
+    /// (device `i`'s row comes from the shard hosting it).  Shard shares
+    /// sum to the tenant budget, so the assembled plan satisfies
+    /// Σ b ≤ B whenever no absorbed share update is outstanding.
+    pub fn assembled_plan(&self, id: TenantId) -> Option<Plan> {
+        let t = self.tenant_index(id)?;
+        let n = self.tenants[t].devices;
+        let mut plan = Plan {
+            partition: vec![0; n],
+            bandwidth_hz: vec![0.0; n],
+            freq_ghz: vec![0.0; n],
+        };
+        for shard in &self.shards {
+            if let Some(sub) = shard.sub(id) {
+                for (l, &i) in sub.members.iter().enumerate() {
+                    plan.partition[i] = sub.outcome.plan.partition[l];
+                    plan.bandwidth_hz[i] = sub.outcome.plan.bandwidth_hz[l];
+                    plan.freq_ghz[i] = sub.outcome.plan.freq_ghz[l];
+                }
+            }
+        }
+        Some(plan)
+    }
+
+    /// The tenant's fleet-wide scenario view (devices in tenant order,
+    /// total bandwidth = the tenant's full budget).
+    pub fn assembled_scenario(&self, id: TenantId) -> Option<Scenario> {
+        let t = self.tenant_index(id)?;
+        let n = self.tenants[t].devices;
+        let mut devices: Vec<Option<Device>> = vec![None; n];
+        for shard in &self.shards {
+            if let Some(sub) = shard.sub(id) {
+                for (l, &i) in sub.members.iter().enumerate() {
+                    devices[i] = Some(sub.scenario.devices[l].clone());
+                }
+            }
+        }
+        Some(Scenario {
+            devices: devices.into_iter().map(|d| d.expect("every device is hosted")).collect(),
+            total_bandwidth_hz: self.tenants[t].total_bandwidth_hz,
+        })
+    }
+
+    /// Shard hosting each of the tenant's devices, by tenant index.
+    pub fn device_shards(&self, id: TenantId) -> Option<Vec<usize>> {
+        let t = self.tenant_index(id)?;
+        let n = self.tenants[t].devices;
+        let mut out = vec![usize::MAX; n];
+        for (s, shard) in self.shards.iter().enumerate() {
+            if let Some(sub) = shard.sub(id) {
+                for &i in &sub.members {
+                    out[i] = s;
+                }
+            }
+        }
+        Some(out)
+    }
+
+    /// Deterministic service counters (includes queue refusals).
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats { refused: self.queue.refused(), ..self.stats }
+    }
+
+    /// Plan-cache counters aggregated over every shard planner.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut agg = CacheStats::default();
+        for shard in &self.shards {
+            agg.absorb(&shard.planner.cache_stats());
+        }
+        agg
+    }
+
+    /// Per-shard plan-cache counters, ascending shard order.
+    pub fn shard_cache_stats(&self) -> Vec<CacheStats> {
+        self.shards.iter().map(|s| s.planner.cache_stats()).collect()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity()
+    }
+
+    // ---- admission --------------------------------------------------------
+
+    /// Admit a tenant fleet: route every device to a shard (fingerprint
+    /// hash, overflow to the least-loaded shard when the load bound would
+    /// be violated), split the bandwidth budget proportionally, and
+    /// cold-plan every sub-fleet in parallel.  All-or-nothing: if any
+    /// sub-fleet is unplannable the tenant is not admitted and the first
+    /// shard error (ascending order) is returned.
+    pub fn admit_tenant(
+        &mut self,
+        id: TenantId,
+        scenario: Scenario,
+    ) -> Result<ServiceOutcome, ServiceError> {
+        if self.tenant_index(id).is_some() {
+            return Err(ServiceError::DuplicateTenant(id));
+        }
+        let n = scenario.n();
+        if n == 0 {
+            return Err(ServiceError::Plan(PlanError::InvalidRequest(
+                "tenant scenario has no devices".into(),
+            )));
+        }
+        let b = scenario.total_bandwidth_hz;
+        let k = self.shards.len();
+        let mut loads: Vec<usize> = self.shards.iter().map(|s| s.load()).collect();
+        let bound = self.load_bound(loads.iter().sum::<usize>() + n);
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (i, d) in scenario.devices.iter().enumerate() {
+            let mut s = (route_mix(id, d) % k as u64) as usize;
+            if loads[s] + 1 > bound {
+                s = argmin(&loads);
+            }
+            loads[s] += 1;
+            members[s].push(i);
+        }
+        let subs: Vec<Option<(Vec<usize>, Scenario)>> = members
+            .into_iter()
+            .map(|m| {
+                if m.is_empty() {
+                    return None;
+                }
+                let devices = m.iter().map(|&i| scenario.devices[i].clone()).collect();
+                let share = share_hz(b, m.len(), n);
+                Some((m, Scenario { devices, total_bandwidth_hz: share }))
+            })
+            .collect();
+        let threads = threads_for(self.opts.threads, k);
+        let results: Vec<Option<Result<ShardOpResult, PlanError>>> = {
+            let subs = &subs;
+            par_map_indexed_mut(&mut self.shards, threads, |shard, s| {
+                subs[s].clone().map(|(m, sc)| shard.cold_admit(id, m, sc))
+            })
+        };
+        let mut err: Option<PlanError> = None;
+        let mut acc = ShardOpResult::neutral();
+        for r in results {
+            match r {
+                None => {}
+                Some(Ok(op)) => {
+                    self.note_op(&op);
+                    merge(&mut acc, &op);
+                }
+                Some(Err(e)) => err = err.or(Some(e)),
+            }
+        }
+        if let Some(e) = err {
+            for shard in &mut self.shards {
+                shard.remove_sub(id);
+            }
+            return Err(ServiceError::Plan(e));
+        }
+        self.tenants.push(TenantState { id, total_bandwidth_hz: b, devices: n });
+        Ok(self.outcome_of(id, Disposition::Applied, acc))
+    }
+
+    /// Evict a tenant and drop its sub-fleets (no planner work; cached
+    /// plans age out of the LRUs naturally).
+    pub fn remove_tenant(&mut self, id: TenantId) -> bool {
+        let Some(t) = self.tenant_index(id) else { return false };
+        self.tenants.remove(t);
+        for shard in &mut self.shards {
+            shard.remove_sub(id);
+        }
+        true
+    }
+
+    // ---- request intake ---------------------------------------------------
+
+    /// Enqueue one tenant-level delta.  Refuses with
+    /// [`ServiceError::Backpressure`] when the bounded queue is full and
+    /// with [`ServiceError::UnknownTenant`] for un-admitted tenants;
+    /// nothing is ever dropped silently.
+    pub fn submit(&mut self, tenant: TenantId, delta: ScenarioDelta) -> Result<(), ServiceError> {
+        if self.tenant_index(tenant).is_none() {
+            return Err(ServiceError::UnknownTenant(tenant));
+        }
+        self.queue.submit(Request { tenant, delta })?;
+        self.stats.submitted += 1;
+        Ok(())
+    }
+
+    /// Process every pending request and return one [`ServiceOutcome`]
+    /// per request, in submission order.
+    ///
+    /// Within the batch, later deltas supersede earlier covered ones
+    /// (see [`crate::service::queue`]); surviving parameter deltas are
+    /// grouped by shard and the shards run in parallel with index-ordered
+    /// result slots (fleet-wide deadline/risk writes are transactional —
+    /// a rejection on any shard rolls every shard back); membership
+    /// changes are barriers handled one at a time (owner shard decides
+    /// admission, then the bandwidth-share rebroadcast fans out, then
+    /// rebalancing runs).
+    pub fn drain(&mut self) -> Vec<ServiceOutcome> {
+        let reqs = self.queue.drain();
+        let superseded = superseded_by(&reqs);
+        let mut results: Vec<Option<ServiceOutcome>> = (0..reqs.len()).map(|_| None).collect();
+        let mut i = 0;
+        while i < reqs.len() {
+            if is_membership(&reqs[i].delta) {
+                results[i] = Some(self.apply_membership(&reqs[i]));
+                i += 1;
+            } else {
+                let mut j = i;
+                while j < reqs.len() && !is_membership(&reqs[j].delta) {
+                    j += 1;
+                }
+                self.apply_param_wave(&reqs, &superseded, i, j, &mut results);
+                i = j;
+            }
+        }
+        results.into_iter().map(|r| r.expect("every request is disposed")).collect()
+    }
+
+    // ---- internals --------------------------------------------------------
+
+    fn note_op(&mut self, op: &ShardOpResult) {
+        self.stats.shard_ops += op.ops as u64;
+        self.stats.replans += op.replans as u64;
+        self.stats.cache_hits += op.hits as u64;
+        self.stats.rebases += op.rebases as u64;
+    }
+
+    fn outcome_of(
+        &self,
+        tenant: TenantId,
+        disposition: Disposition,
+        acc: ShardOpResult,
+    ) -> ServiceOutcome {
+        let energy_j = match disposition {
+            Disposition::Applied | Disposition::Absorbed => {
+                self.tenant_energy(tenant).unwrap_or(0.0)
+            }
+            _ => 0.0,
+        };
+        ServiceOutcome {
+            tenant,
+            disposition,
+            energy_j,
+            newton_iters: acc.newton_iters,
+            outer_iters: acc.outer_iters,
+            cache_hit: acc.ops > 0 && acc.cache_hit,
+            warm_started: acc.warm_started,
+            shard_ops: acc.ops,
+        }
+    }
+
+    fn idle_outcome(&self, tenant: TenantId, disposition: Disposition) -> ServiceOutcome {
+        ServiceOutcome {
+            tenant,
+            disposition,
+            energy_j: 0.0,
+            newton_iters: 0,
+            outer_iters: 0,
+            cache_hit: false,
+            warm_started: false,
+            shard_ops: 0,
+        }
+    }
+
+    fn locate(&self, id: TenantId, dev_idx: usize) -> Option<(usize, usize)> {
+        for (s, shard) in self.shards.iter().enumerate() {
+            if let Some(sub) = shard.sub(id) {
+                if let Some(l) = sub.members.iter().position(|&m| m == dev_idx) {
+                    return Some((s, l));
+                }
+            }
+        }
+        None
+    }
+
+    fn hosting_shards(&self, id: TenantId) -> Vec<usize> {
+        (0..self.shards.len()).filter(|&s| self.shards[s].sub(id).is_some()).collect()
+    }
+
+    /// Translate one tenant-level parameter delta into per-shard local
+    /// ops.  `Err(())` = reject without any planner work (bad index /
+    /// bad value), mirroring the serial driver's pre-validation.
+    fn route_param(&mut self, req: &Request) -> Result<Vec<(usize, ScenarioDelta, bool)>, ()> {
+        let t = self.tenant_index(req.tenant).ok_or(())?;
+        let n = self.tenants[t].devices;
+        match &req.delta {
+            ScenarioDelta::Channel { device, uplink } => {
+                let (s, l) = self.locate(req.tenant, *device).ok_or(())?;
+                Ok(vec![(s, ScenarioDelta::Channel { device: l, uplink: *uplink }, true)])
+            }
+            ScenarioDelta::Deadline { device: Some(i), deadline_s } => {
+                let (s, l) = self.locate(req.tenant, *i).ok_or(())?;
+                Ok(vec![(
+                    s,
+                    ScenarioDelta::Deadline { device: Some(l), deadline_s: *deadline_s },
+                    false,
+                )])
+            }
+            ScenarioDelta::Risk { device: Some(i), risk } => {
+                let (s, l) = self.locate(req.tenant, *i).ok_or(())?;
+                Ok(vec![(s, ScenarioDelta::Risk { device: Some(l), risk: *risk }, false)])
+            }
+            ScenarioDelta::Deadline { device: None, .. }
+            | ScenarioDelta::Risk { device: None, .. } => Ok(self
+                .hosting_shards(req.tenant)
+                .into_iter()
+                .map(|s| (s, req.delta.clone(), false))
+                .collect()),
+            ScenarioDelta::TotalBandwidth(b) => {
+                if !(b.is_finite() && *b > 0.0) {
+                    return Err(());
+                }
+                self.tenants[t].total_bandwidth_hz = *b;
+                Ok(self
+                    .hosting_shards(req.tenant)
+                    .into_iter()
+                    .map(|s| {
+                        let k_s = self.shards[s].sub(req.tenant).expect("hosting").members.len();
+                        (s, ScenarioDelta::TotalBandwidth(share_hz(*b, k_s, n)), true)
+                    })
+                    .collect())
+            }
+            ScenarioDelta::Join(_) | ScenarioDelta::Leave(_) => {
+                unreachable!("membership requests are handled as barriers")
+            }
+        }
+    }
+
+    /// One drain wave of parameter requests `[lo, hi)`: group surviving
+    /// ops by shard, fan the shards out in parallel, merge per-request
+    /// results in ascending shard order.
+    fn apply_param_wave(
+        &mut self,
+        reqs: &[Request],
+        superseded: &[Option<usize>],
+        lo: usize,
+        hi: usize,
+        results: &mut [Option<ServiceOutcome>],
+    ) {
+        let k = self.shards.len();
+        let mut ops: Vec<Vec<WaveOp>> = (0..k).map(|_| Vec::new()).collect();
+        // Multi-shard *negotiable* broadcasts (fleet-wide deadline/risk
+        // writes) are transactional: snapshot every touched sub-fleet so
+        // a rejection on any shard rolls the others back instead of
+        // leaving the tenant half-committed.  Environmental broadcasts
+        // never reject (rebase absorbs them), so they need no snapshot.
+        let mut rollbacks: Vec<(usize, Vec<(usize, SubFleet)>)> = Vec::new();
+        for r in lo..hi {
+            let req = &reqs[r];
+            if superseded[r].is_some() {
+                self.stats.superseded += 1;
+                results[r] = Some(self.idle_outcome(req.tenant, Disposition::Superseded));
+                continue;
+            }
+            match self.route_param(req) {
+                Err(()) => {
+                    self.stats.rejected += 1;
+                    results[r] = Some(self.idle_outcome(req.tenant, Disposition::Rejected));
+                }
+                Ok(list) => {
+                    if list.len() > 1 && list.iter().any(|(_, _, env)| !env) {
+                        let snaps = list
+                            .iter()
+                            .map(|&(s, ..)| {
+                                let sub = self.shards[s].sub(req.tenant).expect("hosting");
+                                (s, sub.clone())
+                            })
+                            .collect();
+                        rollbacks.push((r, snaps));
+                    }
+                    for (s, delta, environmental) in list {
+                        ops[s].push(WaveOp { req: r, tenant: req.tenant, delta, environmental });
+                    }
+                }
+            }
+        }
+        if ops.iter().all(|o| o.is_empty()) {
+            return;
+        }
+        let threads = threads_for(self.opts.threads, k);
+        let shard_results: Vec<Vec<(usize, ShardOpResult)>> = {
+            let ops = &ops;
+            par_map_indexed_mut(&mut self.shards, threads, |shard, s| {
+                ops[s]
+                    .iter()
+                    .map(|op| (op.req, shard.apply_param(op.tenant, &op.delta, op.environmental)))
+                    .collect()
+            })
+        };
+        let mut acc: Vec<Option<ShardOpResult>> = (lo..hi).map(|_| None).collect();
+        for per_shard in shard_results {
+            for (r, op) in per_shard {
+                self.note_op(&op);
+                let slot = &mut acc[r - lo];
+                match slot {
+                    None => *slot = Some(op),
+                    Some(a) => {
+                        // Any shard rejection dominates, then absorption.
+                        let d = match (a.disposition, op.disposition) {
+                            (Disposition::Rejected, _) | (_, Disposition::Rejected) => {
+                                Disposition::Rejected
+                            }
+                            (Disposition::Absorbed, _) | (_, Disposition::Absorbed) => {
+                                Disposition::Absorbed
+                            }
+                            _ => Disposition::Applied,
+                        };
+                        merge(a, &op);
+                        a.disposition = d;
+                    }
+                }
+            }
+        }
+        for (off, slot) in acc.into_iter().enumerate() {
+            if let Some(a) = slot {
+                let tenant = reqs[lo + off].tenant;
+                let disposition = a.disposition;
+                if disposition == Disposition::Rejected {
+                    self.stats.rejected += 1;
+                }
+                results[lo + off] = Some(self.outcome_of(tenant, disposition, a));
+            }
+        }
+        // Undo partially-committed negotiable broadcasts.
+        for (r, snaps) in rollbacks {
+            let rejected = results[r]
+                .as_ref()
+                .is_some_and(|o| o.disposition == Disposition::Rejected);
+            if rejected {
+                let tenant = reqs[r].tenant;
+                for (s, snap) in snaps {
+                    self.shards[s].restore_sub(tenant, Some(snap));
+                }
+            }
+        }
+    }
+
+    fn apply_membership(&mut self, req: &Request) -> ServiceOutcome {
+        match &req.delta {
+            ScenarioDelta::Join(dev) => self.member_join(req.tenant, dev.clone()),
+            ScenarioDelta::Leave(i) => self.member_leave(req.tenant, *i),
+            _ => unreachable!("only membership deltas reach apply_membership"),
+        }
+    }
+
+    /// Apply one environmental local delta per listed shard in parallel
+    /// (the bandwidth-share rebroadcast after a membership change).
+    /// Returns results in ascending shard order.
+    fn broadcast(
+        &mut self,
+        tenant: TenantId,
+        ops: Vec<(usize, ScenarioDelta)>,
+    ) -> Vec<ShardOpResult> {
+        if ops.is_empty() {
+            return Vec::new();
+        }
+        let k = self.shards.len();
+        let mut by_shard: Vec<Option<ScenarioDelta>> = (0..k).map(|_| None).collect();
+        for (s, d) in ops {
+            by_shard[s] = Some(d);
+        }
+        let threads = threads_for(self.opts.threads, k);
+        let results = {
+            let by_shard = &by_shard;
+            par_map_indexed_mut(&mut self.shards, threads, |shard, s| {
+                by_shard[s].as_ref().map(|d| shard.apply_param(tenant, d, true))
+            })
+        };
+        let out: Vec<ShardOpResult> = results.into_iter().flatten().collect();
+        for op in &out {
+            self.note_op(op);
+        }
+        out
+    }
+
+    /// Share updates for every hosting shard except `skip`, given the new
+    /// tenant device count `n_new`.  Shares whose value is unchanged are
+    /// dropped (no planner work for an exact no-op).
+    fn share_updates(
+        &self,
+        tenant: TenantId,
+        skip: usize,
+        n_new: usize,
+    ) -> Vec<(usize, ScenarioDelta)> {
+        let t = self.tenant_index(tenant).expect("caller validated tenant");
+        let b = self.tenants[t].total_bandwidth_hz;
+        let mut out = Vec::new();
+        for (s, shard) in self.shards.iter().enumerate() {
+            if s == skip {
+                continue;
+            }
+            if let Some(sub) = shard.sub(tenant) {
+                let share = share_hz(b, sub.members.len(), n_new);
+                if share != sub.scenario.total_bandwidth_hz {
+                    out.push((s, ScenarioDelta::TotalBandwidth(share)));
+                }
+            }
+        }
+        out
+    }
+
+    fn member_join(&mut self, tenant: TenantId, dev: Device) -> ServiceOutcome {
+        let Some(t) = self.tenant_index(tenant) else {
+            self.stats.rejected += 1;
+            return self.idle_outcome(tenant, Disposition::Rejected);
+        };
+        let n = self.tenants[t].devices;
+        let b = self.tenants[t].total_bandwidth_hz;
+        let k = self.shards.len();
+        let loads = self.shard_loads();
+        let bound = self.load_bound(loads.iter().sum::<usize>() + 1);
+        let mut s = (route_mix(tenant, &dev) % k as u64) as usize;
+        if loads[s] + 1 > bound {
+            s = argmin(&loads);
+        }
+        let k_s = self.shards[s].sub(tenant).map(|x| x.members.len()).unwrap_or(0);
+        let share_s = share_hz(b, k_s + 1, n + 1);
+        let owner = if k_s == 0 {
+            let sc = Scenario { devices: vec![dev], total_bandwidth_hz: share_s };
+            match self.shards[s].cold_admit(tenant, vec![n], sc) {
+                Ok(op) => op,
+                Err(_) => ShardOpResult::rejected(),
+            }
+        } else {
+            self.shards[s].apply_join(tenant, n, dev, share_s)
+        };
+        self.note_op(&owner);
+        if owner.disposition == Disposition::Rejected {
+            self.stats.rejected += 1;
+            return self.idle_outcome(tenant, Disposition::Rejected);
+        }
+        self.tenants[t].devices = n + 1;
+        let mut acc = ShardOpResult::neutral();
+        merge(&mut acc, &owner);
+        let updates = self.share_updates(tenant, s, n + 1);
+        for op in self.broadcast(tenant, updates) {
+            merge(&mut acc, &op);
+        }
+        merge(&mut acc, &self.rebalance());
+        self.outcome_of(tenant, Disposition::Applied, acc)
+    }
+
+    fn member_leave(&mut self, tenant: TenantId, i: usize) -> ServiceOutcome {
+        let Some(t) = self.tenant_index(tenant) else {
+            self.stats.rejected += 1;
+            return self.idle_outcome(tenant, Disposition::Rejected);
+        };
+        let n = self.tenants[t].devices;
+        if n <= 1 || i >= n {
+            // Mirrors ScenarioDelta::apply's tenant-level validation: the
+            // last device cannot leave and the index must be in range.
+            self.stats.rejected += 1;
+            return self.idle_outcome(tenant, Disposition::Rejected);
+        }
+        let b = self.tenants[t].total_bandwidth_hz;
+        let (s, l) = self.locate(tenant, i).expect("tenant device counts are consistent");
+        let k_s = self.shards[s].sub(tenant).expect("located").members.len();
+        let share_after = if k_s >= 2 { share_hz(b, k_s - 1, n - 1) } else { 0.0 };
+        let owner = self.shards[s].apply_leave(tenant, l, share_after);
+        self.note_op(&owner);
+        if owner.disposition == Disposition::Rejected {
+            self.stats.rejected += 1;
+            return self.idle_outcome(tenant, Disposition::Rejected);
+        }
+        self.tenants[t].devices = n - 1;
+        for shard in &mut self.shards {
+            if let Some(sub) = shard.sub_mut(tenant) {
+                for m in &mut sub.members {
+                    if *m > i {
+                        *m -= 1;
+                    }
+                }
+            }
+        }
+        let mut acc = ShardOpResult::neutral();
+        merge(&mut acc, &owner);
+        let updates = self.share_updates(tenant, s, n - 1);
+        for op in self.broadcast(tenant, updates) {
+            merge(&mut acc, &op);
+        }
+        merge(&mut acc, &self.rebalance());
+        self.outcome_of(tenant, Disposition::Applied, acc)
+    }
+
+    /// Move devices from overloaded shards to the least-loaded one until
+    /// every shard satisfies the load bound (or a move fails — the bound
+    /// is best-effort under infeasibility).  All choices are
+    /// deterministic: most-loaded shard (lowest index on ties), its
+    /// largest hosted tenant (admission order on ties), that tenant's
+    /// most recently assigned device.
+    fn rebalance(&mut self) -> ShardOpResult {
+        let mut acc = ShardOpResult::neutral();
+        let k = self.shards.len();
+        if k <= 1 {
+            return acc;
+        }
+        let mut guard = 0;
+        loop {
+            let loads = self.shard_loads();
+            let total: usize = loads.iter().sum();
+            if total == 0 {
+                break;
+            }
+            let bound = self.load_bound(total);
+            let src = argmax(&loads);
+            if loads[src] <= bound {
+                break;
+            }
+            let dst = argmin(&loads);
+            if dst == src {
+                break;
+            }
+            guard += 1;
+            if guard > 2 * k {
+                break;
+            }
+            match self.move_one(src, dst) {
+                Some(op) => {
+                    merge(&mut acc, &op);
+                    self.stats.rebalance_moves += 1;
+                }
+                None => break,
+            }
+        }
+        acc
+    }
+
+    /// Move one device from shard `src` to shard `dst` (destination join
+    /// first, then source leave; both snapshots restored on failure).
+    /// Returns `None` when the move is cancelled.
+    fn move_one(&mut self, src: usize, dst: usize) -> Option<ShardOpResult> {
+        let tenant = {
+            let mut best: Option<(TenantId, usize)> = None;
+            for (tid, sub) in &self.shards[src].tenants {
+                if best.map_or(true, |(_, c)| sub.members.len() > c) {
+                    best = Some((*tid, sub.members.len()));
+                }
+            }
+            best?.0
+        };
+        let t = self.tenant_index(tenant).expect("hosted tenant is admitted");
+        let n = self.tenants[t].devices;
+        let b = self.tenants[t].total_bandwidth_hz;
+        let src_snapshot = self.shards[src].sub(tenant).cloned();
+        let dst_snapshot = self.shards[dst].sub(tenant).cloned();
+        let k_src = src_snapshot.as_ref().map(|s| s.members.len())?;
+        let k_dst = dst_snapshot.as_ref().map(|s| s.members.len()).unwrap_or(0);
+        let (tenant_idx, dev) = {
+            let sub = src_snapshot.as_ref().expect("checked above");
+            (*sub.members.last()?, sub.scenario.devices.last()?.clone())
+        };
+        let share_dst = share_hz(b, k_dst + 1, n);
+        let dst_op = if k_dst == 0 {
+            let sc = Scenario { devices: vec![dev], total_bandwidth_hz: share_dst };
+            match self.shards[dst].cold_admit(tenant, vec![tenant_idx], sc) {
+                Ok(op) => op,
+                Err(_) => return None,
+            }
+        } else {
+            let op = self.shards[dst].apply_join(tenant, tenant_idx, dev, share_dst);
+            if op.disposition == Disposition::Rejected {
+                return None; // apply_join rolled itself back
+            }
+            op
+        };
+        self.note_op(&dst_op);
+        let share_src_after = if k_src >= 2 { share_hz(b, k_src - 1, n) } else { 0.0 };
+        let src_op = self.shards[src].apply_leave(tenant, k_src - 1, share_src_after);
+        self.note_op(&src_op);
+        if src_op.disposition == Disposition::Rejected {
+            self.shards[dst].restore_sub(tenant, dst_snapshot);
+            self.shards[src].restore_sub(tenant, src_snapshot);
+            return None;
+        }
+        let mut acc = ShardOpResult::neutral();
+        merge(&mut acc, &dst_op);
+        merge(&mut acc, &src_op);
+        Some(acc)
+    }
+}

@@ -1,0 +1,238 @@
+//! Bounded request queue and batch-coalescing analysis.
+//!
+//! The queue is the service's admission-control point: a full queue
+//! refuses new requests with [`ServiceError::Backpressure`] instead of
+//! dropping anything silently.  Coalescing runs at drain time over the
+//! whole batch: a later delta supersedes an earlier one it fully covers,
+//! so a burst of channel jitter or repeated renegotiations for the same
+//! device costs one replan instead of many.
+
+use std::collections::VecDeque;
+
+use crate::engine::ScenarioDelta;
+
+use super::{ServiceError, TenantId};
+
+/// One queued request: a tenant-level delta awaiting a drain.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub tenant: TenantId,
+    pub delta: ScenarioDelta,
+}
+
+/// Bounded FIFO of pending requests.
+#[derive(Debug)]
+pub struct DeltaQueue {
+    capacity: usize,
+    pending: VecDeque<Request>,
+    refused: u64,
+}
+
+impl DeltaQueue {
+    /// `capacity` is clamped to at least 1 (a zero-capacity queue could
+    /// never accept anything).
+    pub fn new(capacity: usize) -> DeltaQueue {
+        DeltaQueue { capacity: capacity.max(1), pending: VecDeque::new(), refused: 0 }
+    }
+
+    /// Enqueue, or refuse with [`ServiceError::Backpressure`] when full.
+    /// A refused request is never partially recorded.
+    pub fn submit(&mut self, req: Request) -> Result<(), ServiceError> {
+        if self.pending.len() >= self.capacity {
+            self.refused += 1;
+            return Err(ServiceError::Backpressure { capacity: self.capacity });
+        }
+        self.pending.push_back(req);
+        Ok(())
+    }
+
+    /// Take every pending request, in submission order.
+    pub fn drain(&mut self) -> Vec<Request> {
+        self.pending.drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Requests refused for backpressure since construction.
+    pub fn refused(&self) -> u64 {
+        self.refused
+    }
+}
+
+/// The parameter slot a delta writes, used to decide supersession.
+/// Membership changes have no slot: they are barriers.
+#[derive(PartialEq, Eq)]
+enum Slot {
+    Bandwidth,
+    Channel(usize),
+    Deadline(Option<usize>),
+    Risk(Option<usize>),
+}
+
+fn slot_of(delta: &ScenarioDelta) -> Option<Slot> {
+    match delta {
+        ScenarioDelta::TotalBandwidth(_) => Some(Slot::Bandwidth),
+        ScenarioDelta::Channel { device, .. } => Some(Slot::Channel(*device)),
+        ScenarioDelta::Deadline { device, .. } => Some(Slot::Deadline(*device)),
+        ScenarioDelta::Risk { device, .. } => Some(Slot::Risk(*device)),
+        ScenarioDelta::Join(_) | ScenarioDelta::Leave(_) => None,
+    }
+}
+
+/// `later` fully covers `earlier`: applying `later` afterwards leaves no
+/// trace of `earlier` in the scenario.
+fn covers(later: &Slot, earlier: &Slot) -> bool {
+    match (later, earlier) {
+        (Slot::Bandwidth, Slot::Bandwidth) => true,
+        (Slot::Channel(a), Slot::Channel(b)) => a == b,
+        // A fleet-wide deadline/risk write (device: None) covers any
+        // earlier write; a single-device write covers only the same
+        // device (an earlier fleet-wide write still matters elsewhere).
+        (Slot::Deadline(a), Slot::Deadline(b)) => a.is_none() || a == b,
+        (Slot::Risk(a), Slot::Risk(b)) => a.is_none() || a == b,
+        _ => false,
+    }
+}
+
+pub(crate) fn is_membership(delta: &ScenarioDelta) -> bool {
+    matches!(delta, ScenarioDelta::Join(_) | ScenarioDelta::Leave(_))
+}
+
+/// For each request in the batch, the index of the later request that
+/// supersedes it (`None` = the request survives and must be applied).
+///
+/// Supersession requires the same tenant, a covering parameter slot, and
+/// **no membership change for that tenant in between** — a join/leave
+/// re-indexes devices and re-routes shards, so nothing coalesces across
+/// it.  Membership requests themselves are never superseded.
+pub(crate) fn superseded_by(reqs: &[Request]) -> Vec<Option<usize>> {
+    let mut out = vec![None; reqs.len()];
+    for i in 0..reqs.len() {
+        let Some(slot) = slot_of(&reqs[i].delta) else { continue };
+        for (j, later) in reqs.iter().enumerate().skip(i + 1) {
+            if later.tenant != reqs[i].tenant {
+                continue;
+            }
+            if is_membership(&later.delta) {
+                break; // barrier: nothing before it coalesces past it
+            }
+            if slot_of(&later.delta).is_some_and(|l| covers(&l, &slot)) {
+                out[i] = Some(j);
+                break;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Uplink;
+    use crate::models::ModelProfile;
+    use crate::optim::types::Device;
+
+    fn req(tenant: TenantId, delta: ScenarioDelta) -> Request {
+        Request { tenant, delta }
+    }
+
+    fn join() -> ScenarioDelta {
+        ScenarioDelta::Join(Device {
+            model: ModelProfile::alexnet_paper(),
+            uplink: Uplink::from_distance(100.0),
+            deadline_s: 0.2,
+            risk: 0.05,
+        })
+    }
+
+    #[test]
+    fn bounded_queue_refuses_and_never_drops() {
+        let mut q = DeltaQueue::new(2);
+        q.submit(req(0, ScenarioDelta::TotalBandwidth(1e6))).unwrap();
+        q.submit(req(0, ScenarioDelta::TotalBandwidth(2e6))).unwrap();
+        assert!(matches!(
+            q.submit(req(0, ScenarioDelta::TotalBandwidth(3e6))),
+            Err(ServiceError::Backpressure { capacity: 2 })
+        ));
+        assert_eq!(q.refused(), 1);
+        // Everything admitted is still there, in order.
+        let drained = q.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(matches!(drained[0].delta, ScenarioDelta::TotalBandwidth(b) if b == 1e6));
+        assert!(matches!(drained[1].delta, ScenarioDelta::TotalBandwidth(b) if b == 2e6));
+        // After the drain there is room again.
+        q.submit(req(0, ScenarioDelta::TotalBandwidth(4e6))).unwrap();
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let mut q = DeltaQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.submit(req(0, ScenarioDelta::TotalBandwidth(1e6))).unwrap();
+    }
+
+    #[test]
+    fn later_same_slot_supersedes_earlier() {
+        let reqs = vec![
+            req(0, ScenarioDelta::TotalBandwidth(1e6)),
+            req(0, ScenarioDelta::Risk { device: Some(1), risk: 0.1 }),
+            req(0, ScenarioDelta::TotalBandwidth(2e6)),
+            req(0, ScenarioDelta::Risk { device: Some(2), risk: 0.2 }),
+        ];
+        let s = superseded_by(&reqs);
+        assert_eq!(s, vec![Some(2), None, None, None]);
+    }
+
+    #[test]
+    fn membership_is_a_barrier_per_tenant() {
+        let reqs = vec![
+            req(0, ScenarioDelta::TotalBandwidth(1e6)),
+            req(0, join()),
+            req(0, ScenarioDelta::TotalBandwidth(2e6)),
+            // tenant 1's joins don't block tenant 0, and vice versa
+            req(1, ScenarioDelta::TotalBandwidth(5e6)),
+            req(0, ScenarioDelta::TotalBandwidth(3e6)),
+            req(1, ScenarioDelta::TotalBandwidth(6e6)),
+        ];
+        let s = superseded_by(&reqs);
+        assert_eq!(s[0], None, "join barrier protects the earlier bandwidth write");
+        assert_eq!(s[1], None, "membership is never superseded");
+        assert_eq!(s[2], Some(4));
+        assert_eq!(s[3], Some(5));
+        assert_eq!(s[4], None);
+        assert_eq!(s[5], None);
+    }
+
+    #[test]
+    fn fleet_wide_write_covers_single_device_but_not_conversely() {
+        let reqs = vec![
+            req(0, ScenarioDelta::Deadline { device: Some(1), deadline_s: 0.2 }),
+            req(0, ScenarioDelta::Deadline { device: None, deadline_s: 0.3 }),
+            req(0, ScenarioDelta::Deadline { device: Some(2), deadline_s: 0.4 }),
+        ];
+        let s = superseded_by(&reqs);
+        assert_eq!(s[0], Some(1), "fleet-wide deadline covers the single-device write");
+        assert_eq!(s[1], None, "a single-device write cannot cover a fleet-wide one");
+        assert_eq!(s[2], None);
+    }
+
+    #[test]
+    fn different_tenants_never_coalesce() {
+        let reqs = vec![
+            req(0, ScenarioDelta::TotalBandwidth(1e6)),
+            req(1, ScenarioDelta::TotalBandwidth(2e6)),
+        ];
+        assert_eq!(superseded_by(&reqs), vec![None, None]);
+    }
+}

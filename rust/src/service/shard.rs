@@ -1,0 +1,433 @@
+//! One planner shard: an independent [`Planner`] (own LRU cache, own
+//! Newton workspace) plus the per-tenant sub-fleets it hosts.
+//!
+//! Every shard op drives the planner exactly like the serial fleet
+//! driver drives its single planner — plan-cache probe first, warm
+//! replan next, rebase-absorb or reject last — so a one-shard service is
+//! bit-identical to the bare-planner path.  A shard hosting several
+//! tenants multiplexes them through [`Planner::set_base`], which swaps
+//! the replan base without touching any cached or counted state.
+
+use crate::engine::{PlanError, PlanOutcome, PlanRequest, Planner, Policy, ScenarioDelta};
+use crate::optim::types::{Device, Scenario};
+
+use super::{Disposition, TenantId};
+
+/// One tenant's sub-fleet on one shard.
+#[derive(Clone, Debug)]
+pub(crate) struct SubFleet {
+    /// Tenant-level device indices in local (slot) order.
+    pub members: Vec<usize>,
+    /// The sub-scenario this shard plans: the member devices plus this
+    /// shard's bandwidth share of the tenant's budget.
+    pub scenario: Scenario,
+    /// Last accepted/absorbed outcome for the sub-fleet.
+    pub outcome: PlanOutcome,
+}
+
+/// Result of one (or, after [`merge`], several) planner-facing shard
+/// operations.  The `ops`/`replans`/`hits`/`rebases` counters are exact
+/// per-op counts so aggregated stats never undercount merged ops.
+#[derive(Clone, Debug)]
+pub(crate) struct ShardOpResult {
+    pub disposition: Disposition,
+    /// Newton iterations this op cost (0 when served from the cache,
+    /// matching the fleet driver's per-step accounting).
+    pub newton_iters: usize,
+    pub outer_iters: usize,
+    /// Every folded-in op was served from a plan cache.
+    pub cache_hit: bool,
+    pub warm_started: bool,
+    /// Planner-facing ops folded in (0 for pure-bookkeeping results and
+    /// rejects that never reached the planner).
+    pub ops: usize,
+    /// Ops that invoked [`Planner::replan`] (whatever the outcome).
+    pub replans: usize,
+    /// Ops served from a plan cache.
+    pub hits: usize,
+    /// Ops that fell back to [`Planner::rebase`] (absorbed).
+    pub rebases: usize,
+}
+
+impl ShardOpResult {
+    pub fn rejected() -> ShardOpResult {
+        ShardOpResult {
+            disposition: Disposition::Rejected,
+            newton_iters: 0,
+            outer_iters: 0,
+            cache_hit: false,
+            warm_started: false,
+            ops: 0,
+            replans: 0,
+            hits: 0,
+            rebases: 0,
+        }
+    }
+
+    /// An op that needed no planner work at all (e.g. dropping a
+    /// sub-fleet whose last member left).
+    fn free() -> ShardOpResult {
+        ShardOpResult { disposition: Disposition::Applied, ..ShardOpResult::rejected() }
+    }
+
+    /// Identity element for [`merge`]: zero cost, `cache_hit = true` so
+    /// the all-ops-hit conjunction starts true.  Callers must merge at
+    /// least one real op into it before reporting.
+    pub fn neutral() -> ShardOpResult {
+        ShardOpResult { cache_hit: true, ..ShardOpResult::free() }
+    }
+}
+
+/// One planner shard and the sub-fleets it hosts (in admission order —
+/// iteration order is part of the determinism contract, so tenants live
+/// in a `Vec`, never a hash map).
+pub(crate) struct Shard {
+    pub planner: Planner,
+    pub tenants: Vec<(TenantId, SubFleet)>,
+}
+
+impl Shard {
+    pub fn new(planner: Planner) -> Shard {
+        Shard { planner, tenants: Vec::new() }
+    }
+
+    /// Devices hosted across every tenant.
+    pub fn load(&self) -> usize {
+        self.tenants.iter().map(|(_, s)| s.members.len()).sum()
+    }
+
+    pub fn sub(&self, tenant: TenantId) -> Option<&SubFleet> {
+        self.tenants.iter().find(|(t, _)| *t == tenant).map(|(_, s)| s)
+    }
+
+    pub fn sub_mut(&mut self, tenant: TenantId) -> Option<&mut SubFleet> {
+        self.tenants.iter_mut().find(|(t, _)| *t == tenant).map(|(_, s)| s)
+    }
+
+    pub fn remove_sub(&mut self, tenant: TenantId) -> Option<SubFleet> {
+        let i = self.tenants.iter().position(|(t, _)| *t == tenant)?;
+        Some(self.tenants.remove(i).1)
+    }
+
+    /// Restore a snapshot taken before a speculative op (`None` = the
+    /// sub-fleet did not exist).  Planner caches are left as-is: they are
+    /// fingerprint-keyed values, so stale entries are harmless.
+    pub fn restore_sub(&mut self, tenant: TenantId, snapshot: Option<SubFleet>) {
+        match (self.tenants.iter().position(|(t, _)| *t == tenant), snapshot) {
+            (Some(i), Some(s)) => self.tenants[i].1 = s,
+            (Some(i), None) => {
+                self.tenants.remove(i);
+            }
+            (None, Some(s)) => self.tenants.push((tenant, s)),
+            (None, None) => {}
+        }
+    }
+
+    /// Cold-plan a brand-new sub-fleet (tenant admission, or a join that
+    /// opens a new shard for the tenant).  On success the sub-fleet is
+    /// installed; on failure nothing is.
+    pub fn cold_admit(
+        &mut self,
+        tenant: TenantId,
+        members: Vec<usize>,
+        scenario: Scenario,
+    ) -> Result<ShardOpResult, PlanError> {
+        debug_assert_eq!(members.len(), scenario.n());
+        let outcome = self.planner.plan(&PlanRequest::new(scenario.clone(), Policy::Robust))?;
+        let hit = outcome.diagnostics.cache_hit;
+        let result = ShardOpResult {
+            disposition: Disposition::Applied,
+            newton_iters: outcome.diagnostics.newton_iters,
+            outer_iters: outcome.diagnostics.outer_iters,
+            cache_hit: hit,
+            warm_started: outcome.diagnostics.warm_started,
+            ops: 1,
+            replans: 0,
+            hits: usize::from(hit),
+            rebases: 0,
+        };
+        self.tenants.push((tenant, SubFleet { members, scenario, outcome }));
+        Ok(result)
+    }
+
+    /// Apply one local (shard-indexed) parameter delta for `tenant`:
+    /// cache probe → warm replan → absorb (environmental) or reject
+    /// (negotiable).  The caller guarantees the sub-fleet exists.
+    pub fn apply_param(
+        &mut self,
+        tenant: TenantId,
+        delta: &ScenarioDelta,
+        environmental: bool,
+    ) -> ShardOpResult {
+        let sub = self.sub(tenant).expect("apply_param requires a hosted sub-fleet");
+        let (base_sc, base_out) = (sub.scenario.clone(), sub.outcome.clone());
+        let new_sc = match delta.apply(&base_sc) {
+            Ok(s) => s,
+            Err(_) => return ShardOpResult::rejected(),
+        };
+        self.planner.set_base(base_sc, base_out).expect("sub-fleet base shape is consistent");
+        let req = PlanRequest::new(new_sc.clone(), Policy::Robust);
+        if let Some(hit) = self.planner.plan_cached(&req) {
+            // The hit carries the original solve's diagnostics; report
+            // its warm_started flag exactly like the serial driver does
+            // (the shards=1 ≡ serial byte-parity pin depends on it).
+            let warm_started = hit.diagnostics.warm_started;
+            let sub = self.sub_mut(tenant).expect("checked above");
+            sub.scenario = new_sc;
+            sub.outcome = hit;
+            return ShardOpResult {
+                disposition: Disposition::Applied,
+                newton_iters: 0,
+                outer_iters: 0,
+                cache_hit: true,
+                warm_started,
+                ops: 1,
+                replans: 0,
+                hits: 1,
+                rebases: 0,
+            };
+        }
+        match self.planner.replan(delta) {
+            Ok(out) => {
+                let result = ShardOpResult {
+                    disposition: Disposition::Applied,
+                    newton_iters: out.diagnostics.newton_iters,
+                    outer_iters: out.diagnostics.outer_iters,
+                    cache_hit: false,
+                    warm_started: out.diagnostics.warm_started,
+                    ops: 1,
+                    replans: 1,
+                    hits: 0,
+                    rebases: 0,
+                };
+                let sub = self.sub_mut(tenant).expect("checked above");
+                sub.scenario = new_sc;
+                sub.outcome = out;
+                result
+            }
+            Err(_) if environmental => match self.planner.rebase(new_sc.clone()) {
+                Ok(energy) => {
+                    let sub = self.sub_mut(tenant).expect("checked above");
+                    sub.scenario = new_sc;
+                    sub.outcome.energy = energy;
+                    ShardOpResult {
+                        disposition: Disposition::Absorbed,
+                        newton_iters: 0,
+                        outer_iters: 0,
+                        cache_hit: false,
+                        warm_started: false,
+                        ops: 1,
+                        replans: 1,
+                        hits: 0,
+                        rebases: 1,
+                    }
+                }
+                Err(_) => {
+                    let mut r = ShardOpResult::rejected();
+                    r.ops = 1;
+                    r.replans = 1;
+                    r
+                }
+            },
+            Err(_) => {
+                let mut r = ShardOpResult::rejected();
+                r.ops = 1;
+                r.replans = 1;
+                r
+            }
+        }
+    }
+
+    /// Admit a joining device (tenant index `tenant_idx`) into this
+    /// shard's existing sub-fleet at bandwidth share `share_hz`.  The
+    /// share grows (or stays equal) on a join, so it is applied before
+    /// the membership change; the whole op rolls back on rejection.
+    pub fn apply_join(
+        &mut self,
+        tenant: TenantId,
+        tenant_idx: usize,
+        dev: Device,
+        share_hz: f64,
+    ) -> ShardOpResult {
+        let snapshot =
+            Some(self.sub(tenant).expect("apply_join requires a hosted sub-fleet").clone());
+        let mut acc = ShardOpResult::neutral();
+        let current_share =
+            snapshot.as_ref().map(|s| s.scenario.total_bandwidth_hz).expect("just cloned");
+        if share_hz != current_share {
+            let grow = self.apply_param(tenant, &ScenarioDelta::TotalBandwidth(share_hz), false);
+            if grow.disposition != Disposition::Applied {
+                self.restore_sub(tenant, snapshot);
+                return ShardOpResult::rejected();
+            }
+            merge(&mut acc, &grow);
+        }
+        let join = self.apply_param(tenant, &ScenarioDelta::Join(dev), false);
+        if join.disposition != Disposition::Applied {
+            self.restore_sub(tenant, snapshot);
+            return ShardOpResult::rejected();
+        }
+        merge(&mut acc, &join);
+        self.sub_mut(tenant).expect("join succeeded").members.push(tenant_idx);
+        acc
+    }
+
+    /// Remove local member `local_idx` and then shrink the shard's share
+    /// to `share_after_hz`.  A sub-fleet losing its last member is
+    /// dropped outright (no planner work).  The leave itself is
+    /// negotiable (reject ⇒ rollback); the post-accept share shrink is
+    /// environmental and may be absorbed.
+    pub fn apply_leave(
+        &mut self,
+        tenant: TenantId,
+        local_idx: usize,
+        share_after_hz: f64,
+    ) -> ShardOpResult {
+        let sub = self.sub(tenant).expect("apply_leave requires a hosted sub-fleet");
+        if sub.members.len() == 1 {
+            self.remove_sub(tenant);
+            return ShardOpResult::free();
+        }
+        let snapshot = Some(sub.clone());
+        let current_share = sub.scenario.total_bandwidth_hz;
+        let leave = self.apply_param(tenant, &ScenarioDelta::Leave(local_idx), false);
+        if leave.disposition != Disposition::Applied {
+            self.restore_sub(tenant, snapshot);
+            return ShardOpResult::rejected();
+        }
+        let mut acc = ShardOpResult::neutral();
+        merge(&mut acc, &leave);
+        self.sub_mut(tenant).expect("leave succeeded").members.remove(local_idx);
+        if share_after_hz != current_share {
+            // The leave is already committed, so an infeasible shrink is
+            // absorbed by apply_param; the aggregate stays `Applied` and
+            // the `rebases` count records the absorption.
+            let shrink =
+                self.apply_param(tenant, &ScenarioDelta::TotalBandwidth(share_after_hz), true);
+            merge(&mut acc, &shrink);
+        }
+        acc
+    }
+}
+
+/// Fold one op's counters into an accumulator (disposition keeps the
+/// accumulator's value; callers decide the aggregate disposition).
+pub(crate) fn merge(acc: &mut ShardOpResult, op: &ShardOpResult) {
+    acc.newton_iters += op.newton_iters;
+    acc.outer_iters += op.outer_iters;
+    acc.cache_hit = acc.cache_hit && op.cache_hit;
+    acc.warm_started = acc.warm_started || op.warm_started;
+    acc.ops += op.ops;
+    acc.replans += op.replans;
+    acc.hits += op.hits;
+    acc.rebases += op.rebases;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::PlannerBuilder;
+    use crate::models::ModelProfile;
+    use crate::util::rng::Rng;
+
+    fn scenario(n: usize, seed: u64) -> Scenario {
+        let mut rng = Rng::new(seed);
+        Scenario::uniform(&ModelProfile::alexnet_paper(), n, 10e6, 0.25, 0.05, &mut rng)
+    }
+
+    fn shard() -> Shard {
+        Shard::new(PlannerBuilder::new().threads(1).build())
+    }
+
+    #[test]
+    fn cold_admit_installs_and_load_counts() {
+        let mut s = shard();
+        let sc = scenario(3, 1);
+        let r = s.cold_admit(7, vec![0, 1, 2], sc).unwrap();
+        assert_eq!(r.disposition, Disposition::Applied);
+        assert!(r.newton_iters > 0);
+        assert_eq!(s.load(), 3);
+        assert_eq!(s.sub(7).unwrap().members, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn multiplexes_two_tenants_through_set_base() {
+        let mut s = shard();
+        s.cold_admit(1, vec![0, 1], scenario(2, 2)).unwrap();
+        s.cold_admit(2, vec![0, 1, 2], scenario(3, 3)).unwrap();
+        // Interleave replans: each must apply to its own tenant's base.
+        let a = s.apply_param(1, &ScenarioDelta::TotalBandwidth(12e6), true);
+        let b = s.apply_param(2, &ScenarioDelta::TotalBandwidth(9e6), true);
+        let a2 = s.apply_param(1, &ScenarioDelta::Risk { device: Some(0), risk: 0.08 }, false);
+        for r in [&a, &b, &a2] {
+            assert_ne!(r.disposition, Disposition::Rejected);
+        }
+        assert_eq!(s.sub(1).unwrap().scenario.total_bandwidth_hz, 12e6);
+        assert_eq!(s.sub(2).unwrap().scenario.total_bandwidth_hz, 9e6);
+        assert_eq!(s.sub(1).unwrap().scenario.devices[0].risk, 0.08);
+        assert_eq!(s.sub(1).unwrap().scenario.n(), 2);
+        assert_eq!(s.sub(2).unwrap().scenario.n(), 3);
+    }
+
+    #[test]
+    fn join_and_leave_maintain_members() {
+        let mut s = shard();
+        let sc = scenario(2, 4);
+        let joiner = sc.devices[0].clone();
+        s.cold_admit(1, vec![0, 1], sc).unwrap();
+        let r = s.apply_join(1, 2, joiner, 10e6);
+        assert_eq!(r.disposition, Disposition::Applied);
+        assert_eq!(s.sub(1).unwrap().members, vec![0, 1, 2]);
+        assert_eq!(s.load(), 3);
+        let r = s.apply_leave(1, 1, 10e6);
+        assert_eq!(r.disposition, Disposition::Applied);
+        assert_eq!(s.sub(1).unwrap().members, vec![0, 2]);
+    }
+
+    #[test]
+    fn last_member_leave_drops_the_sub_fleet_for_free() {
+        let mut s = shard();
+        s.cold_admit(1, vec![5], scenario(1, 5)).unwrap();
+        let r = s.apply_leave(1, 0, 0.0);
+        assert_eq!(r.disposition, Disposition::Applied);
+        assert_eq!(r.newton_iters, 0);
+        assert!(s.sub(1).is_none());
+        assert_eq!(s.load(), 0);
+    }
+
+    #[test]
+    fn rejected_join_rolls_back() {
+        let mut s = shard();
+        let sc = scenario(2, 6);
+        let mut impossible = sc.devices[0].clone();
+        impossible.deadline_s = 1e-4; // unmeetable
+        s.cold_admit(1, vec![0, 1], sc).unwrap();
+        let before = s.sub(1).unwrap().clone();
+        let r = s.apply_join(1, 2, impossible, 10e6);
+        assert_eq!(r.disposition, Disposition::Rejected);
+        let after = s.sub(1).unwrap();
+        assert_eq!(after.members, before.members);
+        assert_eq!(after.scenario.n(), before.scenario.n());
+        assert_eq!(after.outcome.energy.to_bits(), before.outcome.energy.to_bits());
+    }
+
+    #[test]
+    fn environmental_infeasibility_is_absorbed() {
+        let mut s = shard();
+        s.cold_admit(1, vec![0, 1, 2], scenario(3, 7)).unwrap();
+        let energy_before = s.sub(1).unwrap().outcome.energy;
+        // Crush the shared uplink budget: no feasible replan exists, but
+        // the fact is environmental, so the scenario must roll forward
+        // with the old plan kept.
+        let r = s.apply_param(1, &ScenarioDelta::TotalBandwidth(1e3), true);
+        assert_eq!(r.disposition, Disposition::Absorbed);
+        assert_eq!(r.rebases, 1);
+        let sub = s.sub(1).unwrap();
+        assert_eq!(sub.scenario.total_bandwidth_hz, 1e3);
+        // Re-priced energy differs from the planned one in general; the
+        // plan itself is unchanged.
+        assert_eq!(sub.outcome.plan.partition.len(), 3);
+        assert!(sub.outcome.energy.is_finite());
+        let _ = energy_before;
+    }
+}

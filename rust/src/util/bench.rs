@@ -55,11 +55,41 @@ impl Bencher {
         }
     }
 
-    /// Shorter windows for expensive end-to-end benches.
+    /// Shorter windows for expensive end-to-end benches.  A no-op in
+    /// smoke mode (see [`Bencher::smoke_requested`]), so bench mains can
+    /// chain it unconditionally.
     pub fn with_window(mut self, warmup: Duration, window: Duration) -> Self {
+        if self.max_iters == 1 {
+            return self;
+        }
         self.warmup = warmup;
         self.window = window;
         self
+    }
+
+    /// CI smoke mode was requested: the bench binary was invoked with
+    /// `--test` (what `cargo bench -- --test` forwards) or with
+    /// `BENCH_SMOKE=1` in the environment.
+    pub fn smoke_requested() -> bool {
+        std::env::args().any(|a| a == "--test") || std::env::var_os("BENCH_SMOKE").is_some()
+    }
+
+    /// A one-iteration bencher: no warm-up window, exactly one measured
+    /// sample per benchmark.  Exercises every bench body and the JSON
+    /// merge end-to-end in seconds — the numbers are not meaningful and
+    /// CI's smoke artifact must not be merged into a real trajectory.
+    pub fn smoke() -> Self {
+        Bencher::new().with_window(Duration::ZERO, Duration::ZERO).with_max_iters(1)
+    }
+
+    /// [`Bencher::smoke`] when smoke mode is requested, otherwise a
+    /// default bencher (tune it with [`Bencher::with_window`]).
+    pub fn auto() -> Self {
+        if Self::smoke_requested() {
+            Self::smoke()
+        } else {
+            Self::new()
+        }
     }
 
     pub fn with_max_iters(mut self, n: u64) -> Self {
@@ -237,6 +267,16 @@ mod tests {
         assert!(r.iters >= 1);
         assert!(r.median >= r.min);
         assert!(r.p95 >= r.median);
+    }
+
+    #[test]
+    fn smoke_mode_takes_exactly_one_sample_and_ignores_window_tuning() {
+        let win = Duration::from_secs(60);
+        let mut b = Bencher::smoke().with_window(win, win);
+        let t0 = Instant::now();
+        let r = b.bench("one_shot", || 42u64).clone();
+        assert_eq!(r.iters, 1);
+        assert!(t0.elapsed() < Duration::from_secs(5), "smoke mode must not honor windows");
     }
 
     #[test]

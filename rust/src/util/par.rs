@@ -82,6 +82,68 @@ where
     slots.into_iter().map(|v| v.expect("parallel slot unfilled")).collect()
 }
 
+/// Evaluate `f(&mut items[i], i)` for every `i` across `threads` scoped
+/// workers and return the results in index order.  Each index is claimed
+/// exactly once from a shared atomic counter, so every worker holds an
+/// exclusive `&mut` to a distinct element — the service layer uses this
+/// to fan independent planner shards out without wrapping them in locks.
+/// `threads <= 1` runs inline in ascending index order, which is also the
+/// reference order (jobs are independent, slots are placed by index).
+pub fn par_map_indexed_mut<S, T, F>(items: &mut [S], threads: usize, f: F) -> Vec<T>
+where
+    S: Send,
+    T: Send,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let jobs = items.len();
+    if threads <= 1 || jobs <= 1 {
+        return items.iter_mut().enumerate().map(|(i, s)| f(s, i)).collect();
+    }
+    /// Shared base pointer into `items`; sound because the atomic counter
+    /// hands each index to exactly one worker, so no element is ever
+    /// aliased mutably.
+    struct Base<S>(*mut S);
+    unsafe impl<S: Send> Sync for Base<S> {}
+    let base = Base(items.as_mut_ptr());
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(jobs);
+    slots.resize_with(jobs, || None);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let next = &next;
+        let base = &base;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs {
+                            break;
+                        }
+                        // SAFETY: `i < jobs` and each `i` is produced by
+                        // the counter exactly once, so this is the only
+                        // live reference to `items[i]`.
+                        let item = unsafe { &mut *base.0.add(i) };
+                        out.push((i, f(item, i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            let worker = match h.join() {
+                Ok(v) => v,
+                Err(payload) => std::panic::resume_unwind(payload),
+            };
+            for (i, v) in worker {
+                slots[i] = Some(v);
+            }
+        }
+    });
+    slots.into_iter().map(|v| v.expect("parallel slot unfilled")).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +181,24 @@ mod tests {
                 assert!(counted);
             }
         }
+    }
+
+    #[test]
+    fn mut_fan_out_mutates_every_item_exactly_once() {
+        for threads in [1, 2, 4] {
+            let mut items: Vec<u64> = (0..23).collect();
+            let out = par_map_indexed_mut(&mut items, threads, |v, i| {
+                *v += 100;
+                (*v, i)
+            });
+            assert_eq!(items, (100..123).collect::<Vec<_>>(), "threads={threads}");
+            for (idx, (v, i)) in out.iter().enumerate() {
+                assert_eq!(*i, idx);
+                assert_eq!(*v, 100 + idx as u64);
+            }
+        }
+        let mut empty: Vec<u64> = Vec::new();
+        assert!(par_map_indexed_mut(&mut empty, 4, |_, i| i).is_empty());
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! Service-layer integration suite: the one-shard ≡ serial byte-parity
+//! pin, shard-count determinism across runs and thread counts,
+//! fingerprint-routing determinism, bounded-queue backpressure, batch
+//! coalescing (≤ N replans, same final plan as serial application), and
+//! the load-factor rebalance bound.
+
+use ripra::channel::Uplink;
+use ripra::engine::{scenario_fingerprint, Policy, ScenarioDelta};
+use ripra::fleet::{self, FleetOptions};
+use ripra::models::ModelProfile;
+use ripra::optim::types::{Device, Scenario};
+use ripra::service::{Disposition, PlannerService, ServiceError, ServiceOptions};
+
+fn fleet_opts(seed: u64, threads: usize, shards: usize) -> FleetOptions {
+    FleetOptions {
+        n0: 4,
+        duration_s: 2.5,
+        arrival_rate_hz: 0.7,
+        churn: 1.5,
+        total_bandwidth_hz: 10e6,
+        deadline_s: 0.22,
+        risk: 0.06,
+        trials: 120,
+        seed,
+        threads,
+        shards,
+        ..FleetOptions::default()
+    }
+}
+
+fn trace_of(opts: &FleetOptions) -> (String, u64) {
+    let rep = fleet::run(opts).expect("fleet run");
+    let json = rep.to_json().to_string_pretty();
+    let fp = scenario_fingerprint(&rep.final_scenario, &Policy::Robust);
+    (json, fp)
+}
+
+/// A moderate, comfortably feasible device (no RNG: tests that pin
+/// routing or rebalance behavior want full control of the fleet).
+fn device(distance_m: f64) -> Device {
+    Device {
+        model: ModelProfile::alexnet_paper(),
+        uplink: Uplink::from_distance(distance_m),
+        deadline_s: 0.28,
+        risk: 0.05,
+    }
+}
+
+fn scenario_at(distances: &[f64], bandwidth_hz: f64) -> Scenario {
+    Scenario {
+        devices: distances.iter().map(|&d| device(d)).collect(),
+        total_bandwidth_hz: bandwidth_hz,
+    }
+}
+
+fn service(shards: usize, queue_capacity: usize, load_factor: f64) -> PlannerService {
+    PlannerService::new(ServiceOptions {
+        shards,
+        queue_capacity,
+        load_factor,
+        threads: 1,
+        ..ServiceOptions::default()
+    })
+    .expect("valid options")
+}
+
+// ---- determinism ----------------------------------------------------------
+
+/// THE parity pin: a one-shard service drives the exact same planner
+/// call sequence as the bare-planner path, so the whole fleet trace —
+/// config, per-step series, cache counters, final state — is
+/// byte-identical between `shards = 0` and `shards = 1`.
+#[test]
+fn one_shard_service_is_byte_identical_to_the_serial_driver() {
+    let (serial_json, serial_fp) = trace_of(&fleet_opts(7, 1, 0));
+    let (svc_json, svc_fp) = trace_of(&fleet_opts(7, 1, 1));
+    assert_eq!(serial_json, svc_json, "one-shard service must reproduce the serial trace");
+    assert_eq!(serial_fp, svc_fp);
+}
+
+#[test]
+fn sharded_fleet_json_is_deterministic_across_runs_and_threads() {
+    for shards in [1usize, 4] {
+        let (a, fp_a) = trace_of(&fleet_opts(11, 1, shards));
+        let (b, fp_b) = trace_of(&fleet_opts(11, 1, shards));
+        assert_eq!(a, b, "shards={shards}: same seed must be byte-identical");
+        assert_eq!(fp_a, fp_b);
+        let (c, fp_c) = trace_of(&fleet_opts(11, 0, shards));
+        assert_eq!(a, c, "shards={shards}: thread count must not leak into the trace");
+        assert_eq!(fp_a, fp_c);
+    }
+}
+
+#[test]
+fn shard_counts_change_results_but_are_recorded_in_config() {
+    let (one, _) = trace_of(&fleet_opts(13, 1, 1));
+    let (four, _) = trace_of(&fleet_opts(13, 1, 4));
+    assert_ne!(one, four, "partitioning the bandwidth budget must show up in the trace");
+    let parsed = ripra::util::json::Json::parse(&four).unwrap();
+    assert_eq!(parsed.get("config").unwrap().get("shards").unwrap().as_usize().unwrap(), 4);
+}
+
+// ---- routing --------------------------------------------------------------
+
+#[test]
+fn device_to_shard_routing_is_deterministic_and_fingerprint_based() {
+    let sc = scenario_at(&[60.0, 110.0, 160.0, 210.0, 260.0, 310.0], 16e6);
+    let mut a = service(4, 16, 1.5);
+    let mut b = service(4, 16, 1.5);
+    a.admit_tenant(1, sc.clone()).unwrap();
+    b.admit_tenant(1, sc.clone()).unwrap();
+    let route_a = a.device_shards(1).unwrap();
+    let route_b = b.device_shards(1).unwrap();
+    assert_eq!(route_a, route_b, "routing must be a pure function of (tenant, fleet)");
+    assert_eq!(route_a.len(), 6);
+    assert!(route_a.iter().all(|&s| s < 4));
+    // Identical devices hash identically, so they land on the same shard
+    // (no load-bound overflow at this size).
+    let twins = scenario_at(&[120.0, 120.0], 16e6);
+    let mut c = service(4, 16, 4.0);
+    c.admit_tenant(2, twins).unwrap();
+    let route_c = c.device_shards(2).unwrap();
+    assert_eq!(route_c[0], route_c[1], "equal fingerprints must route alike");
+    // Re-admission after eviction reproduces the placement.
+    assert!(a.remove_tenant(1));
+    a.admit_tenant(1, sc).unwrap();
+    assert_eq!(a.device_shards(1).unwrap(), route_a);
+}
+
+#[test]
+fn multi_tenant_deltas_stay_isolated() {
+    let mut svc = service(2, 16, 2.0);
+    svc.admit_tenant(1, scenario_at(&[80.0, 150.0, 220.0], 12e6)).unwrap();
+    svc.admit_tenant(2, scenario_at(&[90.0, 140.0, 230.0], 12e6)).unwrap();
+    let plan2_before = svc.assembled_plan(2).unwrap();
+    let energy2_before = svc.tenant_energy(2).unwrap();
+    svc.submit(1, ScenarioDelta::TotalBandwidth(10e6)).unwrap();
+    svc.submit(1, ScenarioDelta::Risk { device: Some(0), risk: 0.08 }).unwrap();
+    for out in svc.drain() {
+        assert_eq!(out.tenant, 1);
+        assert_ne!(out.disposition, Disposition::Rejected);
+    }
+    assert_eq!(svc.tenant_bandwidth(1), Some(10e6));
+    assert_eq!(svc.tenant_bandwidth(2), Some(12e6));
+    assert_eq!(svc.assembled_plan(2).unwrap(), plan2_before);
+    assert_eq!(svc.tenant_energy(2).unwrap().to_bits(), energy2_before.to_bits());
+}
+
+// ---- backpressure ---------------------------------------------------------
+
+#[test]
+fn bounded_queue_refuses_but_never_drops() {
+    let mut svc = service(2, 3, 2.0);
+    svc.admit_tenant(1, scenario_at(&[100.0, 180.0], 12e6)).unwrap();
+    for i in 0..3 {
+        svc.submit(1, ScenarioDelta::TotalBandwidth(11e6 + i as f64 * 1e5)).unwrap();
+    }
+    // Queue full: the 4th submission is refused loudly...
+    match svc.submit(1, ScenarioDelta::TotalBandwidth(9e6)) {
+        Err(ServiceError::Backpressure { capacity: 3 }) => {}
+        other => panic!("expected backpressure, got {other:?}"),
+    }
+    assert_eq!(svc.stats().refused, 1);
+    assert_eq!(svc.queue_len(), 3);
+    // ...and everything admitted is processed, in submission order.
+    let outs = svc.drain();
+    assert_eq!(outs.len(), 3);
+    assert!(outs.iter().all(|o| o.disposition != Disposition::Rejected));
+    // The refused bandwidth write never happened.
+    assert_eq!(svc.tenant_bandwidth(1), Some(11e6 + 2e5));
+    // After the drain there is room again.
+    svc.submit(1, ScenarioDelta::TotalBandwidth(12e6)).unwrap();
+    assert_eq!(svc.queue_len(), 1);
+    // Un-admitted tenants are refused up front, not enqueued.
+    assert!(matches!(
+        svc.submit(99, ScenarioDelta::TotalBandwidth(1e6)),
+        Err(ServiceError::UnknownTenant(99))
+    ));
+}
+
+// ---- coalescing -----------------------------------------------------------
+
+/// N queued deltas coalesce to at most N (here: strictly fewer) replans,
+/// and because the burst ends back at the starting parameters, both the
+/// batched and the one-at-a-time application finish on the *original*
+/// cached outcome — bit-identical plans, far less work for the batch.
+#[test]
+fn coalescing_bounds_replans_and_matches_serial_application() {
+    let sc = scenario_at(&[70.0, 130.0, 190.0, 250.0], 14e6);
+    let b0 = sc.total_bandwidth_hz;
+    let gain0 = sc.devices[0].uplink;
+    let faded = Uplink::from_gain_db(gain0.gain_db() - 1.0);
+    let burst: Vec<ScenarioDelta> = vec![
+        ScenarioDelta::TotalBandwidth(0.9 * b0),
+        ScenarioDelta::TotalBandwidth(1.1 * b0),
+        ScenarioDelta::Channel { device: 0, uplink: faded },
+        ScenarioDelta::TotalBandwidth(b0),
+        ScenarioDelta::Channel { device: 0, uplink: gain0 },
+    ];
+
+    // Batched: one drain over the whole burst.
+    let mut batched = service(2, 16, 2.0);
+    batched.admit_tenant(1, sc.clone()).unwrap();
+    let replans_before = batched.stats().replans;
+    for d in &burst {
+        batched.submit(1, d.clone()).unwrap();
+    }
+    let outs = batched.drain();
+    assert_eq!(outs.len(), 5);
+    assert_eq!(outs[0].disposition, Disposition::Superseded);
+    assert_eq!(outs[1].disposition, Disposition::Superseded);
+    assert_eq!(outs[2].disposition, Disposition::Superseded);
+    assert_eq!(outs[3].disposition, Disposition::Applied);
+    assert_eq!(outs[4].disposition, Disposition::Applied);
+    let batched_replans = batched.stats().replans - replans_before;
+    assert_eq!(batched.stats().superseded, 3);
+    assert!(
+        batched_replans <= burst.len() as u64,
+        "coalescing must never cost more than serial application"
+    );
+
+    // Serial: one drain per delta on an identical service.
+    let mut serial = service(2, 16, 2.0);
+    serial.admit_tenant(1, sc).unwrap();
+    let serial_before = serial.stats().replans;
+    for d in &burst {
+        serial.submit(1, d.clone()).unwrap();
+        for out in serial.drain() {
+            assert_ne!(out.disposition, Disposition::Superseded);
+        }
+    }
+    let serial_replans = serial.stats().replans - serial_before;
+    assert!(
+        batched_replans < serial_replans,
+        "the burst must coalesce: batched {batched_replans} vs serial {serial_replans} replans"
+    );
+
+    // Same final state, bit-for-bit.
+    let plan_a = batched.assembled_plan(1).unwrap();
+    let plan_b = serial.assembled_plan(1).unwrap();
+    assert_eq!(plan_a, plan_b);
+    assert_eq!(
+        batched.tenant_energy(1).unwrap().to_bits(),
+        serial.tenant_energy(1).unwrap().to_bits()
+    );
+    let sc_a = batched.assembled_scenario(1).unwrap();
+    let sc_b = serial.assembled_scenario(1).unwrap();
+    assert_eq!(
+        scenario_fingerprint(&sc_a, &Policy::Robust),
+        scenario_fingerprint(&sc_b, &Policy::Robust)
+    );
+}
+
+// ---- rebalancing ----------------------------------------------------------
+
+#[test]
+fn membership_churn_keeps_shards_within_the_load_bound() {
+    // Fingerprint twins (identical devices) all hash to the same shard,
+    // so the load bound — not luck — is what spreads them.  load_factor
+    // 1.0 forces a near-even split; generous bandwidth and deadlines
+    // keep every rebalance move feasible.
+    let mut svc = service(2, 16, 1.0);
+    svc.admit_tenant(1, scenario_at(&[120.0, 120.0], 20e6)).unwrap();
+    let loads = svc.shard_loads();
+    assert_eq!(loads, vec![1, 1], "the bound must override the twins' common hash shard");
+    for step in 0..3 {
+        svc.submit(1, ScenarioDelta::Join(device(120.0))).unwrap();
+        let out = svc.drain().pop().unwrap();
+        assert_eq!(out.disposition, Disposition::Applied, "join {step} must be admitted");
+        let loads = svc.shard_loads();
+        let bound = svc.current_load_bound();
+        assert!(
+            loads.iter().max().unwrap() <= &bound,
+            "after join {step}: loads {loads:?} exceed bound {bound}"
+        );
+    }
+    // Five twins on two shards under load factor 1 must sit 3-vs-2.
+    let mut loads = svc.shard_loads();
+    loads.sort_unstable();
+    assert_eq!(loads, vec![2, 3]);
+    // Leaving a device on the lighter shard (tenant index 3, the one
+    // join that overflowed away from the twins' hash shard) drops the
+    // bound to 2, which only a rebalance move can satisfy: 3-vs-1 must
+    // become 2-vs-2.
+    svc.submit(1, ScenarioDelta::Leave(3)).unwrap();
+    let out = svc.drain().pop().unwrap();
+    assert_eq!(out.disposition, Disposition::Applied);
+    assert_eq!(svc.tenant_devices(1), Some(4));
+    let loads = svc.shard_loads();
+    let bound = svc.current_load_bound();
+    assert!(
+        loads.iter().max().unwrap() <= &bound,
+        "after the leave: loads {loads:?} exceed bound {bound}"
+    );
+    assert_eq!(svc.shard_loads(), vec![2, 2]);
+    assert!(svc.stats().rebalance_moves >= 1, "the post-leave split requires a move");
+    // The tenant view stays consistent through the move.
+    let plan = svc.assembled_plan(1).unwrap();
+    assert_eq!(plan.partition.len(), 4);
+    let sc = svc.assembled_scenario(1).unwrap();
+    assert!(plan.freq_ok(&sc));
+    assert_eq!(sc.n(), 4);
+}
+
+// ---- admission ------------------------------------------------------------
+
+#[test]
+fn duplicate_and_unplannable_tenants_are_refused_cleanly() {
+    let mut svc = service(2, 16, 2.0);
+    svc.admit_tenant(1, scenario_at(&[100.0, 200.0], 12e6)).unwrap();
+    assert!(matches!(
+        svc.admit_tenant(1, scenario_at(&[100.0], 12e6)),
+        Err(ServiceError::DuplicateTenant(1))
+    ));
+    // An unmeetable deadline is refused all-or-nothing: no sub-fleet of
+    // the rejected tenant survives anywhere.
+    let mut impossible = scenario_at(&[100.0, 200.0, 300.0], 12e6);
+    for d in &mut impossible.devices {
+        d.deadline_s = 1e-4;
+    }
+    assert!(matches!(
+        svc.admit_tenant(2, impossible),
+        Err(ServiceError::Plan(_))
+    ));
+    assert_eq!(svc.tenant_count(), 1);
+    assert!(svc.tenant_energy(2).is_none());
+    assert_eq!(svc.shard_loads().iter().sum::<usize>(), 2, "only tenant 1's devices remain");
+}

@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
             m,
             b / 1e6,
             f,
-            d.deadline_margin(m, f, b, Policy::Robust) * 1e3
+            d.deadline_margin(m, f, b, Policy::ROBUST) * 1e3
         );
     }
 

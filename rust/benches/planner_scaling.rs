@@ -94,6 +94,36 @@ fn main() {
         }
     }
 
+    // ---- risk-bound family: energy at fixed eps across bounds -----------
+    // One row per chance-constraint transform on the identical scenario,
+    // so BENCH_planner.json records how much energy each bound's margin
+    // costs (ecr = the distribution-free default; the others are tighter
+    // under stronger assumptions).
+    {
+        let model = ModelProfile::alexnet_paper();
+        let (b0, d, eps) = ripra::figures::default_setting(&model.name);
+        let mut rng = Rng::new(0xB0BD);
+        let sc = Scenario::uniform(&model, 12, b0, d, eps, &mut rng);
+        for bound in ripra::risk::BOUND_FAMILY {
+            // Cache off: every timed iteration is a genuine solve.
+            let mut planner = PlannerBuilder::new().cache_capacity(0).build();
+            let name = format!("bound_energy_{}", bound.name());
+            bench.bench(&name, || {
+                planner
+                    .plan(&PlanRequest::new(sc.clone(), Policy::Robust).with_bound(bound))
+                    .map(|o| o.energy)
+                    .unwrap_or(f64::NAN)
+            });
+            if let Ok(o) =
+                planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust).with_bound(bound))
+            {
+                bench.attach(&name, "energy", o.energy);
+                bench.attach(&name, "margin_sum_s", o.diagnostics.margins_s.iter().sum::<f64>());
+                bench.attach(&name, "newton_iters", o.diagnostics.newton_iters as f64);
+            }
+        }
+    }
+
     bench.write_json(Path::new("BENCH_planner.json")).expect("writing BENCH_planner.json");
     println!("wrote BENCH_planner.json");
 }

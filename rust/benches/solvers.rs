@@ -14,6 +14,7 @@ use ripra::linalg::{Cholesky, Matrix};
 use ripra::models::ModelProfile;
 use ripra::optim::types::{Policy, Scenario};
 use ripra::optim::{pccp, resource};
+use ripra::risk::RiskBound;
 use ripra::util::bench::Bencher;
 use ripra::util::rng::Rng;
 
@@ -64,15 +65,15 @@ fn main() {
         );
         let partition = vec![7usize; n];
         bench.bench(&format!("resource_barrier_n{n}"), || {
-            resource::solve(&sc, &partition, Policy::Robust).unwrap().energy
+            resource::solve(&sc, &partition, Policy::ROBUST).unwrap().energy
         });
         // warm start from the previous optimum (Algorithm 2's steady state)
-        let prev = resource::solve(&sc, &partition, Policy::Robust).unwrap();
+        let prev = resource::solve(&sc, &partition, Policy::ROBUST).unwrap();
         bench.bench(&format!("resource_barrier_warm_n{n}"), || {
-            resource::solve_warm(&sc, &partition, Policy::Robust, Some(&prev)).unwrap().energy
+            resource::solve_warm(&sc, &partition, Policy::ROBUST, Some(&prev)).unwrap().energy
         });
         bench.bench(&format!("resource_dual_n{n}"), || {
-            resource::solve_dual(&sc, &partition, Policy::Robust).unwrap().energy
+            resource::solve_dual(&sc, &partition, Policy::ROBUST).unwrap().energy
         });
     }
 
@@ -82,7 +83,7 @@ fn main() {
             Scenario::uniform(&ModelProfile::alexnet_paper(), 1, 10e6, 0.22, 0.04, &mut srng);
         let opts = pccp::PccpOptions::default();
         bench.bench("pccp_device_solve", || {
-            pccp::solve_device(&sc.devices[0], 1.0, 3e6, &opts, None).unwrap().m
+            pccp::solve_device(&sc.devices[0], 1.0, 3e6, &opts, None, RiskBound::Ecr).unwrap().m
         });
     }
 
@@ -97,10 +98,10 @@ fn main() {
         let seq = pccp::PccpOptions { threads: 1, ..pccp::PccpOptions::default() };
         let par = pccp::PccpOptions::default();
         bench.bench(&format!("pccp_scenario_n{n}_seq"), || {
-            pccp::solve(&sc, &f, &b, &seq, None).unwrap().newton_iters
+            pccp::solve(&sc, &f, &b, &seq, None, RiskBound::Ecr).unwrap().newton_iters
         });
         bench.bench(&format!("pccp_scenario_n{n}_par"), || {
-            pccp::solve(&sc, &f, &b, &par, None).unwrap().newton_iters
+            pccp::solve(&sc, &f, &b, &par, None, RiskBound::Ecr).unwrap().newton_iters
         });
     }
 

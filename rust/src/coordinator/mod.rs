@@ -159,6 +159,7 @@ pub fn plan_and_serve_sharded(
         plan: plan.clone(),
         energy: admitted.energy_j,
         policy: crate::engine::Policy::Robust,
+        bound: service.tenant_bound(tenant).unwrap_or_default(),
         diagnostics: crate::engine::Diagnostics {
             newton_iters: admitted.newton_iters,
             outer_iters: admitted.outer_iters,

@@ -99,6 +99,7 @@ mod tests {
             plan: Plan { partition: vec![1], bandwidth_hz: vec![1e6], freq_ghz: vec![1.0] },
             energy,
             policy: Policy::Robust,
+            bound: crate::risk::RiskBound::Ecr,
             diagnostics: Diagnostics::default(),
         }
     }

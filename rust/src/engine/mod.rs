@@ -18,10 +18,16 @@
 //!   deadlines, risk levels, channel gains) — so repeated planning is a
 //!   service call, not a per-request cold start.
 //! * [`Planner::replan`] consumes a [`ScenarioDelta`] (device
-//!   join/leave, channel, deadline, risk, or bandwidth change) and
-//!   warm-starts from the cached plan, falling back to a cold solve when
-//!   the adapted decision is infeasible — replanning for an online fleet
-//!   costs a few warm resource solves instead of a fresh MINLP run.
+//!   join/leave, channel, deadline, risk, bandwidth, or risk-bound
+//!   change) and warm-starts from the cached plan, falling back to a
+//!   cold solve when the adapted decision is infeasible — replanning
+//!   for an online fleet costs a few warm resource solves instead of a
+//!   fresh MINLP run.
+//! * Requests carry a pluggable chance-constraint transform
+//!   ([`RiskBound`], default the paper's ECR/Cantelli bound):
+//!   `PlanRequest::with_bound` selects it, the plan-cache fingerprint
+//!   isolates it, and [`PlanOutcome`] reports the applied per-device
+//!   margins.
 //!
 //! ```
 //! use ripra::engine::{PlannerBuilder, PlanRequest, Policy, ScenarioDelta};
@@ -53,5 +59,9 @@ pub use cache::CacheStats;
 pub use outcome::{Diagnostics, PlanError, PlanOutcome};
 pub use planner::{Planner, PlannerBuilder};
 pub use request::{
-    device_fingerprint, scenario_fingerprint, CliFlag, PlanRequest, Policy, ScenarioDelta,
+    device_fingerprint, scenario_fingerprint, scenario_fingerprint_with, CliFlag, PlanRequest,
+    Policy, ScenarioDelta,
 };
+// The risk-bound layer is part of the engine's request surface
+// (`PlanRequest::with_bound`, `ScenarioDelta::Bound`), so re-export it.
+pub use crate::risk::RiskBound;

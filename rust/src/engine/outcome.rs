@@ -7,6 +7,7 @@
 use std::time::Duration;
 
 use crate::optim::types::Plan;
+use crate::risk::RiskBound;
 use crate::util::json::Json;
 
 use super::request::Policy;
@@ -36,6 +37,11 @@ pub struct Diagnostics {
     /// The outcome was produced by [`super::Planner::replan`]'s
     /// warm-started path (not a cold solve).
     pub warm_started: bool,
+    /// Applied per-device uncertainty margin at the chosen partition
+    /// point, seconds — the slice of each deadline the active risk
+    /// bound reserved for jitter.  Lets BENCH/figure tooling attribute
+    /// energy differences between bounds to the margins they charged.
+    pub margins_s: Vec<f64>,
 }
 
 /// One unified outcome for every planning policy.
@@ -47,6 +53,10 @@ pub struct PlanOutcome {
     pub energy: f64,
     /// Policy that produced the plan.
     pub policy: Policy,
+    /// Chance-constraint transform the deadline margins were computed
+    /// under (meaningful for the robust policy family; the baselines
+    /// carry the request's bound through unchanged).
+    pub bound: RiskBound,
     pub diagnostics: Diagnostics,
 }
 
@@ -56,6 +66,11 @@ impl PlanOutcome {
         let nums = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
         Json::Obj(vec![
             ("policy".into(), Json::Str(self.policy.name().into())),
+            ("bound".into(), Json::Str(self.bound.name().into())),
+            (
+                "bound_scale".into(),
+                self.bound.scale().map(Json::Num).unwrap_or(Json::Null),
+            ),
             ("energy_j".into(), Json::Num(self.energy)),
             (
                 "partition".into(),
@@ -63,6 +78,7 @@ impl PlanOutcome {
             ),
             ("bandwidth_hz".into(), nums(&self.plan.bandwidth_hz)),
             ("freq_ghz".into(), nums(&self.plan.freq_ghz)),
+            ("margin_s".into(), nums(&self.diagnostics.margins_s)),
             (
                 "diagnostics".into(),
                 Json::Obj(vec![
@@ -89,6 +105,11 @@ pub enum PlanError {
     /// The request itself is malformed (empty scenario, bad delta index,
     /// mismatched initial partition, ...).
     InvalidRequest(String),
+    /// A risk level ε is outside (0, 1) — caught at request/delta
+    /// validation so the transforms deep inside the solvers never see
+    /// it (`risk::validate_risk`; historically this was an `assert!`
+    /// panic in `ecr::sigma`).
+    InvalidRisk(String),
 }
 
 impl std::fmt::Display for PlanError {
@@ -97,6 +118,7 @@ impl std::fmt::Display for PlanError {
             PlanError::Infeasible(s) => write!(f, "scenario infeasible: {s}"),
             PlanError::Solver(s) => write!(f, "solver failure: {s}"),
             PlanError::InvalidRequest(s) => write!(f, "invalid request: {s}"),
+            PlanError::InvalidRisk(s) => write!(f, "invalid risk: {s}"),
         }
     }
 }
@@ -138,16 +160,21 @@ mod tests {
             },
             energy: 1.25,
             policy: Policy::Robust,
+            bound: RiskBound::calibrated(0.85),
             diagnostics: Diagnostics {
                 outer_iters: 3,
                 newton_iters: 120,
                 cache_hit: true,
+                margins_s: vec![0.011, 0.007],
                 ..Default::default()
             },
         };
         let j = out.to_json();
         let back = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(back.get("policy").unwrap().as_str().unwrap(), "robust");
+        assert_eq!(back.get("bound").unwrap().as_str().unwrap(), "calibrated");
+        assert!((back.get("bound_scale").unwrap().as_f64().unwrap() - 0.85).abs() < 1e-12);
+        assert_eq!(back.get("margin_s").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(back.get("energy_j").unwrap().as_f64().unwrap(), 1.25);
         assert_eq!(back.get("partition").unwrap().usize_array().unwrap(), vec![2, 0]);
         let d = back.get("diagnostics").unwrap();
@@ -159,5 +186,6 @@ mod tests {
     fn error_display_tags_kind() {
         assert!(PlanError::Infeasible("x".into()).to_string().contains("infeasible"));
         assert!(PlanError::InvalidRequest("y".into()).to_string().contains("invalid"));
+        assert!(PlanError::InvalidRisk("z".into()).to_string().contains("invalid risk"));
     }
 }

@@ -7,11 +7,12 @@ use std::time::Instant;
 
 use crate::optim::types::{Plan, Policy as MarginPolicy, Scenario};
 use crate::optim::{alternating, baselines, resource, AlternatingOptions};
+use crate::risk::RiskBound;
 use crate::solver::NewtonWorkspace;
 
 use super::cache::{CacheStats, PlanCache};
 use super::outcome::{Diagnostics, PlanError, PlanOutcome};
-use super::request::{scenario_fingerprint, PlanRequest, Policy, ScenarioDelta};
+use super::request::{scenario_fingerprint_with, PlanRequest, Policy, ScenarioDelta};
 
 /// Bound on the enumeration-refinement rounds a warm replan runs; each
 /// round costs one warm-started resource solve, so the replan's total
@@ -273,16 +274,25 @@ impl Planner {
     /// resources, the planner falls back to a cold [`Planner::plan`] of
     /// the new scenario (and only errors if that fails too).
     pub fn replan(&mut self, delta: &ScenarioDelta) -> Result<PlanOutcome, PlanError> {
-        let (prev_sc, policy, prev_plan) = match &self.last {
-            Some(l) => (l.scenario.clone(), l.policy.clone(), l.outcome.plan.clone()),
+        let (prev_sc, policy, prev_plan, prev_bound) = match &self.last {
+            Some(l) => {
+                (l.scenario.clone(), l.policy.clone(), l.outcome.plan.clone(), l.outcome.bound)
+            }
             None => {
                 return Err(PlanError::InvalidRequest(
                     "replan requires a previous plan() on this planner".into(),
                 ))
             }
         };
+        // A Bound delta swaps the chance-constraint transform in place
+        // (the scenario itself is untouched); every other delta keeps
+        // planning under the bound of the last solve.
+        let bound = match delta {
+            ScenarioDelta::Bound(b) => *b,
+            _ => prev_bound,
+        };
         let new_sc = delta.apply(&prev_sc)?;
-        let mpol = policy.margin_policy();
+        let mpol = policy.margin_policy(bound);
         let t0 = Instant::now();
 
         let (mut partition, warm) = adapt_decision(delta, &prev_sc, &prev_plan, &new_sc, mpol);
@@ -292,7 +302,7 @@ impl Planner {
             Ok(r) => r,
             // Feasibility gate: the adapted decision cannot be repaired
             // by resources alone — solve the new scenario cold.
-            Err(_) => return self.plan(&PlanRequest::new(new_sc, policy)),
+            Err(_) => return self.plan(&PlanRequest::new(new_sc, policy).with_bound(bound)),
         };
 
         let mut newton = res.newton_iters;
@@ -324,14 +334,17 @@ impl Planner {
             }
         }
 
+        let plan = Plan {
+            partition,
+            bandwidth_hz: res.bandwidth_hz.clone(),
+            freq_ghz: res.freq_ghz.clone(),
+        };
+        let margins_s = margins_of(&new_sc, &plan, mpol);
         let outcome = PlanOutcome {
-            plan: Plan {
-                partition,
-                bandwidth_hz: res.bandwidth_hz.clone(),
-                freq_ghz: res.freq_ghz.clone(),
-            },
+            plan,
             energy: res.energy,
             policy: policy.clone(),
+            bound,
             diagnostics: Diagnostics {
                 outer_iters: outer,
                 avg_pccp_iters: 0.0,
@@ -340,10 +353,12 @@ impl Planner {
                 wall_time: t0.elapsed(),
                 cache_hit: false,
                 warm_started: true,
+                margins_s,
             },
         };
-        // A follow-up plan() of the same scenario now hits the cache.
-        self.cache.insert(scenario_fingerprint(&new_sc, &policy), outcome.clone());
+        // A follow-up plan() of the same scenario (under the same
+        // bound) now hits the cache.
+        self.cache.insert(scenario_fingerprint_with(&new_sc, &policy, bound), outcome.clone());
         self.remember(new_sc, policy, &outcome);
         Ok(outcome)
     }
@@ -354,40 +369,56 @@ impl Planner {
 
     fn solve_cold(&mut self, req: &PlanRequest) -> Result<PlanOutcome, PlanError> {
         let sc = &req.scenario;
-        match &req.policy {
+        let mut out = match &req.policy {
             Policy::Robust => {
                 let init = req.init_partition.clone();
-                let r = alternating::solve_core(sc, &self.opts, init, &mut self.ws)?;
-                Ok(robust_outcome(r, Policy::Robust))
+                let r = alternating::solve_core(sc, &self.opts, init, req.bound, &mut self.ws)?;
+                robust_outcome(r, Policy::Robust, req.bound)
             }
             Policy::Multistart { extra_starts } => {
-                let r =
-                    alternating::solve_multistart_core(sc, &self.opts, extra_starts, &mut self.ws)?;
-                Ok(robust_outcome(r, req.policy.clone()))
+                let r = alternating::solve_multistart_core(
+                    sc,
+                    &self.opts,
+                    extra_starts,
+                    req.bound,
+                    &mut self.ws,
+                )?;
+                robust_outcome(r, req.policy.clone(), req.bound)
             }
             Policy::WorstCase | Policy::MeanOnly => {
                 let r = baselines::alternate_enumeration_core(
                     sc,
-                    req.policy.margin_policy(),
+                    req.policy.margin_policy(req.bound),
                     req.init_partition.clone(),
                     20,
                     &mut self.ws,
                 )?;
-                Ok(baseline_outcome(r, req.policy.clone()))
+                baseline_outcome(r, req.policy.clone(), req.bound)
             }
             Policy::Exhaustive => {
-                let r = baselines::exhaustive_core(sc, &mut self.ws)?;
-                Ok(baseline_outcome(r, Policy::Exhaustive))
+                let r =
+                    baselines::exhaustive_core(sc, MarginPolicy::Robust(req.bound), &mut self.ws)?;
+                baseline_outcome(r, Policy::Exhaustive, req.bound)
             }
-        }
+        };
+        out.diagnostics.margins_s = margins_of(sc, &out.plan, req.policy.margin_policy(req.bound));
+        Ok(out)
     }
 }
 
-fn robust_outcome(r: alternating::RobustPlan, policy: Policy) -> PlanOutcome {
+/// Applied per-device margin at the chosen partition points — the
+/// diagnostics slice that lets tooling attribute energy differences
+/// between bounds to the margins they charged.
+fn margins_of(sc: &Scenario, plan: &Plan, mpol: MarginPolicy) -> Vec<f64> {
+    sc.devices.iter().zip(&plan.partition).map(|(d, &m)| d.margin(m, mpol)).collect()
+}
+
+fn robust_outcome(r: alternating::RobustPlan, policy: Policy, bound: RiskBound) -> PlanOutcome {
     PlanOutcome {
         plan: r.plan,
         energy: r.energy,
         policy,
+        bound,
         diagnostics: Diagnostics {
             outer_iters: r.outer_iters,
             avg_pccp_iters: r.avg_pccp_iters,
@@ -398,11 +429,12 @@ fn robust_outcome(r: alternating::RobustPlan, policy: Policy) -> PlanOutcome {
     }
 }
 
-fn baseline_outcome(r: baselines::BaselinePlan, policy: Policy) -> PlanOutcome {
+fn baseline_outcome(r: baselines::BaselinePlan, policy: Policy, bound: RiskBound) -> PlanOutcome {
     PlanOutcome {
         plan: r.plan,
         energy: r.energy,
         policy,
+        bound,
         diagnostics: Diagnostics {
             outer_iters: r.outer_iters,
             newton_iters: r.newton_iters,
@@ -532,6 +564,36 @@ mod tests {
     }
 
     #[test]
+    fn bound_delta_replans_in_place_and_shrinks_energy() {
+        let sc = scenario(5, 0.22, 0.05, 21);
+        let mut p = Planner::default();
+        let ecr = p.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+        assert_eq!(ecr.bound, RiskBound::Ecr);
+        assert_eq!(ecr.diagnostics.margins_s.len(), sc.n());
+        // Swap to the tighter Gaussian bound: same scenario, smaller
+        // margins, so the warm replan must keep feasibility under the
+        // new policy×bound and can only save energy.
+        let re = p.replan(&ScenarioDelta::Bound(RiskBound::Gaussian)).unwrap();
+        assert_eq!(re.bound, RiskBound::Gaussian);
+        assert!(re.plan.feasible(&sc, MarginPolicy::Robust(RiskBound::Gaussian)));
+        assert!(re.energy <= ecr.energy * (1.0 + 1e-9), "{} vs {}", re.energy, ecr.energy);
+        // The recorded diagnostics are the Gaussian margins at the
+        // replanned partition points, bit-for-bit.
+        for (i, (d, &m)) in sc.devices.iter().zip(&re.plan.partition).enumerate() {
+            let want = d.margin(m, MarginPolicy::Robust(RiskBound::Gaussian));
+            assert_eq!(re.diagnostics.margins_s[i].to_bits(), want.to_bits(), "device {i}");
+        }
+        // The replanned outcome is cached under the *new* bound...
+        let gauss_req =
+            PlanRequest::new(sc.clone(), Policy::Robust).with_bound(RiskBound::Gaussian);
+        let hit = p.plan_cached(&gauss_req).unwrap();
+        assert!(hit.diagnostics.cache_hit);
+        // ...and a follow-up replan continues under it.
+        let re2 = p.replan(&ScenarioDelta::TotalBandwidth(sc.total_bandwidth_hz * 1.1)).unwrap();
+        assert_eq!(re2.bound, RiskBound::Gaussian);
+    }
+
+    #[test]
     fn replan_without_history_is_rejected() {
         let mut p = Planner::default();
         assert!(matches!(
@@ -550,7 +612,7 @@ mod tests {
         assert_eq!(re.plan.partition.len(), 5);
         let smaller = p.last_scenario().unwrap().clone();
         assert_eq!(smaller.n(), 5);
-        assert!(re.plan.feasible(&smaller, MarginPolicy::Robust));
+        assert!(re.plan.feasible(&smaller, MarginPolicy::ROBUST));
         assert!(re.plan.bandwidth_ok(&smaller));
         assert!(re.energy <= cold.energy * (1.0 + 1e-6), "leaving cannot cost energy");
         // a follow-up plan() of the replanned scenario hits the cache

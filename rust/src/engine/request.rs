@@ -4,6 +4,7 @@
 
 use crate::channel::Uplink;
 use crate::optim::types::{Device, Scenario};
+use crate::risk::RiskBound;
 
 use super::outcome::PlanError;
 
@@ -52,12 +53,14 @@ impl Policy {
     }
 
     /// The deadline-margin policy this planning policy evaluates
-    /// constraints under (the robust family all uses ECR margins).
-    pub fn margin_policy(&self) -> crate::optim::Policy {
+    /// constraints under: the robust family (Robust / Multistart /
+    /// Exhaustive) applies the request's risk bound, the baselines keep
+    /// their own fixed margins.
+    pub fn margin_policy(&self, bound: RiskBound) -> crate::optim::Policy {
         match self {
             Policy::WorstCase => crate::optim::Policy::WorstCase,
             Policy::MeanOnly => crate::optim::Policy::MeanOnly,
-            _ => crate::optim::Policy::Robust,
+            _ => crate::optim::Policy::Robust(bound),
         }
     }
 
@@ -83,11 +86,16 @@ pub struct CliFlag {
     pub help: &'static str,
 }
 
-/// A planning request: scenario + policy (+ optional overrides).
+/// A planning request: scenario + policy × bound (+ optional overrides).
 #[derive(Clone, Debug)]
 pub struct PlanRequest {
     pub scenario: Scenario,
     pub policy: Policy,
+    /// Chance-constraint transform for the robust policy family
+    /// (default [`RiskBound::Ecr`], the paper's Theorem 1 — back-compat
+    /// with every pre-refactor request).  Part of the cache fingerprint,
+    /// so plans never leak across bounds.
+    pub bound: RiskBound,
     /// Initial partition override for the alternation (Fig. 10 sweeps
     /// this); `None` uses the feasibility-friendly heuristic start.
     pub init_partition: Option<Vec<usize>>,
@@ -110,6 +118,11 @@ impl PlanRequest {
             value: Some("robust|worst|mean|exhaustive|multistart"),
             help: "planning policy (default robust)",
         },
+        CliFlag {
+            name: "bound",
+            value: Some("ecr|gauss|bernstein|calibrated[:S]"),
+            help: "chance-constraint transform (default ecr)",
+        },
         CliFlag { name: "seed", value: Some("S"), help: "device-placement seed" },
         CliFlag { name: "trials", value: Some("T"), help: "Monte-Carlo trials (0 disables)" },
         CliFlag { name: "no-cache", value: None, help: "bypass the plan cache" },
@@ -117,7 +130,19 @@ impl PlanRequest {
     ];
 
     pub fn new(scenario: Scenario, policy: Policy) -> PlanRequest {
-        PlanRequest { scenario, policy, init_partition: None, use_cache: true }
+        PlanRequest {
+            scenario,
+            policy,
+            bound: RiskBound::Ecr,
+            init_partition: None,
+            use_cache: true,
+        }
+    }
+
+    /// Select the chance-constraint transform for the robust family.
+    pub fn with_bound(mut self, bound: RiskBound) -> PlanRequest {
+        self.bound = bound;
+        self
     }
 
     /// Override the initial partition.
@@ -135,6 +160,20 @@ impl PlanRequest {
     pub(crate) fn validate(&self) -> Result<(), PlanError> {
         if self.scenario.n() == 0 {
             return Err(PlanError::InvalidRequest("scenario has no devices".into()));
+        }
+        // QoS parameters are validated here, at the API boundary, so the
+        // margin transforms deep inside the solvers are total (the
+        // historical failure mode was an assert! panic in ecr::sigma).
+        // A failure is classified by *which* parameter is bad, so a bad
+        // ε always surfaces as the structured InvalidRisk.
+        for (i, d) in self.scenario.devices.iter().enumerate() {
+            if let Err(e) = d.validate() {
+                return Err(if crate::risk::validate_risk(d.risk).is_err() {
+                    PlanError::InvalidRisk(format!("device {i}: {e}"))
+                } else {
+                    PlanError::InvalidRequest(format!("device {i}: {e}"))
+                });
+            }
         }
         if self.policy == Policy::Exhaustive {
             // Mirror the search's own refusal limit so an oversized
@@ -172,10 +211,15 @@ impl PlanRequest {
         Ok(())
     }
 
-    /// Cache key: policy + init + quantized scenario fingerprint.
+    /// Cache key: policy + bound + init + quantized scenario fingerprint.
     pub fn fingerprint(&self) -> u64 {
         let mut h = Fnv::new();
         h.u8(self.policy.tag());
+        // The bound (and, for the calibrated bound, its quantized scale)
+        // keys the cache too: a cached plan must never be served across
+        // bounds, whose margins differ.
+        h.u8(self.bound.tag());
+        h.usize(self.bound.scale_q() as usize);
         if let Policy::Multistart { extra_starts } = &self.policy {
             h.usize(extra_starts.len());
             for s in extra_starts {
@@ -238,11 +282,16 @@ fn hash_device(h: &mut Fnv, d: &Device) {
     h.q(10.0 * d.uplink.n0.log10(), quanta::GAIN_DB);
 }
 
-/// Fingerprint of a bare scenario under a policy (what `replan` inserts
-/// its warm results under, so a follow-up `plan` for the same scenario
-/// hits the cache).
+/// Fingerprint of a bare scenario under a policy and the default ECR
+/// bound (what `replan` inserts its warm results under, so a follow-up
+/// `plan` for the same scenario hits the cache).
 pub fn scenario_fingerprint(sc: &Scenario, policy: &Policy) -> u64 {
     PlanRequest::new(sc.clone(), policy.clone()).fingerprint()
+}
+
+/// [`scenario_fingerprint`] under an explicit risk bound.
+pub fn scenario_fingerprint_with(sc: &Scenario, policy: &Policy, bound: RiskBound) -> u64 {
+    PlanRequest::new(sc.clone(), policy.clone()).with_bound(bound).fingerprint()
 }
 
 /// Fingerprint of one device on the same quantization grid the plan
@@ -308,6 +357,12 @@ pub enum ScenarioDelta {
     Channel { device: usize, uplink: Uplink },
     /// Total uplink budget change.
     TotalBandwidth(f64),
+    /// Fleet-wide risk-bound change (e.g. an online conformal
+    /// recalibration).  The bound lives in the planning policy, not the
+    /// scenario, so `apply` is the identity on the scenario — the
+    /// planner's `replan` swaps the bound on its stored policy and
+    /// re-prices under the new margins.
+    Bound(RiskBound),
 }
 
 impl ScenarioDelta {
@@ -350,11 +405,7 @@ impl ScenarioDelta {
                 }
             }
             ScenarioDelta::Risk { device, risk } => {
-                if !risk.is_finite() || *risk <= 0.0 || *risk >= 1.0 {
-                    return Err(PlanError::InvalidRequest(format!(
-                        "risk must be in (0, 1), got {risk}"
-                    )));
-                }
+                crate::risk::validate_risk(*risk).map_err(PlanError::InvalidRisk)?;
                 match device {
                     Some(i) => {
                         check(*i)?;
@@ -375,6 +426,8 @@ impl ScenarioDelta {
                 }
                 out.total_bandwidth_hz = *b;
             }
+            // The bound is planner state, not scenario state.
+            ScenarioDelta::Bound(_) => {}
         }
         Ok(out)
     }
@@ -397,10 +450,39 @@ mod tests {
         let a = PlanRequest::new(sc.clone(), Policy::Robust).fingerprint();
         let b = PlanRequest::new(sc.clone(), Policy::Robust).fingerprint();
         let c = PlanRequest::new(sc.clone(), Policy::MeanOnly).fingerprint();
-        let d = PlanRequest::new(sc, Policy::Robust).with_init(vec![0; 4]).fingerprint();
+        let d = PlanRequest::new(sc.clone(), Policy::Robust).with_init(vec![0; 4]).fingerprint();
         assert_eq!(a, b);
         assert_ne!(a, c);
         assert_ne!(a, d);
+        // The bound keys the fingerprint: different bounds — and
+        // different calibrated scales — never alias, while the default
+        // bound is exactly RiskBound::Ecr.
+        let ecr = PlanRequest::new(sc.clone(), Policy::Robust)
+            .with_bound(RiskBound::Ecr)
+            .fingerprint();
+        assert_eq!(a, ecr);
+        for bound in [RiskBound::Gaussian, RiskBound::Bernstein, RiskBound::calibrated(1.0)] {
+            let other =
+                PlanRequest::new(sc.clone(), Policy::Robust).with_bound(bound).fingerprint();
+            assert_ne!(a, other, "{bound} must not alias ecr");
+        }
+        let s1 = PlanRequest::new(sc.clone(), Policy::Robust)
+            .with_bound(RiskBound::calibrated(0.8))
+            .fingerprint();
+        let s2 = PlanRequest::new(sc, Policy::Robust)
+            .with_bound(RiskBound::calibrated(0.9))
+            .fingerprint();
+        assert_ne!(s1, s2, "calibrated scales must not alias");
+    }
+
+    #[test]
+    fn bad_risk_is_a_structured_error() {
+        let mut sc = scenario(8);
+        sc.devices[1].risk = 0.0;
+        assert!(matches!(
+            PlanRequest::new(sc, Policy::Robust).validate(),
+            Err(PlanError::InvalidRisk(_))
+        ));
     }
 
     #[test]
@@ -470,7 +552,12 @@ mod tests {
         assert!(slow.devices.iter().all(|d| d.deadline_s == 0.3));
         assert!(ScenarioDelta::Deadline { device: None, deadline_s: -1.0 }.apply(&sc).is_err());
         assert!(ScenarioDelta::Risk { device: Some(1), risk: 0.08 }.apply(&sc).is_ok());
-        assert!(ScenarioDelta::Risk { device: None, risk: 1.5 }.apply(&sc).is_err());
+        assert!(matches!(
+            ScenarioDelta::Risk { device: None, risk: 1.5 }.apply(&sc),
+            Err(PlanError::InvalidRisk(_))
+        ));
+        let rebound = ScenarioDelta::Bound(RiskBound::Gaussian).apply(&sc).unwrap();
+        assert_eq!(rebound.n(), sc.n(), "a bound change leaves the scenario untouched");
         let wider = ScenarioDelta::TotalBandwidth(20e6).apply(&sc).unwrap();
         assert_eq!(wider.total_bandwidth_hz, 20e6);
     }

@@ -35,18 +35,19 @@
 use crate::channel::{GaussMarkov, Uplink};
 use crate::engine::{
     CacheStats, CliFlag, Diagnostics, PlanError, PlanOutcome, PlanRequest, Planner,
-    PlannerBuilder, Policy, ScenarioDelta,
+    PlannerBuilder, Policy, RiskBound, ScenarioDelta,
 };
 use crate::models::ModelProfile;
 use crate::optim::types::{Device, Plan, Scenario};
 use crate::profile::Dist;
+use crate::risk::Calibration;
 use crate::service::{Disposition, PlannerService, ServiceError, ServiceOptions, TenantId};
 use crate::sim::{self, SimOptions};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::events::{EventQueue, FleetEvent};
-use super::metrics::{FleetMetrics, StepRecord, INITIAL_KIND};
+use super::metrics::{FleetMetrics, StepRecord, INITIAL_KIND, RECALIBRATE_KIND};
 
 /// Stationary shadowing standard deviation of the Gauss–Markov gain
 /// process, dB (urban shadowing scale).
@@ -71,6 +72,13 @@ const FADE_INTERVAL_S: f64 = 2.0;
 /// its base risk — when nothing else changed, that replan is an exact
 /// fingerprint repeat and is served from the plan cache).
 const RISK_STEPS: [f64; 3] = [0.5, 1.0, 2.0];
+
+/// Cap on chained conformal recalibrations triggered by one fleet step
+/// (each applied recalibration is Monte-Carlo-checked and may justify
+/// the next; the conformal scale moves monotonically toward its floor
+/// on clean observations, so the cap only guards pathological
+/// oscillation).
+const MAX_RECAL_CHAIN: usize = 16;
 
 /// Configuration for one simulated fleet run.
 ///
@@ -109,6 +117,14 @@ pub struct FleetOptions {
     /// partitions the bandwidth budget), so it is part of the exported
     /// config; a one-shard service is bit-identical to the serial path.
     pub shards: usize,
+    /// Chance-constraint transform every robust plan in the run uses
+    /// (default [`RiskBound::Ecr`]).  A calibrated bound additionally
+    /// turns on the online conformal stream: after each Monte-Carlo
+    /// check the scale is updated from the observed violations and, when
+    /// the quantized bound moves, a fleet-wide
+    /// [`ScenarioDelta::Bound`] recalibration is driven through the
+    /// backend (recorded as a `"recalibrate"` step).
+    pub bound: RiskBound,
 }
 
 impl Default for FleetOptions {
@@ -126,6 +142,7 @@ impl Default for FleetOptions {
             seed: 7,
             threads: 0,
             shards: 0,
+            bound: RiskBound::Ecr,
         }
     }
 }
@@ -166,6 +183,11 @@ impl FleetOptions {
             value: Some("K"),
             help: "planner-service shards (0 = one serial planner)",
         },
+        CliFlag {
+            name: "bound",
+            value: Some("ecr|gauss|bernstein|calibrated[:S]"),
+            help: "chance-constraint transform (default ecr; calibrated learns online)",
+        },
         CliFlag { name: "json", value: None, help: "emit the metrics time series as JSON" },
     ];
 
@@ -204,7 +226,6 @@ impl FleetOptions {
             ("churn", self.churn),
             ("bandwidth", self.total_bandwidth_hz),
             ("deadline", self.deadline_s),
-            ("risk", self.risk),
         ] {
             if !(v.is_finite() && v >= 0.0) {
                 return bad(format!("{name} must be finite and non-negative, got {v}"));
@@ -213,9 +234,7 @@ impl FleetOptions {
         if self.total_bandwidth_hz <= 0.0 || self.deadline_s <= 0.0 {
             return bad("bandwidth and deadline must be positive".into());
         }
-        if self.risk <= 0.0 || self.risk >= 1.0 {
-            return bad(format!("risk must be in (0, 1), got {}", self.risk));
-        }
+        crate::risk::validate_risk(self.risk).map_err(PlanError::InvalidRisk)?;
         Ok(())
     }
 
@@ -237,6 +256,11 @@ impl FleetOptions {
             ("trials".into(), Json::Num(self.trials as f64)),
             ("seed".into(), Json::Num(self.seed as f64)),
             ("shards".into(), Json::Num(self.shards.max(1) as f64)),
+            ("bound".into(), Json::Str(self.bound.name().into())),
+            (
+                "bound_scale".into(),
+                self.bound.scale().map(Json::Num).unwrap_or(Json::Null),
+            ),
         ])
     }
 }
@@ -291,7 +315,8 @@ impl Backend {
     fn bootstrap(opts: &FleetOptions, sc: &Scenario) -> Result<(Backend, Applied), PlanError> {
         if opts.shards == 0 {
             let mut planner = PlannerBuilder::new().threads(opts.threads).build();
-            let outcome = planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust))?;
+            let outcome = planner
+                .plan(&PlanRequest::new(sc.clone(), Policy::Robust).with_bound(opts.bound))?;
             let applied = Applied {
                 energy_j: outcome.energy,
                 newton_iters: outcome.diagnostics.newton_iters,
@@ -307,7 +332,7 @@ impl Backend {
                 ..ServiceOptions::default()
             })
             .map_err(|e| PlanError::InvalidRequest(e.to_string()))?;
-            let out = match svc.admit_tenant(FLEET_TENANT, sc.clone()) {
+            let out = match svc.admit_tenant_with(FLEET_TENANT, sc.clone(), opts.bound) {
                 Ok(o) => o,
                 Err(ServiceError::Plan(e)) => return Err(e),
                 Err(e) => return Err(PlanError::InvalidRequest(e.to_string())),
@@ -332,10 +357,11 @@ impl Backend {
         delta: &ScenarioDelta,
         new_sc: &Scenario,
         environmental: bool,
+        req_bound: RiskBound,
     ) -> StepResult {
         match self {
             Backend::Serial { planner, outcome } => {
-                let req = PlanRequest::new(new_sc.clone(), Policy::Robust);
+                let req = PlanRequest::new(new_sc.clone(), Policy::Robust).with_bound(req_bound);
                 let out = match planner.plan_cached(&req) {
                     Some(hit) => hit,
                     None => match planner.replan(delta) {
@@ -411,13 +437,14 @@ impl Backend {
     }
 
     /// The last decision as a [`PlanOutcome`] for the report.
-    fn final_outcome(&self) -> PlanOutcome {
+    fn final_outcome(&self, bound: RiskBound) -> PlanOutcome {
         match self {
             Backend::Serial { outcome, .. } => outcome.clone(),
             Backend::Service(svc) => PlanOutcome {
                 plan: svc.assembled_plan(FLEET_TENANT).expect("fleet tenant admitted"),
                 energy: svc.tenant_energy(FLEET_TENANT).unwrap_or(0.0),
                 policy: Policy::Robust,
+                bound,
                 diagnostics: Diagnostics::default(),
             },
         }
@@ -435,6 +462,9 @@ pub struct FleetReport {
     /// Last accepted plan outcome (on the service backend: the decision
     /// assembled across shards, with default diagnostics).
     pub final_outcome: PlanOutcome,
+    /// Risk bound in force at the end of the run — differs from
+    /// `options.bound` only when online calibration moved the scale.
+    pub final_bound: RiskBound,
 }
 
 impl FleetReport {
@@ -457,6 +487,11 @@ impl FleetReport {
                     ),
                     ("energy_j".into(), Json::Num(self.final_outcome.energy)),
                     ("partition".into(), partition),
+                    ("bound".into(), Json::Str(self.final_bound.name().into())),
+                    (
+                        "bound_scale".into(),
+                        self.final_bound.scale().map(Json::Num).unwrap_or(Json::Null),
+                    ),
                 ]),
             ),
         ])
@@ -522,6 +557,17 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
 
     let mut metrics = FleetMetrics::new();
     let mut step_no: u64 = 0;
+    // Active risk bound + the conformal controller (calibrated runs
+    // only): every accepted step's Monte-Carlo excess feeds the
+    // controller, and quantized scale moves become fleet-wide
+    // ScenarioDelta::Bound recalibrations.
+    let mut bound = opts.bound;
+    let mut calib: Option<Calibration> = match opts.bound {
+        RiskBound::Calibrated { .. } => {
+            Some(Calibration::with_scale(opts.bound.scale().expect("calibrated carries a scale")))
+        }
+        _ => None,
+    };
     let mc_excess = |sc: &Scenario, plan: &Plan, step_no: u64| {
         (opts.trials > 0).then(|| {
             let dist = match step_no % 3 {
@@ -539,6 +585,7 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
         })
     };
 
+    let boot_excess = mc_excess(&sc, &backend.current_plan(), step_no);
     metrics.record(StepRecord {
         t_s: 0.0,
         kind: INITIAL_KIND,
@@ -550,8 +597,20 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
         energy_j: Some(boot.energy_j),
         newton_iters: boot.newton_iters,
         outer_iters: boot.outer_iters,
-        violation_excess: mc_excess(&sc, &backend.current_plan(), step_no),
+        violation_excess: boot_excess,
     });
+    recalibrate(
+        opts,
+        &mut backend,
+        &mut metrics,
+        &mut calib,
+        &mut bound,
+        &sc,
+        0.0,
+        &mut step_no,
+        boot_excess,
+        &mc_excess,
+    );
 
     // Seed the event streams.
     let mut queue = EventQueue::new();
@@ -667,7 +726,7 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
         // scenario rolls forward, the fleet keeps its old plan, and the
         // step records what that plan now incurs.
         let environmental = matches!(kind, "channel" | "bandwidth");
-        match backend.step(&delta, &new_sc, environmental) {
+        match backend.step(&delta, &new_sc, environmental, bound) {
             StepResult::Applied(a) => {
                 // Commit fleet bookkeeping only for accepted membership
                 // changes.
@@ -691,6 +750,7 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                     _ => {}
                 }
                 sc = new_sc;
+                let excess = mc_excess(&sc, &backend.current_plan(), step_no);
                 metrics.record(StepRecord {
                     t_s: t,
                     kind,
@@ -702,8 +762,20 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                     energy_j: Some(a.energy_j),
                     newton_iters: a.newton_iters,
                     outer_iters: a.outer_iters,
-                    violation_excess: mc_excess(&sc, &backend.current_plan(), step_no),
+                    violation_excess: excess,
                 });
+                recalibrate(
+                    opts,
+                    &mut backend,
+                    &mut metrics,
+                    &mut calib,
+                    &mut bound,
+                    &sc,
+                    t,
+                    &mut step_no,
+                    excess,
+                    &mc_excess,
+                );
             }
             StepResult::Absorbed { energy_j } => {
                 sc = new_sc;
@@ -741,8 +813,85 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
         options: opts.clone(),
         metrics,
         final_scenario: sc,
-        final_outcome: backend.final_outcome(),
+        final_outcome: backend.final_outcome(bound),
+        final_bound: bound,
     })
+}
+
+/// Drive the conformal-calibration stream after one Monte-Carlo-checked
+/// accepted step: feed the observed excess to the controller and, while
+/// the quantized bound moves, broadcast a fleet-wide
+/// [`ScenarioDelta::Bound`] through the backend.  Each applied
+/// recalibration is itself Monte-Carlo-checked (its excess feeds the
+/// next observation), so on a quiet fleet the scale walks to its floor
+/// without waiting for churn; a rejected recalibration (an inflating
+/// re-plan turned out infeasible) snaps the controller back to the
+/// applied bound.  No-op unless the run was configured with a
+/// calibrated bound and Monte-Carlo checks are on.
+#[allow(clippy::too_many_arguments)] // driver-internal plumbing, not API
+fn recalibrate(
+    opts: &FleetOptions,
+    backend: &mut Backend,
+    metrics: &mut FleetMetrics,
+    calib: &mut Option<Calibration>,
+    bound: &mut RiskBound,
+    sc: &Scenario,
+    t: f64,
+    step_no: &mut u64,
+    excess: Option<f64>,
+    mc_excess: &dyn Fn(&Scenario, &Plan, u64) -> Option<f64>,
+) {
+    let Some(cal) = calib.as_mut() else { return };
+    let Some(mut excess) = excess else { return };
+    for _ in 0..MAX_RECAL_CHAIN {
+        let next = cal.observe(excess, opts.risk);
+        if next == *bound {
+            break;
+        }
+        *step_no += 1;
+        let delta = ScenarioDelta::Bound(next);
+        match backend.step(&delta, sc, false, next) {
+            StepResult::Applied(a) => {
+                *bound = next;
+                let ve = mc_excess(sc, &backend.current_plan(), *step_no);
+                metrics.record(StepRecord {
+                    t_s: t,
+                    kind: RECALIBRATE_KIND,
+                    n: sc.n(),
+                    accepted: true,
+                    absorbed: false,
+                    cache_hit: a.cache_hit,
+                    warm_started: a.warm_started,
+                    energy_j: Some(a.energy_j),
+                    newton_iters: a.newton_iters,
+                    outer_iters: a.outer_iters,
+                    violation_excess: ve,
+                });
+                match ve {
+                    Some(e) => excess = e,
+                    None => break,
+                }
+            }
+            // A bound change is negotiable; the backend never absorbs it.
+            StepResult::Rejected | StepResult::Absorbed { .. } => {
+                cal.reset_to(*bound);
+                metrics.record(StepRecord {
+                    t_s: t,
+                    kind: RECALIBRATE_KIND,
+                    n: sc.n(),
+                    accepted: false,
+                    absorbed: false,
+                    cache_hit: false,
+                    warm_started: false,
+                    energy_j: None,
+                    newton_iters: 0,
+                    outer_iters: 0,
+                    violation_excess: None,
+                });
+                break;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -837,10 +986,15 @@ mod tests {
         for bad in [
             FleetOptions { n0: 0, ..FleetOptions::default() },
             FleetOptions { duration_s: -1.0, ..FleetOptions::default() },
-            FleetOptions { risk: 0.0, ..FleetOptions::default() },
             FleetOptions { churn: f64::NAN, ..FleetOptions::default() },
         ] {
             assert!(matches!(run(&bad), Err(PlanError::InvalidRequest(_))));
+        }
+        // Risk gets the structured error (shared with PlanRequest
+        // validation), not a generic InvalidRequest.
+        for bad_risk in [0.0, 1.0, f64::NAN] {
+            let opts = FleetOptions { risk: bad_risk, ..FleetOptions::default() };
+            assert!(matches!(run(&opts), Err(PlanError::InvalidRisk(_))));
         }
     }
 }

@@ -11,12 +11,19 @@
 use crate::engine::CacheStats;
 use crate::util::json::Json;
 
-/// The six `ScenarioDelta` kinds a fleet run can exercise, in the stable
-/// order used by the JSON export's `delta_counts` object.
-pub const DELTA_KINDS: [&str; 6] = ["join", "leave", "deadline", "risk", "channel", "bandwidth"];
+/// The `ScenarioDelta` kinds a fleet run can exercise, in the stable
+/// order used by the JSON export's `delta_counts` object
+/// (`"recalibrate"` only fires on runs configured with a calibrated
+/// risk bound).
+pub const DELTA_KINDS: [&str; 7] =
+    ["join", "leave", "deadline", "risk", "channel", "bandwidth", "recalibrate"];
 
 /// Tag for the driver's one cold bootstrap solve (not a delta).
 pub const INITIAL_KIND: &str = "initial";
+
+/// Tag for a conformal risk-bound recalibration step (a fleet-wide
+/// `ScenarioDelta::Bound` emitted by the driver's calibration stream).
+pub const RECALIBRATE_KIND: &str = "recalibrate";
 
 /// One planner interaction: the outcome of one popped fleet event (or of
 /// the initial cold solve).
@@ -89,6 +96,11 @@ pub struct FleetSummary {
     /// Absorbed steps are excluded: their old-plan-vs-new-environment
     /// excess is reported per step, not against the guarantee.
     pub worst_violation_excess: Option<f64>,
+    /// Mean Monte-Carlo violation excess over the checked accepted
+    /// steps — read next to the configured bound, this is the
+    /// empirical-violation-vs-ε record that lets runs under different
+    /// bounds (or different conformal scales) be compared directly.
+    pub mean_violation_excess: Option<f64>,
 }
 
 /// Accumulator for a fleet run's records plus the planner's final cache
@@ -154,6 +166,12 @@ impl FleetMetrics {
             .iter()
             .filter_map(|s| s.violation_excess)
             .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))));
+        let checked: Vec<f64> = accepted.iter().filter_map(|s| s.violation_excess).collect();
+        let mean_violation_excess = if checked.is_empty() {
+            None
+        } else {
+            Some(checked.iter().sum::<f64>() / checked.len() as f64)
+        };
         FleetSummary {
             events: self.steps.len(),
             accepted: accepted.len(),
@@ -170,6 +188,7 @@ impl FleetMetrics {
             newton_total: self.steps.iter().map(|s| s.newton_iters).sum(),
             mean_energy_j,
             worst_violation_excess,
+            mean_violation_excess,
         }
     }
 
@@ -190,6 +209,7 @@ impl FleetMetrics {
             ("newton_total".into(), Json::Num(s.newton_total as f64)),
             ("mean_energy_j".into(), Json::Num(s.mean_energy_j)),
             ("worst_violation_excess".into(), opt(s.worst_violation_excess)),
+            ("mean_violation_excess".into(), opt(s.mean_violation_excess)),
         ]);
         let delta_counts = Json::Obj(
             DELTA_KINDS
@@ -279,6 +299,7 @@ mod tests {
         // mean energy and worst violation are over accepted steps only
         assert!((s.mean_energy_j - 2.0).abs() < 1e-12);
         assert_eq!(s.worst_violation_excess, Some(-0.03));
+        assert_eq!(s.mean_violation_excess, Some(-0.03));
         assert_eq!(m.count_of("join"), 1);
         assert_eq!(m.count_of("bandwidth"), 0);
     }

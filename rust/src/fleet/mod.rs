@@ -35,4 +35,6 @@ pub mod metrics;
 
 pub use driver::{run, FleetOptions, FleetReport};
 pub use events::{EventQueue, FleetEvent};
-pub use metrics::{FleetMetrics, FleetSummary, StepRecord, DELTA_KINDS, INITIAL_KIND};
+pub use metrics::{
+    FleetMetrics, FleetSummary, StepRecord, DELTA_KINDS, INITIAL_KIND, RECALIBRATE_KIND,
+};

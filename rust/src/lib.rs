@@ -31,6 +31,11 @@
 //!   (problem (23)), [`optim::ecr`] (Theorem 1), [`optim::baselines`]
 //!   (§VI benchmarks).  The old free-function entry points are
 //!   `#[deprecated]` shims over the engine for one release.
+//! * [`risk`] — the pluggable chance-constraint transforms
+//!   (`RiskBound`: ECR/Cantelli, Gaussian, Bernstein, conformally
+//!   calibrated) the robust policy family is parameterized by, plus the
+//!   online `Calibration` controller the fleet driver closes the loop
+//!   with.
 //! * [`solver`] / [`linalg`] — log-barrier interior point over
 //!   `ConvexProgram`s with reusable `NewtonWorkspace`s, dense Cholesky,
 //!   Levenberg–Marquardt.
@@ -67,6 +72,7 @@ pub mod linalg;
 pub mod models;
 pub mod optim;
 pub mod profile;
+pub mod risk;
 pub mod runtime;
 pub mod service;
 pub mod sim;

@@ -18,7 +18,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use ripra::coordinator::{self, ServeOptions};
-use ripra::engine::{CliFlag, PlanRequest, Planner, PlannerBuilder, Policy};
+use ripra::engine::{CliFlag, PlanRequest, Planner, PlannerBuilder, Policy, RiskBound};
 use ripra::figures::{self, Effort};
 use ripra::fleet::{self, FleetOptions};
 use ripra::models::manifest::Manifest;
@@ -162,6 +162,14 @@ fn scenario_of(flags: &HashMap<String, String>) -> Result<Scenario> {
     Ok(Scenario::uniform(&model, n, b, d, eps, &mut rng))
 }
 
+/// Parse the shared `--bound` flag (default: the paper's ECR bound).
+fn bound_of(flags: &HashMap<String, String>) -> Result<RiskBound> {
+    let spelling = flags.get("bound").map(String::as_str).unwrap_or("ecr");
+    RiskBound::parse(spelling).ok_or_else(|| {
+        anyhow!("unknown bound {spelling:?} (ecr | gauss | bernstein | calibrated[:SCALE])")
+    })
+}
+
 /// Assemble a [`PlanRequest`] from parsed `plan` flags.
 fn plan_request_of(flags: &HashMap<String, String>) -> Result<PlanRequest> {
     let scenario = scenario_of(flags)?;
@@ -169,7 +177,7 @@ fn plan_request_of(flags: &HashMap<String, String>) -> Result<PlanRequest> {
     let policy = Policy::parse(spelling).ok_or_else(|| {
         anyhow!("unknown policy {spelling:?} (robust | worst | mean | exhaustive | multistart)")
     })?;
-    let mut req = PlanRequest::new(scenario, policy);
+    let mut req = PlanRequest::new(scenario, policy).with_bound(bound_of(flags)?);
     if flags.contains_key("no-cache") {
         req = req.without_cache();
     }
@@ -234,8 +242,9 @@ fn cmd_plan(args: &[String]) -> Result<()> {
     );
     let d = &out.diagnostics;
     println!(
-        "{}: {} outer iters, {:.2} avg PCCP iters, {} Newton steps, {:.1} ms{}",
+        "{} [{}]: {} outer iters, {:.2} avg PCCP iters, {} Newton steps, {:.1} ms{}",
         out.policy.name(),
+        out.bound,
         d.outer_iters,
         d.avg_pccp_iters,
         d.newton_iters,
@@ -244,12 +253,12 @@ fn cmd_plan(args: &[String]) -> Result<()> {
     );
 
     println!("expected total energy: {:.4} J", out.energy);
-    println!("  dev  m   b_MHz   f_GHz   margin_ms");
-    let mpol = out.policy.margin_policy();
+    println!("  dev  m   b_MHz   f_GHz   slack_ms  margin_ms");
+    let mpol = out.policy.margin_policy(out.bound);
     for i in 0..sc.n() {
         let dev = &sc.devices[i];
         println!(
-            "  {:>3} {:>2}  {:>6.3}  {:>6.3}  {:>9.2}",
+            "  {:>3} {:>2}  {:>6.3}  {:>6.3}  {:>8.2}  {:>9.2}",
             i,
             out.plan.partition[i],
             out.plan.bandwidth_hz[i] / 1e6,
@@ -259,7 +268,8 @@ fn cmd_plan(args: &[String]) -> Result<()> {
                 out.plan.freq_ghz[i],
                 out.plan.bandwidth_hz[i],
                 mpol
-            ) * 1e3
+            ) * 1e3,
+            out.diagnostics.margins_s.get(i).copied().unwrap_or(f64::NAN) * 1e3
         );
     }
 
@@ -290,6 +300,7 @@ fn fleet_options_of(flags: &HashMap<String, String>) -> Result<FleetOptions> {
         seed: flag_usize(flags, "seed", 7)? as u64,
         threads: 0,
         shards: flag_usize(flags, "shards", 0)?,
+        bound: bound_of(flags)?,
         model,
     })
 }
@@ -343,10 +354,11 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         None => println!("Monte-Carlo check disabled (--trials 0)"),
     }
     println!(
-        "final fleet: {} devices, B={:.2} MHz, planned energy {:.4} J",
+        "final fleet: {} devices, B={:.2} MHz, planned energy {:.4} J, bound {}",
         rep.final_scenario.n(),
         rep.final_scenario.total_bandwidth_hz / 1e6,
-        rep.final_outcome.energy
+        rep.final_outcome.energy,
+        rep.final_bound
     );
     Ok(())
 }

@@ -9,6 +9,8 @@
 //! * Fig. 11 — wall-clock of [`solve`] vs N;
 //! * Fig. 12–14 — `energy` of the returned plan.
 
+use crate::risk::RiskBound;
+
 use super::pccp::{self, PccpOptions};
 use super::resource::{self, ResourceError};
 use super::types::{Plan, Policy, Scenario};
@@ -99,8 +101,14 @@ impl std::error::Error for PlanError {}
 /// total time at f_max with an equal bandwidth share — the most
 /// feasibility-friendly start (used when the caller gives none).
 pub fn heuristic_partition(sc: &Scenario) -> Vec<usize> {
+    heuristic_partition_for(sc, RiskBound::Ecr)
+}
+
+/// [`heuristic_partition`] under an explicit risk bound (the margin
+/// shifts which point looks feasibility-friendliest).
+pub fn heuristic_partition_for(sc: &Scenario, bound: RiskBound) -> Vec<usize> {
     let b_each = sc.total_bandwidth_hz / sc.n() as f64;
-    sc.devices.iter().map(|d| d.min_margin_time_point(b_each, Policy::Robust)).collect()
+    sc.devices.iter().map(|d| d.min_margin_time_point(b_each, Policy::Robust(bound))).collect()
 }
 
 /// Run Algorithm 2.  `init_partition` overrides the heuristic start
@@ -111,7 +119,7 @@ pub fn solve(
     opts: &AlternatingOptions,
     init_partition: Option<Vec<usize>>,
 ) -> Result<RobustPlan, PlanError> {
-    solve_core(sc, opts, init_partition, &mut crate::solver::NewtonWorkspace::new())
+    solve_core(sc, opts, init_partition, RiskBound::Ecr, &mut crate::solver::NewtonWorkspace::new())
 }
 
 /// Algorithm 2 with a caller-owned Newton workspace for every resource
@@ -122,21 +130,23 @@ pub(crate) fn solve_core(
     sc: &Scenario,
     opts: &AlternatingOptions,
     init_partition: Option<Vec<usize>>,
+    bound: RiskBound,
     res_ws: &mut crate::solver::NewtonWorkspace,
 ) -> Result<RobustPlan, PlanError> {
-    let mut partition = init_partition.unwrap_or_else(|| heuristic_partition(sc));
+    let mpol = Policy::Robust(bound);
+    let mut partition = init_partition.unwrap_or_else(|| heuristic_partition_for(sc, bound));
     assert_eq!(partition.len(), sc.n());
 
     let mut resource_solve = |x: &[usize],
                               warm: Option<&resource::ResourceSolution>|
      -> Result<resource::ResourceSolution, ResourceError> {
         if opts.dual_resource {
-            resource::solve_dual(sc, x, Policy::Robust)
+            resource::solve_dual(sc, x, mpol)
         } else {
             resource::solve_warm_with(
                 sc,
                 x,
-                Policy::Robust,
+                mpol,
                 if opts.warm_start { warm } else { None },
                 &mut *res_ws,
             )
@@ -148,7 +158,7 @@ pub(crate) fn solve_core(
     let mut res = match resource_solve(&partition, None) {
         Ok(r) => r,
         Err(_) => {
-            partition = heuristic_partition(sc);
+            partition = heuristic_partition_for(sc, bound);
             resource_solve(&partition, None).map_err(|e| PlanError::Infeasible(e.to_string()))?
         }
     };
@@ -165,7 +175,7 @@ pub(crate) fn solve_core(
         outer = k + 1;
         // -- partitioning step (Algorithm 1 at fixed resources) ------------
         let warm_ref = if opts.warm_start { warm_x.as_deref() } else { None };
-        let part = pccp::solve(sc, &res.freq_ghz, &res.bandwidth_hz, &opts.pccp, warm_ref)
+        let part = pccp::solve(sc, &res.freq_ghz, &res.bandwidth_hz, &opts.pccp, warm_ref, bound)
             .map_err(|e| PlanError::Solver(e.to_string()))?;
         pccp_iter_sum += part.avg_iters;
         newton += part.newton_iters;
@@ -229,9 +239,7 @@ pub(crate) fn solve_core(
                     }
                     let mut cand = partition.clone();
                     cand[i] = m;
-                    if let Ok(r) =
-                        resource::solve_warm_with(sc, &cand, Policy::Robust, None, &mut ws)
-                    {
+                    if let Ok(r) = resource::solve_warm_with(sc, &cand, mpol, None, &mut ws) {
                         if r.energy < res.energy * (1.0 - 1e-6) {
                             partition = cand;
                             res = r;
@@ -259,8 +267,7 @@ pub(crate) fn solve_core(
                                 }
                                 let mut cand = base.clone();
                                 cand[i] = m;
-                                resource::solve_warm_with(sc, &cand, Policy::Robust, None, ws)
-                                    .ok()
+                                resource::solve_warm_with(sc, &cand, mpol, None, ws).ok()
                             },
                         );
                     let mut accepted = None;
@@ -329,7 +336,13 @@ pub fn solve_multistart(
     opts: &AlternatingOptions,
     extra_starts: &[Vec<usize>],
 ) -> Result<RobustPlan, PlanError> {
-    solve_multistart_core(sc, opts, extra_starts, &mut crate::solver::NewtonWorkspace::new())
+    solve_multistart_core(
+        sc,
+        opts,
+        extra_starts,
+        RiskBound::Ecr,
+        &mut crate::solver::NewtonWorkspace::new(),
+    )
 }
 
 /// [`solve_multistart`]'s implementation with a caller-owned workspace.
@@ -337,6 +350,7 @@ pub(crate) fn solve_multistart_core(
     sc: &Scenario,
     opts: &AlternatingOptions,
     extra_starts: &[Vec<usize>],
+    bound: RiskBound,
     res_ws: &mut crate::solver::NewtonWorkspace,
 ) -> Result<RobustPlan, PlanError> {
     let mut inits: Vec<Option<Vec<usize>>> = vec![
@@ -351,7 +365,7 @@ pub(crate) fn solve_multistart_core(
         .map(|d| {
             let f = d.model.device.f_max_ghz;
             (0..d.model.num_points())
-                .filter(|&m| d.deadline_ok(m, f, b_each, Policy::Robust))
+                .filter(|&m| d.deadline_ok(m, f, b_each, Policy::Robust(bound)))
                 .min_by(|&a, &b| {
                     d.energy_mean(a, f, b_each)
                         .partial_cmp(&d.energy_mean(b, f, b_each))
@@ -366,7 +380,7 @@ pub(crate) fn solve_multistart_core(
     let mut best: Option<RobustPlan> = None;
     let mut last_err: Option<PlanError> = None;
     for init in inits {
-        match solve_core(sc, opts, init, res_ws) {
+        match solve_core(sc, opts, init, bound, res_ws) {
             Ok(p) => {
                 if best.as_ref().map_or(true, |b| p.energy < b.energy) {
                     best = Some(p);
@@ -396,7 +410,7 @@ mod tests {
         // Fig. 13 setting: N=12, B=10 MHz, D=180 ms, ε=0.02.
         let sc = scenario(&ModelProfile::alexnet_paper(), 12, 10e6, 0.18, 0.02, 7);
         let r = solve(&sc, &AlternatingOptions::default(), None).unwrap();
-        assert!(r.plan.feasible(&sc, Policy::Robust));
+        assert!(r.plan.feasible(&sc, Policy::ROBUST));
         assert!(r.plan.bandwidth_ok(&sc));
         assert!(r.plan.freq_ok(&sc));
         assert!(r.energy > 0.0 && r.energy < 10.0, "energy={}", r.energy);
@@ -408,7 +422,7 @@ mod tests {
         // substrate makes 120 ms infeasible — see EXPERIMENTS.md).
         let sc = scenario(&ModelProfile::resnet152_paper(), 12, 30e6, 0.15, 0.04, 8);
         let r = solve(&sc, &AlternatingOptions::default(), None).unwrap();
-        assert!(r.plan.feasible(&sc, Policy::Robust));
+        assert!(r.plan.feasible(&sc, Policy::ROBUST));
         assert!(r.energy > 0.0, "energy={}", r.energy);
     }
 

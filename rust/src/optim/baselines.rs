@@ -179,12 +179,16 @@ pub fn mean_only(sc: &Scenario) -> Result<BaselinePlan, BaselineError> {
 /// O((M+1)ᴺ·IPT) — callable only for tiny N (tests / Fig. 12 left edge).
 #[deprecated(note = "construct an engine::Planner and call plan() with engine::Policy::Exhaustive")]
 pub fn exhaustive_optimal(sc: &Scenario) -> Result<BaselinePlan, BaselineError> {
-    exhaustive_core(sc, &mut solver::NewtonWorkspace::new())
+    exhaustive_core(sc, Policy::ROBUST, &mut solver::NewtonWorkspace::new())
 }
 
-/// [`exhaustive_optimal`]'s implementation with a caller-owned workspace.
+/// [`exhaustive_optimal`]'s implementation with a caller-owned workspace
+/// and an explicit margin policy (the engine passes the request's risk
+/// bound through here, so the exhaustive benchmark is comparable to the
+/// robust plan under the same transform).
 pub(crate) fn exhaustive_core(
     sc: &Scenario,
+    policy: Policy,
     ws: &mut solver::NewtonWorkspace,
 ) -> Result<BaselinePlan, BaselineError> {
     let mp1: Vec<usize> = sc.devices.iter().map(|d| d.model.num_points()).collect();
@@ -199,7 +203,7 @@ pub(crate) fn exhaustive_core(
             assignment[i] = rem % mp1[i];
             rem /= mp1[i];
         }
-        if let Ok(r) = resource::solve_warm_with(sc, &assignment, Policy::Robust, None, ws) {
+        if let Ok(r) = resource::solve_warm_with(sc, &assignment, policy, None, ws) {
             newton += r.newton_iters;
             if best.as_ref().map_or(true, |b| r.energy < b.energy) {
                 best = Some(BaselinePlan {
@@ -244,7 +248,7 @@ pub fn multistart_optimal(
                     .collect::<Vec<_>>(),
             )
         };
-        if let Ok(p) = alternate_enumeration(sc, Policy::Robust, init, 20) {
+        if let Ok(p) = alternate_enumeration(sc, Policy::ROBUST, init, 20) {
             if best.as_ref().map_or(true, |b| p.energy < b.energy) {
                 best = Some(p);
             }
@@ -348,8 +352,8 @@ mod tests {
     #[test]
     fn feasibility_probe() {
         let sc = scenario(4, 0.25, 0.05, 6);
-        assert_eq!(policy_feasible(&sc, Policy::Robust), ResourceFeasibility::Feasible);
+        assert_eq!(policy_feasible(&sc, Policy::ROBUST), ResourceFeasibility::Feasible);
         let tight = scenario(4, 0.002, 0.05, 6);
-        assert_eq!(policy_feasible(&tight, Policy::Robust), ResourceFeasibility::Infeasible);
+        assert_eq!(policy_feasible(&tight, Policy::ROBUST), ResourceFeasibility::Infeasible);
     }
 }

@@ -16,8 +16,15 @@
 //! what moment information alone permits.
 
 /// σ(ε) = √((1−ε)/ε).
+///
+/// Total: risk levels are validated at the API boundary
+/// (`Device::validate` / `PlanRequest::validate` →
+/// `engine::PlanError::InvalidRisk`), so a pathological ε reaching this
+/// depth is clamped to the representable range instead of panicking
+/// inside a solver thread (the historical `assert!` here was the
+/// engine's one hidden panic path).
 pub fn sigma(eps: f64) -> f64 {
-    assert!(eps > 0.0 && eps < 1.0, "risk level must be in (0,1), got {eps}");
+    let eps = crate::risk::clamp_risk(eps);
     ((1.0 - eps) / eps).sqrt()
 }
 
@@ -59,9 +66,14 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn sigma_rejects_zero_risk() {
-        sigma(0.0);
+    fn sigma_is_total_on_pathological_risk() {
+        // Validation happens at the API boundary (PlanError::InvalidRisk);
+        // here the transform clamps instead of panicking (the historical
+        // assert! was the solver's one hidden panic path).
+        assert_eq!(sigma(0.0), sigma(crate::risk::MIN_RISK));
+        assert_eq!(sigma(1.0), sigma(crate::risk::MAX_RISK));
+        assert!(sigma(f64::NAN).is_finite());
+        assert!(sigma(0.0).is_finite() && sigma(0.0) > 1e4);
     }
 
     #[test]

@@ -22,7 +22,22 @@
 //! per-device slots, see `util::par`), dividing the linear-in-N
 //! wall-clock by the core count.
 
+//! ## Risk bounds inside the DC program
+//!
+//! The deadline constraint (33c) is written `Σ x·t̄ + k·y ≤ D` with `y`
+//! linearizing `√(xᵀWx)`.  Bounds that are a pure multiple of the total
+//! standard deviation ([`RiskBound::std_factor`]: ECR, Gaussian,
+//! Calibrated) plug their coefficient in as `k` — for the default ECR
+//! bound this is exactly the paper's σ_n and the iterates are
+//! bit-identical to the pre-refactor code.  Bounds with a different
+//! shape (Bernstein) instead fold their per-point margin into the
+//! linear mean-time coefficients (`t̄_m + margin_m`, `k = 0`): linear in
+//! x, exact at the one-hot vertices the relaxation is rounded to, and
+//! the margin stays constant per partition point so nothing about the
+//! program's convexity analysis changes.
+
 use crate::linalg::Matrix;
+use crate::risk::RiskBound;
 use crate::solver::{self, BarrierOptions, ConvexProgram};
 
 use super::types::{Device, Policy, Scenario};
@@ -108,11 +123,15 @@ impl std::error::Error for PccpError {}
 struct DeviceProblem {
     /// Energy coefficient per point (objective (24a) terms at fixed f, b).
     cost: Vec<f64>,
-    /// Mean total time per point t̄_{n,m} (eq. 26).
+    /// Mean total time per point t̄_{n,m} (eq. 26) — plus the per-point
+    /// linear margin when the active bound is not std-shaped (see the
+    /// module docs; zero extra term for ECR, so bit-identical there).
     t_mean: Vec<f64>,
     /// Covariance diagonal w_{n,m,m} (eq. 27).
     w_diag: Vec<f64>,
-    /// σ_n (Theorem 1).
+    /// Coefficient on the linearized std-dev y: σ_n for the default ECR
+    /// bound (Theorem 1), the bound's `std_factor` otherwise, 0 for
+    /// linear-margin bounds.
     sigma: f64,
     /// Deadline D_n.
     deadline: f64,
@@ -394,16 +413,34 @@ fn feasible_start_clamped(p: &mut DeviceProblem, x: &[f64], floor: f64) -> bool 
     true
 }
 
-/// Assemble the per-device problem data at fixed resources.
-fn device_problem(dev: &Device, m_pts: usize, f_ghz: f64, b_hz: f64, rho: f64) -> DeviceProblem {
+/// Assemble the per-device problem data at fixed resources under the
+/// given risk bound.
+fn device_problem(
+    dev: &Device,
+    m_pts: usize,
+    f_ghz: f64,
+    b_hz: f64,
+    rho: f64,
+    bound: RiskBound,
+) -> DeviceProblem {
     let cost: Vec<f64> = (0..m_pts).map(|m| dev.energy_mean(m, f_ghz, b_hz)).collect();
-    let t_mean: Vec<f64> = (0..m_pts).map(|m| dev.t_total_mean(m, f_ghz, b_hz)).collect();
     let w_diag: Vec<f64> = (0..m_pts).map(|m| dev.model.w_diag(m)).collect();
+    // std-shaped bounds keep the exact σ·√(xᵀWx) coupling; the rest
+    // enter as a linear per-point margin on the mean-time coefficients.
+    let (sigma, t_mean): (f64, Vec<f64>) = match bound.std_factor(dev.risk) {
+        Some(k) => (k, (0..m_pts).map(|m| dev.t_total_mean(m, f_ghz, b_hz)).collect()),
+        None => (
+            0.0,
+            (0..m_pts)
+                .map(|m| dev.t_total_mean(m, f_ghz, b_hz) + bound.margin(&dev.model, m, dev.risk))
+                .collect(),
+        ),
+    };
     DeviceProblem {
         cost,
         t_mean,
         w_diag,
-        sigma: dev.sigma(),
+        sigma,
         // Relax the inner deadline by 0.1%: the resource step leaves (22)
         // *active* at the current point (energy is decreasing in slack),
         // so the exact-deadline relaxation has no strict interior there.
@@ -424,17 +461,19 @@ fn feasible_points(dev: &Device, f_ghz: f64, b_hz: f64, policy: Policy) -> Vec<u
         .collect()
 }
 
-/// Run Algorithm 1 for one device.  `x_init` seeds the first linearization
-/// (Algorithm 2 passes the previous outer iterate for warm starting).
+/// Run Algorithm 1 for one device under `bound`.  `x_init` seeds the
+/// first linearization (Algorithm 2 passes the previous outer iterate
+/// for warm starting).
 pub fn solve_device(
     dev: &Device,
     f_ghz: f64,
     b_hz: f64,
     opts: &PccpOptions,
     x_init: Option<&[f64]>,
+    bound: RiskBound,
 ) -> Result<PccpDeviceResult, PccpError> {
     let mp1 = dev.model.num_points();
-    let feas = feasible_points(dev, f_ghz, b_hz, Policy::Robust);
+    let feas = feasible_points(dev, f_ghz, b_hz, Policy::Robust(bound));
     if feas.is_empty() {
         return Err(PccpError::Infeasible { device: usize::MAX });
     }
@@ -474,7 +513,7 @@ pub fn solve_device(
     // iterations — only the linearization point (x_prev, y_prev) and the
     // penalty ρ move — so build it once and update in place.  One Newton
     // workspace serves every inner barrier solve of this device.
-    let mut prob = device_problem(dev, mp1, f_ghz, b_hz, rho);
+    let mut prob = device_problem(dev, mp1, f_ghz, b_hz, rho, bound);
     let mut ws = solver::NewtonWorkspace::new();
 
     for i in 0..opts.max_iters {
@@ -552,6 +591,7 @@ pub fn solve(
     bandwidth_hz: &[f64],
     opts: &PccpOptions,
     warm: Option<&[Vec<f64>]>,
+    bound: RiskBound,
 ) -> Result<PccpResult, PccpError> {
     let n = sc.n();
     // Cheap O(N·M) pre-scan for the dominant error mode so a
@@ -560,17 +600,19 @@ pub fn solve(
     // infeasible device index; a rarer in-solve failure (numerical error
     // on an earlier device) is surfaced by the index-ordered fold below.
     for (i, dev) in sc.devices.iter().enumerate() {
-        if feasible_points(dev, freq_ghz[i], bandwidth_hz[i], Policy::Robust).is_empty() {
+        if feasible_points(dev, freq_ghz[i], bandwidth_hz[i], Policy::Robust(bound)).is_empty() {
             return Err(PccpError::Infeasible { device: i });
         }
     }
     let threads = crate::util::par::threads_for(opts.threads, n);
     let results = crate::util::par::par_map_indexed(n, threads, |i| {
         let w = warm.and_then(|w| w.get(i)).map(|v| v.as_slice());
-        solve_device(&sc.devices[i], freq_ghz[i], bandwidth_hz[i], opts, w).map_err(|e| match e {
-            PccpError::Infeasible { .. } => PccpError::Infeasible { device: i },
-            e => e,
-        })
+        solve_device(&sc.devices[i], freq_ghz[i], bandwidth_hz[i], opts, w, bound).map_err(
+            |e| match e {
+                PccpError::Infeasible { .. } => PccpError::Infeasible { device: i },
+                e => e,
+            },
+        )
     });
     let mut partition = Vec::with_capacity(n);
     let mut x_relaxed = Vec::with_capacity(n);
@@ -609,7 +651,7 @@ mod tests {
         let sc = scenario(1, 0.25, 0.05, 1);
         let dev = &sc.devices[0];
         let mp1 = dev.model.num_points();
-        let mut p = device_problem(dev, mp1, 1.0, 2e6, 3.0);
+        let mut p = device_problem(dev, mp1, 1.0, 2e6, 3.0, RiskBound::Ecr);
         let x0 = vec![1.0 / mp1 as f64; mp1];
         assert!(feasible_start(&mut p, &x0));
         let z = p.initial_point();
@@ -637,11 +679,11 @@ mod tests {
         let sc = scenario(6, 0.22, 0.05, 2);
         let f: Vec<f64> = vec![1.1; 6];
         let b: Vec<f64> = vec![10e6 / 6.0; 6];
-        let r = solve(&sc, &f, &b, &PccpOptions::default(), None).unwrap();
+        let r = solve(&sc, &f, &b, &PccpOptions::default(), None, RiskBound::Ecr).unwrap();
         assert_eq!(r.partition.len(), 6);
         for (i, (&m, dev)) in r.partition.iter().zip(&sc.devices).enumerate() {
             assert!(
-                dev.deadline_ok(m, f[i], b[i], Policy::Robust),
+                dev.deadline_ok(m, f[i], b[i], Policy::ROBUST),
                 "device {i} point {m} violates (28)"
             );
         }
@@ -651,7 +693,9 @@ mod tests {
     #[test]
     fn relaxed_solution_is_near_binary() {
         let sc = scenario(1, 0.25, 0.05, 3);
-        let r = solve_device(&sc.devices[0], 1.0, 3e6, &PccpOptions::default(), None).unwrap();
+        let r =
+            solve_device(&sc.devices[0], 1.0, 3e6, &PccpOptions::default(), None, RiskBound::Ecr)
+                .unwrap();
         // penalty should push x to a vertex: max component > 0.9
         let mx = r.x_relaxed.iter().cloned().fold(0.0, f64::max);
         assert!(mx > 0.9, "x_relaxed={:?}", r.x_relaxed);
@@ -669,9 +713,9 @@ mod tests {
         let sc = scenario(4, 0.22, 0.04, 4);
         let f = vec![1.0; 4];
         let b = vec![2.5e6; 4];
-        let r = solve(&sc, &f, &b, &PccpOptions::default(), None).unwrap();
+        let r = solve(&sc, &f, &b, &PccpOptions::default(), None, RiskBound::Ecr).unwrap();
         for (i, dev) in sc.devices.iter().enumerate() {
-            let best = feasible_points(dev, f[i], b[i], Policy::Robust)
+            let best = feasible_points(dev, f[i], b[i], Policy::ROBUST)
                 .into_iter()
                 .min_by(|&a, &b2| {
                     dev.energy_mean(a, f[i], b[i])
@@ -692,7 +736,7 @@ mod tests {
     #[test]
     fn infeasible_when_no_point_fits() {
         let sc = scenario(1, 0.002, 0.05, 5); // 2 ms deadline: impossible
-        let r = solve(&sc, &[1.2], &[10e6], &PccpOptions::default(), None);
+        let r = solve(&sc, &[1.2], &[10e6], &PccpOptions::default(), None, RiskBound::Ecr);
         assert!(matches!(r, Err(PccpError::Infeasible { device: 0 })));
     }
 
@@ -706,8 +750,8 @@ mod tests {
         let b = vec![10e6 / 6.0; 12];
         let seq_opts = PccpOptions { threads: 1, ..PccpOptions::default() };
         let par_opts = PccpOptions { threads: 4, ..PccpOptions::default() };
-        let seq = solve(&sc, &f, &b, &seq_opts, None).unwrap();
-        let par = solve(&sc, &f, &b, &par_opts, None).unwrap();
+        let seq = solve(&sc, &f, &b, &seq_opts, None, RiskBound::Ecr).unwrap();
+        let par = solve(&sc, &f, &b, &par_opts, None, RiskBound::Ecr).unwrap();
         assert_eq!(seq.partition, par.partition);
         assert_eq!(seq.newton_iters, par.newton_iters);
         assert_eq!(seq.avg_iters, par.avg_iters);
@@ -717,16 +761,44 @@ mod tests {
     }
 
     #[test]
+    fn linear_margin_bound_returns_feasible_onehot() {
+        // Bernstein takes the sigma = 0 / per-point-margin path through
+        // the DC program; the rounded answer must satisfy (28) under its
+        // own margins and be no worse than exact per-device enumeration.
+        let sc = scenario(4, 0.22, 0.04, 14);
+        let f = vec![1.0; 4];
+        let b = vec![2.5e6; 4];
+        let pol = Policy::Robust(RiskBound::Bernstein);
+        let r = solve(&sc, &f, &b, &PccpOptions::default(), None, RiskBound::Bernstein).unwrap();
+        for (i, (&m, dev)) in r.partition.iter().zip(&sc.devices).enumerate() {
+            assert!(dev.deadline_ok(m, f[i], b[i], pol), "device {i} point {m} violates (28)");
+            let best = feasible_points(dev, f[i], b[i], pol)
+                .into_iter()
+                .min_by(|&a, &b2| {
+                    dev.energy_mean(a, f[i], b[i])
+                        .partial_cmp(&dev.energy_mean(b2, f[i], b[i]))
+                        .unwrap()
+                })
+                .unwrap();
+            let e_pccp = dev.energy_mean(r.partition[i], f[i], b[i]);
+            let e_best = dev.energy_mean(best, f[i], b[i]);
+            assert!(e_pccp <= e_best * 1.05 + 1e-9, "device {i}: {e_pccp} vs {e_best}");
+        }
+    }
+
+    #[test]
     fn warm_start_converges_fast() {
         let sc = scenario(1, 0.22, 0.05, 6);
         let cold =
-            solve_device(&sc.devices[0], 1.0, 3e6, &PccpOptions::default(), None).unwrap();
+            solve_device(&sc.devices[0], 1.0, 3e6, &PccpOptions::default(), None, RiskBound::Ecr)
+                .unwrap();
         let warm = solve_device(
             &sc.devices[0],
             1.0,
             3e6,
             &PccpOptions::default(),
             Some(&cold.x_relaxed),
+            RiskBound::Ecr,
         )
         .unwrap();
         assert_eq!(warm.m, cold.m);

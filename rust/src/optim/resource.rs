@@ -21,6 +21,12 @@
 //!   the bandwidth price with per-device 1-D convex subproblems.  Used as
 //!   an ablation (see `benches/ablation_resource.rs`) and cross-checked
 //!   against the barrier solution in tests.
+//!
+//! **Risk-bound invariant:** whichever `RiskBound` the policy carries,
+//! the uncertainty margin is a constant per partition point — it enters
+//! this subproblem only through the fixed budget D′ (`deadline_slack`),
+//! never through (b, f) — so the program stays convex and both solvers
+//! apply unchanged for every bound in the family.
 
 use crate::linalg::Matrix;
 use crate::solver::{self, BarrierOptions, ConvexProgram};
@@ -601,11 +607,11 @@ mod tests {
     fn solves_and_is_feasible() {
         let sc = scenario(6, 1);
         let partition = vec![2; 6];
-        let r = solve(&sc, &partition, Policy::Robust).unwrap();
+        let r = solve(&sc, &partition, Policy::ROBUST).unwrap();
         let plan = plan_of(&sc, partition, &r);
         assert!(plan.bandwidth_ok(&sc));
         assert!(plan.freq_ok(&sc));
-        assert!(plan.feasible(&sc, Policy::Robust), "{:?}", plan.violations(&sc, Policy::Robust));
+        assert!(plan.feasible(&sc, Policy::ROBUST), "{:?}", plan.violations(&sc, Policy::ROBUST));
         assert!(r.energy > 0.0 && r.energy.is_finite());
     }
 
@@ -615,7 +621,7 @@ mod tests {
         let sc =
             Scenario::uniform(&ModelProfile::alexnet_paper(), 4, 10e6, 0.26, 0.05, &mut rng);
         let partition = vec![0, 2, 5, 7];
-        let r = solve(&sc, &partition, Policy::Robust).unwrap();
+        let r = solve(&sc, &partition, Policy::ROBUST).unwrap();
         let plan = plan_of(&sc, partition, &r);
         let e = plan.expected_energy(&sc);
         assert!((e - r.energy).abs() / e < 1e-6, "{e} vs {}", r.energy);
@@ -625,21 +631,21 @@ mod tests {
     fn warm_start_agrees_with_cold() {
         let sc = scenario(6, 8);
         let p1 = vec![2; 6];
-        let cold = solve(&sc, &p1, Policy::Robust).unwrap();
+        let cold = solve(&sc, &p1, Policy::ROBUST).unwrap();
         // Warm start from the optimum of the same partition.
-        let warm = solve_warm(&sc, &p1, Policy::Robust, Some(&cold)).unwrap();
+        let warm = solve_warm(&sc, &p1, Policy::ROBUST, Some(&cold)).unwrap();
         crate::util::check::close(warm.energy, cold.energy, 1e-5, 1e-9).unwrap();
         let plan = plan_of(&sc, p1, &warm);
-        assert!(plan.feasible(&sc, Policy::Robust) && plan.bandwidth_ok(&sc));
+        assert!(plan.feasible(&sc, Policy::ROBUST) && plan.bandwidth_ok(&sc));
         // Warm start across a partition change: the stale point may be
         // infeasible for the new deadlines — the solve must fall back and
         // still match the cold answer.
         let p2 = vec![5; 6];
-        let w2 = solve_warm(&sc, &p2, Policy::Robust, Some(&cold)).unwrap();
-        let c2 = solve(&sc, &p2, Policy::Robust).unwrap();
+        let w2 = solve_warm(&sc, &p2, Policy::ROBUST, Some(&cold)).unwrap();
+        let c2 = solve(&sc, &p2, Policy::ROBUST).unwrap();
         crate::util::check::close(w2.energy, c2.energy, 1e-5, 1e-9).unwrap();
         let plan2 = plan_of(&sc, p2, &w2);
-        assert!(plan2.feasible(&sc, Policy::Robust) && plan2.bandwidth_ok(&sc));
+        assert!(plan2.feasible(&sc, Policy::ROBUST) && plan2.bandwidth_ok(&sc));
     }
 
     #[test]
@@ -649,7 +655,7 @@ mod tests {
             d.deadline_s = 0.001; // 1 ms: impossible
         }
         assert!(matches!(
-            solve(&sc, &vec![4; 3], Policy::Robust),
+            solve(&sc, &vec![4; 3], Policy::ROBUST),
             Err(ResourceError::Infeasible { .. })
         ));
     }
@@ -668,7 +674,7 @@ mod tests {
                 0.05,
                 &mut rng,
             );
-            let r = solve(&sc, &partition, Policy::Robust).unwrap();
+            let r = solve(&sc, &partition, Policy::ROBUST).unwrap();
             assert!(
                 r.energy <= last * (1.0 + 1e-6),
                 "deadline {deadline}: {} > {last}",
@@ -686,7 +692,7 @@ mod tests {
             let mut rng = Rng::new(11);
             let sc =
                 Scenario::uniform(&ModelProfile::alexnet_paper(), 5, 10e6, 0.19, risk, &mut rng);
-            let r = solve(&sc, &partition, Policy::Robust).unwrap();
+            let r = solve(&sc, &partition, Policy::ROBUST).unwrap();
             assert!(r.energy <= last * (1.0 + 1e-6), "risk {risk}");
             last = r.energy;
         }
@@ -709,7 +715,7 @@ mod tests {
         );
         let partition: Vec<usize> =
             (0..n).map(|_| rng.below(sc.devices[0].model.num_points())).collect();
-        let dev = device_data(&sc, &partition, Policy::Robust);
+        let dev = device_data(&sc, &partition, Policy::ROBUST);
         let mut prog =
             ResourceProgram { dev, b_total: sc.total_bandwidth_hz, phase1: false, start: vec![] };
         let heur = heuristic_start(&prog);
@@ -722,7 +728,7 @@ mod tests {
             }
         }
         // probe the phase-I Hessian assembly at its start point
-        let dev2 = device_data(&sc, &partition, Policy::Robust);
+        let dev2 = device_data(&sc, &partition, Policy::ROBUST);
         let n = dev2.len();
         let mut start = vec![0.0; 2 * n + 1];
         for i in 0..n {
@@ -749,7 +755,7 @@ mod tests {
         for i in 0..2 * n + 1 {
             eprintln!("H[{i}][{i}] = {:.4e}", h[(i, i)]);
         }
-        let r = solve(&sc, &partition, Policy::Robust);
+        let r = solve(&sc, &partition, Policy::ROBUST);
         assert!(r.is_ok(), "{:?}", r.err().map(|e| e.to_string()));
     }
 
@@ -768,8 +774,8 @@ mod tests {
             );
             let partition: Vec<usize> =
                 (0..n).map(|_| rng.below(sc.devices[0].model.num_points())).collect();
-            let a = solve(&sc, &partition, Policy::Robust);
-            let b = solve_dual(&sc, &partition, Policy::Robust);
+            let a = solve(&sc, &partition, Policy::ROBUST);
+            let b = solve_dual(&sc, &partition, Policy::ROBUST);
             match (a, b) {
                 (Ok(a), Ok(b)) => {
                     crate::util::check::close(b.energy, a.energy, 2e-2, 1e-6)
@@ -782,7 +788,7 @@ mod tests {
                     if !plan.bandwidth_ok(&sc) {
                         return Err("dual exceeded bandwidth".into());
                     }
-                    if !plan.feasible(&sc, Policy::Robust) {
+                    if !plan.feasible(&sc, Policy::ROBUST) {
                         return Err("dual infeasible".into());
                     }
                     Ok(())
@@ -801,7 +807,7 @@ mod tests {
     fn full_offload_uses_min_frequency_energy() {
         // m = 0 everywhere: local energy must be ~0 and all energy offload.
         let sc = scenario(3, 5);
-        let r = solve(&sc, &vec![0; 3], Policy::Robust).unwrap();
+        let r = solve(&sc, &vec![0; 3], Policy::ROBUST).unwrap();
         for (i, d) in sc.devices.iter().enumerate() {
             let e_loc = d.energy_mean(0, r.freq_ghz[i], r.bandwidth_hz[i])
                 - d.uplink.e_off(d.model.d_bits(0), r.bandwidth_hz[i]);
@@ -813,7 +819,7 @@ mod tests {
     fn worst_case_policy_is_costlier() {
         let sc = scenario(5, 6);
         let partition = vec![2; 5];
-        let robust = solve(&sc, &partition, Policy::Robust).unwrap();
+        let robust = solve(&sc, &partition, Policy::ROBUST).unwrap();
         let worst = solve(&sc, &partition, Policy::WorstCase).unwrap();
         let mean = solve(&sc, &partition, Policy::MeanOnly).unwrap();
         // tighter margins cost energy: mean-only <= robust <= worst-case

@@ -4,15 +4,26 @@
 use crate::channel::Uplink;
 use crate::energy;
 use crate::models::ModelProfile;
+use crate::risk::{self, RiskBound};
 use crate::util::rng::Rng;
 
 use super::ecr;
 
 /// Decision policy under inference-time uncertainty (§VI benchmarks).
+///
+/// Since the risk-bound refactor this is **policy × bound**: the robust
+/// family carries a pluggable [`RiskBound`] selecting *which*
+/// chance-constraint transform turns ε into a deterministic margin
+/// (the pre-refactor unit variant `Policy::Robust` is now
+/// [`Policy::ROBUST`] = `Policy::Robust(RiskBound::Ecr)`, bit-identical
+/// margins).  Every bound's margin is constant per partition point, so
+/// the convexity of the resource subproblem is independent of the bound
+/// in play (see the `crate::risk` module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
-    /// The paper's proposal: ECR margin σ_n·√(v^loc + v^vm) (eq. 22/28).
-    Robust,
+    /// The paper's proposal: chance-constrained deadline, transformed by
+    /// the carried bound (eq. 22/28 with the default [`RiskBound::Ecr`]).
+    Robust(RiskBound),
     /// Baseline 1: upper-bound times, hard deadline (no violations
     /// tolerated) — margin is the empirical max deviation observed in
     /// profiling: `worst_dev_factor`·√v^loc + 3.5·√v^vm (the VM is far
@@ -21,6 +32,29 @@ pub enum Policy {
     /// Baseline 3: ignore uncertainty entirely (margin 0) — used to show
     /// why robustness is needed in the violation-probability figures.
     MeanOnly,
+}
+
+impl Policy {
+    /// Back-compat spelling of the pre-refactor `Policy::Robust` unit
+    /// variant: the robust policy under the default ECR/Cantelli bound.
+    pub const ROBUST: Policy = Policy::Robust(RiskBound::Ecr);
+
+    /// The robust policy's bound, if this is the robust family.
+    pub fn bound(&self) -> Option<RiskBound> {
+        match self {
+            Policy::Robust(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Swap the bound on a robust policy (no-op for the baselines, whose
+    /// margins are not parameterized by a bound).
+    pub fn with_bound(self, bound: RiskBound) -> Policy {
+        match self {
+            Policy::Robust(_) => Policy::Robust(bound),
+            other => other,
+        }
+    }
 }
 
 /// One mobile device: its DNN/hardware profile, uplink, and task QoS.
@@ -40,14 +74,27 @@ impl Device {
         ecr::sigma(self.risk)
     }
 
+    /// Structured validation of the device's QoS parameters — the
+    /// engine's `PlanRequest::validate` maps an `Err` to
+    /// `PlanError::InvalidRisk`, so a bad ε is a clean API error instead
+    /// of an `assert!` panic deep inside a solver thread.
+    pub fn validate(&self) -> Result<(), String> {
+        risk::validate_risk(self.risk)?;
+        if !(self.deadline_s.is_finite() && self.deadline_s > 0.0) {
+            return Err(format!("deadline must be positive, got {}", self.deadline_s));
+        }
+        Ok(())
+    }
+
     /// Uncertainty margin at partition point m under `policy` (the second
-    /// term on the LHS of (22), or its baseline analogue).
+    /// term on the LHS of (22), or its baseline analogue).  The robust
+    /// family dispatches through its carried [`RiskBound`].
     pub fn margin(&self, m: usize, policy: Policy) -> f64 {
-        let vl = self.model.v_loc(m);
-        let vv = self.model.v_vm(m);
         match policy {
-            Policy::Robust => self.sigma() * (vl + vv).sqrt(),
+            Policy::Robust(bound) => bound.margin(&self.model, m, self.risk),
             Policy::WorstCase => {
+                let vl = self.model.v_loc(m);
+                let vv = self.model.v_vm(m);
                 self.model.worst_dev_factor * vl.sqrt() + 3.5 * vv.sqrt()
             }
             Policy::MeanOnly => 0.0,
@@ -212,7 +259,7 @@ mod tests {
     fn margins_ordered_by_policy() {
         let d = device(0.2, 0.05);
         for m in 0..d.model.num_points() {
-            let robust = d.margin(m, Policy::Robust);
+            let robust = d.margin(m, Policy::ROBUST);
             let worst = d.margin(m, Policy::WorstCase);
             let mean = d.margin(m, Policy::MeanOnly);
             assert_eq!(mean, 0.0);
@@ -229,11 +276,41 @@ mod tests {
     fn deadline_margin_sign_matches_ok() {
         let d = device(0.2, 0.05);
         for m in [0, 4, 8] {
-            for policy in [Policy::Robust, Policy::WorstCase, Policy::MeanOnly] {
+            for policy in [Policy::ROBUST, Policy::WorstCase, Policy::MeanOnly] {
                 let margin = d.deadline_margin(m, 1.0, 1e6, policy);
                 assert_eq!(margin >= 0.0, d.deadline_ok(m, 1.0, 1e6, policy));
             }
         }
+    }
+
+    #[test]
+    fn robust_margin_dispatches_through_the_bound() {
+        let d = device(0.2, 0.05);
+        for m in 0..d.model.num_points() {
+            // Back-compat pin: Policy::ROBUST carries RiskBound::Ecr and
+            // reproduces the pre-refactor margin bit-for-bit.
+            let legacy = d.sigma() * (d.model.v_loc(m) + d.model.v_vm(m)).sqrt();
+            assert_eq!(d.margin(m, Policy::ROBUST).to_bits(), legacy.to_bits());
+            // Tighter bounds never exceed the ECR margin.
+            let gauss = d.margin(m, Policy::Robust(RiskBound::Gaussian));
+            let bern = d.margin(m, Policy::Robust(RiskBound::Bernstein));
+            assert!(gauss <= legacy + 1e-15 && bern <= legacy + 1e-15);
+        }
+        assert_eq!(Policy::ROBUST.bound(), Some(RiskBound::Ecr));
+        assert_eq!(
+            Policy::ROBUST.with_bound(RiskBound::Gaussian),
+            Policy::Robust(RiskBound::Gaussian)
+        );
+        assert_eq!(Policy::MeanOnly.with_bound(RiskBound::Gaussian), Policy::MeanOnly);
+    }
+
+    #[test]
+    fn device_validation_rejects_bad_qos() {
+        assert!(device(0.2, 0.05).validate().is_ok());
+        assert!(device(0.2, 0.0).validate().is_err());
+        assert!(device(0.2, 1.0).validate().is_err());
+        assert!(device(0.2, f64::NAN).validate().is_err());
+        assert!(device(-0.1, 0.05).validate().is_err());
     }
 
     #[test]

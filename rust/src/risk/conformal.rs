@@ -1,0 +1,199 @@
+//! Online conformal calibration of the [`super::RiskBound::Calibrated`]
+//! margin scale.
+//!
+//! The Cantelli/ECR margin is distribution-free and therefore usually
+//! conservative: on a long-lived fleet the observed violation frequency
+//! sits far below ε, and every unit of unneeded margin is energy spent.
+//! [`Calibration`] closes the loop in the style of adaptive conformal
+//! inference (Gibbs & Candès 2021): after each Monte-Carlo evaluation
+//! of an executed plan, the controller nudges a multiplicative scale on
+//! the Cantelli quantile —
+//!
+//! * observed violation **under** budget → the scale decays by a factor
+//!   `1 − γ·(ε − p̂)/ε` (slow, proportional to the unused budget);
+//! * observed violation **over** budget → the scale inflates 8× faster
+//!   (asymmetry keeps the guarantee side sticky).
+//!
+//! The scale is floored at [`floor_scale`]: the smallest multiple of
+//! σ(ε) at which both the Gaussian quantile and a slightly inflated
+//! exponential tail still stay under ε.  The controller therefore
+//! converges, on well-behaved jitter, to margins near the
+//! Gaussian/exponential optimum without ever descending into the regime
+//! where moment-matching families are known to violate — which is what
+//! keeps the fleet's empirical violation ≤ ε + sampling slack during
+//! calibration, not just after it.
+//!
+//! Everything here is deterministic: same observation sequence ⇒ same
+//! scale trajectory ⇒ same (quantized) [`super::RiskBound`] sequence,
+//! preserving the fleet simulator's byte-identical-trace contract.
+
+use super::{clamp_risk, gauss, RiskBound};
+use crate::optim::ecr;
+
+/// Default decay rate γ (fraction of the unused risk budget converted
+/// into margin shrinkage per observation).
+const DEFAULT_GAMMA: f64 = 0.08;
+
+/// Inflation asymmetry: over-budget observations move the scale this
+/// many times faster than under-budget ones shrink it.
+const INFLATE_FACTOR: f64 = 8.0;
+
+/// Hard ceiling on the conformal scale (2× Cantelli is already far past
+/// any useful margin; beyond it the scenario is simply infeasible).
+const MAX_SCALE: f64 = 2.0;
+
+/// Smallest safe conformal scale at risk level ε: the larger of the
+/// Gaussian quantile and the inflated exponential quantile
+/// `ln(1/ε) − 0.9`, expressed as a fraction of σ(ε) (capped at 1 — the
+/// calibrated bound never plans looser than plain ECR needs).
+pub fn floor_scale(eps: f64) -> f64 {
+    let eps = clamp_risk(eps);
+    let u = gauss::z(eps).max((1.0 / eps).ln() - 0.9);
+    (u / ecr::sigma(eps)).min(1.0)
+}
+
+/// Online conformal controller for the calibrated bound's scale.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// Continuous scale state (the emitted bound quantizes it).
+    scale: f64,
+    /// Decay rate γ.
+    gamma: f64,
+    /// Monte-Carlo observations folded in so far.
+    observations: u64,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration::new()
+    }
+}
+
+impl Calibration {
+    /// A fresh calibrator at scale 1 (margins identical to ECR).
+    pub fn new() -> Calibration {
+        Calibration::with_scale(1.0)
+    }
+
+    /// Seed the scale explicitly (e.g. from a parsed `calibrated:0.8`).
+    pub fn with_scale(scale: f64) -> Calibration {
+        let scale =
+            if scale.is_finite() { scale.clamp(super::SCALE_QUANTUM, MAX_SCALE) } else { 1.0 };
+        Calibration { scale, gamma: DEFAULT_GAMMA, observations: 0 }
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// The (quantized) bound the current state corresponds to.
+    pub fn bound(&self) -> RiskBound {
+        RiskBound::calibrated(self.scale)
+    }
+
+    /// Fold in one Monte-Carlo check: `excess` is the worst observed
+    /// `violation probability − ε` over the fleet (the simulator's
+    /// per-step metric) and `eps` the risk level it was measured
+    /// against.  Returns the updated quantized bound.
+    pub fn observe(&mut self, excess: f64, eps: f64) -> RiskBound {
+        let eps = clamp_risk(eps);
+        self.observations += 1;
+        let p = (eps + excess).max(0.0);
+        let step = if p > eps {
+            (self.gamma * INFLATE_FACTOR * ((p - eps) / eps)).min(0.5)
+        } else {
+            -self.gamma * ((eps - p) / eps).min(1.0)
+        };
+        self.scale = (self.scale * (1.0 + step)).clamp(floor_scale(eps), MAX_SCALE);
+        self.bound()
+    }
+
+    /// Snap the continuous state back to an applied bound — the fleet
+    /// driver calls this when a recalibration is rejected (an inflating
+    /// re-plan turned out infeasible), so the controller does not keep
+    /// proposing the refused scale.
+    pub fn reset_to(&mut self, bound: RiskBound) {
+        if let Some(s) = bound.scale() {
+            self.scale = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_observations_shrink_toward_the_floor() {
+        let eps = 0.05;
+        let mut c = Calibration::new();
+        let mut last = c.scale();
+        for _ in 0..200 {
+            c.observe(-eps, eps); // zero observed violation
+            assert!(c.scale() <= last + 1e-15, "scale must be non-increasing");
+            last = c.scale();
+        }
+        let floor = floor_scale(eps);
+        assert!((c.scale() - floor).abs() < 1e-12, "{} vs floor {floor}", c.scale());
+        assert!(floor < 1.0 && floor > 0.0);
+        assert_eq!(c.observations(), 200);
+    }
+
+    #[test]
+    fn violations_inflate_faster_than_calm_shrinks() {
+        let eps = 0.05;
+        let mut c = Calibration::with_scale(0.6);
+        let s0 = c.scale();
+        c.observe(0.02, eps); // p̂ = 0.07 > ε
+        let up = c.scale() - s0;
+        let mut d = Calibration::with_scale(0.6);
+        d.observe(-0.02, eps); // p̂ = 0.03 < ε
+        let down = s0 - d.scale();
+        assert!(up > 0.0 && down > 0.0);
+        assert!(up > down, "inflation {up} must outpace decay {down}");
+        // and never above the hard ceiling
+        let mut e = Calibration::with_scale(1.9);
+        for _ in 0..50 {
+            e.observe(0.5, eps);
+        }
+        assert!(e.scale() <= MAX_SCALE + 1e-12);
+    }
+
+    #[test]
+    fn floor_keeps_the_exponential_tail_under_eps() {
+        // At the floor, margin = u·σ_dev with u = max(z, ln(1/ε) − 0.9);
+        // a shifted-exponential deviation exceeds mean + u·sd with
+        // probability exp(−(1+u)), which must stay below ε.
+        for eps in [0.01, 0.02, 0.05, 0.1, 0.2, 0.3] {
+            let u = floor_scale(eps) * ecr::sigma(eps);
+            let exp_tail = (-(1.0 + u)).exp();
+            assert!(exp_tail <= eps, "eps={eps}: exp tail {exp_tail} > eps at the floor");
+            let gauss_ok = gauss::z(eps) <= u + 1e-12;
+            assert!(gauss_ok, "eps={eps}: floor sits below the Gaussian quantile");
+        }
+    }
+
+    #[test]
+    fn reset_to_snaps_the_state() {
+        let mut c = Calibration::with_scale(0.4);
+        c.reset_to(RiskBound::calibrated(0.9));
+        assert!((c.scale() - 0.9).abs() < 1e-12);
+        c.reset_to(RiskBound::Ecr); // scale-free bound: no-op
+        assert!((c.scale() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trajectory_is_deterministic() {
+        let run = || {
+            let mut c = Calibration::new();
+            (0..50)
+                .map(|i| c.observe(if i % 7 == 0 { 0.01 } else { -0.03 }, 0.04))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,117 @@
+//! Standard-normal quantile (inverse CDF) for the Gaussian risk bound.
+//!
+//! Acklam's rational approximation: two tail regimes plus a central
+//! regime, relative error below 1.15e-9 over (0, 1) — far inside the
+//! Monte-Carlo noise every consumer of these margins operates under,
+//! and dependency-free (this crate vendors no libm extensions).
+
+use super::clamp_risk;
+
+/// Break-point between the central and tail rational approximations.
+const P_LOW: f64 = 0.02425;
+
+/// Φ⁻¹(p) for p ∈ (0, 1) (Acklam).  Inputs outside (0, 1) are clamped
+/// to the representable risk range first.
+pub fn inv_norm_cdf(p: f64) -> f64 {
+    let p = clamp_risk(p);
+    // Coefficients from Acklam's algorithm (lower-tail form).
+    const A: [f64; 6] = [
+        -3.969_683_028_665_376e1,
+        2.209_460_984_245_205e2,
+        -2.759_285_104_469_687e2,
+        1.383_577_518_672_690e2,
+        -3.066_479_806_614_716e1,
+        2.506_628_277_459_239,
+    ];
+    const B: [f64; 5] = [
+        -5.447_609_879_822_406e1,
+        1.615_858_368_580_409e2,
+        -1.556_989_798_598_866e2,
+        6.680_131_188_771_972e1,
+        -1.328_068_155_288_572e1,
+    ];
+    const C: [f64; 6] = [
+        -7.784_894_002_430_293e-3,
+        -3.223_964_580_411_365e-1,
+        -2.400_758_277_161_838,
+        -2.549_732_539_343_734,
+        4.374_664_141_464_968,
+        2.938_163_982_698_783,
+    ];
+    const D: [f64; 4] = [
+        7.784_695_709_041_462e-3,
+        3.224_671_290_700_398e-1,
+        2.445_134_137_142_996,
+        3.754_408_661_907_416,
+    ];
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// z(ε) = Φ⁻¹(1−ε), floored at 0: the Gaussian margin coefficient.
+/// (For ε ≥ 0.5 the raw quantile is ≤ 0; a negative margin would plan
+/// *inside* the mean, so the floor degrades gracefully to mean-only.)
+pub fn z(eps: f64) -> f64 {
+    inv_norm_cdf(1.0 - clamp_risk(eps)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_quantiles() {
+        // Textbook values to 4+ decimals.
+        for (p, want) in [
+            (0.975, 1.959_964),
+            (0.95, 1.644_854),
+            (0.99, 2.326_348),
+            (0.5, 0.0),
+            (0.025, -1.959_964),
+            (0.001, -3.090_232),
+        ] {
+            let got = inv_norm_cdf(p);
+            assert!((got - want).abs() < 1e-5, "p={p}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn z_is_monotone_decreasing_and_floored() {
+        let mut last = f64::INFINITY;
+        for eps in [0.001, 0.01, 0.05, 0.1, 0.3, 0.49] {
+            let v = z(eps);
+            assert!(v < last, "z not decreasing at {eps}");
+            assert!(v > 0.0);
+            last = v;
+        }
+        assert_eq!(z(0.5), 0.0);
+        assert_eq!(z(0.9), 0.0, "margins never go negative");
+    }
+
+    #[test]
+    fn z_below_cantelli_sigma_for_small_eps() {
+        for eps in [0.005, 0.01, 0.05, 0.1, 0.2, 0.3, 0.49] {
+            let sigma = crate::optim::ecr::sigma(eps);
+            assert!(z(eps) < sigma, "eps={eps}: z {} !< sigma {sigma}", z(eps));
+        }
+    }
+
+    #[test]
+    fn symmetry_of_the_tails() {
+        for p in [0.001, 0.01, 0.2] {
+            assert!((inv_norm_cdf(p) + inv_norm_cdf(1.0 - p)).abs() < 1e-9);
+        }
+    }
+}

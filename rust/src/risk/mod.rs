@@ -1,0 +1,341 @@
+//! First-class risk-bound layer: pluggable chance-constraint transforms.
+//!
+//! The paper turns the probabilistic deadline `P{T_n ≤ D_n} ≥ 1 − ε_n`
+//! into a deterministic margin using only the mean and variance of the
+//! inference time (Theorem 1, eq. 22/28).  That transform — "reserve
+//! `margin(ε)` of the deadline for jitter" — is one point in a design
+//! space: with more distributional knowledge a tighter margin buys the
+//! same guarantee for less energy.  [`RiskBound`] makes the transform a
+//! first-class, pluggable value threaded through every layer
+//! (`optim → engine → fleet → service → CLI`):
+//!
+//! | bound | margin at point m | assumption | when to pick it |
+//! |---|---|---|---|
+//! | [`RiskBound::Ecr`] | σ(ε)·√(v_loc+v_vm), σ = √((1−ε)/ε) | mean + variance only (Cantelli, distribution-free) | the default; the paper's Theorem 1 |
+//! | [`RiskBound::Gaussian`] | Φ⁻¹(1−ε)·√(v_loc+v_vm) | jitter ≈ normal | tightest margins when profiling shows near-normal residuals |
+//! | [`RiskBound::Bernstein`] | min(Bernstein tail, ECR, support) | bounded jitter (support from `worst_dev_factor`) | small ε with bounded outliers: log(1/ε) growth beats Cantelli's 1/√ε |
+//! | [`RiskBound::Calibrated`] | scale·σ(ε)·√(v_loc+v_vm) | none a priori; scale learned online | long-lived fleets: conformal feedback shrinks the Cantelli margin toward what the observed violations justify |
+//!
+//! # Convexity invariant
+//!
+//! Every bound's margin is a **constant per partition point m** — it
+//! depends on the model profile and ε, never on the resource variables
+//! `(b, f)`.  The resource subproblem (23) therefore sees the margin
+//! only through the constant deadline budget `D′ = D − t̄_vm − margin`,
+//! and its convexity (and the interior-point machinery built on it) is
+//! untouched no matter which bound is active.  The partitioning
+//! subproblem stays a DC program: bounds that are a pure multiple of the
+//! total standard deviation ([`RiskBound::std_factor`]) reuse the
+//! paper's exact `σ·√(xᵀWx)` coupling, and the rest enter as a linear
+//! per-point margin `Σ_m x_m·margin_m` (exact at the one-hot vertices
+//! the relaxation is rounded to).
+//!
+//! Risk levels are validated at the API boundary
+//! ([`validate_risk`] → `engine::PlanError::InvalidRisk`), so the
+//! margin math here is total: pathological ε are clamped, never
+//! panicked on.
+
+pub mod bernstein;
+pub mod conformal;
+pub mod gauss;
+
+pub use conformal::Calibration;
+
+use crate::models::ModelProfile;
+use crate::optim::ecr;
+
+/// Smallest representable risk level; ε below this is clamped (σ(1e-9)
+/// ≈ 3.2e4 — a margin so conservative it rejects almost everything,
+/// which is the right failure mode for a nonsensical request that
+/// slipped past validation).
+pub const MIN_RISK: f64 = 1e-9;
+
+/// Largest representable risk level (1 − [`MIN_RISK`]).
+pub const MAX_RISK: f64 = 1.0 - 1e-9;
+
+/// Quantization grid for the calibrated bound's conformal scale: scales
+/// agreeing to 1e-3 compare equal, hash equal, and fingerprint equal,
+/// so online calibration cannot thrash the plan cache with sub-visible
+/// scale moves.
+pub const SCALE_QUANTUM: f64 = 1e-3;
+
+/// Clamp ε into the open interval the transforms are defined on.
+pub fn clamp_risk(eps: f64) -> f64 {
+    if eps.is_finite() {
+        eps.clamp(MIN_RISK, MAX_RISK)
+    } else {
+        // NaN / ±inf: fall to the most conservative representable level.
+        MIN_RISK
+    }
+}
+
+/// Structured risk validation shared by `Device`, `PlanRequest`, the
+/// scenario deltas, and the fleet options (the engine maps an `Err` to
+/// `PlanError::InvalidRisk` instead of panicking deep in a solver).
+pub fn validate_risk(eps: f64) -> Result<(), String> {
+    if eps.is_finite() && eps > 0.0 && eps < 1.0 {
+        Ok(())
+    } else {
+        Err(format!("risk level must be in (0, 1), got {eps}"))
+    }
+}
+
+/// A chance-constraint transform: deadline margin as a function of the
+/// model profile, the partition point, and the risk level ε.
+///
+/// `Copy`/`Eq`/`Hash` are deliberate: the bound travels inside
+/// `optim::Policy`, keys the engine's plan-cache fingerprint, and is
+/// compared across fleet recalibrations — the calibrated scale is
+/// stored pre-quantized (units of [`SCALE_QUANTUM`]) to keep all three
+/// exact.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum RiskBound {
+    /// Theorem 1's Exact Conic Reformulation (Cantelli):
+    /// σ(ε)·√(v_loc+v_vm).  Distribution-free and the repo default —
+    /// bit-identical to the pre-refactor `Policy::Robust` margins.
+    #[default]
+    Ecr,
+    /// Gaussian quantile Φ⁻¹(1−ε)·√(v_loc+v_vm): exact when jitter is
+    /// normal, strictly below ECR for every ε < 0.5.  Heavier-tailed
+    /// jitter (e.g. the shifted-exponential stress family) can exceed ε
+    /// by a bounded amount — see EXPERIMENTS.md §Risk bounds.
+    Gaussian,
+    /// One-sided Bernstein bound with the profiled support
+    /// (`worst_dev_factor`·√v_loc + 3.5·√v_vm): the smallest of the
+    /// Bernstein tail, the ECR margin, and the support itself, so it is
+    /// never worse than ECR and wins at small ε when jitter is bounded.
+    Bernstein,
+    /// Conformally calibrated Cantelli: `scale`·σ(ε)·√(v_loc+v_vm) with
+    /// the scale learned online from observed violations (see
+    /// [`Calibration`]).  Starts at scale 1 (= ECR) and shrinks while
+    /// the empirical violation stays under ε.
+    Calibrated {
+        /// Conformal scale in units of [`SCALE_QUANTUM`] (so 1000 = ×1.0).
+        scale_q: u16,
+    },
+}
+
+impl RiskBound {
+    /// The calibrated bound at a given conformal scale (quantized to
+    /// [`SCALE_QUANTUM`]; clamped to (0, ~65.5]).
+    pub fn calibrated(scale: f64) -> RiskBound {
+        let q = if scale.is_finite() { (scale / SCALE_QUANTUM).round() } else { 1.0 };
+        RiskBound::Calibrated { scale_q: q.clamp(1.0, u16::MAX as f64) as u16 }
+    }
+
+    /// The conformal scale of a calibrated bound (`None` otherwise).
+    pub fn scale(&self) -> Option<f64> {
+        match self {
+            RiskBound::Calibrated { scale_q } => Some(*scale_q as f64 * SCALE_QUANTUM),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (CLI / JSON encoding).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RiskBound::Ecr => "ecr",
+            RiskBound::Gaussian => "gauss",
+            RiskBound::Bernstein => "bernstein",
+            RiskBound::Calibrated { .. } => "calibrated",
+        }
+    }
+
+    /// Parse a CLI spelling.  `calibrated` starts at scale 1 (= ECR);
+    /// `calibrated:0.8` seeds the conformal scale explicitly.
+    pub fn parse(s: &str) -> Option<RiskBound> {
+        match s {
+            "ecr" | "cantelli" => Some(RiskBound::Ecr),
+            "gauss" | "gaussian" | "normal" => Some(RiskBound::Gaussian),
+            "bernstein" => Some(RiskBound::Bernstein),
+            "calibrated" | "conformal" => Some(RiskBound::calibrated(1.0)),
+            _ => {
+                let scale = s.strip_prefix("calibrated:")?.parse::<f64>().ok()?;
+                (scale.is_finite() && scale > 0.0).then_some(RiskBound::calibrated(scale))
+            }
+        }
+    }
+
+    /// Stable discriminant for fingerprint mixing (the engine also mixes
+    /// the raw `scale_q`, so two calibrated bounds with different scales
+    /// never alias in the plan cache).
+    pub fn tag(&self) -> u8 {
+        match self {
+            RiskBound::Ecr => 0,
+            RiskBound::Gaussian => 1,
+            RiskBound::Bernstein => 2,
+            RiskBound::Calibrated { .. } => 3,
+        }
+    }
+
+    /// Raw quantized scale for fingerprinting (0 for scale-free bounds).
+    pub fn scale_q(&self) -> u16 {
+        match self {
+            RiskBound::Calibrated { scale_q } => *scale_q,
+            _ => 0,
+        }
+    }
+
+    /// Coefficient k such that `margin = k·√(v_loc+v_vm)` — `Some` for
+    /// the bounds that are a pure multiple of the total standard
+    /// deviation (ECR / Gaussian / Calibrated), which lets the PCCP
+    /// partitioning subproblem keep the paper's exact `k·√(xᵀWx)`
+    /// variance coupling.  `None` for Bernstein, which enters the DC
+    /// program as a linear per-point margin instead.
+    pub fn std_factor(&self, eps: f64) -> Option<f64> {
+        match self {
+            RiskBound::Ecr => Some(ecr::sigma(eps)),
+            RiskBound::Gaussian => Some(gauss::z(eps)),
+            RiskBound::Calibrated { .. } => {
+                Some(self.scale().expect("calibrated carries a scale") * ecr::sigma(eps))
+            }
+            RiskBound::Bernstein => None,
+        }
+    }
+
+    /// Uncertainty margin at partition point `m` for risk level `eps` —
+    /// the second term on the LHS of (22) under this transform.
+    pub fn margin(&self, model: &ModelProfile, m: usize, eps: f64) -> f64 {
+        let vl = model.v_loc(m);
+        let vv = model.v_vm(m);
+        match self {
+            // Must stay bit-identical to the pre-refactor Policy::Robust
+            // margin: same operand order, same intermediates.
+            RiskBound::Ecr => ecr::sigma(eps) * (vl + vv).sqrt(),
+            RiskBound::Gaussian => gauss::z(eps) * (vl + vv).sqrt(),
+            RiskBound::Calibrated { .. } => {
+                self.scale().expect("calibrated carries a scale")
+                    * ecr::sigma(eps)
+                    * (vl + vv).sqrt()
+            }
+            RiskBound::Bernstein => {
+                let v = vl + vv;
+                // Support of the deviation: the profiled worst-case
+                // excursion per component (the same numbers the
+                // worst-case baseline plans with).
+                let support = model.worst_dev_factor * vl.sqrt() + 3.5 * vv.sqrt();
+                // All three are valid margins under the bounded-support
+                // assumption, so the minimum is too — and min(·, ECR)
+                // guarantees Bernstein is never looser than the default.
+                bernstein::margin(v, support, eps)
+                    .min(ecr::sigma(eps) * v.sqrt())
+                    .min(support)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for RiskBound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.scale() {
+            Some(s) => write!(f, "{}(x{s:.3})", self.name()),
+            None => write!(f, "{}", self.name()),
+        }
+    }
+}
+
+/// All scale-free bounds plus the unit-scale calibrated bound, in CLI
+/// order — the sweep the benches and figures iterate.
+pub const BOUND_FAMILY: [RiskBound; 4] = [
+    RiskBound::Ecr,
+    RiskBound::Gaussian,
+    RiskBound::Bernstein,
+    RiskBound::Calibrated { scale_q: 1000 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_scale_quantizes_and_roundtrips() {
+        let b = RiskBound::calibrated(0.8004);
+        assert_eq!(b, RiskBound::Calibrated { scale_q: 800 });
+        assert!((b.scale().unwrap() - 0.8).abs() < 1e-12);
+        // Sub-quantum moves compare equal; a full quantum does not.
+        assert_eq!(RiskBound::calibrated(0.8001), RiskBound::calibrated(0.8004));
+        assert_ne!(RiskBound::calibrated(0.800), RiskBound::calibrated(0.802));
+        // Degenerate inputs clamp instead of panicking.
+        assert_eq!(RiskBound::calibrated(0.0), RiskBound::Calibrated { scale_q: 1 });
+        assert_eq!(RiskBound::calibrated(f64::NAN), RiskBound::Calibrated { scale_q: 1 });
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for (s, name) in [
+            ("ecr", "ecr"),
+            ("cantelli", "ecr"),
+            ("gauss", "gauss"),
+            ("gaussian", "gauss"),
+            ("bernstein", "bernstein"),
+            ("calibrated", "calibrated"),
+        ] {
+            assert_eq!(RiskBound::parse(s).unwrap().name(), name);
+        }
+        assert_eq!(RiskBound::parse("calibrated:0.75"), Some(RiskBound::calibrated(0.75)));
+        assert!(RiskBound::parse("bogus").is_none());
+        assert!(RiskBound::parse("calibrated:-1").is_none());
+    }
+
+    #[test]
+    fn unit_scale_calibrated_equals_ecr_margin_exactly() {
+        let model = ModelProfile::alexnet_paper();
+        let cal = RiskBound::calibrated(1.0);
+        for m in 0..model.num_points() {
+            for eps in [0.01, 0.05, 0.2] {
+                // ×1.0 is exact in IEEE arithmetic.
+                assert_eq!(
+                    cal.margin(&model, m, eps).to_bits(),
+                    RiskBound::Ecr.margin(&model, m, eps).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_and_bernstein_never_exceed_ecr() {
+        for model in [ModelProfile::alexnet_paper(), ModelProfile::resnet152_paper()] {
+            for m in 0..model.num_points() {
+                for eps in [0.01, 0.02, 0.05, 0.1, 0.2, 0.3] {
+                    let e = RiskBound::Ecr.margin(&model, m, eps);
+                    let g = RiskBound::Gaussian.margin(&model, m, eps);
+                    let b = RiskBound::Bernstein.margin(&model, m, eps);
+                    assert!(g <= e + 1e-15, "{} m={m} eps={eps}: gauss {g} > ecr {e}", model.name);
+                    assert!(b <= e + 1e-15, "{} m={m} eps={eps}: bern {b} > ecr {e}", model.name);
+                    assert!(g >= 0.0 && b >= 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn risk_validation_and_clamp() {
+        assert!(validate_risk(0.05).is_ok());
+        for bad in [0.0, 1.0, -0.1, f64::NAN, f64::INFINITY] {
+            assert!(validate_risk(bad).is_err(), "{bad}");
+        }
+        assert_eq!(clamp_risk(0.05), 0.05);
+        assert_eq!(clamp_risk(0.0), MIN_RISK);
+        assert_eq!(clamp_risk(2.0), MAX_RISK);
+        assert_eq!(clamp_risk(f64::NAN), MIN_RISK);
+    }
+
+    #[test]
+    fn std_factor_matches_margin_for_variance_shaped_bounds() {
+        let model = ModelProfile::resnet152_paper();
+        let eps = 0.04;
+        for bound in [RiskBound::Ecr, RiskBound::Gaussian, RiskBound::calibrated(0.6)] {
+            let k = bound.std_factor(eps).unwrap();
+            for m in 0..model.num_points() {
+                let v = model.v_loc(m) + model.v_vm(m);
+                let direct = bound.margin(&model, m, eps);
+                assert!(
+                    (direct - k * v.sqrt()).abs() <= 1e-12 * (1.0 + direct),
+                    "m={m}: {direct} vs {}",
+                    k * v.sqrt()
+                );
+            }
+        }
+        assert!(RiskBound::Bernstein.std_factor(eps).is_none());
+    }
+}

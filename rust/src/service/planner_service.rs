@@ -7,7 +7,9 @@
 //! results in index-ordered slots, so for a given request sequence the
 //! service's output is bit-identical at any thread count.
 
-use crate::engine::{device_fingerprint, CacheStats, PlanError, PlannerBuilder, ScenarioDelta};
+use crate::engine::{
+    device_fingerprint, CacheStats, PlanError, PlannerBuilder, RiskBound, ScenarioDelta,
+};
 use crate::optim::types::{Device, Plan, Scenario};
 use crate::util::par::{par_map_indexed_mut, threads_for};
 
@@ -295,6 +297,19 @@ impl PlannerService {
         id: TenantId,
         scenario: Scenario,
     ) -> Result<ServiceOutcome, ServiceError> {
+        self.admit_tenant_with(id, scenario, RiskBound::Ecr)
+    }
+
+    /// [`PlannerService::admit_tenant`] under an explicit risk bound —
+    /// every sub-fleet of the tenant plans with it, and a later
+    /// fleet-wide [`ScenarioDelta::Bound`] broadcast can change it
+    /// transactionally.
+    pub fn admit_tenant_with(
+        &mut self,
+        id: TenantId,
+        scenario: Scenario,
+        bound: RiskBound,
+    ) -> Result<ServiceOutcome, ServiceError> {
         if self.tenant_index(id).is_some() {
             return Err(ServiceError::DuplicateTenant(id));
         }
@@ -307,11 +322,11 @@ impl PlannerService {
         let b = scenario.total_bandwidth_hz;
         let k = self.shards.len();
         let mut loads: Vec<usize> = self.shards.iter().map(|s| s.load()).collect();
-        let bound = self.load_bound(loads.iter().sum::<usize>() + n);
+        let load_cap = self.load_bound(loads.iter().sum::<usize>() + n);
         let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
         for (i, d) in scenario.devices.iter().enumerate() {
             let mut s = (route_mix(id, d) % k as u64) as usize;
-            if loads[s] + 1 > bound {
+            if loads[s] + 1 > load_cap {
                 s = argmin(&loads);
             }
             loads[s] += 1;
@@ -332,7 +347,7 @@ impl PlannerService {
         let results: Vec<Option<Result<ShardOpResult, PlanError>>> = {
             let subs = &subs;
             par_map_indexed_mut(&mut self.shards, threads, |shard, s| {
-                subs[s].clone().map(|(m, sc)| shard.cold_admit(id, m, sc))
+                subs[s].clone().map(|(m, sc)| shard.cold_admit(id, m, sc, bound))
             })
         };
         let mut err: Option<PlanError> = None;
@@ -476,6 +491,19 @@ impl PlannerService {
         (0..self.shards.len()).filter(|&s| self.shards[s].sub(id).is_some()).collect()
     }
 
+    /// The tenant's active risk bound: every sub-fleet carries it on its
+    /// last outcome and fleet-wide Bound broadcasts keep them in
+    /// lock-step, so the first hosting shard is authoritative (deriving
+    /// it from shard state — instead of a tenant-level field — makes the
+    /// transactional rollback of a rejected Bound broadcast free: the
+    /// sub-fleet snapshots carry the old bound back).
+    pub fn tenant_bound(&self, id: TenantId) -> Option<RiskBound> {
+        self.tenant_index(id)?;
+        self.shards
+            .iter()
+            .find_map(|shard| shard.sub(id).map(|sub| sub.outcome.bound))
+    }
+
     /// Translate one tenant-level parameter delta into per-shard local
     /// ops.  `Err(())` = reject without any planner work (bad index /
     /// bad value), mirroring the serial driver's pre-validation.
@@ -499,8 +527,13 @@ impl PlannerService {
                 let (s, l) = self.locate(req.tenant, *i).ok_or(())?;
                 Ok(vec![(s, ScenarioDelta::Risk { device: Some(l), risk: *risk }, false)])
             }
+            // Fleet-wide writes: deadline/risk broadcasts and risk-bound
+            // recalibrations are transactional across the tenant's
+            // shards (negotiable — a rejection on any shard rolls every
+            // shard back).
             ScenarioDelta::Deadline { device: None, .. }
-            | ScenarioDelta::Risk { device: None, .. } => Ok(self
+            | ScenarioDelta::Risk { device: None, .. }
+            | ScenarioDelta::Bound(_) => Ok(self
                 .hosting_shards(req.tenant)
                 .into_iter()
                 .map(|s| (s, req.delta.clone(), false))
@@ -715,8 +748,9 @@ impl PlannerService {
         let k_s = self.shards[s].sub(tenant).map(|x| x.members.len()).unwrap_or(0);
         let share_s = share_hz(b, k_s + 1, n + 1);
         let owner = if k_s == 0 {
+            let tb = self.tenant_bound(tenant).unwrap_or_default();
             let sc = Scenario { devices: vec![dev], total_bandwidth_hz: share_s };
-            match self.shards[s].cold_admit(tenant, vec![n], sc) {
+            match self.shards[s].cold_admit(tenant, vec![n], sc, tb) {
                 Ok(op) => op,
                 Err(_) => ShardOpResult::rejected(),
             }
@@ -850,8 +884,9 @@ impl PlannerService {
         };
         let share_dst = share_hz(b, k_dst + 1, n);
         let dst_op = if k_dst == 0 {
+            let bound = self.tenant_bound(tenant).unwrap_or_default();
             let sc = Scenario { devices: vec![dev], total_bandwidth_hz: share_dst };
-            match self.shards[dst].cold_admit(tenant, vec![tenant_idx], sc) {
+            match self.shards[dst].cold_admit(tenant, vec![tenant_idx], sc, bound) {
                 Ok(op) => op,
                 Err(_) => return None,
             }

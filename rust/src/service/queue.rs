@@ -77,6 +77,9 @@ enum Slot {
     Channel(usize),
     Deadline(Option<usize>),
     Risk(Option<usize>),
+    /// The fleet-wide risk-bound slot: like deadline/risk broadcasts, a
+    /// later bound write fully covers an earlier one.
+    Bound,
 }
 
 fn slot_of(delta: &ScenarioDelta) -> Option<Slot> {
@@ -85,6 +88,7 @@ fn slot_of(delta: &ScenarioDelta) -> Option<Slot> {
         ScenarioDelta::Channel { device, .. } => Some(Slot::Channel(*device)),
         ScenarioDelta::Deadline { device, .. } => Some(Slot::Deadline(*device)),
         ScenarioDelta::Risk { device, .. } => Some(Slot::Risk(*device)),
+        ScenarioDelta::Bound(_) => Some(Slot::Bound),
         ScenarioDelta::Join(_) | ScenarioDelta::Leave(_) => None,
     }
 }
@@ -100,6 +104,7 @@ fn covers(later: &Slot, earlier: &Slot) -> bool {
         // device (an earlier fleet-wide write still matters elsewhere).
         (Slot::Deadline(a), Slot::Deadline(b)) => a.is_none() || a == b,
         (Slot::Risk(a), Slot::Risk(b)) => a.is_none() || a == b,
+        (Slot::Bound, Slot::Bound) => true,
         _ => false,
     }
 }
@@ -225,6 +230,18 @@ mod tests {
         assert_eq!(s[0], Some(1), "fleet-wide deadline covers the single-device write");
         assert_eq!(s[1], None, "a single-device write cannot cover a fleet-wide one");
         assert_eq!(s[2], None);
+    }
+
+    #[test]
+    fn later_bound_write_covers_earlier_one() {
+        use crate::risk::RiskBound;
+        let reqs = vec![
+            req(0, ScenarioDelta::Bound(RiskBound::Gaussian)),
+            req(0, ScenarioDelta::Risk { device: Some(1), risk: 0.1 }),
+            req(0, ScenarioDelta::Bound(RiskBound::calibrated(0.7))),
+        ];
+        let s = superseded_by(&reqs);
+        assert_eq!(s, vec![Some(2), None, None]);
     }
 
     #[test]

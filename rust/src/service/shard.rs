@@ -8,7 +8,9 @@
 //! tenants multiplexes them through [`Planner::set_base`], which swaps
 //! the replan base without touching any cached or counted state.
 
-use crate::engine::{PlanError, PlanOutcome, PlanRequest, Planner, Policy, ScenarioDelta};
+use crate::engine::{
+    PlanError, PlanOutcome, PlanRequest, Planner, Policy, RiskBound, ScenarioDelta,
+};
 use crate::optim::types::{Device, Scenario};
 
 use super::{Disposition, TenantId};
@@ -131,9 +133,12 @@ impl Shard {
         tenant: TenantId,
         members: Vec<usize>,
         scenario: Scenario,
+        bound: RiskBound,
     ) -> Result<ShardOpResult, PlanError> {
         debug_assert_eq!(members.len(), scenario.n());
-        let outcome = self.planner.plan(&PlanRequest::new(scenario.clone(), Policy::Robust))?;
+        let outcome = self
+            .planner
+            .plan(&PlanRequest::new(scenario.clone(), Policy::Robust).with_bound(bound))?;
         let hit = outcome.diagnostics.cache_hit;
         let result = ShardOpResult {
             disposition: Disposition::Applied,
@@ -165,8 +170,14 @@ impl Shard {
             Ok(s) => s,
             Err(_) => return ShardOpResult::rejected(),
         };
+        // The sub-fleet's active bound rides on its last outcome; a
+        // Bound delta probes/replans under the *new* bound it installs.
+        let bound = match delta {
+            ScenarioDelta::Bound(b) => *b,
+            _ => base_out.bound,
+        };
         self.planner.set_base(base_sc, base_out).expect("sub-fleet base shape is consistent");
-        let req = PlanRequest::new(new_sc.clone(), Policy::Robust);
+        let req = PlanRequest::new(new_sc.clone(), Policy::Robust).with_bound(bound);
         if let Some(hit) = self.planner.plan_cached(&req) {
             // The hit carries the original solve's diagnostics; report
             // its warm_started flag exactly like the serial driver does
@@ -343,7 +354,7 @@ mod tests {
     fn cold_admit_installs_and_load_counts() {
         let mut s = shard();
         let sc = scenario(3, 1);
-        let r = s.cold_admit(7, vec![0, 1, 2], sc).unwrap();
+        let r = s.cold_admit(7, vec![0, 1, 2], sc, RiskBound::Ecr).unwrap();
         assert_eq!(r.disposition, Disposition::Applied);
         assert!(r.newton_iters > 0);
         assert_eq!(s.load(), 3);
@@ -353,8 +364,8 @@ mod tests {
     #[test]
     fn multiplexes_two_tenants_through_set_base() {
         let mut s = shard();
-        s.cold_admit(1, vec![0, 1], scenario(2, 2)).unwrap();
-        s.cold_admit(2, vec![0, 1, 2], scenario(3, 3)).unwrap();
+        s.cold_admit(1, vec![0, 1], scenario(2, 2), RiskBound::Ecr).unwrap();
+        s.cold_admit(2, vec![0, 1, 2], scenario(3, 3), RiskBound::Ecr).unwrap();
         // Interleave replans: each must apply to its own tenant's base.
         let a = s.apply_param(1, &ScenarioDelta::TotalBandwidth(12e6), true);
         let b = s.apply_param(2, &ScenarioDelta::TotalBandwidth(9e6), true);
@@ -374,7 +385,7 @@ mod tests {
         let mut s = shard();
         let sc = scenario(2, 4);
         let joiner = sc.devices[0].clone();
-        s.cold_admit(1, vec![0, 1], sc).unwrap();
+        s.cold_admit(1, vec![0, 1], sc, RiskBound::Ecr).unwrap();
         let r = s.apply_join(1, 2, joiner, 10e6);
         assert_eq!(r.disposition, Disposition::Applied);
         assert_eq!(s.sub(1).unwrap().members, vec![0, 1, 2]);
@@ -387,7 +398,7 @@ mod tests {
     #[test]
     fn last_member_leave_drops_the_sub_fleet_for_free() {
         let mut s = shard();
-        s.cold_admit(1, vec![5], scenario(1, 5)).unwrap();
+        s.cold_admit(1, vec![5], scenario(1, 5), RiskBound::Ecr).unwrap();
         let r = s.apply_leave(1, 0, 0.0);
         assert_eq!(r.disposition, Disposition::Applied);
         assert_eq!(r.newton_iters, 0);
@@ -401,7 +412,7 @@ mod tests {
         let sc = scenario(2, 6);
         let mut impossible = sc.devices[0].clone();
         impossible.deadline_s = 1e-4; // unmeetable
-        s.cold_admit(1, vec![0, 1], sc).unwrap();
+        s.cold_admit(1, vec![0, 1], sc, RiskBound::Ecr).unwrap();
         let before = s.sub(1).unwrap().clone();
         let r = s.apply_join(1, 2, impossible, 10e6);
         assert_eq!(r.disposition, Disposition::Rejected);
@@ -412,9 +423,25 @@ mod tests {
     }
 
     #[test]
+    fn bound_delta_switches_the_sub_fleets_margins() {
+        let mut s = shard();
+        s.cold_admit(1, vec![0, 1], scenario(2, 9), RiskBound::Ecr).unwrap();
+        let ecr_energy = s.sub(1).unwrap().outcome.energy;
+        let r = s.apply_param(1, &ScenarioDelta::Bound(RiskBound::Gaussian), false);
+        assert_eq!(r.disposition, Disposition::Applied);
+        let sub = s.sub(1).unwrap();
+        assert_eq!(sub.outcome.bound, RiskBound::Gaussian);
+        assert!(sub.outcome.energy <= ecr_energy * (1.0 + 1e-9), "tighter margins cannot cost");
+        // Follow-up parameter deltas keep planning under the new bound.
+        let r2 = s.apply_param(1, &ScenarioDelta::TotalBandwidth(11e6), true);
+        assert_ne!(r2.disposition, Disposition::Rejected);
+        assert_eq!(s.sub(1).unwrap().outcome.bound, RiskBound::Gaussian);
+    }
+
+    #[test]
     fn environmental_infeasibility_is_absorbed() {
         let mut s = shard();
-        s.cold_admit(1, vec![0, 1, 2], scenario(3, 7)).unwrap();
+        s.cold_admit(1, vec![0, 1, 2], scenario(3, 7), RiskBound::Ecr).unwrap();
         let energy_before = s.sub(1).unwrap().outcome.energy;
         // Crush the shared uplink budget: no feasible replan exists, but
         // the fact is environmental, so the scenario must roll forward

@@ -5,7 +5,7 @@
 
 #![allow(deprecated)] // this suite exists to pin the legacy shims' behavior
 
-use ripra::engine::{PlanRequest, Planner, PlannerBuilder, Policy, ScenarioDelta};
+use ripra::engine::{PlanRequest, Planner, PlannerBuilder, Policy, RiskBound, ScenarioDelta};
 use ripra::models::ModelProfile;
 use ripra::optim::types::Device;
 use ripra::optim::{alternating, baselines, AlternatingOptions, Policy as MarginPolicy, Scenario};
@@ -31,6 +31,45 @@ fn robust_policy_bit_matches_legacy_solve() {
     assert_eq!(out.diagnostics.newton_iters, legacy.newton_iters);
     assert_eq!(bits(out.diagnostics.avg_pccp_iters), bits(legacy.avg_pccp_iters));
     assert_eq!(out.diagnostics.trajectory, legacy.trajectory);
+}
+
+/// The policy × bound refactor's back-compat pin: a request with no
+/// bound set, a request with the explicit default `RiskBound::Ecr`, and
+/// the pre-refactor legacy free function all produce byte-identical
+/// plans, energies, and iteration counts — and the applied per-device
+/// margins match the legacy σ(ε)·√(v_loc+v_vm) formula bit-for-bit.
+#[test]
+fn default_bound_is_bit_identical_to_pre_refactor_ecr() {
+    let sc = scenario(8, 10e6, 0.20, 0.04, 41);
+    let legacy = alternating::solve(&sc, &AlternatingOptions::default(), None).unwrap();
+    let default_req =
+        Planner::default().plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+    let explicit = Planner::default()
+        .plan(&PlanRequest::new(sc.clone(), Policy::Robust).with_bound(RiskBound::Ecr))
+        .unwrap();
+    assert_eq!(default_req.bound, RiskBound::Ecr, "the default bound is the paper's ECR");
+    assert_eq!(default_req.plan, legacy.plan);
+    assert_eq!(explicit.plan, legacy.plan);
+    assert_eq!(bits(default_req.energy), bits(legacy.energy));
+    assert_eq!(bits(explicit.energy), bits(default_req.energy));
+    assert_eq!(explicit.diagnostics.newton_iters, default_req.diagnostics.newton_iters);
+    // Same cache key too: the explicit-Ecr request hits the default's
+    // cached plan.
+    let mut planner = Planner::default();
+    planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+    let hit = planner
+        .plan(&PlanRequest::new(sc.clone(), Policy::Robust).with_bound(RiskBound::Ecr))
+        .unwrap();
+    assert!(hit.diagnostics.cache_hit);
+    // Margins in the diagnostics are the legacy formula, bit-for-bit.
+    for (i, (d, &m)) in sc.devices.iter().zip(&legacy.plan.partition).enumerate() {
+        let want = d.sigma() * (d.model.v_loc(m) + d.model.v_vm(m)).sqrt();
+        assert_eq!(
+            bits(default_req.diagnostics.margins_s[i]),
+            bits(want),
+            "device {i} margin drifted from the pre-refactor formula"
+        );
+    }
 }
 
 #[test]
@@ -128,7 +167,7 @@ fn replan_leave_reuses_cached_solution() {
         cold.diagnostics.newton_iters
     );
     // Energy parity with the cold solve, and full feasibility.
-    assert!(re.plan.feasible(&reduced, MarginPolicy::Robust));
+    assert!(re.plan.feasible(&reduced, MarginPolicy::ROBUST));
     assert!(re.plan.bandwidth_ok(&reduced) && re.plan.freq_ok(&reduced));
     assert!(
         (re.energy - cold.energy).abs() / cold.energy < 0.10,
@@ -161,7 +200,7 @@ fn replan_join_reuses_cached_solution() {
         re.diagnostics.newton_iters,
         cold.diagnostics.newton_iters
     );
-    assert!(re.plan.feasible(&grown, MarginPolicy::Robust));
+    assert!(re.plan.feasible(&grown, MarginPolicy::ROBUST));
     assert!(re.plan.bandwidth_ok(&grown) && re.plan.freq_ok(&grown));
     assert!(
         (re.energy - cold.energy).abs() / cold.energy < 0.10,
@@ -182,7 +221,7 @@ fn replan_deadline_change_tracks_cold_solve() {
         ScenarioDelta::Deadline { device: None, deadline_s: 0.23 }.apply(&sc).unwrap();
     let cold =
         Planner::default().plan(&PlanRequest::new(relaxed.clone(), Policy::Robust)).unwrap();
-    assert!(re.plan.feasible(&relaxed, MarginPolicy::Robust));
+    assert!(re.plan.feasible(&relaxed, MarginPolicy::ROBUST));
     assert!(re.diagnostics.newton_iters < cold.diagnostics.newton_iters);
     assert!(
         (re.energy - cold.energy).abs() / cold.energy < 0.10,

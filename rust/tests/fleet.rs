@@ -1,12 +1,13 @@
 //! Fleet-simulator integration suite: determinism (same seed ⇒
 //! bit-identical trace, metrics JSON, and final fleet state — across
 //! repeat runs and across `util::par` thread-count settings) and, in the
-//! ignored long-run test, churn coverage: all six `ScenarioDelta`
-//! variants exercised with a non-zero plan-cache hit rate and the
-//! probabilistic deadline guarantee holding throughout.
+//! ignored long-run test, churn coverage: every churn-driven
+//! `ScenarioDelta` variant exercised with a non-zero plan-cache hit rate
+//! and the probabilistic deadline guarantee holding throughout (the
+//! calibration-driven `Bound` variant has its own always-on pin).
 
-use ripra::engine::{scenario_fingerprint, Policy};
-use ripra::fleet::{self, FleetOptions, DELTA_KINDS};
+use ripra::engine::{scenario_fingerprint, Policy, RiskBound};
+use ripra::fleet::{self, FleetOptions, DELTA_KINDS, RECALIBRATE_KIND};
 
 /// Small but event-rich configuration for the always-on tests (runs in
 /// debug within a few seconds).
@@ -108,6 +109,11 @@ fn churn_exercises_all_delta_variants_with_cache_hits() {
     let rep = fleet::run(&opts).expect("fleet run");
     let m = &rep.metrics;
     for kind in DELTA_KINDS {
+        // Recalibrations only fire under a calibrated bound (covered by
+        // calibrated_bound_shrinks_margins_over_a_quiet_run).
+        if kind == RECALIBRATE_KIND {
+            continue;
+        }
         assert!(
             m.count_of(kind) >= 1,
             "delta kind {kind:?} never exercised in {} events",
@@ -134,4 +140,113 @@ fn churn_exercises_all_delta_variants_with_cache_hits() {
     // The simulator must have churned the fleet itself, not just its
     // parameters.
     assert!(m.count_of("join") + m.count_of("leave") >= 2);
+}
+
+/// Acceptance pin for the conformal bound: on a quiet fleet with
+/// Monte-Carlo checks on, the calibration stream fires (recalibrate
+/// steps recorded), the learned scale ends strictly below its seed, the
+/// planned energy is non-increasing across the recalibration chain
+/// (smaller margins can only save energy on a fixed scenario), and the
+/// empirical violation stays within eps + sampling slack throughout.
+#[test]
+fn calibrated_bound_shrinks_margins_over_a_quiet_run() {
+    let opts = FleetOptions {
+        n0: 3,
+        duration_s: 1.0,
+        arrival_rate_hz: 0.0,
+        churn: 0.0, // no churn: only the bootstrap + the calibration chain
+        total_bandwidth_hz: 10e6,
+        deadline_s: 0.22,
+        risk: 0.06,
+        trials: 400,
+        seed: 5,
+        threads: 1,
+        bound: RiskBound::calibrated(1.0),
+        ..FleetOptions::default()
+    };
+    let rep = fleet::run(&opts).expect("fleet run");
+    let m = &rep.metrics;
+    assert!(m.count_of(RECALIBRATE_KIND) >= 3, "calibration stream never fired: {m:?}");
+    let scale = rep.final_bound.scale().expect("run stays on a calibrated bound");
+    assert!(scale < 1.0, "conformal scale must shrink on clean observations, got {scale}");
+    // Energy shrinks with the margins.  The early chain is noise-free
+    // (the scale is far above the calibration floor, so no Monte-Carlo
+    // draw can report a violation and inflate it back): assert strict
+    // non-increase there, and an overall saving vs the ECR bootstrap.
+    let boot_energy = m.steps()[0].energy_j.expect("bootstrap records energy");
+    let recal_energy: Vec<f64> = m
+        .steps()
+        .iter()
+        .filter(|s| s.kind == RECALIBRATE_KIND && s.accepted)
+        .filter_map(|s| s.energy_j)
+        .collect();
+    assert!(recal_energy.len() >= 3);
+    for w in recal_energy[..3].windows(2) {
+        assert!(
+            w[1] <= w[0] * (1.0 + 1e-6),
+            "energy increased under a shrinking margin: {recal_energy:?}"
+        );
+    }
+    let last = *recal_energy.last().unwrap();
+    assert!(
+        last <= boot_energy * (1.0 + 1e-9),
+        "calibration must end at or below the ECR bootstrap energy: {last} vs {boot_energy}"
+    );
+    // The guarantee holds during calibration, not just after it.
+    let s = m.summary();
+    if let Some(worst) = s.worst_violation_excess {
+        let eps = opts.risk;
+        let slack = 0.015 + 3.0 * (eps * (1.0 - eps) / opts.trials as f64).sqrt();
+        assert!(worst <= slack, "violation excess {worst} exceeds sampling slack {slack}");
+    }
+    // Determinism extends to the calibration stream.
+    let again = fleet::run(&opts).expect("fleet rerun");
+    assert_eq!(
+        rep.to_json().to_string_pretty(),
+        again.to_json().to_string_pretty(),
+        "calibrated runs must stay byte-identical per seed"
+    );
+    assert_eq!(again.final_bound, rep.final_bound);
+}
+
+/// The four bounds are runnable end-to-end through the fleet driver;
+/// tighter bounds plan at most the default ECR energy on the identical
+/// quiet scenario, and the configured bound lands in the config JSON.
+#[test]
+fn every_bound_runs_end_to_end_and_orders_energy() {
+    let base = FleetOptions {
+        n0: 3,
+        duration_s: 1.0,
+        arrival_rate_hz: 0.0,
+        churn: 0.0,
+        total_bandwidth_hz: 10e6,
+        deadline_s: 0.22,
+        risk: 0.06,
+        trials: 0, // no MC: pure planning comparison (and no calibration drift)
+        seed: 5,
+        threads: 1,
+        ..FleetOptions::default()
+    };
+    let energy_of = |bound: RiskBound| {
+        let rep = fleet::run(&FleetOptions { bound, ..base.clone() }).expect("fleet run");
+        let parsed = ripra::util::json::Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("config").unwrap().get("bound").unwrap().as_str().unwrap(),
+            bound.name(),
+            "config JSON must record the active bound"
+        );
+        rep.final_outcome.energy
+    };
+    let ecr = energy_of(RiskBound::Ecr);
+    for bound in [RiskBound::Gaussian, RiskBound::Bernstein, RiskBound::calibrated(1.0)] {
+        let e = energy_of(bound);
+        // 2% allowance for the alternation's heuristic gap (same
+        // rationale as the robust<=worst-case property suite): the
+        // margins are pointwise <= ECR's, but coordinate descent may
+        // settle in a marginally different basin.
+        assert!(
+            e <= ecr * 1.02 + 1e-9,
+            "{bound}: energy {e} exceeds ecr {ecr} despite margins <= ecr's"
+        );
+    }
 }

@@ -29,7 +29,7 @@ fn plan_then_simulate_both_models() {
         let mut rng = Rng::new(0x1917);
         let sc = Scenario::uniform(&model, 8, b, d, eps, &mut rng);
         let r = plan_with(&sc, Policy::Robust).unwrap_or_else(|e| panic!("{}: {e}", model.name));
-        assert!(r.plan.feasible(&sc, MarginPolicy::Robust));
+        assert!(r.plan.feasible(&sc, MarginPolicy::ROBUST));
         assert!(r.plan.bandwidth_ok(&sc) && r.plan.freq_ok(&sc));
         let rep = sim::evaluate(&sc, &r.plan, &SimOptions { trials: 6000, ..Default::default() });
         assert!(
@@ -81,7 +81,7 @@ fn planner_never_panics_on_random_scenarios() {
         // returned plan must satisfy every constraint.
         match plan_with(&sc, Policy::Robust) {
             Ok(r) => {
-                if !r.plan.feasible(&sc, MarginPolicy::Robust) {
+                if !r.plan.feasible(&sc, MarginPolicy::ROBUST) {
                     return Err(format!("infeasible plan returned: {:?}", r.plan.partition));
                 }
                 if !r.plan.bandwidth_ok(&sc) {
@@ -141,7 +141,7 @@ fn serve_executes_planned_partition_end_to_end() {
     let mut planner = PlannerBuilder::new().build();
     let (out, rep) =
         coordinator::plan_and_serve(Manifest::default_dir(), &sc, &mut planner, &opts).unwrap();
-    assert!(out.plan.feasible(&sc, MarginPolicy::Robust));
+    assert!(out.plan.feasible(&sc, MarginPolicy::ROBUST));
     assert_eq!(rep.completed, 20);
     assert!(rep.mean_edge_exec_s >= 0.0);
     assert!(rep.total_energy_j > 0.0);

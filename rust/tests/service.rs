@@ -5,7 +5,7 @@
 //! the load-factor rebalance bound.
 
 use ripra::channel::Uplink;
-use ripra::engine::{scenario_fingerprint, Policy, ScenarioDelta};
+use ripra::engine::{scenario_fingerprint, Policy, RiskBound, ScenarioDelta};
 use ripra::fleet::{self, FleetOptions};
 use ripra::models::ModelProfile;
 use ripra::optim::types::{Device, Scenario};
@@ -249,6 +249,40 @@ fn coalescing_bounds_replans_and_matches_serial_application() {
         scenario_fingerprint(&sc_a, &Policy::Robust),
         scenario_fingerprint(&sc_b, &Policy::Robust)
     );
+}
+
+// ---- risk bounds ----------------------------------------------------------
+
+/// A fleet-wide Bound delta reaches every shard hosting the tenant
+/// (transactional broadcast, like deadline/risk), tighter bounds only
+/// save energy, and `admit_tenant_with` seeds a non-default bound.
+#[test]
+fn bound_broadcast_is_fleet_wide_and_ordered() {
+    // load_factor 1.0 splits the fingerprint twins across both shards,
+    // so the broadcast must genuinely fan out.
+    let mut svc = service(2, 16, 1.0);
+    svc.admit_tenant(1, scenario_at(&[120.0, 120.0], 20e6)).unwrap();
+    assert_eq!(svc.shard_loads(), vec![1, 1]);
+    assert_eq!(svc.tenant_bound(1), Some(RiskBound::Ecr));
+    let e0 = svc.tenant_energy(1).unwrap();
+    svc.submit(1, ScenarioDelta::Bound(RiskBound::Gaussian)).unwrap();
+    let out = svc.drain().pop().unwrap();
+    assert_eq!(out.disposition, Disposition::Applied);
+    assert_eq!(svc.tenant_bound(1), Some(RiskBound::Gaussian));
+    assert!(
+        svc.tenant_energy(1).unwrap() <= e0 * (1.0 + 1e-9),
+        "the tighter Gaussian margins cannot cost energy"
+    );
+    // Every sub-fleet moved in lock-step: a follow-up per-device delta
+    // on either shard keeps planning under the new bound.
+    svc.submit(1, ScenarioDelta::Risk { device: Some(1), risk: 0.06 }).unwrap();
+    assert_ne!(svc.drain().pop().unwrap().disposition, Disposition::Rejected);
+    assert_eq!(svc.tenant_bound(1), Some(RiskBound::Gaussian));
+
+    // Seeding a tenant with a non-default bound at admission.
+    let mut svc2 = service(2, 16, 2.0);
+    svc2.admit_tenant_with(2, scenario_at(&[100.0, 200.0], 12e6), RiskBound::Bernstein).unwrap();
+    assert_eq!(svc2.tenant_bound(2), Some(RiskBound::Bernstein));
 }
 
 // ---- rebalancing ----------------------------------------------------------

@@ -61,8 +61,13 @@ impl Uplink {
     }
 
     /// Offload time for `d_bits` at bandwidth b (eq. 3).
+    ///
+    /// `b_hz <= 0` encodes "no uplink in use" (the engine's all-local
+    /// fallback plan when the edge server is unreachable): nothing is
+    /// transmitted, so the offload time is 0 rather than the NaN the
+    /// rate formula would produce at b = 0.
     pub fn t_off(&self, d_bits: f64, b_hz: f64) -> f64 {
-        if d_bits == 0.0 {
+        if d_bits == 0.0 || b_hz <= 0.0 {
             return 0.0;
         }
         d_bits / self.rate_bps(b_hz)
@@ -260,6 +265,17 @@ mod tests {
         let u = Uplink::from_distance(75.0);
         assert_eq!(u.t_off(0.0, 1e6), 0.0);
         assert_eq!(u.e_off(0.0, 1e6), 0.0);
+    }
+
+    #[test]
+    fn zero_bandwidth_encodes_no_uplink_use() {
+        // The all-local fallback plan carries b = 0 with a non-zero
+        // payload at the last partition point; t_off/e_off must be 0
+        // (and in particular finite), not NaN via rate_bps(0).
+        let u = Uplink::from_distance(75.0);
+        assert_eq!(u.t_off(8e3, 0.0), 0.0);
+        assert_eq!(u.e_off(8e3, 0.0), 0.0);
+        assert_eq!(u.t_off(8e3, -1.0), 0.0);
     }
 
     #[test]

@@ -37,6 +37,12 @@ pub struct Diagnostics {
     /// The outcome was produced by [`super::Planner::replan`]'s
     /// warm-started path (not a cold solve).
     pub warm_started: bool,
+    /// The outcome is a *degraded* best-effort decision: either the
+    /// solver budget ran out before convergence (best-feasible-so-far
+    /// returned instead of spinning) or the edge was unreachable and the
+    /// guaranteed all-local fallback plan was issued.  Degraded outcomes
+    /// are never cached.
+    pub degraded: bool,
     /// Applied per-device uncertainty margin at the chosen partition
     /// point, seconds — the slice of each deadline the active risk
     /// bound reserved for jitter.  Lets BENCH/figure tooling attribute
@@ -88,6 +94,7 @@ impl PlanOutcome {
                     ("wall_time_s".into(), Json::Num(self.diagnostics.wall_time.as_secs_f64())),
                     ("cache_hit".into(), Json::Bool(self.diagnostics.cache_hit)),
                     ("warm_started".into(), Json::Bool(self.diagnostics.warm_started)),
+                    ("degraded".into(), Json::Bool(self.diagnostics.degraded)),
                     ("trajectory".into(), nums(&self.diagnostics.trajectory)),
                 ]),
             ),
@@ -110,6 +117,16 @@ pub enum PlanError {
     /// it (`risk::validate_risk`; historically this was an `assert!`
     /// panic in `ecr::sigma`).
     InvalidRisk(String),
+    /// A solver budget was exhausted and no feasible decision had been
+    /// reached yet — the degraded best-effort path could not even
+    /// produce a fallback (budgeted solves that *do* hold a feasible
+    /// iterate return it with `Diagnostics::degraded` instead).
+    Degraded(String),
+    /// The edge server is marked unreachable and the all-local fallback
+    /// is itself infeasible (some device cannot meet its deadline at
+    /// `f_max` without offloading): no plan can exist until the edge
+    /// returns.
+    Unavailable(String),
 }
 
 impl std::fmt::Display for PlanError {
@@ -119,6 +136,8 @@ impl std::fmt::Display for PlanError {
             PlanError::Solver(s) => write!(f, "solver failure: {s}"),
             PlanError::InvalidRequest(s) => write!(f, "invalid request: {s}"),
             PlanError::InvalidRisk(s) => write!(f, "invalid risk: {s}"),
+            PlanError::Degraded(s) => write!(f, "degraded: {s}"),
+            PlanError::Unavailable(s) => write!(f, "edge unavailable: {s}"),
         }
     }
 }
@@ -187,5 +206,32 @@ mod tests {
         assert!(PlanError::Infeasible("x".into()).to_string().contains("infeasible"));
         assert!(PlanError::InvalidRequest("y".into()).to_string().contains("invalid"));
         assert!(PlanError::InvalidRisk("z".into()).to_string().contains("invalid risk"));
+        assert!(PlanError::Degraded("w".into()).to_string().contains("degraded"));
+        assert!(PlanError::Unavailable("v".into()).to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn plan_error_works_with_question_mark_across_layers() {
+        // std::error::Error + Display let fault-handling code use `?`
+        // through anyhow-style boxes instead of ad-hoc matching.
+        fn f() -> Result<(), Box<dyn std::error::Error>> {
+            Err(PlanError::Unavailable("edge down".into()))?
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("edge down"));
+    }
+
+    #[test]
+    fn degraded_flag_lands_in_the_json_diagnostics() {
+        let out = PlanOutcome {
+            plan: Plan { partition: vec![5], bandwidth_hz: vec![0.0], freq_ghz: vec![1.2] },
+            energy: 0.5,
+            policy: Policy::Robust,
+            bound: RiskBound::Ecr,
+            diagnostics: Diagnostics { degraded: true, ..Default::default() },
+        };
+        let back = Json::parse(&out.to_json().to_string_pretty()).unwrap();
+        let d = back.get("diagnostics").unwrap();
+        assert!(d.get("degraded").unwrap().as_bool().unwrap());
     }
 }

@@ -6,7 +6,7 @@
 use std::time::Instant;
 
 use crate::optim::types::{Plan, Policy as MarginPolicy, Scenario};
-use crate::optim::{alternating, baselines, resource, AlternatingOptions};
+use crate::optim::{alternating, baselines, resource, AlternatingOptions, SolverBudget};
 use crate::risk::RiskBound;
 use crate::solver::NewtonWorkspace;
 
@@ -95,12 +95,23 @@ impl PlannerBuilder {
         self
     }
 
+    /// Hard solve budget (outer/PCCP/Newton iteration caps plus an
+    /// optional wall-clock cap).  A budgeted solve that runs out while
+    /// holding a feasible iterate returns it flagged
+    /// `diagnostics.degraded` instead of spinning; degraded outcomes are
+    /// never cached.  Default [`SolverBudget::UNLIMITED`].
+    pub fn budget(mut self, budget: SolverBudget) -> PlannerBuilder {
+        self.opts.budget = budget;
+        self
+    }
+
     pub fn build(self) -> Planner {
         Planner {
             opts: self.opts,
             cache: PlanCache::new(self.cache_capacity),
             ws: NewtonWorkspace::new(),
             last: None,
+            edge_available: true,
         }
     }
 }
@@ -124,6 +135,10 @@ pub struct Planner {
     cache: PlanCache,
     ws: NewtonWorkspace,
     last: Option<LastSolve>,
+    /// Edge-server reachability ([`Planner::set_edge_available`]).
+    /// While `false`, every plan/replan degrades to the all-local
+    /// fallback and the cache is never consulted or populated.
+    edge_available: bool,
 }
 
 impl Default for Planner {
@@ -144,6 +159,26 @@ impl Planner {
 
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// Mark the edge server reachable (`true`, the initial state) or
+    /// unreachable (`false`).
+    ///
+    /// While unreachable, [`Planner::plan`] and [`Planner::replan`]
+    /// return the guaranteed all-local fallback (every device computes
+    /// its whole chain on-device at `f_max`, zero uplink) flagged
+    /// `diagnostics.degraded`, [`Planner::plan_cached`] and
+    /// [`Planner::plan_cached_for`] always miss without touching the
+    /// cache counters, and nothing is inserted into the cache — cached
+    /// plans assume an edge to offload to and must not be poisoned by
+    /// (or served during) an outage.
+    pub fn set_edge_available(&mut self, up: bool) {
+        self.edge_available = up;
+    }
+
+    /// Current edge reachability (see [`Planner::set_edge_available`]).
+    pub fn edge_available(&self) -> bool {
+        self.edge_available
     }
 
     pub fn clear_cache(&mut self) {
@@ -195,6 +230,11 @@ impl Planner {
     /// `diagnostics.cache_hit = true`.
     pub fn plan(&mut self, req: &PlanRequest) -> Result<PlanOutcome, PlanError> {
         req.validate()?;
+        if !self.edge_available {
+            let out = self.fallback_outcome(&req.scenario, &req.policy, req.bound)?;
+            self.remember(req.scenario.clone(), req.policy.clone(), &out);
+            return Ok(out);
+        }
         // One implementation of the hit path: the probe marks the hit,
         // counts it, and registers history.
         if let Some(hit) = self.plan_cached(req) {
@@ -203,7 +243,10 @@ impl Planner {
         let t0 = Instant::now();
         let mut outcome = self.solve_cold(req)?;
         outcome.diagnostics.wall_time = t0.elapsed();
-        if req.use_cache {
+        // Degraded (budget-truncated) outcomes are never cached: a later
+        // identical request with slack to solve properly must not be
+        // served the truncated plan.
+        if req.use_cache && !outcome.diagnostics.degraded {
             self.cache.insert(req.fingerprint(), outcome.clone());
         }
         self.remember(req.scenario.clone(), req.policy.clone(), &outcome);
@@ -221,12 +264,33 @@ impl Planner {
     /// bucket) from the cache and fall back to `replan`/`plan` only when
     /// the scenario has genuinely moved.
     pub fn plan_cached(&mut self, req: &PlanRequest) -> Option<PlanOutcome> {
-        if !req.use_cache || req.validate().is_err() {
+        if !self.edge_available || !req.use_cache || req.validate().is_err() {
             return None;
         }
         let mut hit = self.cache.get(req.fingerprint())?;
         hit.diagnostics.cache_hit = true;
         self.remember(req.scenario.clone(), req.policy.clone(), &hit);
+        Some(hit)
+    }
+
+    /// Borrow-only [`Planner::plan_cached`]: probe the cache for a bare
+    /// `scenario × policy × bound` key (no init-partition override, as
+    /// on every online replan path) without materializing a
+    /// [`PlanRequest`] — the scenario is cloned into the replan base
+    /// only on a hit.  Same hit/miss counting and history registration
+    /// as the request-based probe; assumes a pre-validated scenario.
+    pub fn plan_cached_for(
+        &mut self,
+        sc: &Scenario,
+        policy: &Policy,
+        bound: RiskBound,
+    ) -> Option<PlanOutcome> {
+        if !self.edge_available {
+            return None;
+        }
+        let mut hit = self.cache.get(scenario_fingerprint_with(sc, policy, bound))?;
+        hit.diagnostics.cache_hit = true;
+        self.remember(sc.clone(), policy.clone(), &hit);
         Some(hit)
     }
 
@@ -244,7 +308,12 @@ impl Planner {
     /// scenario's constraints).  Returns the kept plan's re-priced
     /// energy; errors without history or when the plan's shape doesn't
     /// fit the scenario.
-    pub fn rebase(&mut self, scenario: Scenario) -> Result<f64, PlanError> {
+    ///
+    /// Borrows the scenario: the hot per-event rebase path of the fleet
+    /// driver and the service shards adopts it via `clone_from`, which
+    /// reuses the base's existing allocations instead of cloning a fresh
+    /// scenario per event.
+    pub fn rebase(&mut self, scenario: &Scenario) -> Result<f64, PlanError> {
         let last = self.last.as_mut().ok_or_else(|| {
             PlanError::InvalidRequest("rebase requires a previous plan() on this planner".into())
         })?;
@@ -255,9 +324,9 @@ impl Planner {
                 scenario.n()
             )));
         }
-        let energy = last.outcome.plan.expected_energy(&scenario);
+        let energy = last.outcome.plan.expected_energy(scenario);
         last.outcome.energy = energy;
-        last.scenario = scenario;
+        last.scenario.clone_from(scenario);
         Ok(energy)
     }
 
@@ -292,6 +361,14 @@ impl Planner {
             _ => prev_bound,
         };
         let new_sc = delta.apply(&prev_sc)?;
+        if !self.edge_available {
+            // Outage discipline: adopt the delta (it is a fact about the
+            // world) but answer with the all-local fallback — nothing is
+            // cached, so recovery replans resolve from clean state.
+            let out = self.fallback_outcome(&new_sc, &policy, bound)?;
+            self.remember(new_sc, policy, &out);
+            return Ok(out);
+        }
         let mpol = policy.margin_policy(bound);
         let t0 = Instant::now();
 
@@ -367,6 +444,52 @@ impl Planner {
         self.last = Some(LastSolve { scenario, policy, outcome: outcome.clone() });
     }
 
+    /// The guaranteed all-local fallback: every device computes its whole
+    /// chain on-device at `f_max` with zero uplink bandwidth (the b = 0
+    /// encoding [`crate::channel::Uplink::t_off`] maps to "no uplink in
+    /// use").  No solver runs; the outcome is flagged
+    /// `diagnostics.degraded` and is never cached.  Feasibility is
+    /// checked against each device's *deterministic* (mean) inference
+    /// time — during an outage the chance-constraint margin cannot be
+    /// bought with offloading, so violations of the probabilistic
+    /// deadline are possible and are accounted separately by the fleet
+    /// metrics (`violations_while_degraded`).  Errors
+    /// [`PlanError::Unavailable`] when some device cannot meet even the
+    /// deterministic deadline at `f_max`.
+    fn fallback_outcome(
+        &self,
+        sc: &Scenario,
+        policy: &Policy,
+        bound: RiskBound,
+    ) -> Result<PlanOutcome, PlanError> {
+        let n = sc.n();
+        let mut partition = Vec::with_capacity(n);
+        let mut freq = Vec::with_capacity(n);
+        for (i, d) in sc.devices.iter().enumerate() {
+            let m_local = d.model.num_points() - 1;
+            let f_max = d.model.device.f_max_ghz;
+            if d.t_total_mean(m_local, f_max, 0.0) > d.deadline_s {
+                return Err(PlanError::Unavailable(format!(
+                    "device {i} cannot meet its {:.4} s deadline fully on-device at f_max; \
+                     no plan exists until the edge returns",
+                    d.deadline_s
+                )));
+            }
+            partition.push(m_local);
+            freq.push(f_max);
+        }
+        let plan = Plan { partition, bandwidth_hz: vec![0.0; n], freq_ghz: freq };
+        let energy = plan.expected_energy(sc);
+        let margins_s = margins_of(sc, &plan, policy.margin_policy(bound));
+        Ok(PlanOutcome {
+            plan,
+            energy,
+            policy: policy.clone(),
+            bound,
+            diagnostics: Diagnostics { degraded: true, margins_s, ..Default::default() },
+        })
+    }
+
     fn solve_cold(&mut self, req: &PlanRequest) -> Result<PlanOutcome, PlanError> {
         let sc = &req.scenario;
         let mut out = match &req.policy {
@@ -424,6 +547,7 @@ fn robust_outcome(r: alternating::RobustPlan, policy: Policy, bound: RiskBound) 
             avg_pccp_iters: r.avg_pccp_iters,
             newton_iters: r.newton_iters,
             trajectory: r.trajectory,
+            degraded: r.degraded,
             ..Default::default()
         },
     }
@@ -626,14 +750,14 @@ mod tests {
         let sc = scenario(4, 0.22, 0.05, 12);
         // No history: a fresh planner refuses to rebase.
         let mut fresh = Planner::default();
-        assert!(matches!(fresh.rebase(sc.clone()), Err(PlanError::InvalidRequest(_))));
+        assert!(matches!(fresh.rebase(&sc), Err(PlanError::InvalidRequest(_))));
 
         let mut p = Planner::default();
         p.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
         // The environment shifts (3 dB fade on device 0): adopt it.
         let mut faded = sc.clone();
         faded.devices[0].uplink = Uplink::from_gain_db(faded.devices[0].uplink.gain_db() - 3.0);
-        assert!(p.rebase(faded.clone()).unwrap() > 0.0, "rebase re-prices the kept plan");
+        assert!(p.rebase(&faded).unwrap() > 0.0, "rebase re-prices the kept plan");
         let adopted = p.last_scenario().unwrap();
         assert_eq!(
             adopted.devices[0].uplink.gain.to_bits(),
@@ -651,7 +775,90 @@ mod tests {
         // Shape mismatch is rejected.
         let mut smaller = faded;
         smaller.devices.pop();
-        assert!(matches!(p.rebase(smaller), Err(PlanError::InvalidRequest(_))));
+        assert!(matches!(p.rebase(&smaller), Err(PlanError::InvalidRequest(_))));
+    }
+
+    #[test]
+    fn unavailable_edge_degrades_to_the_all_local_fallback() {
+        // Deadline generous enough that fully-local execution is
+        // deterministically feasible at f_max.
+        let sc = scenario(4, 2.0, 0.05, 31);
+        let mut p = Planner::default();
+        let healthy = p.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+        assert!(!healthy.diagnostics.degraded);
+
+        p.set_edge_available(false);
+        assert!(!p.edge_available());
+        // The cache holds the healthy plan but must not serve it.
+        assert!(p.plan_cached(&PlanRequest::new(sc.clone(), Policy::Robust)).is_none());
+        assert!(p.plan_cached_for(&sc, &Policy::Robust, RiskBound::Ecr).is_none());
+
+        let out = p.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+        assert!(out.diagnostics.degraded);
+        for (i, d) in sc.devices.iter().enumerate() {
+            assert_eq!(out.plan.partition[i], d.model.num_points() - 1, "fully on-device");
+            assert_eq!(out.plan.bandwidth_hz[i], 0.0, "zero uplink");
+            assert_eq!(out.plan.freq_ghz[i], d.model.device.f_max_ghz);
+        }
+        assert!(out.energy > 0.0 && out.energy.is_finite());
+        assert!(out.energy >= healthy.energy, "local-only must cost an energy premium");
+
+        // replan during the outage adopts the delta but stays degraded...
+        let re = p.replan(&ScenarioDelta::Leave(0)).unwrap();
+        assert!(re.diagnostics.degraded);
+        assert_eq!(re.plan.partition.len(), 3);
+
+        // ...and recovery serves real plans again (the cache was neither
+        // consulted nor poisoned while down).
+        p.set_edge_available(true);
+        let back = p.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+        assert!(back.diagnostics.cache_hit, "the pre-outage entry must survive");
+        assert_eq!(back.plan, healthy.plan);
+    }
+
+    #[test]
+    fn unavailable_edge_with_impossible_deadline_is_a_structured_error() {
+        // 4 ms deadline: AlexNet cannot run fully on-device that fast.
+        let sc = scenario(3, 0.004, 0.05, 32);
+        let mut p = Planner::default();
+        p.set_edge_available(false);
+        assert!(matches!(
+            p.plan(&PlanRequest::new(sc, Policy::Robust)),
+            Err(PlanError::Unavailable(_))
+        ));
+    }
+
+    #[test]
+    fn plan_cached_for_matches_the_request_probe() {
+        let sc = scenario(4, 0.22, 0.05, 33);
+        let mut p = Planner::default();
+        assert!(p.plan_cached_for(&sc, &Policy::Robust, RiskBound::Ecr).is_none());
+        assert_eq!(p.cache_stats().misses, 1);
+        let cold = p.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).unwrap();
+        let hit = p.plan_cached_for(&sc, &Policy::Robust, RiskBound::Ecr).unwrap();
+        assert!(hit.diagnostics.cache_hit);
+        assert_eq!(hit.plan, cold.plan);
+        assert_eq!(hit.energy.to_bits(), cold.energy.to_bits());
+        // The probe registers history, so replan continues from it.
+        let re = p.replan(&ScenarioDelta::Leave(0)).unwrap();
+        assert_eq!(re.plan.partition.len(), 3);
+        // A different bound misses.
+        assert!(p.plan_cached_for(&sc, &Policy::Robust, RiskBound::Gaussian).is_none());
+    }
+
+    #[test]
+    fn budgeted_planner_degrades_and_skips_the_cache() {
+        use crate::optim::SolverBudget;
+        let sc = scenario(6, 0.22, 0.02, 34);
+        let mut p = Planner::builder()
+            .budget(SolverBudget { max_outer: 1, ..SolverBudget::UNLIMITED })
+            .build();
+        let req = PlanRequest::new(sc, Policy::Robust).with_init(vec![0; 6]);
+        let out = p.plan(&req).unwrap();
+        assert!(out.diagnostics.degraded, "1-round budget from full offload should truncate");
+        // Degraded outcomes are never cached.
+        assert!(p.plan_cached(&req).is_none());
+        assert_eq!(p.cache_stats().hits, 0);
     }
 
     #[test]

@@ -286,12 +286,32 @@ fn hash_device(h: &mut Fnv, d: &Device) {
 /// bound (what `replan` inserts its warm results under, so a follow-up
 /// `plan` for the same scenario hits the cache).
 pub fn scenario_fingerprint(sc: &Scenario, policy: &Policy) -> u64 {
-    PlanRequest::new(sc.clone(), policy.clone()).fingerprint()
+    scenario_fingerprint_with(sc, policy, RiskBound::Ecr)
 }
 
 /// [`scenario_fingerprint`] under an explicit risk bound.
+///
+/// Borrow-only: hashes in exactly [`PlanRequest::fingerprint`]'s field
+/// order (with no init-partition override) without materializing a
+/// request, so the per-event probe/insert paths of the fleet driver and
+/// the service shards never clone the scenario just to key the cache.
 pub fn scenario_fingerprint_with(sc: &Scenario, policy: &Policy, bound: RiskBound) -> u64 {
-    PlanRequest::new(sc.clone(), policy.clone()).with_bound(bound).fingerprint()
+    let mut h = Fnv::new();
+    h.u8(policy.tag());
+    h.u8(bound.tag());
+    h.usize(bound.scale_q() as usize);
+    if let Policy::Multistart { extra_starts } = policy {
+        h.usize(extra_starts.len());
+        for s in extra_starts {
+            h.usize(s.len());
+            for &m in s {
+                h.usize(m);
+            }
+        }
+    }
+    h.u8(0); // no init-partition override
+    hash_scenario(&mut h, sc);
+    h.finish()
 }
 
 /// Fingerprint of one device on the same quantization grid the plan
@@ -473,6 +493,25 @@ mod tests {
             .with_bound(RiskBound::calibrated(0.9))
             .fingerprint();
         assert_ne!(s1, s2, "calibrated scales must not alias");
+    }
+
+    #[test]
+    fn borrowed_fingerprint_matches_request_fingerprint() {
+        // The borrow-only helper must key the cache bit-identically to
+        // the owning PlanRequest path for every policy × bound shape.
+        let sc = scenario(5);
+        for bound in [RiskBound::Ecr, RiskBound::Gaussian, RiskBound::calibrated(0.9)] {
+            let via_req =
+                PlanRequest::new(sc.clone(), Policy::Robust).with_bound(bound).fingerprint();
+            assert_eq!(scenario_fingerprint_with(&sc, &Policy::Robust, bound), via_req);
+        }
+        let ms = Policy::Multistart { extra_starts: vec![vec![1, 2, 0, 3]] };
+        let via_req = PlanRequest::new(sc.clone(), ms.clone()).fingerprint();
+        assert_eq!(scenario_fingerprint_with(&sc, &ms, RiskBound::Ecr), via_req);
+        assert_eq!(
+            scenario_fingerprint(&sc, &Policy::Robust),
+            scenario_fingerprint_with(&sc, &Policy::Robust, RiskBound::Ecr)
+        );
     }
 
     #[test]

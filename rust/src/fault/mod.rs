@@ -1,0 +1,297 @@
+//! Seeded, replayable fault injection for the fleet simulator.
+//!
+//! Three fault families, mirroring what real edge deployments survive:
+//!
+//! * **edge-server outages** — the whole edge is unreachable for a
+//!   window; every device degrades to the engine's all-local fallback
+//!   plan and re-offloads under exponential backoff when the window
+//!   ends;
+//! * **uplink blackouts** — one device's channel gain collapses far
+//!   beyond ordinary shadow fading (tunnel, deep indoor) for a window;
+//! * **delta-delivery faults** — renegotiation and bandwidth deltas in
+//!   flight to the planner are delayed or dropped.
+//!
+//! Like [`crate::channel::GaussMarkov`], every draw comes from streams
+//! forked off the fleet seed ([`FaultStreams::fork_off`]), so a fault
+//! schedule is a pure function of the seed: same seed ⇒ byte-identical
+//! fleet trace, at any thread or shard count.  The streams are forked
+//! *after* every pre-existing stream of the fleet driver, so runs with
+//! faults disabled consume nothing from them and stay byte-identical to
+//! fault-free runs of earlier revisions.
+
+use crate::util::rng::Rng;
+
+/// Configuration of the fault schedule (all rates at churn 1; the fleet
+/// driver does not scale them with churn — faults are exogenous).
+#[derive(Clone, Debug)]
+pub struct FaultOptions {
+    /// Master switch; when `false` no fault stream is even forked.
+    pub enabled: bool,
+    /// Edge-server outage arrival rate, Hz (exponential inter-arrival,
+    /// measured from the end of the previous outage — windows never
+    /// overlap).
+    pub outage_rate_hz: f64,
+    /// Mean outage window length, seconds (exponential).
+    pub outage_mean_s: f64,
+    /// Per-fleet uplink-blackout arrival rate, Hz (each event picks one
+    /// victim device).
+    pub blackout_rate_hz: f64,
+    /// Mean blackout window length, seconds (exponential).
+    pub blackout_mean_s: f64,
+    /// Gain collapse a blacked-out device suffers, dB (applied on top of
+    /// its Gauss–Markov fading state).
+    pub blackout_depth_db: f64,
+    /// Probability a renegotiation/bandwidth delta is dropped in flight.
+    pub drop_prob: f64,
+    /// Probability a (non-dropped) delta is delayed in flight.
+    pub delay_prob: f64,
+    /// Mean in-flight delay, seconds (exponential).
+    pub delay_mean_s: f64,
+    /// Base re-offload backoff after an outage ends, seconds; attempt
+    /// `k` waits `base · 2^k`, jittered by ±25 % from the backoff
+    /// stream.
+    pub backoff_base_s: f64,
+}
+
+impl Default for FaultOptions {
+    fn default() -> Self {
+        FaultOptions {
+            enabled: false,
+            outage_rate_hz: 0.05,
+            outage_mean_s: 2.5,
+            blackout_rate_hz: 0.08,
+            blackout_mean_s: 1.5,
+            blackout_depth_db: 25.0,
+            drop_prob: 0.05,
+            delay_prob: 0.10,
+            delay_mean_s: 0.4,
+            backoff_base_s: 0.25,
+        }
+    }
+}
+
+impl FaultOptions {
+    /// Validate the schedule parameters (only consulted when `enabled`).
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("outage-rate", self.outage_rate_hz),
+            ("outage-mean", self.outage_mean_s),
+            ("blackout-rate", self.blackout_rate_hz),
+            ("blackout-mean", self.blackout_mean_s),
+            ("blackout-depth", self.blackout_depth_db),
+            ("delay-mean", self.delay_mean_s),
+            ("backoff-base", self.backoff_base_s),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!("--{name} must be finite and non-negative, got {v}"));
+            }
+        }
+        for (name, p) in [("drop-prob", self.drop_prob), ("delay-prob", self.delay_prob)] {
+            if !(p.is_finite() && (0.0..=1.0).contains(&p)) {
+                return Err(format!("--{name} must be a probability in [0, 1], got {p}"));
+            }
+        }
+        if self.drop_prob + self.delay_prob > 1.0 {
+            return Err(format!(
+                "drop-prob + delay-prob must not exceed 1, got {} + {}",
+                self.drop_prob, self.delay_prob
+            ));
+        }
+        if self.outage_mean_s <= 0.0 && self.outage_rate_hz > 0.0 {
+            return Err("outage-mean must be positive when outages are on".into());
+        }
+        if self.blackout_mean_s <= 0.0 && self.blackout_rate_hz > 0.0 {
+            return Err("blackout-mean must be positive when blackouts are on".into());
+        }
+        Ok(())
+    }
+}
+
+/// Fate of one delta in flight to the planner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Delivery {
+    /// Delivered immediately (the overwhelmingly common case).
+    OnTime,
+    /// Delivered after the carried delay, seconds (quantized draw kept
+    /// as `f64` simulation time — the event queue orders on it).
+    Delayed(f64),
+    /// Lost in flight; the planner never sees it.
+    Dropped,
+}
+
+/// The four independent random streams the fault schedule draws from,
+/// each forked off the fleet master seed in fixed order so a schedule
+/// replays exactly.
+#[derive(Debug)]
+pub struct FaultStreams {
+    outages: Rng,
+    blackouts: Rng,
+    delivery: Rng,
+    backoff: Rng,
+}
+
+impl FaultStreams {
+    /// Fork the four fault streams off `master` (fixed tag order — part
+    /// of the determinism contract).
+    pub fn fork_off(master: &mut Rng) -> FaultStreams {
+        FaultStreams {
+            outages: master.fork(0xFA01),
+            blackouts: master.fork(0xFA02),
+            delivery: master.fork(0xFA03),
+            backoff: master.fork(0xFA04),
+        }
+    }
+
+    /// Wait until the next edge outage begins, seconds.
+    pub fn outage_wait_s(&mut self, opts: &FaultOptions) -> f64 {
+        self.outages.exponential(opts.outage_rate_hz)
+    }
+
+    /// Length of an outage window, seconds.
+    pub fn outage_len_s(&mut self, opts: &FaultOptions) -> f64 {
+        self.outages.exponential(1.0 / opts.outage_mean_s)
+    }
+
+    /// Wait until the next uplink blackout begins, seconds.
+    pub fn blackout_wait_s(&mut self, opts: &FaultOptions) -> f64 {
+        self.blackouts.exponential(opts.blackout_rate_hz)
+    }
+
+    /// Length of a blackout window, seconds.
+    pub fn blackout_len_s(&mut self, opts: &FaultOptions) -> f64 {
+        self.blackouts.exponential(1.0 / opts.blackout_mean_s)
+    }
+
+    /// Pick a blackout victim among `n` devices (uniform).
+    pub fn blackout_victim(&mut self, n: usize) -> usize {
+        self.blackouts.below(n)
+    }
+
+    /// Fate of one in-flight delta.  One uniform draw decides drop vs
+    /// delay vs on-time so the stream advances identically regardless of
+    /// the outcome probabilities' order.
+    pub fn delivery(&mut self, opts: &FaultOptions) -> Delivery {
+        let u = self.delivery.f64();
+        if u < opts.drop_prob {
+            Delivery::Dropped
+        } else if u < opts.drop_prob + opts.delay_prob {
+            let d = self.delivery.exponential(1.0 / opts.delay_mean_s.max(1e-9));
+            Delivery::Delayed(d)
+        } else {
+            Delivery::OnTime
+        }
+    }
+
+    /// Jittered exponential backoff before re-offload attempt `attempt`
+    /// (0-based): `base · 2^attempt · U[0.75, 1.25)`.  Deterministic per
+    /// stream state; the jitter de-synchronizes devices so outage
+    /// recovery never replans the whole fleet in one burst.
+    pub fn backoff_s(&mut self, opts: &FaultOptions, attempt: u32) -> f64 {
+        let base = opts.backoff_base_s.max(1e-6);
+        base * f64::from(2u32.saturating_pow(attempt.min(16))) * self.backoff.range(0.75, 1.25)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> FaultOptions {
+        FaultOptions { enabled: true, ..FaultOptions::default() }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let draw = |seed: u64| {
+            let mut master = Rng::new(seed);
+            let mut fs = FaultStreams::fork_off(&mut master);
+            let o = opts();
+            let mut out = Vec::new();
+            for k in 0..50 {
+                out.push(fs.outage_wait_s(&o).to_bits());
+                out.push(fs.outage_len_s(&o).to_bits());
+                out.push(fs.blackout_wait_s(&o).to_bits());
+                out.push(fs.blackout_victim(7) as u64);
+                out.push(fs.backoff_s(&o, k % 5).to_bits());
+                out.push(match fs.delivery(&o) {
+                    Delivery::OnTime => 0,
+                    Delivery::Delayed(d) => d.to_bits(),
+                    Delivery::Dropped => u64::MAX,
+                });
+            }
+            out
+        };
+        assert_eq!(draw(7), draw(7), "same seed must replay the schedule exactly");
+        assert_ne!(draw(7), draw(8), "different seeds must diverge");
+    }
+
+    #[test]
+    fn streams_are_independent_of_draw_interleaving() {
+        // Consuming only the delivery stream must not disturb the outage
+        // stream: each family forks its own generator.
+        let o = opts();
+        let mut m1 = Rng::new(11);
+        let mut a = FaultStreams::fork_off(&mut m1);
+        let mut m2 = Rng::new(11);
+        let mut b = FaultStreams::fork_off(&mut m2);
+        for _ in 0..100 {
+            let _ = b.delivery(&o);
+        }
+        assert_eq!(a.outage_wait_s(&o).to_bits(), b.outage_wait_s(&o).to_bits());
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_with_attempt() {
+        let o = opts();
+        let mut master = Rng::new(3);
+        let mut fs = FaultStreams::fork_off(&mut master);
+        // Jitter is ±25 %, growth is ×2 per attempt, so consecutive
+        // attempts are strictly ordered despite the jitter.
+        for k in 0..8u32 {
+            let lo = fs.backoff_s(&o, k);
+            let hi = fs.backoff_s(&o, k + 1);
+            assert!(hi > lo, "attempt {k}: {hi} <= {lo}");
+            assert!(lo >= o.backoff_base_s * f64::from(2u32.pow(k)) * 0.75);
+            assert!(lo <= o.backoff_base_s * f64::from(2u32.pow(k)) * 1.25);
+        }
+    }
+
+    #[test]
+    fn delivery_outcomes_cover_all_variants_at_cranked_probs() {
+        let o = FaultOptions { drop_prob: 0.3, delay_prob: 0.4, ..opts() };
+        let mut master = Rng::new(5);
+        let mut fs = FaultStreams::fork_off(&mut master);
+        let (mut on, mut delayed, mut dropped) = (0, 0, 0);
+        for _ in 0..2000 {
+            match fs.delivery(&o) {
+                Delivery::OnTime => on += 1,
+                Delivery::Delayed(d) => {
+                    assert!(d.is_finite() && d > 0.0);
+                    delayed += 1;
+                }
+                Delivery::Dropped => dropped += 1,
+            }
+        }
+        assert!(on > 0 && delayed > 0 && dropped > 0, "{on}/{delayed}/{dropped}");
+        // Rough frequency sanity (±5 σ): the single-uniform split must
+        // respect the configured probabilities.
+        assert!((dropped as f64 / 2000.0 - 0.3).abs() < 0.06, "dropped={dropped}");
+        assert!((delayed as f64 / 2000.0 - 0.4).abs() < 0.06, "delayed={delayed}");
+    }
+
+    #[test]
+    fn validate_accepts_defaults_and_rejects_bad_values() {
+        assert!(FaultOptions::default().validate().is_ok());
+        assert!(opts().validate().is_ok());
+        for bad in [
+            FaultOptions { drop_prob: 1.5, ..opts() },
+            FaultOptions { delay_prob: -0.1, ..opts() },
+            FaultOptions { outage_rate_hz: f64::NAN, ..opts() },
+            FaultOptions { outage_mean_s: 0.0, outage_rate_hz: 0.1, ..opts() },
+            FaultOptions { blackout_depth_db: f64::INFINITY, ..opts() },
+            FaultOptions { drop_prob: 0.6, delay_prob: 0.6, ..opts() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
+        }
+    }
+}

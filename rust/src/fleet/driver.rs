@@ -37,6 +37,7 @@ use crate::engine::{
     CacheStats, CliFlag, Diagnostics, PlanError, PlanOutcome, PlanRequest, Planner,
     PlannerBuilder, Policy, RiskBound, ScenarioDelta,
 };
+use crate::fault::{Delivery, FaultOptions, FaultStreams};
 use crate::models::ModelProfile;
 use crate::optim::types::{Device, Plan, Scenario};
 use crate::profile::Dist;
@@ -72,6 +73,10 @@ const FADE_INTERVAL_S: f64 = 2.0;
 /// its base risk — when nothing else changed, that replan is an exact
 /// fingerprint repeat and is served from the plan cache).
 const RISK_STEPS: [f64; 3] = [0.5, 1.0, 2.0];
+
+/// Re-offload attempts a device makes after an outage before giving up
+/// and waiting for ordinary churn to trigger the next replan.
+const MAX_REOFFLOAD_ATTEMPTS: u32 = 6;
 
 /// Cap on chained conformal recalibrations triggered by one fleet step
 /// (each applied recalibration is Monte-Carlo-checked and may justify
@@ -125,6 +130,11 @@ pub struct FleetOptions {
     /// [`ScenarioDelta::Bound`] recalibration is driven through the
     /// backend (recorded as a `"recalibrate"` step).
     pub bound: RiskBound,
+    /// Fault schedule (edge outages, uplink blackouts, delta delivery
+    /// faults).  Disabled by default; when disabled the fault streams
+    /// are never forked, so a fault-free trace is unaffected by this
+    /// field's parameters.
+    pub faults: FaultOptions,
 }
 
 impl Default for FleetOptions {
@@ -143,6 +153,7 @@ impl Default for FleetOptions {
             threads: 0,
             shards: 0,
             bound: RiskBound::Ecr,
+            faults: FaultOptions::default(),
         }
     }
 }
@@ -189,6 +200,56 @@ impl FleetOptions {
             help: "chance-constraint transform (default ecr; calibrated learns online)",
         },
         CliFlag { name: "json", value: None, help: "emit the metrics time series as JSON" },
+        CliFlag {
+            name: "faults",
+            value: None,
+            help: "enable the seeded fault schedule (outages, blackouts, delivery faults)",
+        },
+        CliFlag {
+            name: "outage-rate",
+            value: Some("HZ"),
+            help: "edge-outage arrival rate (default 0.05)",
+        },
+        CliFlag {
+            name: "outage-mean",
+            value: Some("S"),
+            help: "mean edge-outage length, seconds (default 2.5)",
+        },
+        CliFlag {
+            name: "blackout-rate",
+            value: Some("HZ"),
+            help: "uplink-blackout arrival rate (default 0.08)",
+        },
+        CliFlag {
+            name: "blackout-mean",
+            value: Some("S"),
+            help: "mean blackout length, seconds (default 1.5)",
+        },
+        CliFlag {
+            name: "blackout-depth",
+            value: Some("DB"),
+            help: "gain collapse during a blackout, dB (default 25)",
+        },
+        CliFlag {
+            name: "drop-prob",
+            value: Some("P"),
+            help: "chance a negotiable/bandwidth delta is dropped (default 0.05)",
+        },
+        CliFlag {
+            name: "delay-prob",
+            value: Some("P"),
+            help: "chance such a delta is delayed in flight (default 0.10)",
+        },
+        CliFlag {
+            name: "delay-mean",
+            value: Some("S"),
+            help: "mean in-flight delay, seconds (default 0.4)",
+        },
+        CliFlag {
+            name: "backoff",
+            value: Some("S"),
+            help: "base re-offload backoff after an outage (default 0.25)",
+        },
     ];
 
     /// Per-device departure rate targeting an equilibrium fleet size of
@@ -235,6 +296,9 @@ impl FleetOptions {
             return bad("bandwidth and deadline must be positive".into());
         }
         crate::risk::validate_risk(self.risk).map_err(PlanError::InvalidRisk)?;
+        if self.faults.enabled {
+            self.faults.validate().map_err(PlanError::InvalidRequest)?;
+        }
         Ok(())
     }
 
@@ -261,6 +325,21 @@ impl FleetOptions {
                 "bound_scale".into(),
                 self.bound.scale().map(Json::Num).unwrap_or(Json::Null),
             ),
+            (
+                "faults".into(),
+                Json::Obj(vec![
+                    ("enabled".into(), Json::Bool(self.faults.enabled)),
+                    ("outage_rate_hz".into(), Json::Num(self.faults.outage_rate_hz)),
+                    ("outage_mean_s".into(), Json::Num(self.faults.outage_mean_s)),
+                    ("blackout_rate_hz".into(), Json::Num(self.faults.blackout_rate_hz)),
+                    ("blackout_mean_s".into(), Json::Num(self.faults.blackout_mean_s)),
+                    ("blackout_depth_db".into(), Json::Num(self.faults.blackout_depth_db)),
+                    ("drop_prob".into(), Json::Num(self.faults.drop_prob)),
+                    ("delay_prob".into(), Json::Num(self.faults.delay_prob)),
+                    ("delay_mean_s".into(), Json::Num(self.faults.delay_mean_s)),
+                    ("backoff_base_s".into(), Json::Num(self.faults.backoff_base_s)),
+                ]),
+            ),
         ])
     }
 }
@@ -283,6 +362,9 @@ struct Applied {
     outer_iters: usize,
     cache_hit: bool,
     warm_started: bool,
+    /// The accepted plan is a degraded one (all-local fallback during an
+    /// edge outage, or a budget-truncated solve).
+    degraded: bool,
 }
 
 /// What one fleet event cost the planning backend.
@@ -323,6 +405,7 @@ impl Backend {
                 outer_iters: outcome.diagnostics.outer_iters,
                 cache_hit: false,
                 warm_started: false,
+                degraded: outcome.diagnostics.degraded,
             };
             Ok((Backend::Serial { planner, outcome }, applied))
         } else {
@@ -343,6 +426,7 @@ impl Backend {
                 outer_iters: out.outer_iters,
                 cache_hit: false,
                 warm_started: false,
+                degraded: out.degraded,
             };
             Ok((Backend::Service(svc), applied))
         }
@@ -361,14 +445,15 @@ impl Backend {
     ) -> StepResult {
         match self {
             Backend::Serial { planner, outcome } => {
-                let req = PlanRequest::new(new_sc.clone(), Policy::Robust).with_bound(req_bound);
-                let out = match planner.plan_cached(&req) {
+                // Borrow-only cache probe: no scenario clone unless it
+                // actually hits.
+                let out = match planner.plan_cached_for(new_sc, &Policy::Robust, req_bound) {
                     Some(hit) => hit,
                     None => match planner.replan(delta) {
                         Ok(o) => o,
                         Err(_) => {
                             if environmental {
-                                if let Ok(energy) = planner.rebase(new_sc.clone()) {
+                                if let Ok(energy) = planner.rebase(new_sc) {
                                     outcome.energy = energy;
                                     return StepResult::Absorbed { energy_j: energy };
                                 }
@@ -392,6 +477,7 @@ impl Backend {
                     outer_iters,
                     cache_hit: out.diagnostics.cache_hit,
                     warm_started: out.diagnostics.warm_started,
+                    degraded: out.diagnostics.degraded,
                 };
                 *outcome = out;
                 StepResult::Applied(applied)
@@ -406,6 +492,7 @@ impl Backend {
                         outer_iters: out.outer_iters,
                         cache_hit: out.cache_hit,
                         warm_started: out.warm_started,
+                        degraded: out.degraded,
                     }),
                     Disposition::Absorbed => StepResult::Absorbed { energy_j: out.energy_j },
                     Disposition::Rejected => StepResult::Rejected,
@@ -414,6 +501,15 @@ impl Backend {
                     }
                 }
             }
+        }
+    }
+
+    /// Mark the edge server reachable/unreachable on every planner this
+    /// backend drives (all shards on the service path).
+    fn set_edge_available(&mut self, up: bool) {
+        match self {
+            Backend::Serial { planner, .. } => planner.set_edge_available(up),
+            Backend::Service(svc) => svc.set_edge_available(up),
         }
     }
 
@@ -542,6 +638,11 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
     let mut reneg = master.fork(0x5E);
     let mut bw = master.fork(0xB0);
     let mc_base = master.next_u64();
+    // Fault streams fork strictly *after* every fault-free stream (and
+    // only when faults are on), so enabling them never perturbs the
+    // fault-free trace of the same seed.
+    let mut fstreams: Option<FaultStreams> =
+        if opts.faults.enabled { Some(FaultStreams::fork_off(&mut master)) } else { None };
 
     let mut next_id: u64 = 0;
     let mut states: Vec<DeviceState> = Vec::new();
@@ -557,6 +658,17 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
 
     let mut metrics = FleetMetrics::new();
     let mut step_no: u64 = 0;
+    // Fault bookkeeping.  `degraded_ids` holds the devices currently
+    // executing the all-local fallback; the whole fleet enters it on an
+    // edge outage and leaves it at the first successful post-outage
+    // replan (the planner is joint, so one accepted replan restores
+    // every device — the backoff paces *requests*, not plan content).
+    let mut edge_down = false;
+    let mut last_outage_end = 0.0_f64;
+    let mut degraded_ids: Vec<u64> = Vec::new();
+    let mut blacked: Vec<u64> = Vec::new();
+    let mut pending: Vec<Option<(ScenarioDelta, bool)>> = Vec::new();
+    let mut current_energy = boot.energy_j;
     // Active risk bound + the conformal controller (calibrated runs
     // only): every accepted step's Monte-Carlo excess feeds the
     // controller, and quantized scale moves become fleet-wide
@@ -598,6 +710,8 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
         newton_iters: boot.newton_iters,
         outer_iters: boot.outer_iters,
         violation_excess: boot_excess,
+        degraded: boot.degraded,
+        degraded_devices: 0,
     });
     recalibrate(
         opts,
@@ -636,6 +750,14 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
     if opts.bandwidth_rate_hz() > 0.0 {
         queue.push(bw.exponential(opts.bandwidth_rate_hz()), FleetEvent::Bandwidth);
     }
+    if let Some(fs) = fstreams.as_mut() {
+        if opts.faults.outage_rate_hz > 0.0 {
+            queue.push(fs.outage_wait_s(&opts.faults), FleetEvent::EdgeDown);
+        }
+        if opts.faults.blackout_rate_hz > 0.0 {
+            queue.push(fs.blackout_wait_s(&opts.faults), FleetEvent::Blackout);
+        }
+    }
 
     while let Some((t, ev)) = queue.pop() {
         if t > opts.duration_s {
@@ -643,27 +765,39 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
         }
         // Translate the event to a delta; recurring sources reschedule
         // themselves here whether or not the delta is later accepted.
-        let translated: Option<(&'static str, ScenarioDelta, Option<DeviceState>)> = match ev {
+        // The trailing bool is the delta's *environmental* flag (an
+        // environmental fact cannot be refused, only absorbed); it is
+        // carried explicitly because delayed deliveries replay a delta
+        // under the "deliver" kind.
+        let mut reoffload_ctx: Option<(u64, u32)> = None;
+        let translated: Option<(&'static str, ScenarioDelta, Option<DeviceState>, bool)> = match ev
+        {
             FleetEvent::Arrival => {
                 queue.push(t + arrivals.exponential(opts.arrival_rate_hz), FleetEvent::Arrival);
                 let (st, dev) = new_device(opts, &mut placement, &mut channels, &mut next_id);
-                Some(("join", ScenarioDelta::Join(dev), Some(st)))
+                Some(("join", ScenarioDelta::Join(dev), Some(st), false))
             }
             FleetEvent::Departure { id } => {
-                index_of(&states, id).map(|i| ("leave", ScenarioDelta::Leave(i), None))
+                index_of(&states, id).map(|i| ("leave", ScenarioDelta::Leave(i), None, false))
             }
             FleetEvent::Fade { id } => match index_of(&states, id) {
                 // Device already left: drop the tick and stop rescheduling.
                 None => None,
                 Some(i) => {
                     let st = &mut states[i];
-                    let gain = st.gm.step(&mut st.rng);
+                    let mut gain = st.gm.step(&mut st.rng);
                     if let Some(dt) = fade_dt {
                         queue.push(t + dt, FleetEvent::Fade { id });
                     }
+                    // A blacked-out device publishes its collapsed gain:
+                    // the blackout depth rides on top of the fading state.
+                    if blacked.contains(&id) {
+                        gain = 10f64
+                            .powf((st.gm.gain_db() - opts.faults.blackout_depth_db) / 10.0);
+                    }
                     let cur = sc.devices[i].uplink;
                     let uplink = Uplink { p_tx: cur.p_tx, gain, n0: cur.n0 };
-                    Some(("channel", ScenarioDelta::Channel { device: i, uplink }, None))
+                    Some(("channel", ScenarioDelta::Channel { device: i, uplink }, None, true))
                 }
             },
             FleetEvent::Renegotiate => {
@@ -673,22 +807,170 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                 if reneg.f64() < 0.5 {
                     let deadline_s = opts.deadline_s * reneg.range(0.85, 1.4);
                     let delta = ScenarioDelta::Deadline { device: Some(i), deadline_s };
-                    Some(("deadline", delta, None))
+                    Some(("deadline", delta, None, false))
                 } else {
                     let step = RISK_STEPS[reneg.below(RISK_STEPS.len())];
                     let risk = (opts.risk * step).clamp(1e-3, 0.5);
-                    Some(("risk", ScenarioDelta::Risk { device: Some(i), risk }, None))
+                    Some(("risk", ScenarioDelta::Risk { device: Some(i), risk }, None, false))
                 }
             }
             FleetEvent::Bandwidth => {
                 queue.push(t + bw.exponential(opts.bandwidth_rate_hz()), FleetEvent::Bandwidth);
                 let b = opts.total_bandwidth_hz * bw.range(0.8, 1.25);
-                Some(("bandwidth", ScenarioDelta::TotalBandwidth(b), None))
+                Some(("bandwidth", ScenarioDelta::TotalBandwidth(b), None, true))
             }
+            FleetEvent::EdgeDown => {
+                let fs = fstreams.as_mut().expect("edge events only exist with faults on");
+                queue.push(t + fs.outage_len_s(&opts.faults), FleetEvent::EdgeUp);
+                edge_down = true;
+                backend.set_edge_available(false);
+                degraded_ids = states.iter().map(|s| s.id).collect();
+                // A no-op environmental delta forces one replan so the
+                // fleet actually switches to the all-local fallback.
+                let b = sc.total_bandwidth_hz;
+                Some(("edge-down", ScenarioDelta::TotalBandwidth(b), None, true))
+            }
+            FleetEvent::EdgeUp => {
+                let fs = fstreams.as_mut().expect("edge events only exist with faults on");
+                queue.push(t + fs.outage_wait_s(&opts.faults), FleetEvent::EdgeDown);
+                edge_down = false;
+                last_outage_end = t;
+                backend.set_edge_available(true);
+                // Bookkeeping step (no backend call): the outage ended,
+                // but every device keeps executing the fallback until its
+                // backoff-paced re-offload lands.
+                metrics.record(StepRecord {
+                    t_s: t,
+                    kind: "edge-up",
+                    n: sc.n(),
+                    accepted: false,
+                    absorbed: true,
+                    cache_hit: false,
+                    warm_started: false,
+                    energy_j: Some(current_energy),
+                    newton_iters: 0,
+                    outer_iters: 0,
+                    violation_excess: None,
+                    degraded: !degraded_ids.is_empty(),
+                    degraded_devices: degraded_ids.len(),
+                });
+                // Deterministic jittered exponential backoff, one stream
+                // of draws in stable device order: no thundering herd.
+                for st in &states {
+                    let wait = fs.backoff_s(&opts.faults, 0);
+                    queue.push(t + wait, FleetEvent::Reoffload { id: st.id, attempt: 0 });
+                }
+                None
+            }
+            FleetEvent::Blackout => {
+                let fs = fstreams.as_mut().expect("blackout events only exist with faults on");
+                queue.push(t + fs.blackout_wait_s(&opts.faults), FleetEvent::Blackout);
+                let i = fs.blackout_victim(states.len());
+                let id = states[i].id;
+                if blacked.contains(&id) {
+                    // Already blacked out: the new blackout is subsumed.
+                    None
+                } else {
+                    blacked.push(id);
+                    queue.push(t + fs.blackout_len_s(&opts.faults), FleetEvent::BlackoutEnd { id });
+                    let gain =
+                        10f64.powf((states[i].gm.gain_db() - opts.faults.blackout_depth_db) / 10.0);
+                    let cur = sc.devices[i].uplink;
+                    let uplink = Uplink { p_tx: cur.p_tx, gain, n0: cur.n0 };
+                    Some(("blackout", ScenarioDelta::Channel { device: i, uplink }, None, true))
+                }
+            }
+            FleetEvent::BlackoutEnd { id } => {
+                blacked.retain(|&b| b != id);
+                match index_of(&states, id) {
+                    // During an outage the restored gain is published by
+                    // the device's own re-offload, not here.
+                    Some(i) if !edge_down => {
+                        let gain = 10f64.powf(states[i].gm.gain_db() / 10.0);
+                        let cur = sc.devices[i].uplink;
+                        let uplink = Uplink { p_tx: cur.p_tx, gain, n0: cur.n0 };
+                        Some((
+                            "blackout-end",
+                            ScenarioDelta::Channel { device: i, uplink },
+                            None,
+                            true,
+                        ))
+                    }
+                    _ => None,
+                }
+            }
+            FleetEvent::Reoffload { id, attempt } => {
+                if edge_down || degraded_ids.is_empty() {
+                    // A fresh outage began, or an earlier replan already
+                    // recovered the whole fleet.
+                    None
+                } else {
+                    match index_of(&states, id) {
+                        None => None,
+                        Some(i) => {
+                            reoffload_ctx = Some((id, attempt));
+                            let mut db = states[i].gm.gain_db();
+                            if blacked.contains(&id) {
+                                db -= opts.faults.blackout_depth_db;
+                            }
+                            let gain = 10f64.powf(db / 10.0);
+                            let cur = sc.devices[i].uplink;
+                            let uplink = Uplink { p_tx: cur.p_tx, gain, n0: cur.n0 };
+                            Some((
+                                "reoffload",
+                                ScenarioDelta::Channel { device: i, uplink },
+                                None,
+                                true,
+                            ))
+                        }
+                    }
+                }
+            }
+            FleetEvent::Deliver { ticket } => pending
+                .get_mut(ticket)
+                .and_then(|slot| slot.take())
+                .map(|(delta, env)| ("deliver", delta, None, env)),
         };
-        let Some((kind, delta, joiner)) = translated else { continue };
+        // In-flight delivery faults apply to message-like deltas only
+        // (renegotiations and bandwidth changes travel to the planner;
+        // channel fades are local observations and membership changes
+        // are handled at admission).
+        let translated = match (translated, fstreams.as_mut()) {
+            (Some((kind @ ("deadline" | "risk" | "bandwidth"), delta, joiner, env)), Some(fs)) => {
+                match fs.delivery(&opts.faults) {
+                    Delivery::OnTime => Some((kind, delta, joiner, env)),
+                    Delivery::Dropped => {
+                        metrics.record(StepRecord {
+                            t_s: t,
+                            kind: "drop",
+                            n: sc.n(),
+                            accepted: false,
+                            absorbed: false,
+                            cache_hit: false,
+                            warm_started: false,
+                            energy_j: None,
+                            newton_iters: 0,
+                            outer_iters: 0,
+                            violation_excess: None,
+                            degraded: edge_down || !degraded_ids.is_empty(),
+                            degraded_devices: degraded_ids.len(),
+                        });
+                        None
+                    }
+                    Delivery::Delayed(d) => {
+                        pending.push(Some((delta, env)));
+                        queue.push(t + d, FleetEvent::Deliver { ticket: pending.len() - 1 });
+                        None
+                    }
+                }
+            }
+            (tr, _) => tr,
+        };
+        let Some((kind, delta, joiner, environmental)) = translated else { continue };
         step_no += 1;
 
+        let fleet_degraded = edge_down || !degraded_ids.is_empty();
+        let n_degraded = degraded_ids.len();
         let rejected = |metrics: &mut FleetMetrics, n: usize| {
             metrics.record(StepRecord {
                 t_s: t,
@@ -702,6 +984,8 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                 newton_iters: 0,
                 outer_iters: 0,
                 violation_excess: None,
+                degraded: fleet_degraded,
+                degraded_devices: n_degraded,
             });
         };
 
@@ -725,7 +1009,6 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
         // environmental facts cannot be — they are absorbed: the
         // scenario rolls forward, the fleet keeps its old plan, and the
         // step records what that plan now incurs.
-        let environmental = matches!(kind, "channel" | "bandwidth");
         match backend.step(&delta, &new_sc, environmental, bound) {
             StepResult::Applied(a) => {
                 // Commit fleet bookkeeping only for accepted membership
@@ -745,11 +1028,28 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                         }
                     }
                     ScenarioDelta::Leave(i) => {
-                        states.remove(*i);
+                        let gone = states.remove(*i);
+                        blacked.retain(|&b| b != gone.id);
+                        degraded_ids.retain(|&d| d != gone.id);
                     }
                     _ => {}
                 }
                 sc = new_sc;
+                current_energy = a.energy_j;
+                if a.degraded {
+                    // The accepted plan is the fleet-wide fallback: every
+                    // current device is executing it.
+                    degraded_ids = states.iter().map(|s| s.id).collect();
+                } else if !degraded_ids.is_empty() {
+                    // First healthy accepted plan after an outage: the
+                    // planner is joint, so it recovers every device at
+                    // once.  Time-to-recovery is measured from the
+                    // outage's end, per device.
+                    for _ in 0..degraded_ids.len() {
+                        metrics.record_recovery(t - last_outage_end);
+                    }
+                    degraded_ids.clear();
+                }
                 let excess = mc_excess(&sc, &backend.current_plan(), step_no);
                 metrics.record(StepRecord {
                     t_s: t,
@@ -763,22 +1063,38 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                     newton_iters: a.newton_iters,
                     outer_iters: a.outer_iters,
                     violation_excess: excess,
+                    degraded: a.degraded,
+                    degraded_devices: degraded_ids.len(),
                 });
-                recalibrate(
-                    opts,
-                    &mut backend,
-                    &mut metrics,
-                    &mut calib,
-                    &mut bound,
-                    &sc,
-                    t,
-                    &mut step_no,
-                    excess,
-                    &mc_excess,
-                );
+                // Degraded steps skip recalibration: fallback violations
+                // would pollute the conformal stream with excesses the
+                // bound cannot fix.
+                if !a.degraded {
+                    recalibrate(
+                        opts,
+                        &mut backend,
+                        &mut metrics,
+                        &mut calib,
+                        &mut bound,
+                        &sc,
+                        t,
+                        &mut step_no,
+                        excess,
+                        &mc_excess,
+                    );
+                }
             }
             StepResult::Absorbed { energy_j } => {
                 sc = new_sc;
+                current_energy = energy_j;
+                // An absorbed re-offload means the fleet is still on the
+                // fallback: back off and retry (bounded).
+                if let (Some((id, attempt)), Some(fs)) = (reoffload_ctx, fstreams.as_mut()) {
+                    if attempt < MAX_REOFFLOAD_ATTEMPTS {
+                        let wait = fs.backoff_s(&opts.faults, attempt + 1);
+                        queue.push(t + wait, FleetEvent::Reoffload { id, attempt: attempt + 1 });
+                    }
+                }
                 metrics.record(StepRecord {
                     t_s: t,
                     kind,
@@ -791,6 +1107,8 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                     newton_iters: 0,
                     outer_iters: 0,
                     violation_excess: mc_excess(&sc, &backend.current_plan(), step_no),
+                    degraded: edge_down || !degraded_ids.is_empty(),
+                    degraded_devices: degraded_ids.len(),
                 });
             }
             StepResult::Rejected => {
@@ -801,6 +1119,12 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                         let id = states[*i].id;
                         let at = t + lifetimes.exponential(dep_rate);
                         queue.push(at, FleetEvent::Departure { id });
+                    }
+                }
+                if let (Some((id, attempt)), Some(fs)) = (reoffload_ctx, fstreams.as_mut()) {
+                    if attempt < MAX_REOFFLOAD_ATTEMPTS {
+                        let wait = fs.backoff_s(&opts.faults, attempt + 1);
+                        queue.push(t + wait, FleetEvent::Reoffload { id, attempt: attempt + 1 });
                     }
                 }
                 rejected(&mut metrics, sc.n());
@@ -866,6 +1190,8 @@ fn recalibrate(
                     newton_iters: a.newton_iters,
                     outer_iters: a.outer_iters,
                     violation_excess: ve,
+                    degraded: false,
+                    degraded_devices: 0,
                 });
                 match ve {
                     Some(e) => excess = e,
@@ -887,6 +1213,8 @@ fn recalibrate(
                     newton_iters: 0,
                     outer_iters: 0,
                     violation_excess: None,
+                    degraded: false,
+                    degraded_devices: 0,
                 });
                 break;
             }
@@ -981,12 +1309,81 @@ mod tests {
         }
     }
 
+    /// Tiny faulted run: cranked rates so outages and blackouts land
+    /// inside the short horizon, and a deadline generous enough that the
+    /// all-local fallback is deterministically feasible.
+    fn faulty_opts(seed: u64) -> FleetOptions {
+        FleetOptions {
+            deadline_s: 2.0,
+            duration_s: 6.0,
+            faults: FaultOptions {
+                enabled: true,
+                outage_rate_hz: 2.0,
+                outage_mean_s: 0.5,
+                blackout_rate_hz: 1.0,
+                blackout_mean_s: 0.4,
+                ..FaultOptions::default()
+            },
+            ..tiny_opts(seed)
+        }
+    }
+
+    #[test]
+    fn faulted_run_is_deterministic_and_accounts_degradation() {
+        let a = run(&faulty_opts(13)).unwrap();
+        let b = run(&faulty_opts(13)).unwrap();
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "same seed + same fault schedule must produce byte-identical JSON"
+        );
+        let s = a.metrics.summary();
+        assert_eq!(s.events, s.accepted + s.rejected + s.absorbed);
+        // λT = 12 outage arrivals expected over the horizon: the seeded
+        // schedule contains at least one outage, so degradation and the
+        // fallback's energy premium are actually exercised.
+        assert!(s.degraded_steps > 0, "cranked fault schedule must degrade some steps");
+        assert!(s.max_degraded_devices > 0);
+        // Degraded steps are excluded from the violation-guarantee
+        // aggregates by construction; the summary only counts them in
+        // the dedicated fault fields.
+        assert!(s.violations_while_degraded <= s.degraded_steps);
+        if s.recoveries > 0 {
+            let mean = s.mean_time_to_recovery_s.expect("recoveries imply a mean TTR");
+            let max = s.max_time_to_recovery_s.expect("recoveries imply a max TTR");
+            assert!(mean >= 0.0 && max >= mean);
+        }
+    }
+
+    #[test]
+    fn fault_free_trace_is_unchanged_by_fault_parameters() {
+        // Parameters of a *disabled* schedule must not leak into the
+        // trace: the streams are never forked.
+        let base = run(&tiny_opts(5)).unwrap();
+        let mut opts = tiny_opts(5);
+        opts.faults = FaultOptions { enabled: false, outage_rate_hz: 99.0, ..FaultOptions::default() };
+        let tweaked = run(&opts).unwrap();
+        assert_eq!(
+            base.metrics.to_json().to_string_pretty(),
+            tweaked.metrics.to_json().to_string_pretty(),
+        );
+    }
+
     #[test]
     fn malformed_options_are_rejected_cleanly() {
         for bad in [
             FleetOptions { n0: 0, ..FleetOptions::default() },
             FleetOptions { duration_s: -1.0, ..FleetOptions::default() },
             FleetOptions { churn: f64::NAN, ..FleetOptions::default() },
+            FleetOptions {
+                faults: FaultOptions {
+                    enabled: true,
+                    drop_prob: 0.9,
+                    delay_prob: 0.9,
+                    ..FaultOptions::default()
+                },
+                ..FleetOptions::default()
+            },
         ] {
             assert!(matches!(run(&bad), Err(PlanError::InvalidRequest(_))));
         }

@@ -15,7 +15,10 @@ use std::collections::BinaryHeap;
 /// Each variant maps to one [`crate::engine::ScenarioDelta`] family in
 /// the driver: `Arrival` → `Join`, `Departure` → `Leave`, `Fade` →
 /// `Channel`, `Renegotiate` → `Deadline` or `Risk`, `Bandwidth` →
-/// `TotalBandwidth` — together they exercise every delta variant.
+/// `TotalBandwidth` — together they exercise every delta variant.  The
+/// fault vocabulary (`EdgeDown`/`EdgeUp`, `Blackout`/`BlackoutEnd`,
+/// `Reoffload`, `Deliver`) is scheduled only when
+/// [`crate::fault::FaultOptions::enabled`] is set.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum FleetEvent {
     /// A new device requests admission to the fleet.
@@ -36,11 +39,45 @@ pub enum FleetEvent {
     Renegotiate,
     /// The shared uplink budget changes.
     Bandwidth,
+    /// The edge server becomes unreachable: the whole fleet degrades to
+    /// the planner's all-local fallback until the matching [`EdgeUp`].
+    ///
+    /// [`EdgeUp`]: FleetEvent::EdgeUp
+    EdgeDown,
+    /// The edge server is reachable again; devices re-offload under
+    /// jittered exponential backoff ([`Reoffload`]), not in one burst.
+    ///
+    /// [`Reoffload`]: FleetEvent::Reoffload
+    EdgeUp,
+    /// An uplink blackout begins on a victim device chosen from the
+    /// blackout stream (gain collapse far beyond ordinary shadow
+    /// fading).
+    Blackout,
+    /// The blackout on device `id` ends.
+    BlackoutEnd {
+        /// Stable device id (same id space as `Departure`).
+        id: u64,
+    },
+    /// Post-outage re-offload attempt `attempt` (0-based) for device
+    /// `id`, scheduled at a backoff-jittered time.
+    Reoffload {
+        /// Stable device id.
+        id: u64,
+        /// 0-based attempt counter; each retry doubles the backoff.
+        attempt: u32,
+    },
+    /// A delayed delta arrives; `ticket` indexes the driver's pending
+    /// in-flight list (kept driver-side so the event stays `Eq`).
+    Deliver {
+        /// Index into the driver's pending-delivery list.
+        ticket: usize,
+    },
 }
 
 impl FleetEvent {
     /// Stable lowercase tag for logs (`arrival`, `departure`, `fade`,
-    /// `renegotiate`, `bandwidth`).
+    /// `renegotiate`, `bandwidth`, `edge-down`, `edge-up`, `blackout`,
+    /// `blackout-end`, `reoffload`, `deliver`).
     pub fn kind(&self) -> &'static str {
         match self {
             FleetEvent::Arrival => "arrival",
@@ -48,6 +85,12 @@ impl FleetEvent {
             FleetEvent::Fade { .. } => "fade",
             FleetEvent::Renegotiate => "renegotiate",
             FleetEvent::Bandwidth => "bandwidth",
+            FleetEvent::EdgeDown => "edge-down",
+            FleetEvent::EdgeUp => "edge-up",
+            FleetEvent::Blackout => "blackout",
+            FleetEvent::BlackoutEnd { .. } => "blackout-end",
+            FleetEvent::Reoffload { .. } => "reoffload",
+            FleetEvent::Deliver { .. } => "deliver",
         }
     }
 }
@@ -174,5 +217,11 @@ mod tests {
         assert_eq!(FleetEvent::Fade { id: 7 }.kind(), "fade");
         assert_eq!(FleetEvent::Renegotiate.kind(), "renegotiate");
         assert_eq!(FleetEvent::Bandwidth.kind(), "bandwidth");
+        assert_eq!(FleetEvent::EdgeDown.kind(), "edge-down");
+        assert_eq!(FleetEvent::EdgeUp.kind(), "edge-up");
+        assert_eq!(FleetEvent::Blackout.kind(), "blackout");
+        assert_eq!(FleetEvent::BlackoutEnd { id: 7 }.kind(), "blackout-end");
+        assert_eq!(FleetEvent::Reoffload { id: 7, attempt: 2 }.kind(), "reoffload");
+        assert_eq!(FleetEvent::Deliver { ticket: 0 }.kind(), "deliver");
     }
 }

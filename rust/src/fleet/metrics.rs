@@ -14,9 +14,30 @@ use crate::util::json::Json;
 /// The `ScenarioDelta` kinds a fleet run can exercise, in the stable
 /// order used by the JSON export's `delta_counts` object
 /// (`"recalibrate"` only fires on runs configured with a calibrated
-/// risk bound).
-pub const DELTA_KINDS: [&str; 7] =
-    ["join", "leave", "deadline", "risk", "channel", "bandwidth", "recalibrate"];
+/// risk bound; the [`FAULT_KINDS`] tail only fires on runs with
+/// `--faults` enabled).
+pub const DELTA_KINDS: [&str; 14] = [
+    "join",
+    "leave",
+    "deadline",
+    "risk",
+    "channel",
+    "bandwidth",
+    "recalibrate",
+    "edge-down",
+    "edge-up",
+    "blackout",
+    "blackout-end",
+    "reoffload",
+    "deliver",
+    "drop",
+];
+
+/// The step kinds only a fault schedule produces (a strict subset of
+/// [`DELTA_KINDS`]): edge outage begin/end, uplink blackout begin/end,
+/// post-outage re-offload, delayed delta arrival, and in-flight drop.
+pub const FAULT_KINDS: [&str; 7] =
+    ["edge-down", "edge-up", "blackout", "blackout-end", "reoffload", "deliver", "drop"];
 
 /// Tag for the driver's one cold bootstrap solve (not a delta).
 pub const INITIAL_KIND: &str = "initial";
@@ -65,6 +86,15 @@ pub struct StepRecord {
     /// absorbed steps this measures the *old* plan against the *new*
     /// environment and may legitimately exceed 0.
     pub violation_excess: Option<f64>,
+    /// The step ran in degraded mode: the edge was unreachable (the
+    /// fleet executes the all-local fallback) or the planner's solve
+    /// budget truncated.  Degraded steps are excluded from the
+    /// violation-guarantee aggregates and counted separately
+    /// ([`FleetSummary::violations_while_degraded`]).
+    pub degraded: bool,
+    /// Devices still executing the all-local fallback after this step
+    /// (0 when the fleet is healthy).
+    pub degraded_devices: usize,
 }
 
 /// Aggregates over one run; all fields deterministic per seed.
@@ -100,7 +130,32 @@ pub struct FleetSummary {
     /// steps — read next to the configured bound, this is the
     /// empirical-violation-vs-ε record that lets runs under different
     /// bounds (or different conformal scales) be compared directly.
+    ///
+    /// Both violation aggregates exclude degraded steps: a fallback plan
+    /// issued during an outage makes no probabilistic promise, so its
+    /// violations must not be read against the bound's guarantee (they
+    /// are counted in [`FleetSummary::violations_while_degraded`]).
     pub mean_violation_excess: Option<f64>,
+    /// Steps recorded while degraded (edge down or budget-truncated).
+    pub degraded_steps: usize,
+    /// Peak simultaneous devices on the all-local fallback.
+    pub max_degraded_devices: usize,
+    /// Checked degraded steps whose Monte-Carlo violation excess was
+    /// positive — the deadline violations incurred *while* degraded.
+    pub violations_while_degraded: usize,
+    /// Completed per-device recoveries (outage-end → successful
+    /// re-offload replan).
+    pub recoveries: usize,
+    /// Mean time-to-recovery over completed recoveries, seconds
+    /// (simulation time, so deterministic per seed); `None` when no
+    /// recovery completed.
+    pub mean_time_to_recovery_s: Option<f64>,
+    /// Worst time-to-recovery, seconds; `None` when no recovery
+    /// completed.
+    pub max_time_to_recovery_s: Option<f64>,
+    /// Energy premium of local-only fallback: Σ over accepted degraded
+    /// steps of `max(0, step energy − last healthy accepted energy)`, J.
+    pub fallback_energy_premium_j: f64,
 }
 
 /// Accumulator for a fleet run's records plus the planner's final cache
@@ -109,6 +164,8 @@ pub struct FleetSummary {
 pub struct FleetMetrics {
     steps: Vec<StepRecord>,
     cache: CacheStats,
+    /// Completed time-to-recovery samples, seconds (simulation time).
+    recoveries: Vec<f64>,
 }
 
 impl FleetMetrics {
@@ -125,6 +182,19 @@ impl FleetMetrics {
     /// Snapshot the planner's cache counters (called once at run end).
     pub fn set_cache_stats(&mut self, stats: CacheStats) {
         self.cache = stats;
+    }
+
+    /// Record one completed device recovery: `ttr_s` is the simulation
+    /// time from the outage's end to the device's first successful
+    /// re-offload replan (deterministic per seed — no wall clock).
+    pub fn record_recovery(&mut self, ttr_s: f64) {
+        debug_assert!(ttr_s.is_finite() && ttr_s >= 0.0, "bad time-to-recovery {ttr_s}");
+        self.recoveries.push(ttr_s);
+    }
+
+    /// Completed time-to-recovery samples, in completion order.
+    pub fn recoveries(&self) -> &[f64] {
+        &self.recoveries
     }
 
     /// All recorded steps in event order.
@@ -162,16 +232,49 @@ impl FleetMetrics {
         } else {
             energies.iter().sum::<f64>() / energies.len() as f64
         };
+        // The guarantee metrics read only healthy accepted steps; the
+        // degraded tail is accounted separately below.
         let worst_violation_excess = accepted
             .iter()
+            .filter(|s| !s.degraded)
             .filter_map(|s| s.violation_excess)
             .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))));
-        let checked: Vec<f64> = accepted.iter().filter_map(|s| s.violation_excess).collect();
+        let checked: Vec<f64> =
+            accepted.iter().filter(|s| !s.degraded).filter_map(|s| s.violation_excess).collect();
         let mean_violation_excess = if checked.is_empty() {
             None
         } else {
             Some(checked.iter().sum::<f64>() / checked.len() as f64)
         };
+        let degraded_steps = self.steps.iter().filter(|s| s.degraded).count();
+        let max_degraded_devices =
+            self.steps.iter().map(|s| s.degraded_devices).max().unwrap_or(0);
+        let violations_while_degraded = self
+            .steps
+            .iter()
+            .filter(|s| s.degraded && s.violation_excess.map_or(false, |v| v > 0.0))
+            .count();
+        let (mean_ttr, max_ttr) = if self.recoveries.is_empty() {
+            (None, None)
+        } else {
+            let sum: f64 = self.recoveries.iter().sum();
+            let max = self.recoveries.iter().cloned().fold(0.0, f64::max);
+            (Some(sum / self.recoveries.len() as f64), Some(max))
+        };
+        // Energy premium of local-only fallback: each accepted degraded
+        // step pays against the last healthy accepted energy before it.
+        let mut fallback_energy_premium_j = 0.0;
+        let mut last_healthy: Option<f64> = None;
+        for s in &self.steps {
+            if !s.accepted {
+                continue;
+            }
+            match (s.degraded, s.energy_j, last_healthy) {
+                (false, Some(e), _) => last_healthy = Some(e),
+                (true, Some(e), Some(h)) => fallback_energy_premium_j += (e - h).max(0.0),
+                _ => {}
+            }
+        }
         FleetSummary {
             events: self.steps.len(),
             accepted: accepted.len(),
@@ -189,6 +292,13 @@ impl FleetMetrics {
             mean_energy_j,
             worst_violation_excess,
             mean_violation_excess,
+            degraded_steps,
+            max_degraded_devices,
+            violations_while_degraded,
+            recoveries: self.recoveries.len(),
+            mean_time_to_recovery_s: mean_ttr,
+            max_time_to_recovery_s: max_ttr,
+            fallback_energy_premium_j,
         }
     }
 
@@ -210,6 +320,16 @@ impl FleetMetrics {
             ("mean_energy_j".into(), Json::Num(s.mean_energy_j)),
             ("worst_violation_excess".into(), opt(s.worst_violation_excess)),
             ("mean_violation_excess".into(), opt(s.mean_violation_excess)),
+            ("degraded_steps".into(), Json::Num(s.degraded_steps as f64)),
+            ("max_degraded_devices".into(), Json::Num(s.max_degraded_devices as f64)),
+            (
+                "violations_while_degraded".into(),
+                Json::Num(s.violations_while_degraded as f64),
+            ),
+            ("recoveries".into(), Json::Num(s.recoveries as f64)),
+            ("mean_time_to_recovery_s".into(), opt(s.mean_time_to_recovery_s)),
+            ("max_time_to_recovery_s".into(), opt(s.max_time_to_recovery_s)),
+            ("fallback_energy_premium_j".into(), Json::Num(s.fallback_energy_premium_j)),
         ]);
         let delta_counts = Json::Obj(
             DELTA_KINDS
@@ -239,6 +359,8 @@ impl FleetMetrics {
                         ("newton_iters".into(), Json::Num(st.newton_iters as f64)),
                         ("outer_iters".into(), Json::Num(st.outer_iters as f64)),
                         ("violation_excess".into(), opt(st.violation_excess)),
+                        ("degraded".into(), Json::Bool(st.degraded)),
+                        ("degraded_devices".into(), Json::Num(st.degraded_devices as f64)),
                     ])
                 })
                 .collect(),
@@ -269,6 +391,8 @@ mod tests {
             newton_iters: if accepted && !cache_hit { 10 } else { 0 },
             outer_iters: 1,
             violation_excess: accepted.then_some(-0.03),
+            degraded: false,
+            degraded_devices: 0,
         }
     }
 
@@ -305,6 +429,58 @@ mod tests {
     }
 
     #[test]
+    fn degraded_accounting_is_separate_from_the_guarantee_metrics() {
+        let mut m = FleetMetrics::new();
+        // Healthy baseline at 2.0 J with a clean violation record.
+        m.record(step(INITIAL_KIND, true, false, false));
+        // Outage: two accepted degraded fallback steps at 5.0 J, one of
+        // which violates its (unpromised) probabilistic deadline.
+        m.record(StepRecord {
+            degraded: true,
+            degraded_devices: 3,
+            energy_j: Some(5.0),
+            violation_excess: Some(0.04),
+            ..step("edge-down", true, false, false)
+        });
+        m.record(StepRecord {
+            degraded: true,
+            degraded_devices: 2,
+            energy_j: Some(5.0),
+            violation_excess: Some(-0.01),
+            ..step("reoffload", true, false, true)
+        });
+        // An in-flight drop records a rejected-shaped step.
+        m.record(StepRecord { energy_j: None, ..step("drop", false, false, false) });
+        m.record_recovery(0.5);
+        m.record_recovery(1.5);
+
+        let s = m.summary();
+        assert_eq!(s.degraded_steps, 2);
+        assert_eq!(s.max_degraded_devices, 3);
+        assert_eq!(s.violations_while_degraded, 1);
+        assert_eq!(s.recoveries, 2);
+        assert_eq!(s.mean_time_to_recovery_s, Some(1.0));
+        assert_eq!(s.max_time_to_recovery_s, Some(1.5));
+        // Premium: two degraded steps at 5.0 J over the 2.0 J baseline.
+        assert!((s.fallback_energy_premium_j - 6.0).abs() < 1e-12);
+        // The guarantee metrics never see the degraded +0.04 excess.
+        assert_eq!(s.worst_violation_excess, Some(-0.03));
+        assert_eq!(m.count_of("drop"), 1);
+        assert!(FAULT_KINDS.iter().all(|k| DELTA_KINDS.contains(k)));
+
+        // And all of it lands in the JSON export.
+        let back = Json::parse(&m.to_json().to_string_pretty()).unwrap();
+        let sum = back.get("summary").unwrap();
+        assert_eq!(sum.get("degraded_steps").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(sum.get("recoveries").unwrap().as_usize().unwrap(), 2);
+        assert!((sum.get("fallback_energy_premium_j").unwrap().as_f64().unwrap() - 6.0).abs()
+            < 1e-12);
+        let steps = back.get("steps").unwrap().as_arr().unwrap();
+        assert!(steps[1].get("degraded").unwrap().as_bool().unwrap());
+        assert_eq!(steps[1].get("degraded_devices").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
     fn json_is_parseable_and_null_encodes_disabled_checks() {
         let mut m = FleetMetrics::new();
         let mut st = step("risk", false, false, false);
@@ -333,5 +509,8 @@ mod tests {
         assert_eq!(s.cache_hit_rate, 0.0);
         assert_eq!(s.mean_energy_j, 0.0);
         assert!(s.worst_violation_excess.is_none());
+        assert_eq!((s.degraded_steps, s.recoveries, s.violations_while_degraded), (0, 0, 0));
+        assert!(s.mean_time_to_recovery_s.is_none());
+        assert_eq!(s.fallback_energy_premium_j, 0.0);
     }
 }

@@ -11,6 +11,10 @@
 //! and measures how the engine's incremental machinery (plan cache, warm
 //! replans, cold feasibility fallbacks) behaves over time, validating
 //! every accepted plan against the Monte-Carlo uncertainty simulator.
+//! With `--faults` the stream additionally carries a seeded
+//! [`crate::fault`] schedule — edge outages (all-local degradation +
+//! backoff-paced recovery), uplink blackouts, and delta delivery
+//! faults — without disturbing the fault-free trace.
 //!
 //! Layout:
 //!
@@ -36,5 +40,6 @@ pub mod metrics;
 pub use driver::{run, FleetOptions, FleetReport};
 pub use events::{EventQueue, FleetEvent};
 pub use metrics::{
-    FleetMetrics, FleetSummary, StepRecord, DELTA_KINDS, INITIAL_KIND, RECALIBRATE_KIND,
+    FleetMetrics, FleetSummary, StepRecord, DELTA_KINDS, FAULT_KINDS, INITIAL_KIND,
+    RECALIBRATE_KIND,
 };

@@ -53,6 +53,12 @@
 //!   (join/leave, Gauss–Markov fading, QoS renegotiation) driving
 //!   `Planner::replan` — or the sharded service via `--shards` —
 //!   end-to-end, with deterministic metrics export.
+//! * [`fault`] — seeded, replayable fault schedules for the fleet
+//!   simulator: edge-server outage windows (the engine degrades to its
+//!   all-local fallback plan), per-device uplink blackouts
+//!   (beyond-fade gain collapse), and delta-delivery delays/drops,
+//!   plus the jittered exponential backoff that paces re-offloading
+//!   when an outage ends.
 //! * [`coordinator`] / [`runtime`] — the serving runtime executing plans
 //!   on AOT-compiled PJRT artifacts.
 //! * [`figures`] — regenerates every paper table/figure; [`util`] holds
@@ -66,6 +72,7 @@ pub mod channel;
 pub mod coordinator;
 pub mod energy;
 pub mod engine;
+pub mod fault;
 pub mod figures;
 pub mod fleet;
 pub mod linalg;

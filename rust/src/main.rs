@@ -19,6 +19,7 @@ use anyhow::{anyhow, bail, Result};
 
 use ripra::coordinator::{self, ServeOptions};
 use ripra::engine::{CliFlag, PlanRequest, Planner, PlannerBuilder, Policy, RiskBound};
+use ripra::fault::FaultOptions;
 use ripra::figures::{self, Effort};
 use ripra::fleet::{self, FleetOptions};
 use ripra::models::manifest::Manifest;
@@ -288,6 +289,7 @@ fn cmd_plan(args: &[String]) -> Result<()> {
 fn fleet_options_of(flags: &HashMap<String, String>) -> Result<FleetOptions> {
     let model = model_of(flags)?;
     let (b_def, d_def, e_def) = figures::default_setting(&model.name);
+    let fd = FaultOptions::default();
     Ok(FleetOptions {
         n0: flag_usize(flags, "n", 6)?,
         duration_s: flag_f64(flags, "duration", 30.0)?,
@@ -301,6 +303,18 @@ fn fleet_options_of(flags: &HashMap<String, String>) -> Result<FleetOptions> {
         threads: 0,
         shards: flag_usize(flags, "shards", 0)?,
         bound: bound_of(flags)?,
+        faults: FaultOptions {
+            enabled: flags.contains_key("faults"),
+            outage_rate_hz: flag_f64(flags, "outage-rate", fd.outage_rate_hz)?,
+            outage_mean_s: flag_f64(flags, "outage-mean", fd.outage_mean_s)?,
+            blackout_rate_hz: flag_f64(flags, "blackout-rate", fd.blackout_rate_hz)?,
+            blackout_mean_s: flag_f64(flags, "blackout-mean", fd.blackout_mean_s)?,
+            blackout_depth_db: flag_f64(flags, "blackout-depth", fd.blackout_depth_db)?,
+            drop_prob: flag_f64(flags, "drop-prob", fd.drop_prob)?,
+            delay_prob: flag_f64(flags, "delay-prob", fd.delay_prob)?,
+            delay_mean_s: flag_f64(flags, "delay-mean", fd.delay_mean_s)?,
+            backoff_base_s: flag_f64(flags, "backoff", fd.backoff_base_s)?,
+        },
         model,
     })
 }
@@ -352,6 +366,23 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
             opts.trials
         ),
         None => println!("Monte-Carlo check disabled (--trials 0)"),
+    }
+    if opts.faults.enabled {
+        println!(
+            "faults: {} degraded steps (peak {} devices), {} deadline violations while degraded",
+            s.degraded_steps, s.max_degraded_devices, s.violations_while_degraded
+        );
+        match (s.mean_time_to_recovery_s, s.max_time_to_recovery_s) {
+            (Some(mean), Some(max)) => println!(
+                "recovery: {} re-offloads, time-to-recovery mean {:.2}s / max {:.2}s, \
+                 local-fallback energy premium {:.4} J",
+                s.recoveries, mean, max, s.fallback_energy_premium_j
+            ),
+            _ => println!(
+                "recovery: no completed recoveries in window (energy premium {:.4} J)",
+                s.fallback_energy_premium_j
+            ),
+        }
     }
     println!(
         "final fleet: {} devices, B={:.2} MHz, planned energy {:.4} J, bound {}",

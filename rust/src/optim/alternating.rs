@@ -15,6 +15,40 @@ use super::pccp::{self, PccpOptions};
 use super::resource::{self, ResourceError};
 use super::types::{Plan, Policy, Scenario};
 
+/// Hard iteration/time budgets for one Algorithm-2 solve.  `0` (or
+/// `None` for the wall clock) means unlimited — the [`Default`] budget
+/// changes nothing.  When a budget runs out while the alternation holds
+/// a feasible iterate, the solve returns that best-feasible-so-far plan
+/// with [`RobustPlan::degraded`] set instead of spinning; it only errors
+/// if no feasible iterate was ever reached.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SolverBudget {
+    /// Cap on outer alternation rounds (tighter of this and
+    /// [`AlternatingOptions::max_outer`] wins).
+    pub max_outer: usize,
+    /// Cap on total Algorithm-1 (PCCP) iterations summed over devices
+    /// and rounds.
+    pub max_pccp: usize,
+    /// Cap on total Newton iterations across every inner solve.
+    pub max_newton: usize,
+    /// Wall-clock cap for the whole solve.  **Non-deterministic**: the
+    /// returned plan then depends on machine speed, so the fleet
+    /// simulator and anything pinning byte-identical traces must leave
+    /// this `None` and rely on the iteration caps.
+    pub max_wall: Option<std::time::Duration>,
+}
+
+impl SolverBudget {
+    /// No budget at all (the default).
+    pub const UNLIMITED: SolverBudget =
+        SolverBudget { max_outer: 0, max_pccp: 0, max_newton: 0, max_wall: None };
+
+    /// True when no cap is set at all.
+    pub fn is_unlimited(&self) -> bool {
+        *self == SolverBudget::UNLIMITED
+    }
+}
+
 /// Algorithm 2 knobs.
 #[derive(Clone, Debug)]
 pub struct AlternatingOptions {
@@ -47,6 +81,8 @@ pub struct AlternatingOptions {
     /// side-effect-free and the accept loop is sequential in a fixed
     /// order, so the thread count never changes the returned plan.
     pub threads: usize,
+    /// Hard solve budget; [`SolverBudget::UNLIMITED`] by default.
+    pub budget: SolverBudget,
 }
 
 impl Default for AlternatingOptions {
@@ -59,6 +95,7 @@ impl Default for AlternatingOptions {
             polish: true,
             warm_start: true,
             threads: 0,
+            budget: SolverBudget::UNLIMITED,
         }
     }
 }
@@ -77,6 +114,11 @@ pub struct RobustPlan {
     pub avg_pccp_iters: f64,
     /// Total Newton iterations across every inner solve.
     pub newton_iters: usize,
+    /// A [`SolverBudget`] ran out before the alternation converged; the
+    /// plan is the best feasible iterate held at that moment (still a
+    /// valid, feasibility-checked decision — just not polished to the
+    /// usual fixed point).
+    pub degraded: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -171,13 +213,35 @@ pub(crate) fn solve_core(
     // next outer iteration (each device resumes from its own basin).
     let mut warm_x: Option<Vec<Vec<f64>>> = None;
 
-    for k in 0..opts.max_outer {
+    // Budget bookkeeping.  `degraded` flips only on *budget* truncation,
+    // never on ordinary `max_outer` exhaustion (hitting the configured
+    // round cap is legacy behaviour, not degradation).  The wall clock is
+    // sampled only when a wall cap is actually set, so budget-free and
+    // iteration-budgeted solves stay bit-deterministic.
+    let budget = opts.budget;
+    let started = budget.max_wall.map(|_| std::time::Instant::now());
+    let mut degraded = false;
+    let outer_cap = if budget.max_outer > 0 {
+        opts.max_outer.min(budget.max_outer)
+    } else {
+        opts.max_outer
+    };
+    let mut pccp_total = 0.0; // Algorithm-1 iterations summed over devices
+
+    for k in 0..outer_cap {
+        if let (Some(t0), Some(cap)) = (started, budget.max_wall) {
+            if t0.elapsed() > cap {
+                degraded = true;
+                break;
+            }
+        }
         outer = k + 1;
         // -- partitioning step (Algorithm 1 at fixed resources) ------------
         let warm_ref = if opts.warm_start { warm_x.as_deref() } else { None };
         let part = pccp::solve(sc, &res.freq_ghz, &res.bandwidth_hz, &opts.pccp, warm_ref, bound)
             .map_err(|e| PlanError::Solver(e.to_string()))?;
         pccp_iter_sum += part.avg_iters;
+        pccp_total += part.avg_iters * sc.n() as f64;
         newton += part.newton_iters;
 
         // -- resource step at the new partition ----------------------------
@@ -202,6 +266,20 @@ pub(crate) fn solve_core(
         if !changed || rel < opts.theta_err {
             break;
         }
+        // Converged rounds above exit clean; from here the round budget
+        // and the work budgets decide whether the *next* round may run.
+        if budget.max_outer > 0 && outer >= budget.max_outer {
+            degraded = true;
+            break;
+        }
+        if budget.max_newton > 0 && newton >= budget.max_newton {
+            degraded = true;
+            break;
+        }
+        if budget.max_pccp > 0 && pccp_total >= budget.max_pccp as f64 {
+            degraded = true;
+            break;
+        }
     }
 
     // -- polish: single-device improvement moves ---------------------------
@@ -215,7 +293,9 @@ pub(crate) fn solve_core(
     // walk's and the outcome is identical at any thread count; each
     // chunk's wall-clock divides by the core count, and every sweep
     // worker holds its own Newton workspace.
-    if opts.polish {
+    // A budget-truncated solve skips the polish: its whole point is to
+    // stop spending, and the held iterate is already feasible.
+    if opts.polish && !degraded {
         let mut rounds = 0;
         loop {
             rounds += 1;
@@ -322,6 +402,7 @@ pub(crate) fn solve_core(
         avg_pccp_iters: if outer > 0 { pccp_iter_sum / outer as f64 } else { 0.0 },
         trajectory,
         newton_iters: newton,
+        degraded,
     })
 }
 
@@ -503,6 +584,48 @@ mod tests {
             warm.energy,
             cold.energy
         );
+    }
+
+    #[test]
+    fn unlimited_budget_never_degrades() {
+        let sc = scenario(&ModelProfile::alexnet_paper(), 8, 10e6, 0.2, 0.04, 21);
+        let r = solve(&sc, &AlternatingOptions::default(), None).unwrap();
+        assert!(!r.degraded);
+        assert!(SolverBudget::default().is_unlimited());
+    }
+
+    #[test]
+    fn outer_budget_returns_best_feasible_so_far_flagged_degraded() {
+        // Force the start far from the optimum so one round cannot
+        // converge; the budgeted solve must still return a feasible plan.
+        let sc = scenario(&ModelProfile::alexnet_paper(), 8, 10e6, 0.22, 0.02, 22);
+        let opts = AlternatingOptions {
+            budget: SolverBudget { max_outer: 1, ..SolverBudget::UNLIMITED },
+            ..Default::default()
+        };
+        let r = solve(&sc, &opts, Some(vec![0; 8])).unwrap();
+        assert!(r.degraded, "1-round budget from a bad start should truncate");
+        assert!(r.outer_iters <= 1);
+        assert!(r.plan.feasible(&sc, Policy::ROBUST));
+        assert!(r.plan.bandwidth_ok(&sc));
+        // The full solve from the same start must do at least as well.
+        let full = solve(&sc, &AlternatingOptions::default(), Some(vec![0; 8])).unwrap();
+        assert!(full.energy <= r.energy * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn newton_budget_truncates_deterministically() {
+        let sc = scenario(&ModelProfile::alexnet_paper(), 8, 10e6, 0.22, 0.02, 23);
+        let opts = AlternatingOptions {
+            budget: SolverBudget { max_newton: 1, ..SolverBudget::UNLIMITED },
+            ..Default::default()
+        };
+        let a = solve(&sc, &opts, Some(vec![0; 8])).unwrap();
+        let b = solve(&sc, &opts, Some(vec![0; 8])).unwrap();
+        assert!(a.degraded);
+        assert!(a.plan.feasible(&sc, Policy::ROBUST));
+        assert_eq!(a.plan, b.plan, "budgeted solves must stay deterministic");
+        assert_eq!(a.newton_iters, b.newton_iters);
     }
 
     #[test]

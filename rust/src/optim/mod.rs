@@ -19,5 +19,5 @@ pub mod resource;
 pub mod types;
 
 #[allow(deprecated)] // legacy re-export kept for one release
-pub use alternating::{solve as plan, AlternatingOptions, RobustPlan};
+pub use alternating::{solve as plan, AlternatingOptions, RobustPlan, SolverBudget};
 pub use types::{Device, Plan, Policy, Scenario};

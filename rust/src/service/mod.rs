@@ -93,6 +93,9 @@ pub struct ServiceOutcome {
     pub warm_started: bool,
     /// Planner-facing shard operations this request triggered.
     pub shard_ops: usize,
+    /// Some shard op returned a degraded plan (all-local fallback while
+    /// the edge is unreachable, or a budget-truncated solve).
+    pub degraded: bool,
 }
 
 /// Deterministic service-level counters (no wall clock), exposed by
@@ -117,6 +120,11 @@ pub struct ServiceStats {
     pub rejected: u64,
     /// Devices moved between shards by load-factor rebalancing.
     pub rebalance_moves: u64,
+    /// Times a tenant's circuit breaker opened (consecutive-failure
+    /// threshold reached; see [`ServiceOptions::breaker_threshold`]).
+    ///
+    /// [`ServiceOptions::breaker_threshold`]: planner_service::ServiceOptions::breaker_threshold
+    pub breaker_trips: u64,
 }
 
 /// Service-level failure.
@@ -128,6 +136,10 @@ pub enum ServiceError {
         /// The queue's capacity at refusal time.
         capacity: usize,
     },
+    /// The tenant's circuit breaker is open after consecutive planner
+    /// failures: requests are refused without reaching a planner until
+    /// the half-open probe closes it.  Nothing was enqueued.
+    CircuitOpen(TenantId),
     /// The tenant id is not admitted.
     UnknownTenant(TenantId),
     /// The tenant id is already admitted.
@@ -143,6 +155,9 @@ impl std::fmt::Display for ServiceError {
         match self {
             ServiceError::Backpressure { capacity } => {
                 write!(f, "request queue full (capacity {capacity}); drain and retry")
+            }
+            ServiceError::CircuitOpen(t) => {
+                write!(f, "circuit open for tenant {t}; draining half-open probes")
             }
             ServiceError::UnknownTenant(t) => write!(f, "unknown tenant {t}"),
             ServiceError::DuplicateTenant(t) => write!(f, "tenant {t} already admitted"),

@@ -34,6 +34,16 @@ pub struct ServiceOptions {
     pub threads: usize,
     /// Per-shard planner LRU cache capacity.
     pub cache_capacity: usize,
+    /// Per-tenant circuit breaker: this many *consecutive* rejected
+    /// requests (planner failures / infeasibility) open the tenant's
+    /// breaker, after which [`PlannerService::submit`] refuses with
+    /// [`ServiceError::CircuitOpen`] until the cooldown elapses and a
+    /// half-open probe succeeds.  `0` disables the breaker entirely
+    /// (the default — and what the fleet driver uses, preserving the
+    /// shards = 1 ≡ serial byte-parity contract).
+    pub breaker_threshold: usize,
+    /// Drains an open breaker stays open before going half-open.
+    pub breaker_cooldown: usize,
 }
 
 impl Default for ServiceOptions {
@@ -44,6 +54,8 @@ impl Default for ServiceOptions {
             load_factor: 1.25,
             threads: 0,
             cache_capacity: 32,
+            breaker_threshold: 0,
+            breaker_cooldown: 2,
         }
     }
 }
@@ -63,12 +75,28 @@ impl ServiceOptions {
     }
 }
 
+/// Circuit-breaker state of one tenant (see
+/// [`ServiceOptions::breaker_threshold`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Breaker {
+    /// Requests flow normally.
+    Closed,
+    /// Submissions refused for `remaining` more drains.
+    Open { remaining: usize },
+    /// Cooldown elapsed: requests flow again as probes — one success
+    /// closes the breaker, one rejection re-opens it.
+    HalfOpen,
+}
+
 /// Tenant-level bookkeeping (the authoritative per-device state lives in
 /// the shards' sub-fleets).
 struct TenantState {
     id: TenantId,
     total_bandwidth_hz: f64,
     devices: usize,
+    /// Consecutive rejected requests (resets on any success).
+    failures: usize,
+    breaker: Breaker,
 }
 
 /// One parameter op scheduled onto a shard during a drain wave.
@@ -368,7 +396,13 @@ impl PlannerService {
             }
             return Err(ServiceError::Plan(e));
         }
-        self.tenants.push(TenantState { id, total_bandwidth_hz: b, devices: n });
+        self.tenants.push(TenantState {
+            id,
+            total_bandwidth_hz: b,
+            devices: n,
+            failures: 0,
+            breaker: Breaker::Closed,
+        });
         Ok(self.outcome_of(id, Disposition::Applied, acc))
     }
 
@@ -390,12 +424,61 @@ impl PlannerService {
     /// with [`ServiceError::UnknownTenant`] for un-admitted tenants;
     /// nothing is ever dropped silently.
     pub fn submit(&mut self, tenant: TenantId, delta: ScenarioDelta) -> Result<(), ServiceError> {
-        if self.tenant_index(tenant).is_none() {
+        let Some(t) = self.tenant_index(tenant) else {
             return Err(ServiceError::UnknownTenant(tenant));
+        };
+        if matches!(self.tenants[t].breaker, Breaker::Open { .. }) {
+            return Err(ServiceError::CircuitOpen(tenant));
         }
         self.queue.submit(Request { tenant, delta })?;
         self.stats.submitted += 1;
         Ok(())
+    }
+
+    /// [`PlannerService::submit`] with bounded retry on
+    /// [`ServiceError::Backpressure`]: each refusal triggers one
+    /// [`PlannerService::drain`] (freeing the queue) whose outcomes are
+    /// returned so the caller never loses them, then the submission is
+    /// retried — at most `max_retries` times.  Other errors (unknown
+    /// tenant, open breaker) are returned immediately; retrying cannot
+    /// help them.
+    pub fn submit_with_retry(
+        &mut self,
+        tenant: TenantId,
+        delta: ScenarioDelta,
+        max_retries: usize,
+    ) -> Result<Vec<ServiceOutcome>, ServiceError> {
+        let mut drained = Vec::new();
+        for attempt in 0..=max_retries {
+            match self.submit(tenant, delta.clone()) {
+                Ok(()) => return Ok(drained),
+                Err(ServiceError::Backpressure { capacity }) => {
+                    if attempt == max_retries {
+                        return Err(ServiceError::Backpressure { capacity });
+                    }
+                    drained.extend(self.drain());
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!("loop returns on the last attempt")
+    }
+
+    /// Mark the edge server reachable/unreachable on every shard
+    /// planner: while unreachable each sub-fleet degrades to the
+    /// engine's all-local fallback (see
+    /// [`crate::engine::Planner::set_edge_available`]).
+    pub fn set_edge_available(&mut self, up: bool) {
+        for shard in &mut self.shards {
+            shard.planner.set_edge_available(up);
+        }
+    }
+
+    /// Whether the tenant's circuit breaker is currently open (`None`
+    /// for un-admitted tenants).
+    pub fn breaker_open(&self, tenant: TenantId) -> Option<bool> {
+        self.tenant_index(tenant)
+            .map(|t| matches!(self.tenants[t].breaker, Breaker::Open { .. }))
     }
 
     /// Process every pending request and return one [`ServiceOutcome`]
@@ -410,6 +493,16 @@ impl PlannerService {
     /// admission, then the bandwidth-share rebroadcast fans out, then
     /// rebalancing runs).
     pub fn drain(&mut self) -> Vec<ServiceOutcome> {
+        // Open breakers cool down one notch per drain; at zero they go
+        // half-open and the tenant's next submissions act as probes.
+        for t in &mut self.tenants {
+            if let Breaker::Open { remaining } = t.breaker {
+                t.breaker = match remaining {
+                    0 => Breaker::HalfOpen,
+                    r => Breaker::Open { remaining: r - 1 },
+                };
+            }
+        }
         let reqs = self.queue.drain();
         let superseded = superseded_by(&reqs);
         let mut results: Vec<Option<ServiceOutcome>> = (0..reqs.len()).map(|_| None).collect();
@@ -427,10 +520,44 @@ impl PlannerService {
                 i = j;
             }
         }
-        results.into_iter().map(|r| r.expect("every request is disposed")).collect()
+        let out: Vec<ServiceOutcome> =
+            results.into_iter().map(|r| r.expect("every request is disposed")).collect();
+        for o in &out {
+            self.note_breaker(o.tenant, o.disposition);
+        }
+        out
     }
 
     // ---- internals --------------------------------------------------------
+
+    /// Feed one disposed request into the tenant's circuit breaker.
+    /// No-op when the breaker is disabled (`breaker_threshold == 0`).
+    fn note_breaker(&mut self, tenant: TenantId, disposition: Disposition) {
+        if self.opts.breaker_threshold == 0 {
+            return;
+        }
+        let Some(t) = self.tenant_index(tenant) else { return };
+        let ts = &mut self.tenants[t];
+        match disposition {
+            Disposition::Applied | Disposition::Absorbed => {
+                ts.failures = 0;
+                if ts.breaker == Breaker::HalfOpen {
+                    ts.breaker = Breaker::Closed;
+                }
+            }
+            Disposition::Rejected => {
+                ts.failures += 1;
+                let trip = ts.breaker == Breaker::HalfOpen
+                    || (ts.breaker == Breaker::Closed
+                        && ts.failures >= self.opts.breaker_threshold);
+                if trip {
+                    ts.breaker = Breaker::Open { remaining: self.opts.breaker_cooldown };
+                    self.stats.breaker_trips += 1;
+                }
+            }
+            Disposition::Superseded => {}
+        }
+    }
 
     fn note_op(&mut self, op: &ShardOpResult) {
         self.stats.shard_ops += op.ops as u64;
@@ -460,6 +587,7 @@ impl PlannerService {
             cache_hit: acc.ops > 0 && acc.cache_hit,
             warm_started: acc.warm_started,
             shard_ops: acc.ops,
+            degraded: acc.degraded,
         }
     }
 
@@ -473,6 +601,7 @@ impl PlannerService {
             cache_hit: false,
             warm_started: false,
             shard_ops: 0,
+            degraded: false,
         }
     }
 

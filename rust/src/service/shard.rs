@@ -49,6 +49,9 @@ pub(crate) struct ShardOpResult {
     pub hits: usize,
     /// Ops that fell back to [`Planner::rebase`] (absorbed).
     pub rebases: usize,
+    /// Some folded-in op produced a degraded plan (all-local fallback or
+    /// budget-truncated solve).
+    pub degraded: bool,
 }
 
 impl ShardOpResult {
@@ -63,6 +66,7 @@ impl ShardOpResult {
             replans: 0,
             hits: 0,
             rebases: 0,
+            degraded: false,
         }
     }
 
@@ -150,6 +154,7 @@ impl Shard {
             replans: 0,
             hits: usize::from(hit),
             rebases: 0,
+            degraded: outcome.diagnostics.degraded,
         };
         self.tenants.push((tenant, SubFleet { members, scenario, outcome }));
         Ok(result)
@@ -177,12 +182,14 @@ impl Shard {
             _ => base_out.bound,
         };
         self.planner.set_base(base_sc, base_out).expect("sub-fleet base shape is consistent");
-        let req = PlanRequest::new(new_sc.clone(), Policy::Robust).with_bound(bound);
-        if let Some(hit) = self.planner.plan_cached(&req) {
+        // Borrow-only cache probe (no scenario clone unless it hits) —
+        // the same call the serial fleet driver makes, so the shards=1 ≡
+        // serial byte-parity pin holds op for op.
+        if let Some(hit) = self.planner.plan_cached_for(&new_sc, &Policy::Robust, bound) {
             // The hit carries the original solve's diagnostics; report
-            // its warm_started flag exactly like the serial driver does
-            // (the shards=1 ≡ serial byte-parity pin depends on it).
+            // its warm_started flag exactly like the serial driver does.
             let warm_started = hit.diagnostics.warm_started;
+            let degraded = hit.diagnostics.degraded;
             let sub = self.sub_mut(tenant).expect("checked above");
             sub.scenario = new_sc;
             sub.outcome = hit;
@@ -196,6 +203,7 @@ impl Shard {
                 replans: 0,
                 hits: 1,
                 rebases: 0,
+                degraded,
             };
         }
         match self.planner.replan(delta) {
@@ -210,17 +218,19 @@ impl Shard {
                     replans: 1,
                     hits: 0,
                     rebases: 0,
+                    degraded: out.diagnostics.degraded,
                 };
                 let sub = self.sub_mut(tenant).expect("checked above");
                 sub.scenario = new_sc;
                 sub.outcome = out;
                 result
             }
-            Err(_) if environmental => match self.planner.rebase(new_sc.clone()) {
+            Err(_) if environmental => match self.planner.rebase(&new_sc) {
                 Ok(energy) => {
                     let sub = self.sub_mut(tenant).expect("checked above");
                     sub.scenario = new_sc;
                     sub.outcome.energy = energy;
+                    let degraded = sub.outcome.diagnostics.degraded;
                     ShardOpResult {
                         disposition: Disposition::Absorbed,
                         newton_iters: 0,
@@ -231,6 +241,7 @@ impl Shard {
                         replans: 1,
                         hits: 0,
                         rebases: 1,
+                        degraded,
                     }
                 }
                 Err(_) => {
@@ -332,6 +343,7 @@ pub(crate) fn merge(acc: &mut ShardOpResult, op: &ShardOpResult) {
     acc.replans += op.replans;
     acc.hits += op.hits;
     acc.rebases += op.rebases;
+    acc.degraded = acc.degraded || op.degraded;
 }
 
 #[cfg(test)]

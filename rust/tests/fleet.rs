@@ -7,7 +7,7 @@
 //! calibration-driven `Bound` variant has its own always-on pin).
 
 use ripra::engine::{scenario_fingerprint, Policy, RiskBound};
-use ripra::fleet::{self, FleetOptions, DELTA_KINDS, RECALIBRATE_KIND};
+use ripra::fleet::{self, FleetOptions, DELTA_KINDS, FAULT_KINDS, RECALIBRATE_KIND};
 
 /// Small but event-rich configuration for the always-on tests (runs in
 /// debug within a few seconds).
@@ -110,8 +110,10 @@ fn churn_exercises_all_delta_variants_with_cache_hits() {
     let m = &rep.metrics;
     for kind in DELTA_KINDS {
         // Recalibrations only fire under a calibrated bound (covered by
-        // calibrated_bound_shrinks_margins_over_a_quiet_run).
-        if kind == RECALIBRATE_KIND {
+        // calibrated_bound_shrinks_margins_over_a_quiet_run); fault kinds
+        // only fire under an enabled fault schedule (covered by the
+        // faults suite).
+        if kind == RECALIBRATE_KIND || FAULT_KINDS.contains(&kind) {
             continue;
         }
         assert!(

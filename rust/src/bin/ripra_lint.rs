@@ -1,0 +1,79 @@
+//! `ripra-lint` — static analysis for the repo's determinism,
+//! RNG-stream, structural-contract, and robustness invariants.
+//!
+//! Usage:
+//!
+//! ```text
+//! ripra-lint [--root DIR] [--json PATH] [--quiet]
+//! ```
+//!
+//! * `--root DIR`  source tree to scan (default: `rust/src` under the
+//!   crate root, so `cargo run --release --bin ripra-lint` works from
+//!   anywhere in the repo).
+//! * `--json PATH` write the machine-readable report there.
+//! * `--quiet`     suppress the human table (exit code still reflects
+//!   the result).
+//!
+//! Exit codes: `0` clean, `1` active (unsuppressed) violations,
+//! `2` usage or I/O error.  See EXPERIMENTS.md §Static analysis for the
+//! rule catalog and the `lint:allow` policy.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use ripra::lint::{self, report};
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut json_path: Option<PathBuf> = None;
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return usage("--root needs a directory"),
+            },
+            "--json" => match args.next() {
+                Some(v) => json_path = Some(PathBuf::from(v)),
+                None => return usage("--json needs a path"),
+            },
+            "--quiet" => quiet = true,
+            "--help" | "-h" => {
+                println!("usage: ripra-lint [--root DIR] [--json PATH] [--quiet]");
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+    let root = root
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust").join("src"));
+    let report = match lint::analyze_root(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("ripra-lint: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if let Some(path) = &json_path {
+        let json = report::to_json(&report).to_string_pretty();
+        if let Err(e) = std::fs::write(path, json + "\n") {
+            eprintln!("ripra-lint: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    if !quiet {
+        print!("{}", report::table(&report));
+    }
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("ripra-lint: {msg}");
+    eprintln!("usage: ripra-lint [--root DIR] [--json PATH] [--quiet]");
+    ExitCode::from(2)
+}

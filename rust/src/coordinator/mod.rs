@@ -23,7 +23,9 @@
 //! point and flushes full batches immediately or on a window timeout
 //! (vLLM-style dynamic batching); remainders run at batch 1.
 
-use std::collections::HashMap;
+// lint:allow-file(wall-clock): real serving-latency harness — measured
+// wall times are the *output* here, not a hidden input to planner JSON.
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -241,7 +243,9 @@ pub fn serve(
     let num_blocks_b = num_blocks;
     let done_tx_b = done_tx.clone();
     let batcher = std::thread::spawn(move || {
-        let mut queues: HashMap<usize, Vec<FeatureMsg>> = HashMap::new();
+        // BTreeMap so flush order on disconnect / oldest-deadline scans
+        // visit partition points in a fixed order (determinism).
+        let mut queues: BTreeMap<usize, Vec<FeatureMsg>> = BTreeMap::new();
         let flush = |m: usize, q: &mut Vec<FeatureMsg>, want: usize| {
             while !q.is_empty() {
                 let take = if q.len() >= want { want } else { 1 };

@@ -3,6 +3,8 @@
 //! cache, and dispatches every policy through a single `plan` entrypoint
 //! plus an incremental `replan` path.
 
+// lint:allow-file(wall-clock): this is THE allowlisted wall-time source —
+// Diagnostics.wall_time only; the fleet JSON exporter excludes it.
 use std::time::Instant;
 
 use crate::optim::types::{Plan, Policy as MarginPolicy, Scenario};

@@ -352,6 +352,8 @@ impl Fnv {
     fn q(&mut self, x: f64, quantum: f64) {
         let q = (x / quantum).round();
         // Canonicalize -0.0 and keep non-finite values distinct.
+        // lint:allow(float-eq): exact ±0.0 canonicalization for the
+        // fingerprint — a tolerance here would alias distinct scenarios.
         let bits = if q == 0.0 { 0u64 } else { q.to_bits() };
         self.bytes(&bits.to_le_bytes());
     }

@@ -7,6 +7,8 @@
 //! hardware + CPU-PJRT artifacts), so the *shapes* are the reproduction
 //! target: who wins, by what factor, where the crossovers sit.
 
+// lint:allow-file(wall-clock): the paper-protocol timing table measures
+// solver wall time on purpose (Table "runtime" column).
 pub mod table;
 
 use std::path::Path;

@@ -483,7 +483,10 @@ impl Backend {
                 StepResult::Applied(applied)
             }
             Backend::Service(svc) => {
+                // lint:allow(panic-path): the driver submits exactly one
+                // delta per drain, so the queue can never back-pressure.
                 svc.submit(FLEET_TENANT, delta.clone()).expect("driver drains every event");
+                // lint:allow(panic-path): one submit ⇒ exactly one result
                 let out = svc.drain().pop().expect("one request per drain");
                 match out.disposition {
                     Disposition::Applied => StepResult::Applied(Applied {
@@ -519,6 +522,7 @@ impl Backend {
         match self {
             Backend::Serial { outcome, .. } => outcome.plan.clone(),
             Backend::Service(svc) => {
+                // lint:allow(panic-path): tenant admitted in Backend::new
                 svc.assembled_plan(FLEET_TENANT).expect("fleet tenant admitted")
             }
         }
@@ -537,6 +541,7 @@ impl Backend {
         match self {
             Backend::Serial { outcome, .. } => outcome.clone(),
             Backend::Service(svc) => PlanOutcome {
+                // lint:allow(panic-path): tenant admitted in Backend::new
                 plan: svc.assembled_plan(FLEET_TENANT).expect("fleet tenant admitted"),
                 energy: svc.tenant_energy(FLEET_TENANT).unwrap_or(0.0),
                 policy: Policy::Robust,
@@ -675,8 +680,10 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
     // ScenarioDelta::Bound recalibrations.
     let mut bound = opts.bound;
     let mut calib: Option<Calibration> = match opts.bound {
-        RiskBound::Calibrated { .. } => {
-            Some(Calibration::with_scale(opts.bound.scale().expect("calibrated carries a scale")))
+        RiskBound::Calibrated { scale_q } => {
+            // Dequantize from the variant's own payload (same arithmetic
+            // as `RiskBound::scale`), so the arm cannot panic.
+            Some(Calibration::with_scale(scale_q as f64 * crate::risk::SCALE_QUANTUM))
         }
         _ => None,
     };
@@ -820,6 +827,8 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                 Some(("bandwidth", ScenarioDelta::TotalBandwidth(b), None, true))
             }
             FleetEvent::EdgeDown => {
+                // lint:allow(panic-path): edge events are only scheduled
+                // when fault streams were forked at boot
                 let fs = fstreams.as_mut().expect("edge events only exist with faults on");
                 queue.push(t + fs.outage_len_s(&opts.faults), FleetEvent::EdgeUp);
                 edge_down = true;
@@ -831,6 +840,8 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                 Some(("edge-down", ScenarioDelta::TotalBandwidth(b), None, true))
             }
             FleetEvent::EdgeUp => {
+                // lint:allow(panic-path): edge events are only scheduled
+                // when fault streams were forked at boot
                 let fs = fstreams.as_mut().expect("edge events only exist with faults on");
                 queue.push(t + fs.outage_wait_s(&opts.faults), FleetEvent::EdgeDown);
                 edge_down = false;
@@ -863,6 +874,8 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                 None
             }
             FleetEvent::Blackout => {
+                // lint:allow(panic-path): blackouts are only scheduled
+                // when fault streams were forked at boot
                 let fs = fstreams.as_mut().expect("blackout events only exist with faults on");
                 queue.push(t + fs.blackout_wait_s(&opts.faults), FleetEvent::Blackout);
                 let i = fs.blackout_victim(states.len());
@@ -1015,6 +1028,8 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                 // changes.
                 match &delta {
                     ScenarioDelta::Join(_) => {
+                        // lint:allow(panic-path): Join deltas are built
+                        // with their joiner a few lines above
                         let st = joiner.expect("join events carry their device state");
                         let id = st.id;
                         if dep_rate > 0.0 {
@@ -1023,6 +1038,7 @@ pub fn run(opts: &FleetOptions) -> Result<FleetReport, PlanError> {
                         }
                         states.push(st);
                         if let Some(dt) = fade_dt {
+                            // lint:allow(panic-path): pushed just above
                             let stagger = states.last_mut().expect("just pushed").rng.f64() * dt;
                             queue.push(t + stagger, FleetEvent::Fade { id });
                         }

@@ -61,6 +61,11 @@
 //!   when an outage ends.
 //! * [`coordinator`] / [`runtime`] — the serving runtime executing plans
 //!   on AOT-compiled PJRT artifacts.
+//! * [`lint`] — `ripra-lint`, the repo's own static-analysis pass: the
+//!   determinism / RNG-stream / structural-contract / robustness
+//!   conventions the modules above rely on, turned into machine-checked
+//!   rules that run in CI even when the test suite cannot (rule catalog
+//!   in EXPERIMENTS.md §Static analysis).
 //! * [`figures`] — regenerates every paper table/figure; [`util`] holds
 //!   the offline substrate (PRNG, stats, JSON, bench harness, scoped
 //!   thread fan-out).
@@ -76,6 +81,7 @@ pub mod fault;
 pub mod figures;
 pub mod fleet;
 pub mod linalg;
+pub mod lint;
 pub mod models;
 pub mod optim;
 pub mod profile;

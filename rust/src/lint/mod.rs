@@ -1,0 +1,157 @@
+//! `ripra-lint`: repo-local static analysis for the invariants the test
+//! suite cannot see (and, on toolchain-less containers, cannot run).
+//!
+//! The planner's headline guarantee — same seed ⇒ byte-identical JSON at
+//! any thread/shard count, fault-free traces unchanged by fault-code
+//! additions — rests on conventions that are easy to break silently: a
+//! stray `Instant` in a serialized path, a `HashMap` iteration feeding an
+//! aggregate, a new RNG stream forked *before* existing ones, an event
+//! kind missing from the metrics registries.  This module turns those
+//! conventions into machine-checked rules.
+//!
+//! * [`analyze_root`] walks a source tree (normally `rust/src`) and runs
+//!   every rule; the `ripra-lint` binary wraps it for CI.
+//! * [`analyze_files`] runs the same rules over in-memory files so tests
+//!   can feed fixture snippets.
+//! * Suppression is only via `// lint:allow(rule-id): reason` (same or
+//!   next line), `// lint:allow-file(rule-id): reason` (whole file) — a
+//!   missing reason is itself a violation (`bad-allow`), and allows that
+//!   suppress nothing are reported as stale.
+//!
+//! Rule catalog and policy: EXPERIMENTS.md §Static analysis.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+pub use rules::{RuleInfo, RULES};
+
+/// An in-memory file for [`analyze_files`] (fixture tests).
+pub struct LintFile {
+    /// Root-relative `/`-separated path, e.g. `fleet/driver.rs`.  Rules
+    /// with path registries (robustness modules, fork streams) key off
+    /// this.
+    pub path: String,
+    pub text: String,
+}
+
+/// One rule hit, before or after suppression.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub family: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+    /// Covered by a well-formed `lint:allow`.
+    pub suppressed: bool,
+    /// The allow's reason, when suppressed.
+    pub reason: Option<String>,
+}
+
+/// A well-formed allow that suppressed nothing (warning, not failure —
+/// it usually means the underlying code was fixed).
+#[derive(Clone, Debug)]
+pub struct StaleAllow {
+    pub path: String,
+    pub line: usize,
+    pub rules: String,
+}
+
+/// Full lint result.
+pub struct Report {
+    pub files: usize,
+    pub violations: Vec<Violation>,
+    pub stale_allows: Vec<StaleAllow>,
+}
+
+impl Report {
+    /// Unsuppressed violations — what fails CI.
+    pub fn active(&self) -> Vec<&Violation> {
+        self.violations.iter().filter(|v| !v.suppressed).collect()
+    }
+
+    pub fn suppressed_count(&self) -> usize {
+        self.violations.iter().filter(|v| v.suppressed).count()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.active().is_empty()
+    }
+}
+
+/// Run every rule over in-memory files and apply allow-suppression.
+pub fn analyze_files(files: &[LintFile]) -> Report {
+    let parsed: Vec<scan::SourceFile> =
+        files.iter().map(|f| scan::SourceFile::parse(&f.path, &f.text)).collect();
+    let mut violations = rules::run_all(&parsed);
+    // Deterministic report order regardless of rule execution order.
+    violations.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    let mut stale_allows = Vec::new();
+    for sf in &parsed {
+        let mut used = vec![false; sf.allows.len()];
+        for v in violations.iter_mut() {
+            if v.path != sf.path || v.suppressed || v.rule == "bad-allow" {
+                continue;
+            }
+            for (ai, allow) in sf.allows.iter().enumerate() {
+                if allow.malformed.is_some() || !allow.rules.iter().any(|r| r == v.rule) {
+                    continue;
+                }
+                if allow.file_level || allow.target == v.line {
+                    v.suppressed = true;
+                    v.reason = Some(allow.reason.clone());
+                    used[ai] = true;
+                    break;
+                }
+            }
+        }
+        for (ai, allow) in sf.allows.iter().enumerate() {
+            let well_formed = allow.malformed.is_none()
+                && allow.rules.iter().all(|r| rules::rule_family(r).is_some());
+            if well_formed && !used[ai] {
+                stale_allows.push(StaleAllow {
+                    path: sf.path.clone(),
+                    line: allow.line,
+                    rules: allow.rules.join(", "),
+                });
+            }
+        }
+    }
+    Report { files: parsed.len(), violations, stale_allows }
+}
+
+/// Walk `root` (normally `rust/src`), parse every `.rs` file, and run
+/// the rules.  Files are visited in sorted order so reports are
+/// byte-stable.
+pub fn analyze_root(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    walk(root, root, &mut files)?;
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(analyze_files(&files))
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<LintFile>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            walk(root, &path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(LintFile { path: rel, text: fs::read_to_string(&path)? });
+        }
+    }
+    Ok(())
+}

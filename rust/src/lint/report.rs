@@ -1,0 +1,91 @@
+//! Report rendering for `ripra-lint`: machine-readable JSON (CI
+//! artifact) and a human-readable table.
+
+use crate::util::json::Json;
+
+use super::{Report, Violation};
+
+/// Machine-readable report.  Key order is fixed (the JSON writer
+/// preserves insertion order) so the artifact is byte-stable.
+pub fn to_json(report: &Report) -> Json {
+    let violations: Vec<Json> = report.violations.iter().map(violation_json).collect();
+    let stale: Vec<Json> = report
+        .stale_allows
+        .iter()
+        .map(|s| {
+            Json::Obj(vec![
+                ("path".to_string(), Json::Str(s.path.clone())),
+                ("line".to_string(), Json::Num(s.line as f64)),
+                ("rules".to_string(), Json::Str(s.rules.clone())),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("tool".to_string(), Json::Str("ripra-lint".to_string())),
+        ("files".to_string(), Json::Num(report.files as f64)),
+        ("active".to_string(), Json::Num(report.active().len() as f64)),
+        ("suppressed".to_string(), Json::Num(report.suppressed_count() as f64)),
+        ("clean".to_string(), Json::Bool(report.is_clean())),
+        ("violations".to_string(), Json::Arr(violations)),
+        ("stale_allows".to_string(), Json::Arr(stale)),
+    ])
+}
+
+fn violation_json(v: &Violation) -> Json {
+    let reason = match &v.reason {
+        Some(r) => Json::Str(r.clone()),
+        None => Json::Null,
+    };
+    Json::Obj(vec![
+        ("rule".to_string(), Json::Str(v.rule.to_string())),
+        ("family".to_string(), Json::Str(v.family.to_string())),
+        ("path".to_string(), Json::Str(v.path.clone())),
+        ("line".to_string(), Json::Num(v.line as f64)),
+        ("message".to_string(), Json::Str(v.message.clone())),
+        ("suppressed".to_string(), Json::Bool(v.suppressed)),
+        ("reason".to_string(), reason),
+    ])
+}
+
+/// Human table: active violations first, then a one-line summary (and
+/// stale-allow warnings when present).
+pub fn table(report: &Report) -> String {
+    let mut out = String::new();
+    let active = report.active();
+    if !active.is_empty() {
+        let loc_w = active
+            .iter()
+            .map(|v| v.path.len() + 1 + digits(v.line))
+            .max()
+            .unwrap_or(8)
+            .max("location".len());
+        let rule_w = active.iter().map(|v| v.rule.len()).max().unwrap_or(4).max("rule".len());
+        out.push_str(&format!("{:<loc_w$}  {:<rule_w$}  message\n", "location", "rule"));
+        for v in &active {
+            let loc = format!("{}:{}", v.path, v.line);
+            out.push_str(&format!("{loc:<loc_w$}  {:<rule_w$}  {}\n", v.rule, v.message));
+        }
+    }
+    for s in &report.stale_allows {
+        out.push_str(&format!(
+            "warning: stale lint:allow({}) at {}:{} suppresses nothing\n",
+            s.rules, s.path, s.line
+        ));
+    }
+    out.push_str(&format!(
+        "ripra-lint: {} file(s), {} active violation(s), {} suppressed\n",
+        report.files,
+        active.len(),
+        report.suppressed_count()
+    ));
+    out
+}
+
+fn digits(mut n: usize) -> usize {
+    let mut d = 1;
+    while n >= 10 {
+        n /= 10;
+        d += 1;
+    }
+    d
+}

@@ -1,0 +1,666 @@
+//! Rule implementations and repo registries for `ripra-lint`.
+//!
+//! Four families (see EXPERIMENTS.md §Static analysis for the catalog):
+//!
+//! * **determinism** — `wall-clock`, `hash-order`, `ambient-rng`,
+//!   `rng-truncation`: nothing order- or clock-dependent may feed the
+//!   serialized outputs that the byte-identical-JSON contract covers.
+//! * **rng-stream** — `fork-tag-dup`, `fork-order`: literal
+//!   [`Rng::fork`](crate::util::rng::Rng::fork) tags are unique
+//!   repo-wide and appear in the registered declaration order, so new
+//!   streams never perturb pre-existing ones.
+//! * **structural** — `event-kinds`, `error-display`, `cli-flags`:
+//!   cross-file contracts (event-kind registries, `Display` coverage,
+//!   CLI flag parity) that runtime tests cannot see when they cannot
+//!   run.
+//! * **robustness** — `panic-path`, `float-eq`: library modules return
+//!   errors instead of panicking and never compare floats with `==`.
+//!
+//! Plus the meta rule `bad-allow` for malformed suppression comments.
+//! All checks are lexical (token scans over comment/string-stripped
+//! lines — see [`scan`](super::scan)), which is exactly as much parser
+//! as the repo's conventions need.
+
+use super::scan::{brace_span, SourceFile};
+use super::Violation;
+
+/// Catalog entry for one rule.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub family: &'static str,
+    pub desc: &'static str,
+}
+
+/// The full rule catalog (ids are what `lint:allow(...)` names).
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "wall-clock",
+        family: "determinism",
+        desc: "Instant/SystemTime outside the allowlisted bench / Diagnostics.wall_time paths",
+    },
+    RuleInfo {
+        id: "hash-order",
+        family: "determinism",
+        desc: "HashMap/HashSet (iteration order feeds JSON or aggregates); use BTreeMap",
+    },
+    RuleInfo {
+        id: "ambient-rng",
+        family: "determinism",
+        desc: "ambient randomness (thread_rng/rand::random/OsRng); all draws flow from the seed",
+    },
+    RuleInfo {
+        id: "rng-truncation",
+        family: "determinism",
+        desc: "narrowing `as` cast of a raw RNG draw on the same line as next_u64()",
+    },
+    RuleInfo {
+        id: "fork-tag-dup",
+        family: "rng-stream",
+        desc: "literal Rng fork tag reused; every stream tag must be unique repo-wide",
+    },
+    RuleInfo {
+        id: "fork-order",
+        family: "rng-stream",
+        desc: "literal fork tags must match the registered declaration order (new streams last)",
+    },
+    RuleInfo {
+        id: "event-kinds",
+        family: "structural",
+        desc: "FleetEvent variants / kind() tags / DELTA_KINDS / FAULT_KINDS out of sync",
+    },
+    RuleInfo {
+        id: "error-display",
+        family: "structural",
+        desc: "error enum variant missing from its Display impl",
+    },
+    RuleInfo {
+        id: "cli-flags",
+        family: "structural",
+        desc: "CLI_FLAGS entry with no matching parse arm in main.rs",
+    },
+    RuleInfo {
+        id: "panic-path",
+        family: "robustness",
+        desc: "unwrap()/expect()/panic! in a library module; return an error instead",
+    },
+    RuleInfo {
+        id: "float-eq",
+        family: "robustness",
+        desc: "float compared with ==/!= against a literal outside pinning tests",
+    },
+    RuleInfo {
+        id: "bad-allow",
+        family: "meta",
+        desc: "malformed lint:allow comment (unknown rule id, missing reason, bad syntax)",
+    },
+];
+
+pub fn rule_family(id: &str) -> Option<&'static str> {
+    RULES.iter().find(|r| r.id == id).map(|r| r.family)
+}
+
+/// Modules held to the robustness rules (`panic-path`, `float-eq`).
+/// `main.rs`, tests, benches, and the lint itself are exempt.
+pub const CHECKED_MODULES: &[&str] =
+    &["optim/", "engine/", "fleet/", "service/", "risk/", "fault/", "util/"];
+
+/// Files exempt from `wall-clock` and `panic-path` by design: the
+/// micro-bench harness measures wall time and aborts on setup failure.
+pub const BENCH_FILES: &[&str] = &["util/bench.rs"];
+
+/// Canonical RNG stream order.  Appending a stream is fine; inserting
+/// or reordering shifts every later stream and silently changes traces,
+/// which is exactly what `fork-order` exists to catch.
+pub const FORK_STREAMS: &[(&str, &[u64])] = &[
+    ("fleet/driver.rs", &[0xA1, 0xDE, 0x10C, 0xC4, 0x5E, 0xB0]),
+    ("fault/mod.rs", &[0xFA01, 0xFA02, 0xFA03, 0xFA04]),
+];
+
+/// `FleetEvent::kind()` tags that are renamed before reaching the
+/// metrics registries (everything else must appear verbatim in
+/// `DELTA_KINDS`).
+pub const EVENT_DELTA_MAP: &[(&str, &[&str])] = &[
+    ("arrival", &["join"]),
+    ("departure", &["leave"]),
+    ("fade", &["channel"]),
+    ("renegotiate", &["deadline", "risk"]),
+];
+
+/// Error types whose `Display` must cover every variant (structs only
+/// need the impl to exist).
+pub const ERROR_DISPLAY: &[(&str, &str)] = &[
+    ("PlanError", "engine/outcome.rs"),
+    ("ServiceError", "service/mod.rs"),
+    ("BaselineError", "optim/baselines.rs"),
+];
+
+/// Files declaring a `CLI_FLAGS` registry that `main.rs` must parse.
+pub const CLI_FLAG_TABLES: &[&str] = &["engine/request.rs", "fleet/driver.rs"];
+
+fn in_checked_module(path: &str) -> bool {
+    CHECKED_MODULES.iter().any(|m| path.starts_with(m)) && !BENCH_FILES.contains(&path)
+}
+
+/// Token occurrence with identifier-boundary checks on both ends (only
+/// where the token itself starts/ends with an identifier char).
+fn has_token(line: &str, token: &str) -> bool {
+    let ident = |c: char| c.is_alphanumeric() || c == '_';
+    let first = token.chars().next().map(ident).unwrap_or(false);
+    let last = token.chars().last().map(ident).unwrap_or(false);
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(token) {
+        let at = from + pos;
+        let ok_before = !first || !line[..at].chars().next_back().map(ident).unwrap_or(false);
+        let after = line[at + token.len()..].chars().next();
+        let ok_after = !last || !after.map(ident).unwrap_or(false);
+        if ok_before && ok_after {
+            return true;
+        }
+        from = at + token.len();
+    }
+    false
+}
+
+/// Run every rule over the parsed files; returns raw (pre-suppression)
+/// violations.
+pub fn run_all(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for sf in files {
+        per_line_rules(sf, &mut out);
+    }
+    fork_rules(files, &mut out);
+    event_kind_rules(files, &mut out);
+    error_display_rules(files, &mut out);
+    cli_flag_rules(files, &mut out);
+    out
+}
+
+fn push(out: &mut Vec<Violation>, rule: &'static str, sf: &SourceFile, line: usize, msg: String) {
+    out.push(Violation {
+        rule,
+        family: rule_family(rule).unwrap_or("meta"),
+        path: sf.path.clone(),
+        line,
+        message: msg,
+        suppressed: false,
+        reason: None,
+    });
+}
+
+fn per_line_rules(sf: &SourceFile, out: &mut Vec<Violation>) {
+    let checked = in_checked_module(&sf.path);
+    let bench = BENCH_FILES.contains(&sf.path.as_str());
+    for (idx, line) in sf.code.iter().enumerate() {
+        let lno = idx + 1;
+        let test = sf.is_test_line(lno);
+        // determinism -------------------------------------------------
+        if !test && !bench {
+            for tok in ["Instant", "SystemTime"] {
+                if has_token(line, tok) {
+                    push(out, "wall-clock", sf, lno, format!("`{tok}` in non-test code"));
+                }
+            }
+        }
+        if !test {
+            for tok in ["HashMap", "HashSet", "RandomState"] {
+                if has_token(line, tok) {
+                    push(out, "hash-order", sf, lno, format!("`{tok}` in non-test code"));
+                }
+            }
+            if has_token(line, "next_u64(") && narrowing_cast(line) {
+                push(
+                    out,
+                    "rng-truncation",
+                    sf,
+                    lno,
+                    "narrowing cast of a raw RNG draw".to_string(),
+                );
+            }
+        }
+        for tok in ["thread_rng", "rand::random", "from_entropy", "OsRng", "getrandom"] {
+            if has_token(line, tok) {
+                push(out, "ambient-rng", sf, lno, format!("ambient randomness `{tok}`"));
+            }
+        }
+        // robustness --------------------------------------------------
+        if checked && !test {
+            for tok in [".unwrap()", ".expect(", "panic!(", "todo!(", "unimplemented!("] {
+                if has_token(line, tok) {
+                    push(out, "panic-path", sf, lno, format!("`{tok}` in a library module"));
+                }
+            }
+            if let Some(op) = float_literal_cmp(line) {
+                push(out, "float-eq", sf, lno, format!("float literal compared with `{op}`"));
+            }
+        }
+        // meta --------------------------------------------------------
+    }
+    for allow in &sf.allows {
+        if let Some(msg) = &allow.malformed {
+            push(out, "bad-allow", sf, allow.line, msg.clone());
+        } else {
+            for id in &allow.rules {
+                if rule_family(id).is_none() {
+                    push(out, "bad-allow", sf, allow.line, format!("unknown rule id `{id}`"));
+                } else if id == "bad-allow" {
+                    let msg = "bad-allow is not suppressible".to_string();
+                    push(out, "bad-allow", sf, allow.line, msg);
+                }
+            }
+        }
+    }
+}
+
+/// `... as usize` / `as u32` / ... on the line (narrowing targets only;
+/// `as f64` is how draws become uniforms and is fine).
+fn narrowing_cast(line: &str) -> bool {
+    ["usize", "u32", "u16", "u8", "i64", "i32", "i16", "i8", "isize"]
+        .iter()
+        .any(|t| has_token(line, &format!("as {t}")))
+}
+
+/// Does the line compare a float literal with `==` / `!=`?  Returns the
+/// operator for the message.
+fn float_literal_cmp(line: &str) -> Option<&'static str> {
+    let b: Vec<char> = line.chars().collect();
+    for i in 0..b.len().saturating_sub(1) {
+        let op = match (b[i], b[i + 1]) {
+            ('=', '=') => "==",
+            ('!', '=') => "!=",
+            _ => continue,
+        };
+        // Exclude <= >= == != += etc. around the match.
+        if i > 0 && is_op_char(b[i - 1]) {
+            continue;
+        }
+        if b.get(i + 2) == Some(&'=') {
+            continue;
+        }
+        let left: String = b[..i].iter().collect();
+        let right: String = b[i + 2..].iter().collect();
+        if is_float_literal(last_token(&left)) || is_float_literal(first_token(&right)) {
+            return Some(op);
+        }
+    }
+    None
+}
+
+fn is_op_char(c: char) -> bool {
+    "<>=!+-*/%&|^".contains(c)
+}
+
+fn last_token(s: &str) -> &str {
+    let t = s.trim_end();
+    let cut = t
+        .rfind(|c: char| !(c.is_alphanumeric() || c == '_' || c == '.'))
+        .map(|p| p + 1)
+        .unwrap_or(0);
+    &t[cut..]
+}
+
+fn first_token(s: &str) -> &str {
+    let t = s.trim_start();
+    let cut = t
+        .find(|c: char| !(c.is_alphanumeric() || c == '_' || c == '.'))
+        .unwrap_or(t.len());
+    &t[..cut]
+}
+
+fn is_float_literal(tok: &str) -> bool {
+    !tok.is_empty()
+        && tok.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(false)
+        && tok.contains('.')
+        && tok.parse::<f64>().is_ok()
+}
+
+// --- rng-stream family ---------------------------------------------------
+
+/// Literal fork tags in declaration order: `(line, tag)`.
+fn literal_forks(sf: &SourceFile) -> Vec<(usize, u64)> {
+    let mut tags = Vec::new();
+    for (idx, line) in sf.code.iter().enumerate() {
+        if sf.is_test_line(idx + 1) {
+            continue;
+        }
+        let mut from = 0;
+        while let Some(pos) = line[from..].find(".fork(") {
+            let at = from + pos + ".fork(".len();
+            from = at;
+            let Some(close) = line[at..].find(')') else { continue };
+            let arg = line[at..at + close].trim();
+            let parsed = if let Some(hex) = arg.strip_prefix("0x") {
+                u64::from_str_radix(&hex.replace('_', ""), 16).ok()
+            } else {
+                arg.replace('_', "").parse::<u64>().ok()
+            };
+            if let Some(tag) = parsed {
+                tags.push((idx + 1, tag));
+            }
+        }
+    }
+    tags
+}
+
+fn fork_rules(files: &[SourceFile], out: &mut Vec<Violation>) {
+    let mut seen: Vec<(u64, String)> = Vec::new();
+    for sf in files {
+        let forks = literal_forks(sf);
+        for &(line, tag) in &forks {
+            if let Some((_, first)) = seen.iter().find(|(t, _)| *t == tag) {
+                push(
+                    out,
+                    "fork-tag-dup",
+                    sf,
+                    line,
+                    format!("fork tag {tag:#x} already used in {first}"),
+                );
+            } else {
+                seen.push((tag, sf.path.clone()));
+            }
+        }
+        let registered = FORK_STREAMS.iter().find(|(p, _)| *p == sf.path);
+        match registered {
+            Some((_, order)) => {
+                let got: Vec<u64> = forks.iter().map(|&(_, t)| t).collect();
+                if got.as_slice() != *order {
+                    let line = forks.first().map(|&(l, _)| l).unwrap_or(1);
+                    push(
+                        out,
+                        "fork-order",
+                        sf,
+                        line,
+                        format!(
+                            "fork tags {} do not match the registered stream order {} \
+                             (append new streams after all existing ones and update \
+                             FORK_STREAMS)",
+                            fmt_tags(&got),
+                            fmt_tags(order),
+                        ),
+                    );
+                }
+            }
+            None => {
+                for &(line, tag) in &forks {
+                    push(
+                        out,
+                        "fork-order",
+                        sf,
+                        line,
+                        format!(
+                            "literal fork tag {tag:#x} in a file with no FORK_STREAMS \
+                             registration"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn fmt_tags(tags: &[u64]) -> String {
+    let parts: Vec<String> = tags.iter().map(|t| format!("{t:#x}")).collect();
+    format!("[{}]", parts.join(", "))
+}
+
+// --- structural family ---------------------------------------------------
+
+fn by_path<'a>(files: &'a [SourceFile], path: &str) -> Option<&'a SourceFile> {
+    files.iter().find(|f| f.path == path)
+}
+
+/// Variant names of `enum <name>` (stripped view; attr lines skipped).
+fn enum_variants(sf: &SourceFile, name: &str) -> Option<(usize, Vec<String>)> {
+    let decl = sf
+        .code
+        .iter()
+        .position(|l| has_token(l, &format!("enum {name}")))?;
+    let (open, close) = brace_span(&sf.code, decl + 1)?;
+    let mut variants = Vec::new();
+    let mut depth = 0i64;
+    for lno in open..=close {
+        let line = sf.code_line(lno);
+        let at_top = depth == 1;
+        for c in line.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        let trimmed = line.trim();
+        let candidate = if lno == open {
+            trimmed.split_once('{').map(|(_, rest)| rest.trim()).unwrap_or("")
+        } else if at_top {
+            trimmed
+        } else {
+            ""
+        };
+        if candidate.is_empty() || candidate.starts_with("#[") {
+            continue;
+        }
+        let ident: String = candidate
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if ident.chars().next().map(|c| c.is_ascii_uppercase()).unwrap_or(false) {
+            variants.push(ident);
+        }
+    }
+    Some((decl + 1, variants))
+}
+
+/// String literals of a `const NAME: [&str; N] = [...]` registry, plus
+/// the declared arity when present.
+fn str_array(sf: &SourceFile, name: &str) -> Option<(usize, Vec<String>, Option<usize>)> {
+    let decl = sf
+        .code
+        .iter()
+        .position(|l| has_token(l, name) && l.contains("const"))?;
+    let arity = {
+        let code = sf.code_line(decl + 1);
+        code.split_once("[&str;")
+            .and_then(|(_, rest)| rest.split(']').next())
+            .and_then(|n| n.trim().parse::<usize>().ok())
+    };
+    let mut strings = Vec::new();
+    for lno in decl + 1..=sf.raw.len() {
+        strings.extend(quoted_strings(&sf.raw[lno - 1]));
+        // `];` closes the initializer (the `;` inside `[&str; N]` does
+        // not match).
+        if sf.code_line(lno).contains("];") {
+            break;
+        }
+    }
+    Some((decl + 1, strings, arity))
+}
+
+/// Double-quoted literals in a raw line (no escape handling — registry
+/// tags are plain idents).
+fn quoted_strings(raw: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut parts = raw.split('"');
+    // Odd-indexed segments are inside quotes.
+    while let (Some(_), Some(inside)) = (parts.next(), parts.next()) {
+        out.push(inside.to_string());
+    }
+    out
+}
+
+/// `FleetEvent::kind()` arms: variant name → tag string.
+fn kind_arms(sf: &SourceFile) -> Vec<(String, String)> {
+    let Some(decl) = sf.code.iter().position(|l| l.contains("fn kind")) else {
+        return Vec::new();
+    };
+    let Some((open, close)) = brace_span(&sf.code, decl + 1) else {
+        return Vec::new();
+    };
+    let mut arms = Vec::new();
+    for lno in open..=close {
+        let code = sf.code_line(lno);
+        if let Some(pos) = code.find("FleetEvent::") {
+            let after = &code[pos + "FleetEvent::".len()..];
+            let variant: String = after
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            // The tag is the first string literal at or after the arm.
+            for tag_line in lno..=close {
+                if let Some(tag) = quoted_strings(&sf.raw[tag_line - 1]).into_iter().next() {
+                    arms.push((variant, tag));
+                    break;
+                }
+            }
+        }
+    }
+    arms
+}
+
+fn event_kind_rules(files: &[SourceFile], out: &mut Vec<Violation>) {
+    // Fixture sets without the fleet files have nothing to check.
+    let Some(events) = by_path(files, "fleet/events.rs") else { return };
+    let Some(metrics) = by_path(files, "fleet/metrics.rs") else { return };
+    let Some((decl, variants)) = enum_variants(events, "FleetEvent") else {
+        push(out, "event-kinds", events, 1, "enum FleetEvent not found".into());
+        return;
+    };
+    let arms = kind_arms(events);
+    let deltas = str_array(metrics, "DELTA_KINDS");
+    let faults = str_array(metrics, "FAULT_KINDS");
+    for (name, arr, line) in [("DELTA_KINDS", &deltas, 1), ("FAULT_KINDS", &faults, 1)] {
+        match arr {
+            None => push(out, "event-kinds", metrics, line, format!("{name} not found")),
+            Some((decl, strings, arity)) => {
+                if let Some(n) = arity {
+                    if strings.len() != *n {
+                        push(
+                            out,
+                            "event-kinds",
+                            metrics,
+                            *decl,
+                            format!("{name} declares {n} entries but lists {}", strings.len()),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    let (Some((ddecl, delta_kinds, _)), Some((_, fault_kinds, _))) = (deltas, faults) else {
+        return;
+    };
+    for k in &fault_kinds {
+        if !delta_kinds.contains(k) {
+            push(
+                out,
+                "event-kinds",
+                metrics,
+                ddecl,
+                format!("FAULT_KINDS entry \"{k}\" missing from DELTA_KINDS"),
+            );
+        }
+    }
+    for v in &variants {
+        let Some((_, tag)) = arms.iter().find(|(n, _)| n == v) else {
+            push(
+                out,
+                "event-kinds",
+                events,
+                decl,
+                format!("FleetEvent::{v} has no kind() arm"),
+            );
+            continue;
+        };
+        let mapped = EVENT_DELTA_MAP.iter().find(|(t, _)| t == tag);
+        let targets: Vec<&str> = match mapped {
+            Some((_, ds)) => ds.to_vec(),
+            None => vec![tag.as_str()],
+        };
+        for d in targets {
+            if !delta_kinds.iter().any(|k| k == d) {
+                push(
+                    out,
+                    "event-kinds",
+                    events,
+                    decl,
+                    format!(
+                        "FleetEvent::{v} (kind \"{tag}\") maps to \"{d}\" which is not in \
+                         DELTA_KINDS"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn error_display_rules(files: &[SourceFile], out: &mut Vec<Violation>) {
+    for &(ty, path) in ERROR_DISPLAY {
+        let Some(sf) = by_path(files, path) else { continue };
+        let display_decl = sf.code.iter().position(|l| {
+            l.contains("impl") && l.contains("Display") && has_token(l, &format!("for {ty}"))
+        });
+        let Some(ddecl) = display_decl else {
+            push(out, "error-display", sf, 1, format!("no Display impl for {ty}"));
+            continue;
+        };
+        let Some((open, close)) = brace_span(&sf.code, ddecl + 1) else { continue };
+        // Struct errors (e.g. BaselineError) only need the impl to
+        // exist; enums must cover every variant.
+        if let Some((edecl, variants)) = enum_variants(sf, ty) {
+            for v in &variants {
+                let covered = (open..=close).any(|lno| {
+                    let code = sf.code_line(lno);
+                    has_token(code, &format!("{ty}::{v}")) || has_token(code, &format!("Self::{v}"))
+                });
+                if !covered {
+                    push(
+                        out,
+                        "error-display",
+                        sf,
+                        edecl,
+                        format!("{ty}::{v} is not covered in the Display impl"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn cli_flag_rules(files: &[SourceFile], out: &mut Vec<Violation>) {
+    let Some(main) = by_path(files, "main.rs") else { return };
+    let main_text = main.raw.join("\n");
+    for &path in CLI_FLAG_TABLES {
+        let Some(sf) = by_path(files, path) else { continue };
+        let Some(decl) = sf.code.iter().position(|l| has_token(l, "CLI_FLAGS")) else {
+            push(out, "cli-flags", sf, 1, "CLI_FLAGS registry not found".into());
+            continue;
+        };
+        let mut names: Vec<(usize, String)> = Vec::new();
+        for lno in decl + 1..=sf.raw.len() {
+            let raw = &sf.raw[lno - 1];
+            let mut from = 0;
+            while let Some(pos) = raw[from..].find("name: \"") {
+                let at = from + pos + "name: \"".len();
+                from = at;
+                if let Some(end) = raw[at..].find('"') {
+                    names.push((lno, raw[at..at + end].to_string()));
+                }
+            }
+            if sf.code_line(lno).contains("];") {
+                break;
+            }
+        }
+        if names.is_empty() {
+            push(out, "cli-flags", sf, decl + 1, "CLI_FLAGS lists no flag names".into());
+        }
+        for (lno, name) in names {
+            if !main_text.contains(&format!("\"{name}\"")) {
+                push(
+                    out,
+                    "cli-flags",
+                    sf,
+                    lno,
+                    format!("flag \"--{name}\" has no parse arm in main.rs"),
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,366 @@
+//! Lexical source model for `ripra-lint`.
+//!
+//! The lint deliberately avoids a real Rust parser (no new dependencies):
+//! every rule works on a *stripped* view of the source in which comments,
+//! string literals, and char literals are blanked out (replaced by spaces,
+//! positions preserved), so token scans never fire inside prose or data.
+//! On top of that the scanner tracks which lines live inside
+//! `#[cfg(test)]` / `#[test]` items (rules exempt test code) and parses
+//! the `// lint:allow(...)` suppression comments.
+//!
+//! The model is lexical, not syntactic: it understands nested block
+//! comments, raw strings (`r#"..."#`), and the char-literal/lifetime
+//! ambiguity, which is all the repo's rules need.
+
+/// A parsed `lint:allow` comment (well-formed or not).
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// Rule ids named in the comment.
+    pub rules: Vec<String>,
+    /// Mandatory justification after the `:`.
+    pub reason: String,
+    /// 1-based line of the comment itself.
+    pub line: usize,
+    /// 1-based line the allow applies to: the same line for a trailing
+    /// comment, the next line containing code for a standalone one.
+    /// Ignored for file-level allows.
+    pub target: usize,
+    /// `lint:allow-file(...)` — suppresses the rule for the whole file.
+    pub file_level: bool,
+    /// Set when the comment could not be parsed (missing reason, bad
+    /// syntax); the `bad-allow` rule reports these.
+    pub malformed: Option<String>,
+}
+
+/// One source file with its stripped view and test-span map.
+pub struct SourceFile {
+    /// Path relative to the scan root, `/`-separated (e.g.
+    /// `fleet/driver.rs`).
+    pub path: String,
+    /// Raw source lines (used by extraction helpers that need string
+    /// literal *contents*, e.g. the CLI-flag registry).
+    pub raw: Vec<String>,
+    /// Comment- and literal-stripped lines, same length and column
+    /// positions as `raw`.
+    pub code: Vec<String>,
+    /// `true` for lines inside a `#[cfg(test)]` / `#[test]` item.
+    pub in_test: Vec<bool>,
+    /// All `lint:allow` comments found in the file.
+    pub allows: Vec<Allow>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let raw: Vec<String> = text.lines().map(str::to_string).collect();
+        let (code, comments) = strip(text);
+        debug_assert_eq!(raw.len(), code.len());
+        let in_test = test_spans(&code);
+        let mut allows = Vec::new();
+        for (idx, comment) in comments {
+            if let Some(a) = parse_allow(&comment, idx + 1, &code) {
+                allows.push(a);
+            }
+        }
+        SourceFile { path: path.to_string(), raw, code, in_test, allows }
+    }
+
+    /// Stripped line by 1-based number (empty when out of range).
+    pub fn code_line(&self, line: usize) -> &str {
+        self.code.get(line - 1).map(String::as_str).unwrap_or("")
+    }
+
+    /// Is the 1-based line inside test code?
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.in_test.get(line - 1).copied().unwrap_or(false)
+    }
+}
+
+/// Strip comments and literals.  Returns the stripped lines plus every
+/// `//` comment's text keyed by 0-based line (for allow parsing).
+fn strip(text: &str) -> (Vec<String>, Vec<(usize, String)>) {
+    enum Mode {
+        Code,
+        Block(usize),  // nested depth
+        Str,           // regular "..."
+        RawStr(usize), // r#"..."# with N hashes
+    }
+    let mut out: Vec<String> = Vec::new();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut mode = Mode::Code;
+    for (lno, line) in text.lines().enumerate() {
+        let b: Vec<char> = line.chars().collect();
+        let mut stripped = String::with_capacity(b.len());
+        let mut i = 0;
+        while i < b.len() {
+            match mode {
+                Mode::Code => {
+                    let c = b[i];
+                    if c == '/' && b.get(i + 1) == Some(&'/') {
+                        let ctext: String = b[i..].iter().collect();
+                        comments.push((lno, ctext));
+                        for _ in i..b.len() {
+                            stripped.push(' ');
+                        }
+                        i = b.len();
+                    } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(1);
+                        stripped.push_str("  ");
+                        i += 2;
+                    } else if c == '"' {
+                        // Raw-string openers were consumed at the `r`.
+                        mode = Mode::Str;
+                        stripped.push(' ');
+                        i += 1;
+                    } else if (c == 'r' || c == 'b')
+                        && !prev_is_ident(&b, i)
+                        && raw_open(&b, i).is_some()
+                    {
+                        if let Some((hashes, skip)) = raw_open(&b, i) {
+                            mode = Mode::RawStr(hashes);
+                            for _ in 0..skip {
+                                stripped.push(' ');
+                            }
+                            i += skip;
+                        }
+                    } else if c == '\'' {
+                        match char_literal_len(&b, i) {
+                            Some(len) => {
+                                // Blank the whole literal inline.
+                                for _ in 0..len {
+                                    stripped.push(' ');
+                                    i += 1;
+                                }
+                            }
+                            None => {
+                                // Lifetime: keep the tick, scan on.
+                                stripped.push(c);
+                                i += 1;
+                            }
+                        }
+                    } else {
+                        stripped.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::Block(depth) => {
+                    if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                        mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                        stripped.push_str("  ");
+                        i += 2;
+                    } else if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(depth + 1);
+                        stripped.push_str("  ");
+                        i += 2;
+                    } else {
+                        stripped.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if b[i] == '\\' {
+                        stripped.push_str(&" ".repeat(2.min(b.len() - i)));
+                        i += 2;
+                    } else if b[i] == '"' {
+                        mode = Mode::Code;
+                        stripped.push(' ');
+                        i += 1;
+                    } else {
+                        stripped.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if b[i] == '"' && closes_raw(&b, i, hashes) {
+                        mode = Mode::Code;
+                        for _ in 0..=hashes {
+                            stripped.push(' ');
+                        }
+                        i += 1 + hashes;
+                    } else {
+                        stripped.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // A `\`-escape split across the line end inside Mode::Str is not
+        // handled specially: multi-line strings stay in Str mode, which
+        // is what we want.
+        out.push(stripped);
+    }
+    (out, comments)
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// `r"`, `r#"`, `br"`, `br##"` at position `i` → (hash count, opener len).
+fn raw_open(b: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+fn closes_raw(b: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| b.get(i + k) == Some(&'#'))
+}
+
+/// If position `i` (a `'`) starts a char literal, its total length in
+/// chars (including both quotes); `None` for lifetimes / loop labels.
+fn char_literal_len(b: &[char], i: usize) -> Option<usize> {
+    if b.get(i + 1) == Some(&'\\') {
+        // Escape: find the closing quote.
+        let mut j = i + 2;
+        while j < b.len() && b[j] != '\'' {
+            j += 1;
+        }
+        (j < b.len()).then_some(j + 1 - i)
+    } else if b.get(i + 2) == Some(&'\'') && b.get(i + 1) != Some(&'\'') {
+        Some(3)
+    } else {
+        None
+    }
+}
+
+/// Mark lines inside `#[cfg(test)]` / `#[test]` items by brace counting
+/// on the stripped source.
+fn test_spans(code: &[String]) -> Vec<bool> {
+    let mut flags = vec![false; code.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false; // saw the attribute, waiting for the `{`
+    let mut active: Option<i64> = None; // depth the test item opened at
+    for (idx, line) in code.iter().enumerate() {
+        if pending || active.is_some() {
+            flags[idx] = true;
+        }
+        if line.contains("#[cfg(test)]") || line.contains("#[test]") {
+            if active.is_none() {
+                pending = true;
+            }
+            flags[idx] = true;
+        }
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    if pending && active.is_none() {
+                        active = Some(depth);
+                        pending = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if active == Some(depth) {
+                        active = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    flags
+}
+
+/// Parse one `//` comment for a `lint:allow` directive.  Doc comments
+/// (`///`, `//!`) are prose — documentation may *mention* the directive
+/// syntax without enacting it.
+fn parse_allow(comment: &str, line: usize, code: &[String]) -> Option<Allow> {
+    if comment.starts_with("///") || comment.starts_with("//!") {
+        return None;
+    }
+    let (file_level, rest) = if let Some(r) = comment.split_once("lint:allow-file(") {
+        (true, r.1)
+    } else if let Some(r) = comment.split_once("lint:allow(") {
+        (false, r.1)
+    } else {
+        return None;
+    };
+    let trailing = code
+        .get(line - 1)
+        .map(|c| !c.trim().is_empty())
+        .unwrap_or(false);
+    // A standalone allow covers the next line with actual code, so a
+    // multi-line justification comment between allow and code is fine.
+    let target = if trailing {
+        line
+    } else {
+        let mut t = line + 1;
+        while t <= code.len() && code[t - 1].trim().is_empty() {
+            t += 1;
+        }
+        t
+    };
+    let malformed = |msg: &str| Allow {
+        rules: Vec::new(),
+        reason: String::new(),
+        line,
+        target,
+        file_level,
+        malformed: Some(msg.to_string()),
+    };
+    let Some((ids, tail)) = rest.split_once(')') else {
+        return Some(malformed("missing `)` in lint:allow"));
+    };
+    let rules: Vec<String> = ids
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Some(malformed("lint:allow names no rules"));
+    }
+    let Some(reason) = tail.trim_start().strip_prefix(':') else {
+        return Some(malformed("lint:allow requires `: reason`"));
+    };
+    let reason = reason.trim().to_string();
+    if reason.is_empty() {
+        return Some(malformed("lint:allow reason is empty"));
+    }
+    Some(Allow { rules, reason, line, target, file_level, malformed: None })
+}
+
+/// Find the 1-based line range `[open..=close]` of the brace-delimited
+/// block whose opening `{` is at or after 1-based `start` (inclusive of
+/// the line carrying the `{`).  Returns `None` if no block is found.
+pub fn brace_span(code: &[String], start: usize) -> Option<(usize, usize)> {
+    let mut depth: i64 = 0;
+    let mut open_line = None;
+    for (idx, line) in code.iter().enumerate().skip(start.saturating_sub(1)) {
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    if open_line.is_none() {
+                        open_line = Some(idx + 1);
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    if let Some(open) = open_line {
+                        depth -= 1;
+                        if depth == 0 {
+                            return Some((open, idx + 1));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}

@@ -11,7 +11,9 @@
 //!
 //! All planning routes through the [`ripra::engine`] facade.
 
-use std::collections::HashMap;
+// lint:allow-file(wall-clock): the CLI's human summary line prints wall
+// seconds; nothing serialized (--json output excludes it).
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -108,9 +110,9 @@ fn plan_bool_flags() -> Vec<&'static str> {
 fn parse_flags(
     args: &[String],
     bool_flags: &[&str],
-) -> Result<(Vec<String>, HashMap<String, String>)> {
+) -> Result<(Vec<String>, BTreeMap<String, String>)> {
     let mut pos = Vec::new();
-    let mut flags = HashMap::new();
+    let mut flags = BTreeMap::new();
     let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
         if let Some(key) = a.strip_prefix("--") {
@@ -131,27 +133,27 @@ fn parse_flags(
     Ok((pos, flags))
 }
 
-fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+fn flag_f64(flags: &BTreeMap<String, String>, key: &str, default: f64) -> Result<f64> {
     match flags.get(key) {
         None => Ok(default),
         Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad number {v:?}")),
     }
 }
 
-fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+fn flag_usize(flags: &BTreeMap<String, String>, key: &str, default: usize) -> Result<usize> {
     match flags.get(key) {
         None => Ok(default),
         Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad integer {v:?}")),
     }
 }
 
-fn model_of(flags: &HashMap<String, String>) -> Result<ModelProfile> {
+fn model_of(flags: &BTreeMap<String, String>) -> Result<ModelProfile> {
     let name = flags.get("model").map(String::as_str).unwrap_or("alexnet");
     ModelProfile::by_name(name)
         .ok_or_else(|| anyhow!("unknown model {name:?} (alexnet | resnet152)"))
 }
 
-fn scenario_of(flags: &HashMap<String, String>) -> Result<Scenario> {
+fn scenario_of(flags: &BTreeMap<String, String>) -> Result<Scenario> {
     let model = model_of(flags)?;
     let (b_def, d_def, e_def) = figures::default_setting(&model.name);
     let n = flag_usize(flags, "n", 12)?;
@@ -164,7 +166,7 @@ fn scenario_of(flags: &HashMap<String, String>) -> Result<Scenario> {
 }
 
 /// Parse the shared `--bound` flag (default: the paper's ECR bound).
-fn bound_of(flags: &HashMap<String, String>) -> Result<RiskBound> {
+fn bound_of(flags: &BTreeMap<String, String>) -> Result<RiskBound> {
     let spelling = flags.get("bound").map(String::as_str).unwrap_or("ecr");
     RiskBound::parse(spelling).ok_or_else(|| {
         anyhow!("unknown bound {spelling:?} (ecr | gauss | bernstein | calibrated[:SCALE])")
@@ -172,7 +174,7 @@ fn bound_of(flags: &HashMap<String, String>) -> Result<RiskBound> {
 }
 
 /// Assemble a [`PlanRequest`] from parsed `plan` flags.
-fn plan_request_of(flags: &HashMap<String, String>) -> Result<PlanRequest> {
+fn plan_request_of(flags: &BTreeMap<String, String>) -> Result<PlanRequest> {
     let scenario = scenario_of(flags)?;
     let spelling = flags.get("policy").map(String::as_str).unwrap_or("robust");
     let policy = Policy::parse(spelling).ok_or_else(|| {
@@ -286,7 +288,7 @@ fn cmd_plan(args: &[String]) -> Result<()> {
 /// Assemble [`FleetOptions`] from parsed `simulate` flags.  Defaults add
 /// headroom (bandwidth ×1.25, deadline +20 ms) over the static per-model
 /// setting so device joins stay admissible under churn.
-fn fleet_options_of(flags: &HashMap<String, String>) -> Result<FleetOptions> {
+fn fleet_options_of(flags: &BTreeMap<String, String>) -> Result<FleetOptions> {
     let model = model_of(flags)?;
     let (b_def, d_def, e_def) = figures::default_setting(&model.name);
     let fd = FaultOptions::default();

@@ -8,7 +8,7 @@
 //! translate a manifest model into a `ModelProfile` so the optimizer can
 //! plan directly against the real artifacts.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
@@ -61,7 +61,9 @@ pub struct ManifestModel {
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
-    pub models: HashMap<String, ManifestModel>,
+    /// Keyed by model name; `BTreeMap` so `keys()` / error listings /
+    /// any future serialization iterate in name order (determinism).
+    pub models: BTreeMap<String, ManifestModel>,
 }
 
 impl Manifest {
@@ -71,7 +73,7 @@ impl Manifest {
         let text = std::fs::read_to_string(&path)
             .map_err(|e| format!("reading {}: {e}", path.display()))?;
         let root = Json::parse(&text).map_err(|e| e.to_string())?;
-        let mut models = HashMap::new();
+        let mut models = BTreeMap::new();
         for (name, entry) in root.expect("models")?.as_obj().ok_or("models not an object")? {
             models.insert(name.clone(), parse_model(name, entry)?);
         }

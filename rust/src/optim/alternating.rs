@@ -219,6 +219,8 @@ pub(crate) fn solve_core(
     // sampled only when a wall cap is actually set, so budget-free and
     // iteration-budgeted solves stay bit-deterministic.
     let budget = opts.budget;
+    // lint:allow(wall-clock): sampled only when a wall cap is set, and
+    // budget-degraded outcomes are never cached or serialized as plans.
     let started = budget.max_wall.map(|_| std::time::Instant::now());
     let mut degraded = false;
     let outer_cap = if budget.max_outer > 0 {
@@ -252,6 +254,8 @@ pub(crate) fn solve_core(
             Err(_) => break,
         };
 
+        // lint:allow(panic-path): trajectory is seeded with the start
+        // energy before the loop, so last() always exists.
         let prev = *trajectory.last().unwrap();
         let changed = part.partition != partition;
         partition = part.partition;
@@ -447,11 +451,7 @@ pub(crate) fn solve_multistart_core(
             let f = d.model.device.f_max_ghz;
             (0..d.model.num_points())
                 .filter(|&m| d.deadline_ok(m, f, b_each, Policy::Robust(bound)))
-                .min_by(|&a, &b| {
-                    d.energy_mean(a, f, b_each)
-                        .partial_cmp(&d.energy_mean(b, f, b_each))
-                        .unwrap()
-                })
+                .min_by(|&a, &b| d.energy_mean(a, f, b_each).total_cmp(&d.energy_mean(b, f, b_each)))
                 .unwrap_or(0)
         })
         .collect();

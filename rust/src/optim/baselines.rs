@@ -80,11 +80,7 @@ pub(crate) fn best_point(
     let d = &sc.devices[i];
     (0..d.model.num_points())
         .filter(|&m| d.deadline_ok(m, f_ghz, b_hz, policy))
-        .min_by(|&a, &b| {
-            d.energy_mean(a, f_ghz, b_hz)
-                .partial_cmp(&d.energy_mean(b, f_ghz, b_hz))
-                .unwrap()
-        })
+        .min_by(|&a, &b| d.energy_mean(a, f_ghz, b_hz).total_cmp(&d.energy_mean(b, f_ghz, b_hz)))
 }
 
 /// Feasibility-friendly start under `policy` (minimum margin-adjusted

@@ -345,7 +345,7 @@ fn feasible_start(p: &mut DeviceProblem, x: &[f64]) -> bool {
     let argmax = x
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(m, _)| m)
         .unwrap_or(0);
     for theta in [1.0, 0.3, 0.03, 3e-3, 3e-4, 3e-5] {
@@ -486,10 +486,9 @@ pub fn solve_device(
             let best = *feas
                 .iter()
                 .min_by(|&&a, &&b| {
-                    dev.energy_mean(a, f_ghz, b_hz)
-                        .partial_cmp(&dev.energy_mean(b, f_ghz, b_hz))
-                        .unwrap()
+                    dev.energy_mean(a, f_ghz, b_hz).total_cmp(&dev.energy_mean(b, f_ghz, b_hz))
                 })
+                // lint:allow(panic-path): feas verified non-empty at entry
                 .unwrap();
             let mut x = vec![0.02 / (mp1 - 1) as f64; mp1];
             x[best] = 0.98;
@@ -558,19 +557,18 @@ pub fn solve_device(
     let argmax = x
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(m, _)| m)
-        .unwrap();
+        .unwrap_or(0);
     let m_final = if feas.contains(&argmax) {
         argmax
     } else {
         *feas
             .iter()
             .min_by(|&&a, &&b| {
-                dev.energy_mean(a, f_ghz, b_hz)
-                    .partial_cmp(&dev.energy_mean(b, f_ghz, b_hz))
-                    .unwrap()
+                dev.energy_mean(a, f_ghz, b_hz).total_cmp(&dev.energy_mean(b, f_ghz, b_hz))
             })
+            // lint:allow(panic-path): feas verified non-empty at entry
             .unwrap()
     };
 

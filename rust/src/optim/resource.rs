@@ -186,6 +186,8 @@ impl ConvexProgram for ResourceProgram {
         let d = &self.dev[i];
         match kind {
             0 => {
+                // lint:allow(float-eq): l is exactly 0.0 at m = 0 (never
+                // computed; w_gflops == 0 sentinel) — guards 0/0.
                 let t_loc = if d.l == 0.0 { 0.0 } else { d.l / f };
                 let mut v = t_loc + self.t_off(i, u) - d.slack;
                 if self.phase1 {
@@ -213,6 +215,7 @@ impl ConvexProgram for ResourceProgram {
         let d = &self.dev[i];
         match kind {
             0 => {
+                // lint:allow(float-eq): exact m = 0 sentinel (see above)
                 if d.l != 0.0 {
                     g[n + i] = -d.l / (f * f);
                 }
@@ -240,6 +243,7 @@ impl ConvexProgram for ResourceProgram {
         }
         let (u, f) = (z[i], z[n + i]);
         let d = &self.dev[i];
+        // lint:allow(float-eq): exact m = 0 sentinel (see above)
         if d.l != 0.0 {
             h[(n + i, n + i)] += scale * 2.0 * d.l / (f * f * f);
         }
@@ -315,6 +319,7 @@ fn phase1_start(
         // deadline constraints only; bounds are satisfied by construction
         if c >= 1 && (c - 1) % 5 == 0 {
             let i = (c - 1) / 5;
+            // lint:allow(float-eq): exact m = 0 sentinel (see above)
             let t_loc = if prog.dev[i].l == 0.0 { 0.0 } else { prog.dev[i].l / start[n + i] };
             s0 = s0.max(t_loc + prog.t_off(i, start[i]) - prog.dev[i].slack);
         }
@@ -327,7 +332,7 @@ fn phase1_start(
     if s_star >= -1e-9 {
         // find the tightest device for the error message
         let worst = (0..n)
-            .min_by(|&a, &b| prog.dev[a].slack.partial_cmp(&prog.dev[b].slack).unwrap())
+            .min_by(|&a, &b| prog.dev[a].slack.total_cmp(&prog.dev[b].slack))
             .unwrap_or(0);
         return Err(ResourceError::Infeasible { worst_device: worst, slack: s_star });
     }
@@ -378,6 +383,7 @@ pub fn solve_warm_with(
     // Quick per-device infeasibility check: even with all bandwidth and
     // max frequency the deadline cannot be met.
     for (i, d) in dev.iter().enumerate() {
+        // lint:allow(float-eq): exact m = 0 sentinel (see above)
         let best = (if d.l == 0.0 { 0.0 } else { d.l / d.f_max })
             + d.uplink.t_off(d.d_bits, sc.total_bandwidth_hz);
         if best >= d.slack {
@@ -441,8 +447,9 @@ pub fn solve_dual(
     let dev = device_data(sc, partition, policy);
     let b_total = sc.total_bandwidth_hz;
     for (i, d) in dev.iter().enumerate() {
-        let best =
-            (if d.l == 0.0 { 0.0 } else { d.l / d.f_max }) + d.uplink.t_off(d.d_bits, b_total);
+        // lint:allow(float-eq): exact m = 0 sentinel (see above)
+        let t_loc = if d.l == 0.0 { 0.0 } else { d.l / d.f_max };
+        let best = t_loc + d.uplink.t_off(d.d_bits, b_total);
         if best >= d.slack {
             return Err(ResourceError::Infeasible { worst_device: i, slack: best - d.slack });
         }
@@ -455,6 +462,7 @@ pub fn solve_dual(
         // deadline binds first.  We search over f by golden section on the
         // (convex) reduced cost  q(f) = a f² + p·T_off(b*(f,λ)) + λ b*(f,λ).
         let b_for = |f: f64| -> f64 {
+            // lint:allow(float-eq): exact m = 0 sentinel (see above)
             let r = d.slack - if d.l == 0.0 { 0.0 } else { d.l / f };
             if r <= 0.0 {
                 return f64::INFINITY; // infeasible at this f

@@ -133,7 +133,9 @@ impl Device {
             .min_by(|&a, &b| {
                 let ta = self.t_total_mean(a, f, b_hz) + self.margin(a, policy);
                 let tb = self.t_total_mean(b, f, b_hz) + self.margin(b, policy);
-                ta.partial_cmp(&tb).unwrap()
+                // total_cmp: same order as partial_cmp for the non-NaN
+                // times produced here, and panic-free.
+                ta.total_cmp(&tb)
             })
             .unwrap_or(0)
     }

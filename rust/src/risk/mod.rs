@@ -186,8 +186,10 @@ impl RiskBound {
         match self {
             RiskBound::Ecr => Some(ecr::sigma(eps)),
             RiskBound::Gaussian => Some(gauss::z(eps)),
-            RiskBound::Calibrated { .. } => {
-                Some(self.scale().expect("calibrated carries a scale") * ecr::sigma(eps))
+            RiskBound::Calibrated { scale_q } => {
+                // Same arithmetic as `scale()`, with the variant's own
+                // payload so the arm is panic-free by construction.
+                Some(*scale_q as f64 * SCALE_QUANTUM * ecr::sigma(eps))
             }
             RiskBound::Bernstein => None,
         }
@@ -203,10 +205,10 @@ impl RiskBound {
             // margin: same operand order, same intermediates.
             RiskBound::Ecr => ecr::sigma(eps) * (vl + vv).sqrt(),
             RiskBound::Gaussian => gauss::z(eps) * (vl + vv).sqrt(),
-            RiskBound::Calibrated { .. } => {
-                self.scale().expect("calibrated carries a scale")
-                    * ecr::sigma(eps)
-                    * (vl + vv).sqrt()
+            RiskBound::Calibrated { scale_q } => {
+                // `(scale_q·Q)·σ·√v` — identical association to the old
+                // `scale()·σ·√v`, so margins stay bit-identical.
+                *scale_q as f64 * SCALE_QUANTUM * ecr::sigma(eps) * (vl + vv).sqrt()
             }
             RiskBound::Bernstein => {
                 let v = vl + vv;

@@ -31,6 +31,8 @@ where
         let seed = base.wrapping_add(case as u64);
         let mut rng = Rng::new(seed);
         if let Err(msg) = prop(&mut rng) {
+            // lint:allow(panic-path): property-test harness — a
+            // counterexample must abort the enclosing #[test].
             panic!(
                 "property {name:?} failed at case {case}/{cases} \
                  (replay: RIPRA_CHECK_SEED={seed}): {msg}"

@@ -69,6 +69,7 @@ impl Json {
 
     pub fn as_usize(&self) -> Option<usize> {
         match self {
+            // lint:allow(float-eq): fract() == 0.0 is an exact integrality test
             Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
             _ => None,
         }
@@ -137,6 +138,8 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
+                // lint:allow(float-eq): fract() is exact — this is the
+                // standard integer-valued test, not a tolerance check.
                 if x.fract() == 0.0 && x.abs() < 1e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
@@ -395,8 +398,11 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
+        // The scanned range is ASCII digits/signs/dots, but propagate
+        // instead of unwrapping so the parser is panic-free end to end.
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid number"))?
+            .parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
     }

@@ -79,6 +79,8 @@ where
             }
         }
     });
+    // lint:allow(panic-path): every index 0..jobs is claimed exactly once
+    // by a worker, so all slots are filled by construction.
     slots.into_iter().map(|v| v.expect("parallel slot unfilled")).collect()
 }
 
@@ -141,6 +143,8 @@ where
             }
         }
     });
+    // lint:allow(panic-path): every index 0..jobs is claimed exactly once
+    // by a worker, so all slots are filled by construction.
     slots.into_iter().map(|v| v.expect("parallel slot unfilled")).collect()
 }
 

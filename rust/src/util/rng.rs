@@ -66,6 +66,8 @@ impl Rng {
         debug_assert!(n > 0);
         // Lemire's multiply-shift rejection-free variant is overkill here;
         // the simple 128-bit multiply keeps bias < 2^-64.
+        // lint:allow(rng-truncation): the shift keeps the high 64 bits —
+        // a range reduction to [0, n), not a truncation of the draw.
         ((self.next_u64() as u128 * n as u128) >> 64) as usize
     }
 
@@ -91,6 +93,8 @@ impl Rng {
     /// distribution (i.e. we solve for the underlying mu/sigma).
     pub fn lognormal_mv(&mut self, mean: f64, var: f64) -> f64 {
         debug_assert!(mean > 0.0 && var >= 0.0);
+        // lint:allow(float-eq): var == 0.0 is an exact caller-passed
+        // sentinel meaning "degenerate point mass", not a computed value.
         if var == 0.0 {
             return mean;
         }

@@ -120,7 +120,7 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 /// Sort + percentile convenience.
 pub fn percentile_of(xs: &[f64], q: f64) -> f64 {
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     percentile(&s, q)
 }
 

@@ -1,0 +1,333 @@
+//! Fixture tests for `ripra-lint`.
+//!
+//! Every rule family pins at least one *caught* fixture (the rule
+//! fires), one *clean* fixture (the rule stays quiet on the compliant
+//! spelling), and one *suppressed* fixture (a justified `lint:allow`
+//! covers it).  The final test runs the lint over the real `rust/src`
+//! tree — the same gate CI applies — so a rule regression and a repo
+//! regression are both caught here.
+
+use ripra::lint::{analyze_files, analyze_root, report, LintFile, Report};
+
+fn lint(files: &[(&str, &str)]) -> Report {
+    let files: Vec<LintFile> = files
+        .iter()
+        .map(|&(path, text)| LintFile { path: path.to_string(), text: text.to_string() })
+        .collect();
+    analyze_files(&files)
+}
+
+fn active_rules(r: &Report) -> Vec<&'static str> {
+    r.active().iter().map(|v| v.rule).collect()
+}
+
+// --- determinism ---------------------------------------------------------
+
+#[test]
+fn wall_clock_caught_in_library_code() {
+    let text = "use std::time::Instant;\nfn f() -> Instant { Instant::now() }\n";
+    assert!(active_rules(&lint(&[("engine/fx.rs", text)])).contains(&"wall-clock"));
+}
+
+#[test]
+fn wall_clock_ignores_tests_and_bench() {
+    let test_only = "#[cfg(test)]\nmod tests {\n    use std::time::Instant;\n    #[test]\n    \
+                     fn t() { let _ = Instant::now(); }\n}\n";
+    assert!(lint(&[("engine/fx.rs", test_only)]).is_clean());
+    let bench = "use std::time::Instant;\nfn now() -> Instant { Instant::now() }\n";
+    assert!(lint(&[("util/bench.rs", bench)]).is_clean());
+}
+
+#[test]
+fn wall_clock_file_allow_suppresses() {
+    let text = "// lint:allow-file(wall-clock): measured wall time is the output here\n\
+                use std::time::Instant;\nfn f() { let _ = Instant::now(); }\n";
+    let r = lint(&[("figures/fx.rs", text)]);
+    assert!(r.is_clean());
+    assert!(r.suppressed_count() >= 2);
+    assert!(r.stale_allows.is_empty());
+}
+
+#[test]
+fn hash_order_caught_and_btreemap_clean() {
+    let r = lint(&[("fleet/fx.rs", "use std::collections::HashMap;\n")]);
+    assert_eq!(active_rules(&r), ["hash-order"]);
+    assert!(lint(&[("fleet/fx.rs", "use std::collections::BTreeMap;\n")]).is_clean());
+}
+
+#[test]
+fn ambient_rng_caught_even_in_tests() {
+    let text = "#[cfg(test)]\nmod tests {\n    #[test]\n    \
+                fn t() { let _ = rand::thread_rng(); }\n}\n";
+    assert_eq!(active_rules(&lint(&[("optim/fx.rs", text)])), ["ambient-rng"]);
+}
+
+#[test]
+fn rng_truncation_narrowing_caught_widening_clean() {
+    let narrowing = "fn f(r: &mut Rng) -> usize { r.next_u64() as usize }\n";
+    assert_eq!(active_rules(&lint(&[("util/fx.rs", narrowing)])), ["rng-truncation"]);
+    let widening = "fn f(r: &mut Rng) -> f64 { r.next_u64() as f64 }\n";
+    assert!(lint(&[("util/fx.rs", widening)]).is_clean());
+}
+
+#[test]
+fn tokens_in_strings_and_comments_are_ignored() {
+    let text = "// a HashMap would break determinism here\n\
+                fn f() -> &'static str { \"Instant::now() and thread_rng()\" }\n";
+    assert!(lint(&[("engine/fx.rs", text)]).is_clean());
+}
+
+// --- rng-stream ----------------------------------------------------------
+
+#[test]
+fn fork_tag_dup_caught_across_files() {
+    let a = "fn f(r: &mut Rng) { let _ = r.fork(0xAA); }\n";
+    let b = "fn g(r: &mut Rng) { let _ = r.fork(0xAA); }\n";
+    assert!(active_rules(&lint(&[("optim/a.rs", a), ("optim/b.rs", b)])).contains(&"fork-tag-dup"));
+}
+
+#[test]
+fn fork_order_matches_registry() {
+    let good = "fn s(r: &mut Rng) {\n    let _ = r.fork(0xFA01);\n    let _ = r.fork(0xFA02);\n\
+                \x20   let _ = r.fork(0xFA03);\n    let _ = r.fork(0xFA04);\n}\n";
+    assert!(lint(&[("fault/mod.rs", good)]).is_clean());
+    let swapped = "fn s(r: &mut Rng) {\n    let _ = r.fork(0xFA02);\n    let _ = r.fork(0xFA01);\n\
+                   \x20   let _ = r.fork(0xFA03);\n    let _ = r.fork(0xFA04);\n}\n";
+    assert_eq!(active_rules(&lint(&[("fault/mod.rs", swapped)])), ["fork-order"]);
+}
+
+#[test]
+fn unregistered_literal_fork_caught() {
+    let text = "fn f(r: &mut Rng) { let _ = r.fork(0x42); }\n";
+    assert_eq!(active_rules(&lint(&[("engine/fx.rs", text)])), ["fork-order"]);
+}
+
+// --- structural ----------------------------------------------------------
+
+const EVENTS_OK: &str = r#"pub enum FleetEvent {
+    Arrival,
+    Fade,
+}
+
+impl FleetEvent {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FleetEvent::Arrival => "arrival",
+            FleetEvent::Fade => "fade",
+        }
+    }
+}
+"#;
+
+const METRICS_OK: &str = "pub const DELTA_KINDS: [&str; 2] = [\"join\", \"channel\"];\n\
+                          pub const FAULT_KINDS: [&str; 1] = [\"channel\"];\n";
+
+#[test]
+fn event_kinds_in_sync_is_clean() {
+    let r = lint(&[("fleet/events.rs", EVENTS_OK), ("fleet/metrics.rs", METRICS_OK)]);
+    assert!(r.is_clean(), "unexpected: {:?}", active_rules(&r));
+}
+
+#[test]
+fn event_kinds_missing_delta_entry_caught() {
+    let metrics = "pub const DELTA_KINDS: [&str; 1] = [\"join\"];\n\
+                   pub const FAULT_KINDS: [&str; 0] = [];\n";
+    let r = lint(&[("fleet/events.rs", EVENTS_OK), ("fleet/metrics.rs", metrics)]);
+    assert!(active_rules(&r).contains(&"event-kinds"));
+}
+
+#[test]
+fn event_kinds_arity_mismatch_caught() {
+    let metrics = "pub const DELTA_KINDS: [&str; 3] = [\"join\", \"channel\"];\n\
+                   pub const FAULT_KINDS: [&str; 1] = [\"channel\"];\n";
+    let r = lint(&[("fleet/events.rs", EVENTS_OK), ("fleet/metrics.rs", metrics)]);
+    assert!(active_rules(&r).contains(&"event-kinds"));
+}
+
+#[test]
+fn event_kinds_variant_without_arm_caught() {
+    let events = r#"pub enum FleetEvent {
+    Arrival,
+    Fade,
+    Blackout,
+}
+
+impl FleetEvent {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FleetEvent::Arrival => "arrival",
+            FleetEvent::Fade => "fade",
+            _ => "blackout",
+        }
+    }
+}
+"#;
+    let r = lint(&[("fleet/events.rs", events), ("fleet/metrics.rs", METRICS_OK)]);
+    assert!(active_rules(&r).contains(&"event-kinds"));
+}
+
+const DISPLAY_OK: &str = r#"pub enum ServiceError {
+    Unknown,
+    Rejected,
+}
+
+impl core::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        match self {
+            ServiceError::Unknown => write!(f, "unknown"),
+            ServiceError::Rejected => write!(f, "rejected"),
+        }
+    }
+}
+"#;
+
+#[test]
+fn error_display_full_coverage_is_clean() {
+    let r = lint(&[("service/mod.rs", DISPLAY_OK)]);
+    assert!(r.is_clean(), "unexpected: {:?}", active_rules(&r));
+}
+
+#[test]
+fn error_display_missing_variant_caught() {
+    let text = r#"pub enum ServiceError {
+    Unknown,
+    Rejected,
+}
+
+impl core::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "service error")
+    }
+}
+"#;
+    let r = lint(&[("service/mod.rs", text)]);
+    assert!(active_rules(&r).contains(&"error-display"));
+}
+
+#[test]
+fn error_display_missing_impl_caught() {
+    let text = "pub enum ServiceError {\n    Unknown,\n}\n";
+    let r = lint(&[("service/mod.rs", text)]);
+    assert!(active_rules(&r).contains(&"error-display"));
+}
+
+const FLAGS: &str = r#"pub const CLI_FLAGS: [CliFlag; 2] = [
+    CliFlag { name: "seed", help: "deterministic seed" },
+    CliFlag { name: "shards", help: "shard count" },
+];
+"#;
+
+#[test]
+fn cli_flags_parity() {
+    let main_ok = "fn main() {\n    match arg.as_str() {\n        \"seed\" => {}\n        \
+                   \"shards\" => {}\n        _ => {}\n    }\n}\n";
+    assert!(lint(&[("engine/request.rs", FLAGS), ("main.rs", main_ok)]).is_clean());
+    let main_missing =
+        "fn main() {\n    match arg.as_str() {\n        \"seed\" => {}\n        _ => {}\n    }\n}\n";
+    let r = lint(&[("engine/request.rs", FLAGS), ("main.rs", main_missing)]);
+    assert_eq!(active_rules(&r), ["cli-flags"]);
+}
+
+// --- robustness ----------------------------------------------------------
+
+#[test]
+fn panic_path_caught_only_in_library_modules() {
+    let text = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    assert_eq!(active_rules(&lint(&[("optim/fx.rs", text)])), ["panic-path"]);
+    assert!(lint(&[("solver/fx.rs", text)]).is_clean());
+    let test_text = "#[cfg(test)]\nmod tests {\n    #[test]\n    \
+                     fn t() { None::<u32>.unwrap(); }\n}\n";
+    assert!(lint(&[("optim/fx.rs", test_text)]).is_clean());
+}
+
+#[test]
+fn panic_path_allow_and_fallback_spellings() {
+    let allowed = "fn f(x: Option<u32>) -> u32 {\n    \
+                   // lint:allow(panic-path): caller validated x above\n    \
+                   x.expect(\"checked\")\n}\n";
+    let r = lint(&[("service/fx.rs", allowed)]);
+    assert!(r.is_clean());
+    assert_eq!(r.suppressed_count(), 1);
+    let fallback = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n";
+    assert!(lint(&[("service/fx.rs", fallback)]).is_clean());
+}
+
+#[test]
+fn float_eq_literal_caught_int_and_inequality_clean() {
+    let cmp = "fn f(x: f64) -> bool { x == 0.0 }\n";
+    assert_eq!(active_rules(&lint(&[("risk/fx.rs", cmp)])), ["float-eq"]);
+    assert!(lint(&[("risk/fx.rs", "fn f(n: usize) -> bool { n == 0 }\n")]).is_clean());
+    assert!(lint(&[("risk/fx.rs", "fn f(x: f64) -> bool { x <= 0.0 }\n")]).is_clean());
+}
+
+// --- allow grammar and meta ----------------------------------------------
+
+#[test]
+fn standalone_allow_covers_next_code_line_past_comments() {
+    let text = "fn f(x: Option<u32>) -> u32 {\n    \
+                // lint:allow(panic-path): a two-line justification that\n    \
+                // keeps going on a second comment line\n    \
+                x.expect(\"fine\")\n}\n";
+    let r = lint(&[("fleet/fx.rs", text)]);
+    assert!(r.is_clean());
+    assert_eq!(r.suppressed_count(), 1);
+    assert!(r.stale_allows.is_empty());
+}
+
+#[test]
+fn bad_allow_missing_reason_or_unknown_rule() {
+    let no_reason = "// lint:allow(panic-path)\nfn f() {}\n";
+    assert_eq!(active_rules(&lint(&[("optim/fx.rs", no_reason)])), ["bad-allow"]);
+    let unknown = "// lint:allow(no-such-rule): because\nfn f() {}\n";
+    assert_eq!(active_rules(&lint(&[("optim/fx.rs", unknown)])), ["bad-allow"]);
+}
+
+#[test]
+fn bad_allow_is_not_suppressible() {
+    let text = "// lint:allow(bad-allow): nice try\nfn f() {}\n";
+    assert!(active_rules(&lint(&[("optim/fx.rs", text)])).contains(&"bad-allow"));
+}
+
+#[test]
+fn stale_allow_reported_as_warning_not_failure() {
+    let text = "// lint:allow(panic-path): nothing left to suppress\nfn f() {}\n";
+    let r = lint(&[("optim/fx.rs", text)]);
+    assert!(r.is_clean());
+    assert_eq!(r.stale_allows.len(), 1);
+}
+
+#[test]
+fn doc_comments_mentioning_allow_are_prose() {
+    let text = "//! Suppress via `// lint:allow(rule-id): reason` comments.\nfn f() {}\n";
+    assert!(lint(&[("optim/fx.rs", text)]).is_clean());
+}
+
+// --- report shape --------------------------------------------------------
+
+#[test]
+fn json_report_shape() {
+    let r = lint(&[("optim/fx.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n")]);
+    let j = report::to_json(&r);
+    assert_eq!(j.get("tool").and_then(|t| t.as_str()), Some("ripra-lint"));
+    assert_eq!(j.get("clean").and_then(|c| c.as_bool()), Some(false));
+    assert_eq!(j.get("active").and_then(|a| a.as_usize()), Some(1));
+    let text = report::table(&r);
+    assert!(text.contains("panic-path"));
+    assert!(text.contains("optim/fx.rs:1"));
+}
+
+// --- the repo itself -----------------------------------------------------
+
+#[test]
+fn repo_source_tree_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src");
+    let r = analyze_root(&root).expect("scan rust/src");
+    assert!(r.active().is_empty(), "unsuppressed violations:\n{}", report::table(&r));
+    assert!(r.stale_allows.is_empty(), "stale allows:\n{}", report::table(&r));
+    assert!(r.files >= 50, "expected the full source tree, scanned {} files", r.files);
+    assert!(
+        r.suppressed_count() >= 30,
+        "suppression inventory shrank unexpectedly: {}",
+        r.suppressed_count()
+    );
+}

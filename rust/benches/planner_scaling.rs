@@ -10,9 +10,10 @@
 use std::path::Path;
 use std::time::Duration;
 
+use ripra::channel::Uplink;
 use ripra::engine::{PlanRequest, PlannerBuilder, Policy, ScenarioDelta};
 use ripra::models::ModelProfile;
-use ripra::optim::Scenario;
+use ripra::optim::{Device, Scenario};
 use ripra::util::bench::Bencher;
 use ripra::util::rng::Rng;
 
@@ -121,6 +122,60 @@ fn main() {
                 bench.attach(&name, "margin_sum_s", o.diagnostics.margins_s.iter().sum::<f64>());
                 bench.attach(&name, "newton_iters", o.diagnostics.newton_iters as f64);
             }
+        }
+    }
+
+    // ---- cohort-compressed planning ------------------------------------
+    // `classes` distinct channel classes, each replicated `reps` times —
+    // the fingerprint-clustered geometry the cohort path targets.
+    let clustered = |classes: usize, reps: usize, b: f64, deadline: f64| {
+        let model = ModelProfile::alexnet_paper();
+        let mut devices = Vec::with_capacity(classes * reps);
+        for c in 0..classes {
+            let dev = Device {
+                model: model.clone(),
+                uplink: Uplink::from_gain_db(-80.0 - 0.5 * c as f64),
+                deadline_s: deadline,
+                risk: 0.05,
+            };
+            devices.extend(std::iter::repeat_n(dev, reps));
+        }
+        Scenario { devices, total_bandwidth_hz: b }
+    };
+
+    // 1M devices in 32 cohorts: bucketing and replication are the O(n)
+    // parts, the solve itself is O(cohorts).  The relaxed deadline keeps
+    // the all-local point reachable, so the fleet stays feasible at any
+    // per-device bandwidth share.
+    {
+        let sc = clustered(32, 31_250, 12.5e6, 2.0);
+        let req = PlanRequest::new(sc, Policy::Robust);
+        let mut planner = PlannerBuilder::new().cohorts(true).cache_capacity(0).build();
+        bench.bench("cohort_1m_devices", || {
+            planner.plan(&req).map(|o| o.energy).unwrap_or(f64::NAN)
+        });
+        if let Ok(o) = planner.plan(&req) {
+            bench.attach("cohort_1m_devices", "devices", 1_000_000.0);
+            bench.attach("cohort_1m_devices", "cohorts", o.diagnostics.cohorts as f64);
+            bench.attach("cohort_1m_devices", "cohort_gap", o.diagnostics.cohort_gap);
+            bench.attach("cohort_1m_devices", "energy", o.energy);
+        }
+    }
+
+    // Cohort vs exact Algorithm 2 on a fleet small enough to solve both
+    // ways: the attached gap is the acceptance number (target < 1%).
+    {
+        let sc = clustered(4, 10, 10e6, 0.25);
+        let req = PlanRequest::new(sc, Policy::Robust);
+        let mut cohort = PlannerBuilder::new().cohorts(true).cache_capacity(0).build();
+        let mut exact = PlannerBuilder::new().cache_capacity(0).build();
+        let name = "cohort_vs_exact_gap";
+        bench.bench(name, || cohort.plan(&req).map(|o| o.energy).unwrap_or(f64::NAN));
+        if let (Ok(c), Ok(e)) = (cohort.plan(&req), exact.plan(&req)) {
+            bench.attach(name, "gap", (c.energy - e.energy).abs() / e.energy);
+            bench.attach(name, "cohort_energy", c.energy);
+            bench.attach(name, "exact_energy", e.energy);
+            bench.attach(name, "cohorts", c.diagnostics.cohorts as f64);
         }
     }
 

@@ -48,6 +48,15 @@ pub struct Diagnostics {
     /// bound reserved for jitter.  Lets BENCH/figure tooling attribute
     /// energy differences between bounds to the margins they charged.
     pub margins_s: Vec<f64>,
+    /// Number of fingerprint cohorts the plan was solved over
+    /// ([`crate::optim::cohort`]); 0 when the solve was per-device (the
+    /// cohort path was off or would not compress anything).
+    pub cohorts: usize,
+    /// Replication-drift bound of a cohort-compressed solve: relative
+    /// energy difference between pricing every member at its
+    /// representative's decision and pricing the replicated plan on the
+    /// actual devices.  0 when `cohorts` is 0.
+    pub cohort_gap: f64,
 }
 
 /// One unified outcome for every planning policy.
@@ -87,16 +96,26 @@ impl PlanOutcome {
             ("margin_s".into(), nums(&self.diagnostics.margins_s)),
             (
                 "diagnostics".into(),
-                Json::Obj(vec![
-                    ("outer_iters".into(), Json::Num(self.diagnostics.outer_iters as f64)),
-                    ("avg_pccp_iters".into(), Json::Num(self.diagnostics.avg_pccp_iters)),
-                    ("newton_iters".into(), Json::Num(self.diagnostics.newton_iters as f64)),
-                    ("wall_time_s".into(), Json::Num(self.diagnostics.wall_time.as_secs_f64())),
-                    ("cache_hit".into(), Json::Bool(self.diagnostics.cache_hit)),
-                    ("warm_started".into(), Json::Bool(self.diagnostics.warm_started)),
-                    ("degraded".into(), Json::Bool(self.diagnostics.degraded)),
-                    ("trajectory".into(), nums(&self.diagnostics.trajectory)),
-                ]),
+                Json::Obj({
+                    let mut d = vec![
+                        ("outer_iters".into(), Json::Num(self.diagnostics.outer_iters as f64)),
+                        ("avg_pccp_iters".into(), Json::Num(self.diagnostics.avg_pccp_iters)),
+                        ("newton_iters".into(), Json::Num(self.diagnostics.newton_iters as f64)),
+                        ("wall_time_s".into(), Json::Num(self.diagnostics.wall_time.as_secs_f64())),
+                        ("cache_hit".into(), Json::Bool(self.diagnostics.cache_hit)),
+                        ("warm_started".into(), Json::Bool(self.diagnostics.warm_started)),
+                        ("degraded".into(), Json::Bool(self.diagnostics.degraded)),
+                    ];
+                    // Cohort keys only when the cohort path actually ran:
+                    // cohorts=off payloads stay byte-identical to the
+                    // pre-cohort encoding.
+                    if self.diagnostics.cohorts > 0 {
+                        d.push(("cohorts".into(), Json::Num(self.diagnostics.cohorts as f64)));
+                        d.push(("cohort_gap".into(), Json::Num(self.diagnostics.cohort_gap)));
+                    }
+                    d.push(("trajectory".into(), nums(&self.diagnostics.trajectory)));
+                    d
+                }),
             ),
         ])
     }

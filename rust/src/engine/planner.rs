@@ -8,7 +8,7 @@
 use std::time::Instant;
 
 use crate::optim::types::{Plan, Policy as MarginPolicy, Scenario};
-use crate::optim::{alternating, baselines, resource, AlternatingOptions, SolverBudget};
+use crate::optim::{alternating, baselines, cohort, resource, AlternatingOptions, SolverBudget};
 use crate::risk::RiskBound;
 use crate::solver::NewtonWorkspace;
 
@@ -51,6 +51,7 @@ const DEFAULT_CACHE_CAPACITY: usize = 32;
 pub struct PlannerBuilder {
     opts: AlternatingOptions,
     cache_capacity: usize,
+    cohorts: bool,
 }
 
 impl Default for PlannerBuilder {
@@ -64,6 +65,7 @@ impl PlannerBuilder {
         PlannerBuilder {
             opts: AlternatingOptions::default(),
             cache_capacity: DEFAULT_CACHE_CAPACITY,
+            cohorts: false,
         }
     }
 
@@ -107,6 +109,19 @@ impl PlannerBuilder {
         self
     }
 
+    /// Cohort-compressed robust solves ([`crate::optim::cohort`]): bucket
+    /// devices by quantized fingerprint, solve one representative per
+    /// cohort, replicate with a per-member feasibility re-check.  Only
+    /// the `Robust` policy without an init-partition override dispatches
+    /// through cohorts, and only when bucketing actually compresses
+    /// (fewer cohorts than devices) — otherwise, and whenever this is
+    /// `false` (the default), every solve is byte-identical to the
+    /// per-device path.
+    pub fn cohorts(mut self, on: bool) -> PlannerBuilder {
+        self.cohorts = on;
+        self
+    }
+
     pub fn build(self) -> Planner {
         Planner {
             opts: self.opts,
@@ -114,6 +129,7 @@ impl PlannerBuilder {
             ws: NewtonWorkspace::new(),
             last: None,
             edge_available: true,
+            cohorts: self.cohorts,
         }
     }
 }
@@ -141,6 +157,8 @@ pub struct Planner {
     /// While `false`, every plan/replan degrades to the all-local
     /// fallback and the cache is never consulted or populated.
     edge_available: bool,
+    /// Cohort-compressed robust solves ([`PlannerBuilder::cohorts`]).
+    cohorts: bool,
 }
 
 impl Default for Planner {
@@ -426,13 +444,12 @@ impl Planner {
             bound,
             diagnostics: Diagnostics {
                 outer_iters: outer,
-                avg_pccp_iters: 0.0,
                 newton_iters: newton,
                 trajectory,
                 wall_time: t0.elapsed(),
-                cache_hit: false,
                 warm_started: true,
                 margins_s,
+                ..Default::default()
             },
         };
         // A follow-up plan() of the same scenario (under the same
@@ -496,9 +513,33 @@ impl Planner {
         let sc = &req.scenario;
         let mut out = match &req.policy {
             Policy::Robust => {
-                let init = req.init_partition.clone();
-                let r = alternating::solve_core(sc, &self.opts, init, req.bound, &mut self.ws)?;
-                robust_outcome(r, Policy::Robust, req.bound)
+                // Cohort dispatch: only when enabled, only without an
+                // init-partition override (its length is per-device), and
+                // only when bucketing compresses — an all-unique fleet
+                // falls through to the exact path, so cohorts=on is
+                // bit-identical to cohorts=off there.  A cohort-solver
+                // error also falls through: the two-stage warm start is a
+                // heuristic and must not reject scenarios Algorithm 2
+                // can solve.
+                let compressed = if self.cohorts && req.init_partition.is_none() {
+                    let ch = cohort::bucket(sc);
+                    if ch.len() < sc.n() {
+                        cohort::solve(sc, &ch, &self.opts, req.bound).ok()
+                    } else {
+                        None
+                    }
+                } else {
+                    None
+                };
+                match compressed {
+                    Some(r) => cohort_outcome(r, req.bound),
+                    None => {
+                        let init = req.init_partition.clone();
+                        let r =
+                            alternating::solve_core(sc, &self.opts, init, req.bound, &mut self.ws)?;
+                        robust_outcome(r, Policy::Robust, req.bound)
+                    }
+                }
             }
             Policy::Multistart { extra_starts } => {
                 let r = alternating::solve_multistart_core(
@@ -550,6 +591,24 @@ fn robust_outcome(r: alternating::RobustPlan, policy: Policy, bound: RiskBound) 
             newton_iters: r.newton_iters,
             trajectory: r.trajectory,
             degraded: r.degraded,
+            ..Default::default()
+        },
+    }
+}
+
+fn cohort_outcome(r: cohort::CohortPlan, bound: RiskBound) -> PlanOutcome {
+    PlanOutcome {
+        plan: r.plan,
+        energy: r.energy,
+        policy: Policy::Robust,
+        bound,
+        diagnostics: Diagnostics {
+            outer_iters: 1,
+            avg_pccp_iters: r.avg_pccp_iters,
+            newton_iters: r.newton_iters,
+            trajectory: vec![r.energy],
+            cohorts: r.cohorts,
+            cohort_gap: r.gap_bound,
             ..Default::default()
         },
     }

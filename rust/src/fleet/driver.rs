@@ -135,6 +135,11 @@ pub struct FleetOptions {
     /// are never forked, so a fault-free trace is unaffected by this
     /// field's parameters.
     pub faults: FaultOptions,
+    /// Cohort-compressed robust solves ([`crate::optim::cohort`]) on
+    /// every planner the backend builds — the path that makes
+    /// million-device bootstraps tractable.  Off by default; an off run
+    /// is byte-identical to the pre-cohort driver.
+    pub cohorts: bool,
 }
 
 impl Default for FleetOptions {
@@ -154,6 +159,7 @@ impl Default for FleetOptions {
             shards: 0,
             bound: RiskBound::Ecr,
             faults: FaultOptions::default(),
+            cohorts: false,
         }
     }
 }
@@ -165,6 +171,7 @@ impl FleetOptions {
     pub const CLI_FLAGS: &[CliFlag] = &[
         CliFlag { name: "model", value: Some("alexnet|resnet152"), help: "DNN/hardware profile" },
         CliFlag { name: "n", value: Some("N"), help: "initial fleet size (default 6)" },
+        CliFlag { name: "devices", value: Some("N"), help: "alias for --n (initial fleet size)" },
         CliFlag {
             name: "duration",
             value: Some("S"),
@@ -198,6 +205,11 @@ impl FleetOptions {
             name: "bound",
             value: Some("ecr|gauss|bernstein|calibrated[:S]"),
             help: "chance-constraint transform (default ecr; calibrated learns online)",
+        },
+        CliFlag {
+            name: "cohorts",
+            value: None,
+            help: "cohort-compressed planning (solve fingerprint classes, not devices)",
         },
         CliFlag { name: "json", value: None, help: "emit the metrics time series as JSON" },
         CliFlag {
@@ -308,7 +320,7 @@ impl FleetOptions {
     /// `shards = 0` run and a one-shard service run, which are
     /// bit-identical by contract, also export identical configs.
     pub fn to_json(&self) -> Json {
-        Json::Obj(vec![
+        let mut fields = vec![
             ("model".into(), Json::Str(self.model.name.clone())),
             ("n0".into(), Json::Num(self.n0 as f64)),
             ("duration_s".into(), Json::Num(self.duration_s)),
@@ -325,22 +337,28 @@ impl FleetOptions {
                 "bound_scale".into(),
                 self.bound.scale().map(Json::Num).unwrap_or(Json::Null),
             ),
-            (
-                "faults".into(),
-                Json::Obj(vec![
-                    ("enabled".into(), Json::Bool(self.faults.enabled)),
-                    ("outage_rate_hz".into(), Json::Num(self.faults.outage_rate_hz)),
-                    ("outage_mean_s".into(), Json::Num(self.faults.outage_mean_s)),
-                    ("blackout_rate_hz".into(), Json::Num(self.faults.blackout_rate_hz)),
-                    ("blackout_mean_s".into(), Json::Num(self.faults.blackout_mean_s)),
-                    ("blackout_depth_db".into(), Json::Num(self.faults.blackout_depth_db)),
-                    ("drop_prob".into(), Json::Num(self.faults.drop_prob)),
-                    ("delay_prob".into(), Json::Num(self.faults.delay_prob)),
-                    ("delay_mean_s".into(), Json::Num(self.faults.delay_mean_s)),
-                    ("backoff_base_s".into(), Json::Num(self.faults.backoff_base_s)),
-                ]),
-            ),
-        ])
+        ];
+        // Only cohort runs carry the key: cohorts=off configs stay
+        // byte-identical to the pre-cohort export.
+        if self.cohorts {
+            fields.push(("cohorts".into(), Json::Bool(true)));
+        }
+        fields.push((
+            "faults".into(),
+            Json::Obj(vec![
+                ("enabled".into(), Json::Bool(self.faults.enabled)),
+                ("outage_rate_hz".into(), Json::Num(self.faults.outage_rate_hz)),
+                ("outage_mean_s".into(), Json::Num(self.faults.outage_mean_s)),
+                ("blackout_rate_hz".into(), Json::Num(self.faults.blackout_rate_hz)),
+                ("blackout_mean_s".into(), Json::Num(self.faults.blackout_mean_s)),
+                ("blackout_depth_db".into(), Json::Num(self.faults.blackout_depth_db)),
+                ("drop_prob".into(), Json::Num(self.faults.drop_prob)),
+                ("delay_prob".into(), Json::Num(self.faults.delay_prob)),
+                ("delay_mean_s".into(), Json::Num(self.faults.delay_mean_s)),
+                ("backoff_base_s".into(), Json::Num(self.faults.backoff_base_s)),
+            ]),
+        ));
+        Json::Obj(fields)
     }
 }
 
@@ -396,7 +414,8 @@ impl Backend {
     /// Build the backend and cold-plan the initial scenario.
     fn bootstrap(opts: &FleetOptions, sc: &Scenario) -> Result<(Backend, Applied), PlanError> {
         if opts.shards == 0 {
-            let mut planner = PlannerBuilder::new().threads(opts.threads).build();
+            let mut planner =
+                PlannerBuilder::new().threads(opts.threads).cohorts(opts.cohorts).build();
             let outcome = planner
                 .plan(&PlanRequest::new(sc.clone(), Policy::Robust).with_bound(opts.bound))?;
             let applied = Applied {
@@ -412,6 +431,7 @@ impl Backend {
             let mut svc = PlannerService::new(ServiceOptions {
                 shards: opts.shards,
                 threads: opts.threads,
+                cohorts: opts.cohorts,
                 ..ServiceOptions::default()
             })
             .map_err(|e| PlanError::InvalidRequest(e.to_string()))?;

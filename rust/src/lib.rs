@@ -29,7 +29,14 @@
 //! * [`optim`] — the paper's algorithms: [`optim::alternating`]
 //!   (Algorithm 2), [`optim::pccp`] (Algorithm 1), [`optim::resource`]
 //!   (problem (23)), [`optim::ecr`] (Theorem 1), [`optim::baselines`]
-//!   (§VI benchmarks).  The old free-function entry points are
+//!   (§VI benchmarks), and [`optim::cohort`] — cohort-compressed
+//!   planning for million-device fleets: devices are bucketed by the
+//!   engine's quantized fingerprint, one representative per cohort is
+//!   solved via a two-stage warm start (grouped knapsack + closed-form
+//!   Lagrangian bandwidth split) feeding a PCCP polish, and the decision
+//!   replicates across members with a per-device feasibility re-check
+//!   (opt in with `PlannerBuilder::cohorts(true)` or `ripra simulate
+//!   --cohorts`).  The old free-function entry points are
 //!   `#[deprecated]` shims over the engine for one release.
 //! * [`risk`] — the pluggable chance-constraint transforms
 //!   (`RiskBound`: ECR/Cantelli, Gaussian, Bernstein, conformally

@@ -293,7 +293,9 @@ fn fleet_options_of(flags: &BTreeMap<String, String>) -> Result<FleetOptions> {
     let (b_def, d_def, e_def) = figures::default_setting(&model.name);
     let fd = FaultOptions::default();
     Ok(FleetOptions {
-        n0: flag_usize(flags, "n", 6)?,
+        // --devices is an alias for --n (million-device cohort runs read
+        // more naturally as `--devices 1000000 --cohorts`).
+        n0: flag_usize(flags, "devices", flag_usize(flags, "n", 6)?)?,
         duration_s: flag_f64(flags, "duration", 30.0)?,
         arrival_rate_hz: flag_f64(flags, "arrival-rate", 0.2)?,
         churn: flag_f64(flags, "churn", 1.0)?,
@@ -305,6 +307,7 @@ fn fleet_options_of(flags: &BTreeMap<String, String>) -> Result<FleetOptions> {
         threads: 0,
         shards: flag_usize(flags, "shards", 0)?,
         bound: bound_of(flags)?,
+        cohorts: flags.contains_key("cohorts"),
         faults: FaultOptions {
             enabled: flags.contains_key("faults"),
             outage_rate_hz: flag_f64(flags, "outage-rate", fd.outage_rate_hz)?,

@@ -1,0 +1,562 @@
+//! Cohort-compressed planning: solve fingerprint-equivalence classes,
+//! not devices.
+//!
+//! A million-device fleet does not contain a million *distinct* planning
+//! problems.  Devices whose quantized parameters agree — same model,
+//! deadline within 0.1 ms, risk within 1e-4, channel within 0.1 dB,
+//! transmit power within 1 mW — admit identical per-device optima, and
+//! [`crate::engine::device_fingerprint`] already defines exactly those
+//! equivalence classes (the plan cache and the service's device→shard
+//! routing key on the same hash, so there is one definition of "the same
+//! device" across the whole stack).  This module buckets a scenario into
+//! those classes ("cohorts"), solves one representative per cohort with
+//! its member count as a weight on the shared bandwidth budget, and
+//! replicates the representative decision across the members with a
+//! per-device feasibility re-check.
+//!
+//! The per-cohort solve is a two-stage warm start in the style of the
+//! classic delay-constrained offloading decomposition (discrete stage +
+//! closed-form continuous stage) feeding a PCCP polish:
+//!
+//! 1. **Grouped knapsack (discrete).**  For each cohort × partition
+//!    point, compute the *minimum* bandwidth `b_req` that keeps the
+//!    margin-adjusted deadline feasible at `f_max` (bisection on the
+//!    monotone rate curve; points whose remaining delay budget
+//!    `E = D′ − t_loc` is non-positive are filtered out, as are points
+//!    whose required rate exceeds the channel's `b → ∞` rate asymptote).
+//!    Each cohort picks its cheapest feasible point; a deterministic
+//!    repair loop trades energy for bandwidth (cheapest Δenergy/Δb swap
+//!    first) until the weighted demand `Σ w_c · b_req` fits inside `B`.
+//! 2. **Closed-form Lagrangian split (continuous, O(1) per cohort).**
+//!    The leftover budget `B − Σ w_c·b_req` is spread by the square-root
+//!    rule `b_c ∝ √(p·d_c/η_c)` — the stationarity condition of
+//!    `min Σ w_c·p·d_c/(η_c b_c)` s.t. `Σ w_c·b_c = B` (the same
+//!    `α = (B+√(BC))/E` shape the two-zone closed form takes for two
+//!    cohorts).  No iteration, no solver.
+//! 3. **PCCP polish.**  Algorithm 1 runs once per *cohort* (not per
+//!    device) at the stage-2 bandwidths, warm-started from the stage-1
+//!    point, and may move the partition point.  The local frequency is
+//!    then closed-form: the minimum `f` meeting the margin-adjusted
+//!    deadline (energy is increasing in `f`, so minimal feasible is
+//!    optimal), clamped to the hardware box.
+//!
+//! **Replication re-check.**  Members of a cohort differ from their
+//! representative by strictly sub-quantum parameter differences (< 0.1 dB
+//! of gain, < 0.1 ms of deadline, ...), but "sub-quantum" is not "zero":
+//! the representative's decision is re-checked against every member's
+//! *actual* parameters, and a member whose margin-adjusted deadline
+//! fails gets its frequency raised to its own minimum-feasible value
+//! (bandwidth is never changed by the repair, so `Σ b ≤ B` survives
+//! replication untouched).  If even `f_max` cannot repair a member the
+//! scenario is reported infeasible rather than silently violated.
+//!
+//! **Gap bound.**  The solve reports
+//! `gap = |E_replicated − E_representative| / E_representative`, where
+//! `E_representative = Σ_c w_c · E(rep_c)` prices every member at its
+//! representative's energy and `E_replicated` prices the actual plan on
+//! the actual devices.  Sub-quantum parameter drift and the re-check's
+//! frequency bumps are the *only* sources of difference, so the gap is a
+//! computable upper bound on the energy cost of compression for this
+//! scenario (see EXPERIMENTS.md §Cohorts for the methodology and the
+//! measured cohort-vs-exact gap, which also includes the two-stage
+//! warm start's distance from the full Algorithm-2 fixed point).
+
+use crate::risk::RiskBound;
+
+use super::alternating::{AlternatingOptions, PlanError};
+use super::pccp;
+use super::types::{Device, Plan, Policy, Scenario};
+
+/// Fingerprint-equivalence classes of a scenario, in first-seen device
+/// order (deterministic for a fixed device order, independent of any
+/// hash-iteration order — the map below is only ever *probed*).
+#[derive(Clone, Debug)]
+pub struct Cohorts {
+    /// Representative device index per cohort (its first member).
+    pub reps: Vec<usize>,
+    /// Member count per cohort.
+    pub weights: Vec<usize>,
+    /// Cohort index per device.
+    pub of_device: Vec<usize>,
+}
+
+impl Cohorts {
+    /// Number of cohorts.
+    pub fn len(&self) -> usize {
+        self.reps.len()
+    }
+
+    /// True when the scenario has no devices (and hence no cohorts).
+    pub fn is_empty(&self) -> bool {
+        self.reps.is_empty()
+    }
+}
+
+/// Bucket a scenario's devices by quantized fingerprint.
+///
+/// Two devices land in the same cohort iff
+/// [`crate::engine::device_fingerprint`] agrees — the same equivalence
+/// the plan cache and the shard router use, so cohorts never straddle
+/// service shards (routing hashes the identical fingerprint).
+pub fn bucket(sc: &Scenario) -> Cohorts {
+    let mut index: std::collections::BTreeMap<u64, usize> = std::collections::BTreeMap::new();
+    let mut reps = Vec::new();
+    let mut weights: Vec<usize> = Vec::new();
+    let mut of_device = Vec::with_capacity(sc.n());
+    for (i, d) in sc.devices.iter().enumerate() {
+        let fp = crate::engine::device_fingerprint(d);
+        let c = *index.entry(fp).or_insert_with(|| {
+            reps.push(i);
+            weights.push(0);
+            reps.len() - 1
+        });
+        weights[c] += 1;
+        of_device.push(c);
+    }
+    Cohorts { reps, weights, of_device }
+}
+
+/// Cohort-compressed solve outcome (the engine folds this into a
+/// [`crate::engine::PlanOutcome`]).
+#[derive(Clone, Debug)]
+pub struct CohortPlan {
+    /// Full n-device plan (representative decisions replicated and
+    /// re-checked per member).
+    pub plan: Plan,
+    /// `plan.expected_energy(sc)` — the replicated plan priced on the
+    /// actual devices.
+    pub energy: f64,
+    /// Number of cohorts solved.
+    pub cohorts: usize,
+    /// Replication-drift bound: `|energy − Σ w_c·E(rep_c)| / Σ w_c·E(rep_c)`.
+    pub gap_bound: f64,
+    /// Mean Algorithm-1 iterations per cohort.
+    pub avg_pccp_iters: f64,
+    /// Total inner Newton iterations across the per-cohort polishes.
+    pub newton_iters: usize,
+}
+
+/// Bisection iteration count for the minimum-bandwidth solve; the rate
+/// curve is smooth and monotone, so a fixed count keeps the result
+/// bit-deterministic across platforms and inputs.
+const BISECT_ITERS: usize = 80;
+
+/// Minimum bandwidth at which `dev` meets its margin-adjusted deadline
+/// at partition point `m` and `f_max`, or `None` when no finite
+/// bandwidth can.  `Some(0.0)` means the point needs no uplink.
+fn min_bandwidth(dev: &Device, m: usize, mpol: Policy) -> Option<f64> {
+    let f_max = dev.model.device.f_max_ghz;
+    // Remaining delay budget after the VM mean, the risk margin, and the
+    // local compute at f_max (the two-stage literature's E = Dmax − A).
+    let rem = dev.deadline_slack(m, mpol) - dev.model.t_loc_mean(m, f_max);
+    let d_bits = dev.model.d_bits(m);
+    // lint:allow(float-eq): exact m = 0 no-uplink sentinel (d_bits is a
+    // sum of zero terms, never a rounded value)
+    if d_bits == 0.0 {
+        return (rem >= 0.0).then_some(0.0);
+    }
+    if rem <= 0.0 {
+        return None;
+    }
+    // Required rate, against the channel's b → ∞ rate asymptote
+    // p·g/(n0·ln2): beyond it no bandwidth is enough.
+    let need = d_bits / rem * (1.0 + 1e-9);
+    let asymptote = dev.uplink.p_tx * dev.uplink.gain / (dev.uplink.n0 * std::f64::consts::LN_2);
+    if need >= asymptote {
+        return None;
+    }
+    // Bracket then bisect the monotone rate curve.
+    let mut hi = 1.0;
+    while dev.uplink.rate_bps(hi) < need {
+        hi *= 2.0;
+        if hi > 1e15 {
+            return None;
+        }
+    }
+    let mut lo = 0.0;
+    for _ in 0..BISECT_ITERS {
+        let mid = 0.5 * (lo + hi);
+        if dev.uplink.rate_bps(mid) < need {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(hi)
+}
+
+/// Minimum frequency at which `dev` meets its margin-adjusted deadline
+/// at `(m, b)`, clamped to the hardware box; `None` when even `f_max`
+/// misses.  Minimal feasible is energy-optimal (E_loc ∝ f²).
+fn min_frequency(dev: &Device, m: usize, b_hz: f64, mpol: Policy) -> Option<f64> {
+    let hw = &dev.model.device;
+    let p = &dev.model.points[m];
+    let rem = dev.deadline_slack(m, mpol) - dev.uplink.t_off(dev.model.d_bits(m), b_hz);
+    // lint:allow(float-eq): exact all-offload sentinel (w_gflops is set
+    // to literal 0.0 at the remote-everything point, never computed)
+    let f = if p.w_gflops == 0.0 {
+        hw.f_min_ghz
+    } else {
+        if rem <= 0.0 {
+            return None;
+        }
+        (p.w_gflops / (p.g_flops_cycle * rem)).clamp(hw.f_min_ghz, hw.f_max_ghz)
+    };
+    dev.deadline_ok(m, f, b_hz, mpol).then_some(f)
+}
+
+/// One stage-1 knapsack item: a feasible partition point with its
+/// minimum bandwidth and its energy at `(f_max, b_req)`.
+#[derive(Clone, Copy, Debug)]
+struct Item {
+    m: usize,
+    b_req: f64,
+    energy: f64,
+}
+
+/// Solve the scenario cohort-compressed.  `opts.pccp` configures the
+/// per-cohort Algorithm-1 polish; everything else in `opts` is unused
+/// here (there is no outer alternation — the two-stage warm start plus
+/// one polish per cohort is the whole solve).
+pub fn solve(
+    sc: &Scenario,
+    cohorts: &Cohorts,
+    opts: &AlternatingOptions,
+    bound: RiskBound,
+) -> Result<CohortPlan, PlanError> {
+    let mpol = Policy::Robust(bound);
+    let c_n = cohorts.len();
+    if c_n == 0 {
+        return Err(PlanError::Infeasible("empty scenario".into()));
+    }
+
+    // -- stage 1: grouped knapsack over cohort × partition point ----------
+    let mut items: Vec<Vec<Item>> = Vec::with_capacity(c_n);
+    for (&rep, &w) in cohorts.reps.iter().zip(&cohorts.weights) {
+        let dev = &sc.devices[rep];
+        let f_max = dev.model.device.f_max_ghz;
+        let mut list: Vec<Item> = (0..dev.model.num_points())
+            .filter_map(|m| {
+                min_bandwidth(dev, m, mpol)
+                    .map(|b| Item { m, b_req: b, energy: dev.energy_mean(m, f_max, b) })
+            })
+            .collect();
+        if list.is_empty() {
+            return Err(PlanError::Infeasible(format!(
+                "cohort of device {rep} ({w} members) has no feasible partition point \
+                 at any bandwidth"
+            )));
+        }
+        // Keep only Pareto-optimal (b_req, energy) items: sorted by
+        // bandwidth, an item dominated on both axes never helps the
+        // knapsack or its repair loop.
+        list.sort_by(|a, b| a.b_req.total_cmp(&b.b_req).then(a.energy.total_cmp(&b.energy)));
+        let mut pareto: Vec<Item> = Vec::with_capacity(list.len());
+        for it in list {
+            if pareto.last().is_none_or(|p| it.energy < p.energy) {
+                pareto.push(it);
+            }
+        }
+        items.push(pareto);
+    }
+
+    // Unconstrained pick: each cohort's minimum-energy item.
+    let mut pick: Vec<usize> = items
+        .iter()
+        .map(|list| {
+            list.iter()
+                .enumerate()
+                .min_by(|a, b| a.1.energy.total_cmp(&b.1.energy))
+                .map(|(k, _)| k)
+                // lint:allow(panic-path): every list verified non-empty above
+                .unwrap()
+        })
+        .collect();
+    let weighted_demand = |pick: &[usize]| -> f64 {
+        pick.iter()
+            .zip(&items)
+            .zip(&cohorts.weights)
+            .map(|((&k, list), &w)| w as f64 * list[k].b_req)
+            .sum()
+    };
+    // Repair toward the budget: repeatedly apply the cheapest
+    // energy-per-bandwidth swap (deterministic total_cmp argmin; the
+    // Pareto lists guarantee lower-index items need strictly less
+    // bandwidth).  Falls out with Infeasible when every cohort already
+    // sits at its least-bandwidth item and the budget still overflows.
+    let budget = sc.total_bandwidth_hz;
+    while weighted_demand(&pick) > budget {
+        let mut best: Option<(usize, usize, f64)> = None; // (cohort, item, Δe/Δb)
+        for (c, list) in items.iter().enumerate() {
+            let cur = list[pick[c]];
+            for (k, alt) in list.iter().enumerate().take(pick[c]) {
+                let db = cohorts.weights[c] as f64 * (cur.b_req - alt.b_req);
+                if db <= 0.0 {
+                    continue;
+                }
+                let de = cohorts.weights[c] as f64 * (alt.energy - cur.energy);
+                let ratio = de / db;
+                if best.is_none_or(|(_, _, r)| ratio < r) {
+                    best = Some((c, k, ratio));
+                }
+            }
+        }
+        match best {
+            Some((c, k, _)) => pick[c] = k,
+            None => {
+                return Err(PlanError::Infeasible(format!(
+                    "weighted minimum bandwidth demand {:.3e} Hz exceeds the budget {budget:.3e} Hz \
+                     even at the least-bandwidth partition points",
+                    weighted_demand(&pick)
+                )))
+            }
+        }
+    }
+
+    // -- stage 2: closed-form square-root split of the leftover ----------
+    let mut b_c: Vec<f64> = pick.iter().zip(&items).map(|(&k, list)| list[k].b_req).collect();
+    let used: f64 = weighted_demand(&pick);
+    let leftover = (budget - used).max(0.0);
+    // b ∝ √(p·d/η): stationarity of Σ w·p·d/(η·b) under Σ w·b = leftover,
+    // with η frozen at the equal-share operating point.
+    let b_ref = budget / sc.n() as f64;
+    let score: Vec<f64> = cohorts
+        .reps
+        .iter()
+        .zip(&pick)
+        .zip(&items)
+        .map(|((&rep, &k), list)| {
+            let dev = &sc.devices[rep];
+            let d_bits = dev.model.d_bits(list[k].m);
+            // lint:allow(float-eq): exact m = 0 no-uplink sentinel (see
+            // min_bandwidth)
+            if d_bits == 0.0 {
+                0.0
+            } else {
+                (dev.uplink.p_tx * d_bits / dev.uplink.spectral_efficiency(b_ref)).sqrt()
+            }
+        })
+        .collect();
+    let norm: f64 = score.iter().zip(&cohorts.weights).map(|(s, &w)| w as f64 * s).sum();
+    if norm > 0.0 && leftover > 0.0 {
+        for (b, s) in b_c.iter_mut().zip(&score) {
+            *b += leftover * s / norm;
+        }
+    }
+
+    // -- stage 3: one PCCP polish per cohort + closed-form frequency -----
+    let mut m_c: Vec<usize> = pick.iter().zip(&items).map(|(&k, list)| list[k].m).collect();
+    let mut f_c: Vec<f64> = vec![0.0; c_n];
+    let mut pccp_iters = 0usize;
+    let mut newton = 0usize;
+    for c in 0..c_n {
+        let dev = &sc.devices[cohorts.reps[c]];
+        let f_max = dev.model.device.f_max_ghz;
+        let mp1 = dev.model.num_points();
+        // Smoothed one-hot warm start at the stage-1 point (the same
+        // interior seeding Algorithm 1 uses for its own cold starts).
+        let mut seed = vec![0.02 / (mp1 - 1) as f64; mp1];
+        seed[m_c[c]] = 0.98;
+        match pccp::solve_device(dev, f_max, b_c[c], &opts.pccp, Some(&seed), bound) {
+            Ok(r) => {
+                pccp_iters += r.iters;
+                newton += r.newton_iters;
+                m_c[c] = r.m;
+            }
+            // The stage-1 point stays feasible at b_c ≥ b_req, so an
+            // infeasibility here is a numerical corner: keep the warm
+            // start rather than fail the whole fleet.
+            Err(pccp::PccpError::Infeasible { .. }) => {}
+            Err(pccp::PccpError::Solver(e)) => return Err(PlanError::Solver(e)),
+        }
+        f_c[c] = match min_frequency(dev, m_c[c], b_c[c], mpol) {
+            Some(f) => f,
+            None => {
+                // PCCP moved to a point the closed form cannot price
+                // (boundary arithmetic): fall back to the stage-1 point,
+                // which min_bandwidth certified feasible at f_max.
+                m_c[c] = items[c][pick[c]].m;
+                min_frequency(dev, m_c[c], b_c[c], mpol).unwrap_or(f_max)
+            }
+        };
+    }
+
+    // -- replication with the per-member feasibility re-check ------------
+    let n = sc.n();
+    let mut partition = Vec::with_capacity(n);
+    let mut bandwidth = Vec::with_capacity(n);
+    let mut freq = Vec::with_capacity(n);
+    for (i, d) in sc.devices.iter().enumerate() {
+        let c = cohorts.of_device[i];
+        let (m, b) = (m_c[c], b_c[c]);
+        let mut f = f_c[c];
+        if !d.deadline_ok(m, f, b, mpol) {
+            // Sub-quantum drift from the representative: repair with this
+            // member's own minimum-feasible frequency (never its
+            // bandwidth — Σ b ≤ B must survive replication).
+            f = min_frequency(d, m, b, mpol).ok_or_else(|| {
+                PlanError::Infeasible(format!(
+                    "device {i} cannot meet its deadline on its cohort's decision \
+                     (point {m}, {b:.0} Hz) even at f_max"
+                ))
+            })?;
+        }
+        partition.push(m);
+        bandwidth.push(b);
+        freq.push(f);
+    }
+    let plan = Plan { partition, bandwidth_hz: bandwidth, freq_ghz: freq };
+    debug_assert!(plan.bandwidth_ok(sc));
+
+    // -- energies and the replication-drift bound ------------------------
+    let rep_energy: f64 = (0..c_n)
+        .map(|c| {
+            cohorts.weights[c] as f64
+                * sc.devices[cohorts.reps[c]].energy_mean(m_c[c], f_c[c], b_c[c])
+        })
+        .sum();
+    let energy = plan.expected_energy(sc);
+    let gap_bound = (energy - rep_energy).abs() / rep_energy.max(f64::MIN_POSITIVE);
+
+    Ok(CohortPlan {
+        plan,
+        energy,
+        cohorts: c_n,
+        gap_bound,
+        avg_pccp_iters: pccp_iters as f64 / c_n as f64,
+        newton_iters: newton,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Uplink;
+    use crate::models::ModelProfile;
+    use crate::util::rng::Rng;
+
+    fn uniform(n: usize, seed: u64) -> Scenario {
+        let mut rng = Rng::new(seed);
+        Scenario::uniform(&ModelProfile::alexnet_paper(), n, 10e6, 0.25, 0.05, &mut rng)
+    }
+
+    /// k distinct channel classes replicated `reps` times each.
+    fn clustered(classes: usize, reps: usize) -> Scenario {
+        let model = ModelProfile::alexnet_paper();
+        let devices = (0..classes)
+            .flat_map(|c| {
+                let gain_db = -80.0 - 5.0 * c as f64;
+                (0..reps).map(move |_| (gain_db,))
+            })
+            .map(|(gain_db,)| Device {
+                model: model.clone(),
+                uplink: Uplink::from_gain_db(gain_db),
+                deadline_s: 0.25,
+                risk: 0.05,
+            })
+            .collect();
+        Scenario { devices, total_bandwidth_hz: 10e6 }
+    }
+
+    #[test]
+    fn bucket_groups_identical_devices() {
+        let sc = clustered(3, 5);
+        let c = bucket(&sc);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.weights, vec![5, 5, 5]);
+        assert_eq!(c.reps, vec![0, 5, 10]);
+        for (i, &ci) in c.of_device.iter().enumerate() {
+            assert_eq!(ci, i / 5);
+        }
+    }
+
+    #[test]
+    fn bucket_keeps_unique_devices_apart() {
+        let sc = uniform(12, 3);
+        let c = bucket(&sc);
+        assert_eq!(c.len(), 12, "random geometry should give unique fingerprints");
+        assert!(c.weights.iter().all(|&w| w == 1));
+    }
+
+    #[test]
+    fn min_bandwidth_meets_the_deadline_exactly() {
+        let sc = uniform(4, 9);
+        let mpol = Policy::ROBUST;
+        for d in &sc.devices {
+            let f_max = d.model.device.f_max_ghz;
+            for m in 0..d.model.num_points() {
+                if let Some(b) = min_bandwidth(d, m, mpol) {
+                    assert!(d.deadline_ok(m, f_max, b, mpol), "m={m} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min_frequency_is_feasible_and_minimal() {
+        let sc = uniform(4, 11);
+        let mpol = Policy::ROBUST;
+        let d = &sc.devices[0];
+        let b = 2e6;
+        for m in 0..d.model.num_points() {
+            if let Some(f) = min_frequency(d, m, b, mpol) {
+                assert!(d.deadline_ok(m, f, b, mpol), "m={m}");
+                let hw = &d.model.device;
+                if f > hw.f_min_ghz + 1e-9 && d.model.points[m].w_gflops > 0.0 {
+                    // Just below the minimum the deadline must fail
+                    // (modulo the deadline_ok tolerance band).
+                    assert!(
+                        d.deadline_margin(m, f * 0.999, b, mpol)
+                            < d.deadline_margin(m, f, b, mpol),
+                        "m={m}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_fleet_solves_with_bounded_gap() {
+        let sc = clustered(4, 25);
+        let c = bucket(&sc);
+        let r = solve(&sc, &c, &AlternatingOptions::default(), RiskBound::Ecr).unwrap();
+        assert_eq!(r.cohorts, 4);
+        assert!(r.plan.feasible(&sc, Policy::ROBUST));
+        assert!(r.plan.bandwidth_ok(&sc));
+        assert!(r.plan.freq_ok(&sc));
+        // Identical members ⇒ replication drift is exactly zero.
+        assert!(r.gap_bound < 1e-12, "gap={}", r.gap_bound);
+        // All members of a cohort share the decision.
+        for (i, &ci) in c.of_device.iter().enumerate() {
+            assert_eq!(r.plan.partition[i], r.plan.partition[c.reps[ci]]);
+            assert_eq!(r.plan.bandwidth_hz[i].to_bits(), r.plan.bandwidth_hz[c.reps[ci]].to_bits());
+        }
+    }
+
+    #[test]
+    fn infeasible_deadline_is_an_error_not_a_panic() {
+        let mut sc = clustered(2, 3);
+        for d in &mut sc.devices {
+            d.deadline_s = 0.004;
+        }
+        let c = bucket(&sc);
+        assert!(matches!(
+            solve(&sc, &c, &AlternatingOptions::default(), RiskBound::Ecr),
+            Err(PlanError::Infeasible(_))
+        ));
+    }
+
+    #[test]
+    fn bandwidth_repair_respects_the_budget() {
+        // Starve the budget so the unconstrained picks must be repaired.
+        let mut sc = clustered(3, 40);
+        sc.total_bandwidth_hz = 2e6;
+        for d in &mut sc.devices {
+            d.deadline_s = 2.0; // all-local must stay reachable
+        }
+        let c = bucket(&sc);
+        let r = solve(&sc, &c, &AlternatingOptions::default(), RiskBound::Ecr).unwrap();
+        assert!(r.plan.bandwidth_ok(&sc));
+        assert!(r.plan.feasible(&sc, Policy::ROBUST));
+    }
+}

@@ -13,6 +13,7 @@
 
 pub mod alternating;
 pub mod baselines;
+pub mod cohort;
 pub mod ecr;
 pub mod pccp;
 pub mod resource;

@@ -44,6 +44,15 @@ pub struct ServiceOptions {
     pub breaker_threshold: usize,
     /// Drains an open breaker stays open before going half-open.
     pub breaker_cooldown: usize,
+    /// Cohort-compressed robust solves on every shard planner
+    /// ([`crate::optim::cohort`]).  Cohorts never straddle shards by
+    /// construction: routing keys on the same [`device_fingerprint`]
+    /// that defines cohort membership, so equal-fingerprint devices land
+    /// on the same shard (only a load-bound overflow spill can separate
+    /// them, and correctness never depends on co-location — compression
+    /// is per shard and each member is feasibility-re-checked).  Off by
+    /// default; an off service is byte-identical to the pre-cohort one.
+    pub cohorts: bool,
 }
 
 impl Default for ServiceOptions {
@@ -56,6 +65,7 @@ impl Default for ServiceOptions {
             cache_capacity: 32,
             breaker_threshold: 0,
             breaker_cooldown: 2,
+            cohorts: false,
         }
     }
 }
@@ -164,6 +174,7 @@ impl PlannerService {
                     PlannerBuilder::new()
                         .threads(opts.threads)
                         .cache_capacity(opts.cache_capacity)
+                        .cohorts(opts.cohorts)
                         .build(),
                 )
             })

@@ -1,0 +1,113 @@
+//! Cohort-compressed planning contracts, through the engine facade:
+//!
+//! * cohorts=off ≡ cohorts=on **bit-identically** whenever every device
+//!   has a unique fingerprint (the compression path falls through to the
+//!   exact solver instead of "compressing" to n cohorts),
+//! * the cohort plan's energy stays within 1% of the exact Algorithm-2
+//!   plan on mixed clustered/unique fleets,
+//! * two devices whose parameters differ by less than a fingerprint
+//!   quantum share a cohort, and both stay feasible after the
+//!   replication re-check.
+
+use ripra::channel::Uplink;
+use ripra::engine::{device_fingerprint, PlanRequest, PlannerBuilder, Policy};
+use ripra::models::ModelProfile;
+use ripra::optim::{Device, Scenario};
+use ripra::util::rng::Rng;
+
+fn device_at(gain_db: f64, deadline_s: f64) -> Device {
+    Device {
+        model: ModelProfile::alexnet_paper(),
+        uplink: Uplink::from_gain_db(gain_db),
+        deadline_s,
+        risk: 0.05,
+    }
+}
+
+/// `classes` channel classes replicated `reps` times each.
+fn clustered(classes: usize, reps: usize, b: f64) -> Scenario {
+    let mut devices = Vec::with_capacity(classes * reps);
+    for c in 0..classes {
+        for _ in 0..reps {
+            devices.push(device_at(-80.0 - 5.0 * c as f64, 0.25));
+        }
+    }
+    Scenario { devices, total_bandwidth_hz: b }
+}
+
+#[test]
+fn cohorts_off_and_on_are_bit_identical_on_all_unique_fleets() {
+    for seed in [3u64, 17, 41, 90, 2026] {
+        let mut rng = Rng::new(seed);
+        let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 10, 10e6, 0.25, 0.05, &mut rng);
+        let fps: std::collections::BTreeSet<u64> =
+            sc.devices.iter().map(device_fingerprint).collect();
+        assert_eq!(fps.len(), sc.n(), "seed {seed}: fingerprints must be unique");
+        let req = PlanRequest::new(sc, Policy::Robust);
+        let off = PlannerBuilder::new().build().plan(&req).expect("exact solve");
+        let on = PlannerBuilder::new().cohorts(true).build().plan(&req).expect("cohort solve");
+        // All-unique fleets compress to n cohorts, so the cohort path
+        // must fall through to the exact solver — bit-for-bit.
+        assert_eq!(on.diagnostics.cohorts, 0, "seed {seed}: no compression happened");
+        assert_eq!(on.plan.partition, off.plan.partition, "seed {seed}");
+        for i in 0..off.plan.partition.len() {
+            assert_eq!(
+                on.plan.bandwidth_hz[i].to_bits(),
+                off.plan.bandwidth_hz[i].to_bits(),
+                "seed {seed}, device {i}"
+            );
+            assert_eq!(
+                on.plan.freq_ghz[i].to_bits(),
+                off.plan.freq_ghz[i].to_bits(),
+                "seed {seed}, device {i}"
+            );
+        }
+        assert_eq!(on.energy.to_bits(), off.energy.to_bits(), "seed {seed}");
+    }
+}
+
+#[test]
+fn cohort_energy_is_within_one_percent_of_exact_on_a_mixed_fleet() {
+    // 3 clustered classes of 8 plus 4 unique stragglers: the compression
+    // is real (7 cohorts for 28 devices) but the exact solve is cheap
+    // enough to run side by side.
+    let mut sc = clustered(3, 8, 20e6);
+    let mut rng = Rng::new(77);
+    let extra = Scenario::uniform(&ModelProfile::alexnet_paper(), 4, 1.0, 0.25, 0.05, &mut rng);
+    sc.devices.extend(extra.devices);
+    let req = PlanRequest::new(sc.clone(), Policy::Robust);
+    let exact = PlannerBuilder::new().build().plan(&req).expect("exact solve");
+    let cohort = PlannerBuilder::new().cohorts(true).build().plan(&req).expect("cohort solve");
+    assert_eq!(cohort.diagnostics.cohorts, 7);
+    assert!(cohort.plan.feasible(&sc, ripra::optim::Policy::ROBUST));
+    assert!(cohort.plan.bandwidth_ok(&sc));
+    assert!(
+        cohort.energy <= 1.01 * exact.energy,
+        "cohort {} J vs exact {} J (gap {:.4}%)",
+        cohort.energy,
+        exact.energy,
+        100.0 * (cohort.energy - exact.energy) / exact.energy
+    );
+    // The self-reported replication-drift bound stays under the same bar.
+    assert!(cohort.diagnostics.cohort_gap < 0.01, "gap={}", cohort.diagnostics.cohort_gap);
+}
+
+#[test]
+fn sub_quantum_twins_share_a_cohort_and_both_stay_feasible() {
+    // 0.004 dB apart: both gains round to the same 0.1 dB fingerprint
+    // cell, so the devices are "the same" to the bucketer while their
+    // actual channels differ — exactly what the replication re-check is
+    // for.
+    let a = device_at(-60.0, 0.25);
+    let b = device_at(-60.004, 0.25);
+    assert_eq!(device_fingerprint(&a), device_fingerprint(&b), "twins must collide");
+    assert!(a.uplink.gain != b.uplink.gain, "but their physics must differ");
+    let sc = Scenario { devices: vec![a, b], total_bandwidth_hz: 10e6 };
+    let mut planner = PlannerBuilder::new().cohorts(true).build();
+    let out = planner.plan(&PlanRequest::new(sc.clone(), Policy::Robust)).expect("cohort solve");
+    assert_eq!(out.diagnostics.cohorts, 1, "one cohort for the twin pair");
+    assert_eq!(out.plan.partition[0], out.plan.partition[1]);
+    assert_eq!(out.plan.bandwidth_hz[0].to_bits(), out.plan.bandwidth_hz[1].to_bits());
+    assert!(out.plan.feasible(&sc, ripra::optim::Policy::ROBUST));
+    assert!(out.plan.bandwidth_ok(&sc));
+}

@@ -1,0 +1,85 @@
+//! Wire-serving benchmark: a fresh `Server` on an ephemeral loopback
+//! port per iteration, replaying one deterministic `loadgen` script
+//! (admissions, churn deltas, plan/stats probes, shutdown) end to end
+//! over TCP.  Timings land in `BENCH_planner.json` as `serve_wire_*`
+//! cases, and the canonical serving rows — `serve_p50_us`,
+//! `serve_p99_us`, `serve_mean_us`, `shed_rate` — merge in under
+//! `benches.serve_wire` via [`LoadGenReport::write_bench_rows`] (see
+//! EXPERIMENTS.md §Serving for the methodology).
+//!
+//! `cargo bench --bench serve_wire -- --test` (or `BENCH_SMOKE=1`) runs
+//! every case once for CI smoke coverage.
+
+use std::path::Path;
+use std::time::Duration;
+
+use ripra::fleet::loadgen::{self, LoadGenOptions, LoadGenReport};
+use ripra::service::{Server, ServerOptions};
+use ripra::util::bench::Bencher;
+
+/// One full script replay against a fresh server; returns the report.
+fn replay(opts: &LoadGenOptions, shards: usize, queue_capacity: usize) -> LoadGenReport {
+    let server = Server::bind(&ServerOptions {
+        listen: "127.0.0.1:0".into(),
+        shards,
+        queue_capacity,
+        ..ServerOptions::default()
+    })
+    .expect("bind loopback server");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let handle = std::thread::spawn(move || server.run());
+    // rate 0.0: no pacing sleeps — the bench measures service latency,
+    // not the generator's clock.
+    let report = loadgen::run_script(&addr, &loadgen::script(opts), 0.0)
+        .expect("loadgen replay");
+    handle.join().expect("server thread").expect("clean shutdown");
+    report
+}
+
+fn main() {
+    let mut bench =
+        Bencher::auto().with_window(Duration::from_millis(300), Duration::from_secs(3));
+
+    let base = LoadGenOptions {
+        tenants: 2,
+        devices: 3,
+        events: 48,
+        probe_every: 8,
+        seed: 0x5E17E,
+        ..LoadGenOptions::default()
+    };
+    let cases = [
+        ("serve_wire_shards1", 1usize, 64usize),
+        ("serve_wire_shards4", 4, 64),
+        // A deliberately tiny queue: the shed path (drop + drain +
+        // back-off hint) is on the measured path.
+        ("serve_wire_q2_shed", 1, 2),
+    ];
+
+    let mut canonical: Option<LoadGenReport> = None;
+    for (name, shards, queue) in cases {
+        bench.bench(name, || replay(&base, shards, queue).requests as f64);
+        // Latency/shed rows from one deterministic replay (the script is
+        // a pure function of the seed; only wall latencies vary).
+        let report = replay(&base, shards, queue);
+        bench.attach(name, "requests", report.requests as f64);
+        bench.attach(name, "sheds", report.sheds as f64);
+        bench.attach(name, "errors", report.errors as f64);
+        bench.attach(name, "serve_p50_us", report.p50_us);
+        bench.attach(name, "serve_p99_us", report.p99_us);
+        bench.attach(name, "shed_rate", report.shed_rate);
+        if name == "serve_wire_shards1" {
+            canonical = Some(report);
+        }
+    }
+
+    bench.write_json(Path::new("BENCH_planner.json")).expect("writing BENCH_planner.json");
+    // The canonical `benches.serve_wire` row (serve_p50_us / serve_p99_us
+    // / serve_mean_us / shed_rate) merges in on top.
+    if let Some(report) = canonical {
+        report
+            .write_bench_rows(Path::new("BENCH_planner.json"))
+            .expect("merging serve rows into BENCH_planner.json");
+    }
+    println!("wrote BENCH_planner.json");
+}

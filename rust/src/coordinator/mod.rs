@@ -22,6 +22,16 @@
 //! handed to the batcher.  The batcher groups features per partition
 //! point and flushes full batches immediately or on a window timeout
 //! (vLLM-style dynamic batching); remainders run at batch 1.
+//!
+//! This module is the **in-process** serve mode (`ripra serve` without
+//! `--listen`): plan once, then execute the plan against real PJRT
+//! artifacts.  The other serve mode — `ripra serve --listen ADDR` — is
+//! the network-facing *planner frontend* in [`crate::service::server`]:
+//! it speaks the length-prefixed wire protocol of
+//! [`crate::service::wire`] over TCP and answers admit/delta/plan
+//! traffic (e.g. from `ripra loadgen`) instead of executing inference.
+//! EXPERIMENTS.md §Serving specifies the wire protocol and the replay
+//! methodology for that mode.
 
 // lint:allow-file(wall-clock): real serving-latency harness — measured
 // wall times are the *output* here, not a hidden input to planner JSON.

@@ -11,9 +11,13 @@ use super::outcome::PlanOutcome;
 /// [`super::Planner::cache_stats`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Probes answered from the cache.
     pub hits: u64,
+    /// Probes that found nothing.
     pub misses: u64,
+    /// Entries currently stored.
     pub len: usize,
+    /// Maximum entries (0 = caching disabled).
     pub capacity: usize,
 }
 

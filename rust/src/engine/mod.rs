@@ -50,6 +50,8 @@
 //! `optim::baselines::worst_case`, ...) remain as thin `#[deprecated]`
 //! shims for one release; new code should construct a planner.
 
+#![warn(missing_docs)]
+
 pub mod cache;
 pub mod outcome;
 pub mod planner;

@@ -72,6 +72,8 @@ pub struct PlanOutcome {
     /// under (meaningful for the robust policy family; the baselines
     /// carry the request's bound through unchanged).
     pub bound: RiskBound,
+    /// Solve-cost and provenance counters (iterations, wall time,
+    /// cache/warm-start/degraded flags).
     pub diagnostics: Diagnostics,
 }
 

@@ -61,6 +61,8 @@ impl Default for PlannerBuilder {
 }
 
 impl PlannerBuilder {
+    /// Start from the default configuration (default Algorithm-2
+    /// options, default cache capacity, cohorts off).
     pub fn new() -> PlannerBuilder {
         PlannerBuilder {
             opts: AlternatingOptions::default(),
@@ -122,6 +124,8 @@ impl PlannerBuilder {
         self
     }
 
+    /// Construct the [`Planner`] (fresh cache, fresh workspace, edge
+    /// marked reachable).
     pub fn build(self) -> Planner {
         Planner {
             opts: self.opts,
@@ -168,6 +172,7 @@ impl Default for Planner {
 }
 
 impl Planner {
+    /// Shorthand for [`PlannerBuilder::new`].
     pub fn builder() -> PlannerBuilder {
         PlannerBuilder::new()
     }
@@ -177,6 +182,7 @@ impl Planner {
         &self.opts
     }
 
+    /// Plan-cache hit/miss counters and occupancy.
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
     }
@@ -201,6 +207,7 @@ impl Planner {
         self.edge_available
     }
 
+    /// Drop every cached plan (counters are kept).
     pub fn clear_cache(&mut self) {
         self.cache.clear();
     }

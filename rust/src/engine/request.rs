@@ -80,16 +80,20 @@ impl Policy {
 /// [`PlanRequest::CLI_FLAGS`] so the CLI can never drift from the API.
 #[derive(Clone, Copy, Debug)]
 pub struct CliFlag {
+    /// Flag name without the leading `--`.
     pub name: &'static str,
     /// Value placeholder; `None` marks a boolean flag.
     pub value: Option<&'static str>,
+    /// One-line usage text.
     pub help: &'static str,
 }
 
 /// A planning request: scenario + policy × bound (+ optional overrides).
 #[derive(Clone, Debug)]
 pub struct PlanRequest {
+    /// The multi-device problem instance to solve.
     pub scenario: Scenario,
+    /// Planning policy (robust / baselines / search variants).
     pub policy: Policy,
     /// Chance-constraint transform for the robust policy family
     /// (default [`RiskBound::Ecr`], the paper's Theorem 1 — back-compat
@@ -129,6 +133,8 @@ impl PlanRequest {
         CliFlag { name: "json", value: None, help: "emit the PlanOutcome as JSON" },
     ];
 
+    /// A request with the default bound (ECR), no init-partition
+    /// override, and caching on.
     pub fn new(scenario: Scenario, policy: Policy) -> PlanRequest {
         PlanRequest {
             scenario,

@@ -1,0 +1,473 @@
+//! `ripra loadgen` — deterministic, seed-replayable wire traffic for the
+//! TCP planner frontend ([`crate::service::server`]).
+//!
+//! The generator converts the fleet simulator's event vocabulary
+//! (channel fades, QoS renegotiation, bandwidth changes, join/leave)
+//! into a **script**: a fixed sequence of [`WireRequest`]s computed
+//! entirely up front from the seed, with no dependence on the server,
+//! the clock, or socket timing.  Same seed ⇒ the same script ⇒
+//! byte-identical frames on the wire ([`encode_script`]) — and since the
+//! server is deterministic for a single sequential connection, the same
+//! response transcript too.  `rust/tests/serve.rs` pins both halves of
+//! that contract, and EXPERIMENTS.md §Serving specifies it.
+//!
+//! [`run`] plays a script against a live server, pacing at a target
+//! request rate and measuring *client-side* service latency per request
+//! (the only wall-clock in this module — it feeds the report, never the
+//! request stream).  [`LoadGenReport::write_bench_rows`] merges
+//! `serve_p50_us` / `serve_p99_us` / `shed_rate` into BENCH_planner.json
+//! alongside the in-process planner benches.
+
+// lint:allow-file(wall-clock): client-side latency measurement only —
+// the request stream is precomputed by `script` before any clock is
+// read, so timing can never alter generated traffic or the transcript.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::channel::{GaussMarkov, Uplink};
+use crate::engine::ScenarioDelta;
+use crate::models::ModelProfile;
+use crate::optim::types::{Device, Scenario};
+use crate::risk::RiskBound;
+use crate::service::wire::{self, WireRequest, WireResponse};
+use crate::service::TenantId;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Stationary shadowing σ of the fading process, dB (matches the fleet
+/// driver so loadgen channels look like simulator channels).
+const SHADOW_SIGMA_DB: f64 = 2.0;
+
+/// AR(1) memory of the fading process (matches the fleet driver).
+const GM_ALPHA: f64 = 0.992;
+
+/// Risk renegotiation multipliers (matches the fleet driver's steps).
+const RISK_STEPS: [f64; 3] = [0.5, 1.0, 2.0];
+
+/// Configuration for [`script`] / [`run`].
+#[derive(Clone, Debug)]
+pub struct LoadGenOptions {
+    /// DNN/hardware profile every generated device runs.
+    pub model: ModelProfile,
+    /// Tenant fleets to admit (ids 1..=tenants).
+    pub tenants: usize,
+    /// Initial devices per tenant.
+    pub devices: usize,
+    /// Delta events to generate after admission.
+    pub events: usize,
+    /// Target request rate on the wire, requests/second (0 = unpaced).
+    pub rate_hz: f64,
+    /// Interleave a `plan` + `stats` probe after every this many deltas
+    /// (0 disables probes; the final sweep still runs).
+    pub probe_every: usize,
+    /// Per-tenant total uplink budget, Hz.
+    pub total_bandwidth_hz: f64,
+    /// Base per-task deadline, seconds (renegotiations scale it).
+    pub deadline_s: f64,
+    /// Base tolerated violation probability.
+    pub risk: f64,
+    /// Risk bound every tenant admits under.
+    pub bound: RiskBound,
+    /// Master seed: the *entire* request stream is a function of it.
+    pub seed: u64,
+}
+
+impl Default for LoadGenOptions {
+    fn default() -> Self {
+        LoadGenOptions {
+            model: ModelProfile::alexnet_paper(),
+            tenants: 2,
+            devices: 4,
+            events: 64,
+            rate_hz: 200.0,
+            probe_every: 8,
+            total_bandwidth_hz: 12e6,
+            deadline_s: 0.25,
+            risk: 0.05,
+            bound: RiskBound::Ecr,
+            seed: 7,
+        }
+    }
+}
+
+/// Mutable per-tenant view the generator tracks while scripting (the
+/// same state the server will reconstruct from the deltas).
+struct TenantSim {
+    id: TenantId,
+    /// One fading process per live device, tenant device order.
+    gms: Vec<GaussMarkov>,
+}
+
+/// Place one device like the fleet driver does: uniform in the 400 m
+/// square, path-loss mean gain, fading started at the mean.
+fn place_device(
+    opts: &LoadGenOptions,
+    placement: &mut Rng,
+) -> (GaussMarkov, Device) {
+    let x = placement.range(-200.0, 200.0);
+    let y = placement.range(-200.0, 200.0);
+    let r = (x * x + y * y).sqrt().max(1.0);
+    let mean_db = -(38.0 + 30.0 * r.log10());
+    let gm = GaussMarkov::new(mean_db, SHADOW_SIGMA_DB, GM_ALPHA);
+    let dev = Device {
+        model: opts.model.clone(),
+        uplink: Uplink::from_gain_db(gm.gain_db()),
+        deadline_s: opts.deadline_s,
+        risk: opts.risk,
+    };
+    (gm, dev)
+}
+
+/// Build the deterministic request script: admissions, a seeded mix of
+/// deltas (25 % deadline, 25 % risk, 30 % channel fade, 10 % bandwidth,
+/// 5 % join, 5 % leave), periodic `plan`/`stats` probes, and a final
+/// per-tenant plan sweep ending in `shutdown`.
+///
+/// Three RNG streams fork off the master seed — placement, channel
+/// innovations, event mix — so, e.g., adding a tenant shifts placements
+/// without rewriting the whole event sequence.
+pub fn script(opts: &LoadGenOptions) -> Vec<WireRequest> {
+    let mut master = Rng::new(opts.seed);
+    let mut placement = master.fork(0x1D01);
+    let mut channels = master.fork(0x1D02);
+    let mut events = master.fork(0x1D03);
+
+    let tenants = opts.tenants.max(1);
+    let n0 = opts.devices.max(1);
+    let mut reqs = Vec::new();
+    let mut sims: Vec<TenantSim> = Vec::new();
+    for t in 1..=tenants as TenantId {
+        let mut gms = Vec::with_capacity(n0);
+        let mut devices = Vec::with_capacity(n0);
+        for _ in 0..n0 {
+            let (gm, dev) = place_device(opts, &mut placement);
+            gms.push(gm);
+            devices.push(dev);
+        }
+        reqs.push(WireRequest::Admit {
+            tenant: t,
+            scenario: Scenario { devices, total_bandwidth_hz: opts.total_bandwidth_hz },
+            bound: opts.bound,
+        });
+        sims.push(TenantSim { id: t, gms });
+    }
+
+    for e in 0..opts.events {
+        let s = events.below(sims.len());
+        let tenant = sims[s].id;
+        let n = sims[s].gms.len();
+        let u = events.f64();
+        let delta = if u < 0.25 {
+            let device = events.below(n);
+            let deadline_s = opts.deadline_s * events.range(0.85, 1.4);
+            ScenarioDelta::Deadline { device: Some(device), deadline_s }
+        } else if u < 0.50 {
+            let device = events.below(n);
+            let step = RISK_STEPS[events.below(RISK_STEPS.len())];
+            ScenarioDelta::Risk { device: Some(device), risk: (opts.risk * step).clamp(1e-3, 0.5) }
+        } else if u < 0.80 || (u >= 0.95 && n <= 1) {
+            // Channel fade (also the fallback when a leave would empty
+            // the fleet — the service rejects removing the last device).
+            let device = events.below(n);
+            sims[s].gms[device].step(&mut channels);
+            ScenarioDelta::Channel {
+                device,
+                uplink: Uplink::from_gain_db(sims[s].gms[device].gain_db()),
+            }
+        } else if u < 0.90 {
+            ScenarioDelta::TotalBandwidth(opts.total_bandwidth_hz * events.range(0.8, 1.25))
+        } else if u < 0.95 {
+            let (gm, dev) = place_device(opts, &mut placement);
+            sims[s].gms.push(gm);
+            ScenarioDelta::Join(dev)
+        } else {
+            let device = events.below(n);
+            sims[s].gms.remove(device);
+            ScenarioDelta::Leave(device)
+        };
+        reqs.push(WireRequest::Delta { tenant, delta });
+        if opts.probe_every > 0 && (e + 1) % opts.probe_every == 0 {
+            reqs.push(WireRequest::Plan { tenant });
+            reqs.push(WireRequest::Stats);
+        }
+    }
+
+    for sim in &sims {
+        reqs.push(WireRequest::Plan { tenant: sim.id });
+    }
+    reqs.push(WireRequest::Stats);
+    reqs.push(WireRequest::Shutdown);
+    reqs
+}
+
+/// Encode a script as the exact bytes it puts on the wire: concatenated
+/// length-prefixed frames.  Two equal-seed scripts encode to identical
+/// byte strings — the replay artifact the determinism pin compares.
+pub fn encode_script(reqs: &[WireRequest]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for r in reqs {
+        out.extend_from_slice(&wire::encode_frame(r.to_json().to_string_compact().as_bytes()));
+    }
+    out
+}
+
+/// What one [`run`] measured.
+#[derive(Clone, Debug)]
+pub struct LoadGenReport {
+    /// Requests sent (== responses received).
+    pub requests: usize,
+    /// Responses that were `shed`.
+    pub sheds: usize,
+    /// Responses that were `error`.
+    pub errors: usize,
+    /// Median client-observed service latency, µs.
+    pub p50_us: f64,
+    /// 99th-percentile client-observed service latency, µs.
+    pub p99_us: f64,
+    /// Mean client-observed service latency, µs.
+    pub mean_us: f64,
+    /// `sheds / requests` (0 when nothing was sent).
+    pub shed_rate: f64,
+    /// Compact JSON of every response, arrival order — the transcript
+    /// two equal-seed runs must reproduce verbatim.
+    pub transcript: Vec<String>,
+}
+
+impl LoadGenReport {
+    /// Human-readable summary (what `ripra loadgen` prints).
+    pub fn summary(&self) -> String {
+        format!(
+            "loadgen: {} requests, {} shed ({:.3} rate), {} errors; \
+             latency p50 {:.1} us, p99 {:.1} us, mean {:.1} us",
+            self.requests, self.sheds, self.shed_rate, self.errors, self.p50_us, self.p99_us,
+            self.mean_us
+        )
+    }
+
+    /// Machine-readable report (the `--json` payload; the transcript is
+    /// included so replay checks can diff runs without a bench file).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("requests".into(), Json::Num(self.requests as f64)),
+            ("sheds".into(), Json::Num(self.sheds as f64)),
+            ("errors".into(), Json::Num(self.errors as f64)),
+            ("serve_p50_us".into(), Json::Num(self.p50_us)),
+            ("serve_p99_us".into(), Json::Num(self.p99_us)),
+            ("serve_mean_us".into(), Json::Num(self.mean_us)),
+            ("shed_rate".into(), Json::Num(self.shed_rate)),
+            (
+                "transcript".into(),
+                Json::Arr(self.transcript.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+        ])
+    }
+
+    /// Merge the serve rows into a BENCH_planner.json-style file under
+    /// `benches.serve_wire`, preserving sibling keys — the same
+    /// read-merge-write contract as
+    /// [`crate::util::bench::Bencher::write_json`] (an existing file
+    /// that fails to parse is an error, never silently replaced).
+    pub fn write_bench_rows(&self, path: &Path) -> Result<(), String> {
+        let mut root: Vec<(String, Json)> = match std::fs::read_to_string(path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(format!("read {}: {e}", path.display())),
+            Ok(text) => {
+                let parsed = Json::parse(&text).map_err(|e| {
+                    format!(
+                        "refusing to overwrite {}: existing file is not valid JSON ({e})",
+                        path.display()
+                    )
+                })?;
+                parsed
+                    .as_obj()
+                    .map(|o| o.to_vec())
+                    .ok_or_else(|| {
+                        format!(
+                            "refusing to overwrite {}: existing JSON root is not an object",
+                            path.display()
+                        )
+                    })?
+            }
+        };
+        let mut entries: Vec<(String, Json)> = match root.iter().find(|(k, _)| k == "benches") {
+            None => Vec::new(),
+            Some((_, b)) => b.as_obj().map(|o| o.to_vec()).ok_or_else(|| {
+                format!(
+                    "refusing to overwrite {}: existing \"benches\" value is not an object",
+                    path.display()
+                )
+            })?,
+        };
+        let row = Json::Obj(vec![
+            ("serve_p50_us".into(), Json::Num(self.p50_us)),
+            ("serve_p99_us".into(), Json::Num(self.p99_us)),
+            ("serve_mean_us".into(), Json::Num(self.mean_us)),
+            ("shed_rate".into(), Json::Num(self.shed_rate)),
+            ("requests".into(), Json::Num(self.requests as f64)),
+            ("sheds".into(), Json::Num(self.sheds as f64)),
+            ("errors".into(), Json::Num(self.errors as f64)),
+        ]);
+        match entries.iter_mut().find(|(n, _)| n == "serve_wire") {
+            Some(e) => e.1 = row,
+            None => entries.push(("serve_wire".into(), row)),
+        }
+        let benches = Json::Obj(entries);
+        match root.iter_mut().find(|(k, _)| k == "benches") {
+            Some(e) => e.1 = benches,
+            None => root.push(("benches".into(), benches)),
+        }
+        std::fs::write(path, Json::Obj(root).to_string_pretty())
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+}
+
+/// Nearest-rank percentile over an unsorted latency sample (same index
+/// rule as the bench harness: `round((n-1)·q)` into the sorted sample).
+fn percentile_us(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let idx = (((sorted.len() - 1) as f64) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Play a prebuilt script against a live server and measure it.
+///
+/// One sequential connection: send a frame, block for the response,
+/// record the elapsed service latency, then sleep out the rest of the
+/// pacing interval (`1 / rate_hz`).  Pacing changes *when* requests are
+/// sent, never *what* is sent — the transcript stays a pure function of
+/// the script.
+pub fn run_script(addr: &str, reqs: &[WireRequest], rate_hz: f64) -> Result<LoadGenReport, String> {
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream.set_nodelay(true).map_err(|e| format!("set_nodelay: {e}"))?;
+    let pace = if rate_hz > 0.0 { Some(Duration::from_secs_f64(1.0 / rate_hz)) } else { None };
+
+    let mut latencies_us = Vec::with_capacity(reqs.len());
+    let mut transcript = Vec::with_capacity(reqs.len());
+    let (mut sheds, mut errors) = (0usize, 0usize);
+    for req in reqs {
+        let body = req.to_json().to_string_compact();
+        let sent = Instant::now();
+        wire::write_frame(&mut stream, body.as_bytes()).map_err(|e| format!("send: {e}"))?;
+        let resp = match wire::read_json(&mut stream).map_err(|e| format!("recv: {e}"))? {
+            Some(j) => j,
+            None => return Err("server closed mid-script".into()),
+        };
+        let elapsed = sent.elapsed();
+        latencies_us.push(elapsed.as_secs_f64() * 1e6);
+        match WireResponse::from_json(&resp) {
+            Ok(WireResponse::Shed { .. }) => sheds += 1,
+            Ok(WireResponse::Error { .. }) => errors += 1,
+            Ok(_) => {}
+            Err(e) => return Err(format!("undecodable response: {e}")),
+        }
+        transcript.push(resp.to_string_compact());
+        if let Some(p) = pace {
+            if elapsed < p {
+                std::thread::sleep(p - elapsed);
+            }
+        }
+    }
+    let _ = stream.flush();
+
+    let requests = latencies_us.len();
+    let mean_us = if requests == 0 {
+        0.0
+    } else {
+        latencies_us.iter().sum::<f64>() / requests as f64
+    };
+    Ok(LoadGenReport {
+        requests,
+        sheds,
+        errors,
+        p50_us: percentile_us(&latencies_us, 0.50),
+        p99_us: percentile_us(&latencies_us, 0.99),
+        mean_us,
+        shed_rate: if requests == 0 { 0.0 } else { sheds as f64 / requests as f64 },
+        transcript,
+    })
+}
+
+/// Build the script from `opts` and play it ([`script`] +
+/// [`run_script`]).
+pub fn run(addr: &str, opts: &LoadGenOptions) -> Result<LoadGenReport, String> {
+    run_script(addr, &script(opts), opts.rate_hz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_scripts_encode_identically() {
+        let opts = LoadGenOptions { events: 40, ..LoadGenOptions::default() };
+        let a = encode_script(&script(&opts));
+        let b = encode_script(&script(&opts));
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same seed must produce byte-identical wire streams");
+        let other = LoadGenOptions { seed: 8, ..opts };
+        assert_ne!(a, encode_script(&script(&other)), "a different seed must change the stream");
+    }
+
+    #[test]
+    fn script_shape_admissions_probes_and_shutdown() {
+        let opts =
+            LoadGenOptions { tenants: 3, events: 16, probe_every: 4, ..LoadGenOptions::default() };
+        let reqs = script(&opts);
+        let kinds: Vec<&str> = reqs.iter().map(|r| r.kind()).collect();
+        assert_eq!(&kinds[..3], &["admit", "admit", "admit"]);
+        assert_eq!(kinds.last().copied(), Some("shutdown"));
+        assert_eq!(kinds.iter().filter(|k| **k == "admit").count(), 3);
+        // 16 deltas probed every 4 → 4 probe pairs; final sweep adds 3
+        // plans and 1 stats.
+        assert_eq!(kinds.iter().filter(|k| **k == "delta").count(), 16);
+        assert_eq!(kinds.iter().filter(|k| **k == "plan").count(), 4 + 3);
+        assert_eq!(kinds.iter().filter(|k| **k == "stats").count(), 4 + 1);
+    }
+
+    #[test]
+    fn leave_never_empties_a_fleet() {
+        // With 1 initial device per tenant every would-be leave must be
+        // rewritten into a channel fade; decode-level invariant: no
+        // Leave targets a sole surviving device.
+        let opts = LoadGenOptions {
+            tenants: 1,
+            devices: 1,
+            events: 200,
+            probe_every: 0,
+            ..LoadGenOptions::default()
+        };
+        let mut live = 1i64;
+        for r in script(&opts) {
+            if let WireRequest::Delta { delta, .. } = r {
+                match delta {
+                    ScenarioDelta::Join(_) => live += 1,
+                    ScenarioDelta::Leave(_) => {
+                        assert!(live > 1, "leave generated against a sole device");
+                        live -= 1;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        assert!(live >= 1);
+    }
+
+    #[test]
+    fn percentile_index_rule() {
+        let xs = vec![5.0, 1.0, 4.0, 2.0, 3.0];
+        // lint:allow(float-eq): exact values by construction
+        assert_eq!(percentile_us(&xs, 0.5), 3.0);
+        // lint:allow(float-eq): exact values by construction
+        assert_eq!(percentile_us(&xs, 1.0), 5.0);
+        // lint:allow(float-eq): exact values by construction
+        assert_eq!(percentile_us(&[], 0.5), 0.0);
+    }
+}

@@ -32,12 +32,20 @@
 //! Entry points: [`run`] / [`FleetOptions`] from Rust, `ripra simulate`
 //! from the CLI, `benches/fleet_churn.rs` for the perf trajectory, and
 //! `examples/fleet_churn.rs` for a narrated walkthrough.
+//!
+//! The same event vocabulary also drives the serving stack over a real
+//! socket: [`loadgen`] converts a seeded churn mix into
+//! [`crate::service::wire`] traffic for `ripra serve --listen`
+//! (byte-identical per seed — the replay contract EXPERIMENTS.md
+//! §Serving specifies).
 
 pub mod driver;
 pub mod events;
+pub mod loadgen;
 pub mod metrics;
 
 pub use driver::{run, FleetOptions, FleetReport};
+pub use loadgen::{LoadGenOptions, LoadGenReport};
 pub use events::{EventQueue, FleetEvent};
 pub use metrics::{
     FleetMetrics, FleetSummary, StepRecord, DELTA_KINDS, FAULT_KINDS, INITIAL_KIND,

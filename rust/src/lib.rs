@@ -19,66 +19,22 @@
 //!
 //! **Start at [`engine`]** — the planning facade every caller goes
 //! through: `PlannerBuilder` → `Planner::plan` dispatches all policies
-//! (robust / worst-case / mean-only / exhaustive / multistart) through
-//! one entrypoint with plan caching, and `Planner::replan` handles
-//! incremental scenario changes (device join/leave, channel/deadline
-//! moves) by warm-starting from the cached plan.
+//! through one entrypoint with plan caching, and `Planner::replan`
+//! handles incremental scenario changes by warm-starting from the
+//! cached plan.  Below it sit the maths ([`optim`], [`risk`],
+//! [`solver`]/[`linalg`], [`models`]/[`profile`]/[`channel`]/[`energy`],
+//! [`sim`]); above it, the systems: [`service`] (sharded multi-tenant
+//! planning plus the TCP wire frontend behind `ripra serve --listen`),
+//! [`fleet`] (discrete-event churn simulator and the replayable
+//! `loadgen` wire client), [`fault`] (seeded fault injection),
+//! [`coordinator`]/[`runtime`] (in-process PJRT serving), and the
+//! tooling ([`figures`], [`lint`], [`util`]).
 //!
-//! The layers underneath:
-//!
-//! * [`optim`] — the paper's algorithms: [`optim::alternating`]
-//!   (Algorithm 2), [`optim::pccp`] (Algorithm 1), [`optim::resource`]
-//!   (problem (23)), [`optim::ecr`] (Theorem 1), [`optim::baselines`]
-//!   (§VI benchmarks), and [`optim::cohort`] — cohort-compressed
-//!   planning for million-device fleets: devices are bucketed by the
-//!   engine's quantized fingerprint, one representative per cohort is
-//!   solved via a two-stage warm start (grouped knapsack + closed-form
-//!   Lagrangian bandwidth split) feeding a PCCP polish, and the decision
-//!   replicates across members with a per-device feasibility re-check
-//!   (opt in with `PlannerBuilder::cohorts(true)` or `ripra simulate
-//!   --cohorts`).  The old free-function entry points are
-//!   `#[deprecated]` shims over the engine for one release.
-//! * [`risk`] — the pluggable chance-constraint transforms
-//!   (`RiskBound`: ECR/Cantelli, Gaussian, Bernstein, conformally
-//!   calibrated) the robust policy family is parameterized by, plus the
-//!   online `Calibration` controller the fleet driver closes the loop
-//!   with.
-//! * [`solver`] / [`linalg`] — log-barrier interior point over
-//!   `ConvexProgram`s with reusable `NewtonWorkspace`s, dense Cholesky,
-//!   Levenberg–Marquardt.
-//! * [`models`] / [`profile`] / [`channel`] / [`energy`] — the scenario
-//!   substrate: DNN/hardware profiles, synthetic profiling, FDMA uplink,
-//!   DVFS energy.
-//! * [`sim`] — Monte-Carlo validation of the chance constraint.
-//! * [`service`] — the scaling layer above the engine: a sharded
-//!   multi-tenant `PlannerService` (K independent planners, each with
-//!   its own cache and workspace) with deterministic fingerprint-based
-//!   device→shard routing, a bounded request queue with backpressure,
-//!   batched drains that coalesce covered deltas and fan shards out in
-//!   parallel, and load-factor rebalancing on membership churn.
-//! * [`fleet`] — discrete-event fleet simulator: seeded churn streams
-//!   (join/leave, Gauss–Markov fading, QoS renegotiation) driving
-//!   `Planner::replan` — or the sharded service via `--shards` —
-//!   end-to-end, with deterministic metrics export.
-//! * [`fault`] — seeded, replayable fault schedules for the fleet
-//!   simulator: edge-server outage windows (the engine degrades to its
-//!   all-local fallback plan), per-device uplink blackouts
-//!   (beyond-fade gain collapse), and delta-delivery delays/drops,
-//!   plus the jittered exponential backoff that paces re-offloading
-//!   when an outage ends.
-//! * [`coordinator`] / [`runtime`] — the serving runtime executing plans
-//!   on AOT-compiled PJRT artifacts.
-//! * [`lint`] — `ripra-lint`, the repo's own static-analysis pass: the
-//!   determinism / RNG-stream / structural-contract / robustness
-//!   conventions the modules above rely on, turned into machine-checked
-//!   rules that run in CI even when the test suite cannot (rule catalog
-//!   in EXPERIMENTS.md §Static analysis).
-//! * [`figures`] — regenerates every paper table/figure; [`util`] holds
-//!   the offline substrate (PRNG, stats, JSON, bench harness, scoped
-//!   thread fan-out).
-//!
-//! `DESIGN.md` maps every paper table/figure to a module; `figures`
-//! regenerates them.
+//! The full map — reading order, one paragraph per subsystem, the
+//! data-flow diagram, and the cross-cutting invariants (determinism,
+//! error contracts, migration policy) — lives in `ARCHITECTURE.md` at
+//! the repo root.  `EXPERIMENTS.md` holds each layer's measurement
+//! protocol, and `DESIGN.md` maps every paper table/figure to a module.
 
 pub mod channel;
 pub mod coordinator;

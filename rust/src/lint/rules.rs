@@ -114,6 +114,7 @@ pub const BENCH_FILES: &[&str] = &["util/bench.rs"];
 pub const FORK_STREAMS: &[(&str, &[u64])] = &[
     ("fleet/driver.rs", &[0xA1, 0xDE, 0x10C, 0xC4, 0x5E, 0xB0]),
     ("fault/mod.rs", &[0xFA01, 0xFA02, 0xFA03, 0xFA04]),
+    ("fleet/loadgen.rs", &[0x1D01, 0x1D02, 0x1D03]),
 ];
 
 /// `FleetEvent::kind()` tags that are renamed before reaching the
@@ -132,6 +133,7 @@ pub const ERROR_DISPLAY: &[(&str, &str)] = &[
     ("PlanError", "engine/outcome.rs"),
     ("ServiceError", "service/mod.rs"),
     ("BaselineError", "optim/baselines.rs"),
+    ("WireError", "service/wire.rs"),
 ];
 
 /// Files declaring a `CLI_FLAGS` registry that `main.rs` must parse.

@@ -5,7 +5,9 @@
 //! * `ripra plan     ...` — flags derived from [`PlanRequest::CLI_FLAGS`]
 //! * `ripra simulate ...` — flags derived from [`FleetOptions::CLI_FLAGS`]
 //! * `ripra figure   <fig13a|...|all> [--out DIR] [--quick]`
-//! * `ripra serve    --model M --n N [--requests K] [--time-scale X]`
+//! * `ripra serve    --model M --n N [--requests K] [--time-scale X]`,
+//!   or `ripra serve --listen ADDR` for the TCP planner frontend
+//! * `ripra loadgen  --addr ADDR [--seed S] ...` — replayable wire client
 //! * `ripra profile  --model M [--trials T]`
 //! * `ripra selftest`
 //!
@@ -23,11 +25,12 @@ use ripra::coordinator::{self, ServeOptions};
 use ripra::engine::{CliFlag, PlanRequest, Planner, PlannerBuilder, Policy, RiskBound};
 use ripra::fault::FaultOptions;
 use ripra::figures::{self, Effort};
+use ripra::fleet::loadgen::{self, LoadGenOptions};
 use ripra::fleet::{self, FleetOptions};
 use ripra::models::manifest::Manifest;
 use ripra::models::ModelProfile;
 use ripra::optim::Scenario;
-use ripra::service::{PlannerService, ServiceOptions};
+use ripra::service::{PlannerService, ServerOptions, ServiceOptions};
 use ripra::sim::{self, SimOptions};
 use ripra::util::json::Json;
 use ripra::util::rng::Rng;
@@ -79,7 +82,7 @@ fn usage() -> String {
     let (plan_line, plan_help) = derived_usage("plan    ", PlanRequest::CLI_FLAGS);
     let (sim_line, sim_help) = derived_usage("simulate", FleetOptions::CLI_FLAGS);
     format!(
-        "usage: ripra <plan|simulate|figure|serve|profile|selftest> [options]\n\
+        "usage: ripra <plan|simulate|figure|serve|loadgen|profile|selftest> [options]\n\
          \n\
          {plan_line}\n\
          {plan_help}\
@@ -89,6 +92,11 @@ fn usage() -> String {
          serve    --model alexnet|resnet152 [--n N] [--requests K] [--time-scale X]\n\
          \x20        [--deadline S] [--risk E] [--bandwidth HZ] [--seed S]\n\
          \x20        [--shards K]   (K >= 1 plans through the sharded service)\n\
+         serve    --listen ADDR [--shards K] [--queue N] [--seed S] [--backoff S]\n\
+         \x20        (TCP planner frontend; wire protocol in EXPERIMENTS.md)\n\
+         loadgen  --addr ADDR [--model M] [--tenants T] [--n N] [--events E]\n\
+         \x20        [--rate HZ] [--probe-every K] [--bandwidth HZ] [--deadline S]\n\
+         \x20        [--risk E] [--bound B] [--seed S] [--bench FILE] [--json]\n\
          profile  [--model M] [--trials T]\n\
          selftest"
     )
@@ -195,6 +203,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(rest),
         "figure" => cmd_figure(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "profile" => cmd_profile(rest),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
@@ -410,6 +419,19 @@ fn cmd_figure(args: &[String]) -> Result<()> {
 
 fn cmd_serve(args: &[String]) -> Result<()> {
     let (_, flags) = parse_flags(args, &[])?;
+    // --listen ADDR switches to the TCP planner frontend (wire protocol
+    // in EXPERIMENTS.md §Serving); without it the in-process
+    // coordinator demo below runs as before.
+    if let Some(listen) = flags.get("listen") {
+        let opts = ServerOptions {
+            listen: listen.clone(),
+            shards: flag_usize(&flags, "shards", 2)?.max(1),
+            queue_capacity: flag_usize(&flags, "queue", 64)?,
+            seed: flag_usize(&flags, "seed", 7)? as u64,
+            backoff_base_s: flag_f64(&flags, "backoff", 0.05)?,
+        };
+        return ripra::service::server::serve(&opts).map_err(|e| anyhow!(e));
+    }
     let mut f2 = flags.clone();
     f2.entry("n".into()).or_insert_with(|| "6".into());
     let sc = scenario_of(&f2)?;
@@ -454,6 +476,40 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         rep.mean_edge_exec_s * 1e3,
         rep.total_energy_j
     );
+    Ok(())
+}
+
+fn cmd_loadgen(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args, &["json"])?;
+    let addr = flags
+        .get("addr")
+        .ok_or_else(|| anyhow!("loadgen needs --addr HOST:PORT (a running `ripra serve --listen`)"))?
+        .clone();
+    let defaults = LoadGenOptions::default();
+    let opts = LoadGenOptions {
+        model: model_of(&flags)?,
+        tenants: flag_usize(&flags, "tenants", defaults.tenants)?.max(1),
+        devices: flag_usize(&flags, "n", defaults.devices)?.max(1),
+        events: flag_usize(&flags, "events", defaults.events)?,
+        rate_hz: flag_f64(&flags, "rate", defaults.rate_hz)?,
+        probe_every: flag_usize(&flags, "probe-every", defaults.probe_every)?.max(1),
+        total_bandwidth_hz: flag_f64(&flags, "bandwidth", defaults.total_bandwidth_hz)?,
+        deadline_s: flag_f64(&flags, "deadline", defaults.deadline_s)?,
+        risk: flag_f64(&flags, "risk", defaults.risk)?,
+        bound: bound_of(&flags)?,
+        seed: flag_usize(&flags, "seed", defaults.seed as usize)? as u64,
+    };
+    let report = loadgen::run(&addr, &opts).map_err(|e| anyhow!(e))?;
+    if flags.contains_key("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!("{}", report.summary());
+    }
+    if let Some(bench) = flags.get("bench") {
+        let path = PathBuf::from(bench);
+        report.write_bench_rows(&path).map_err(|e| anyhow!(e))?;
+        println!("loadgen: serve rows merged into {}", path.display());
+    }
     Ok(())
 }
 

@@ -46,15 +46,31 @@
 //! flow — one shard, the full bandwidth, the same planner-call sequence —
 //! which `rust/tests/service.rs` pins byte-for-byte against the bare
 //! [`crate::engine::Planner`] path.
+//!
+//! Draining is **SLO-aware**: a drained batch is stable-sorted so the
+//! tenant with the nearest device deadline replans first (see
+//! [`PlannerService::drain`]).
+//!
+//! The service also runs over a real wire: [`server`] is the TCP
+//! frontend behind `ripra serve --listen`, speaking the length-prefixed
+//! JSON protocol defined in [`wire`] (spec in EXPERIMENTS.md §Serving),
+//! and `ripra loadgen` ([`crate::fleet::loadgen`]) replays deterministic
+//! fleet traffic against it.
+
+#![warn(missing_docs)]
 
 pub mod planner_service;
 pub mod queue;
+pub mod server;
 pub mod shard;
+pub mod wire;
 
 use crate::engine::PlanError;
 
 pub use planner_service::{PlannerService, ServiceOptions};
 pub use queue::{DeltaQueue, Request};
+pub use server::{Server, ServerOptions};
+pub use wire::{WireError, WireRequest, WireResponse};
 
 /// Identifies one tenant fleet within a [`PlannerService`].
 pub type TenantId = u64;
@@ -78,7 +94,9 @@ pub enum Disposition {
 /// triggered (owner op, bandwidth-share rebroadcasts, rebalance moves).
 #[derive(Clone, Debug)]
 pub struct ServiceOutcome {
+    /// The tenant whose request this outcome disposes.
     pub tenant: TenantId,
+    /// How the request was disposed.
     pub disposition: Disposition,
     /// Tenant-wide planned energy after the request, J (meaningful for
     /// `Applied` / `Absorbed`; 0 otherwise).

@@ -166,6 +166,10 @@ fn argmax(loads: &[usize]) -> usize {
 }
 
 impl PlannerService {
+    /// Build a service with `opts.shards` independent shard planners and
+    /// an empty bounded queue.  Fails with
+    /// [`ServiceError::InvalidOptions`] on a zero shard count or a load
+    /// factor below 1.
     pub fn new(opts: ServiceOptions) -> Result<PlannerService, ServiceError> {
         opts.validate()?;
         let shards = (0..opts.shards)
@@ -186,10 +190,12 @@ impl PlannerService {
 
     // ---- accessors --------------------------------------------------------
 
+    /// The options the service was built with.
     pub fn options(&self) -> &ServiceOptions {
         &self.opts
     }
 
+    /// Number of shard planners (fixed at construction).
     pub fn shard_count(&self) -> usize {
         self.shards.len()
     }
@@ -209,6 +215,7 @@ impl PlannerService {
         ((self.opts.load_factor * total as f64 / k).ceil() as usize).max(1)
     }
 
+    /// Number of currently admitted tenants.
     pub fn tenant_count(&self) -> usize {
         self.tenants.len()
     }
@@ -217,12 +224,33 @@ impl PlannerService {
         self.tenants.iter().position(|t| t.id == id)
     }
 
+    /// Device count of an admitted tenant (`None` if un-admitted).
     pub fn tenant_devices(&self, id: TenantId) -> Option<usize> {
         self.tenant_index(id).map(|t| self.tenants[t].devices)
     }
 
+    /// Total bandwidth budget of an admitted tenant, Hz (`None` if
+    /// un-admitted).
     pub fn tenant_bandwidth(&self, id: TenantId) -> Option<f64> {
         self.tenant_index(id).map(|t| self.tenants[t].total_bandwidth_hz)
+    }
+
+    /// The tenant's nearest (smallest) device deadline, seconds, across
+    /// every shard-hosted sub-fleet — the key [`PlannerService::drain`]
+    /// uses for SLO-aware scheduling (`None` if un-admitted).
+    pub fn tenant_nearest_deadline(&self, id: TenantId) -> Option<f64> {
+        self.tenant_index(id)?;
+        let mut nearest = f64::INFINITY;
+        for shard in &self.shards {
+            if let Some(sub) = shard.sub(id) {
+                for d in &sub.scenario.devices {
+                    if d.deadline_s < nearest {
+                        nearest = d.deadline_s;
+                    }
+                }
+            }
+        }
+        Some(nearest)
     }
 
     /// Tenant-wide planned energy: Σ over shards of the sub-fleet's last
@@ -317,10 +345,12 @@ impl PlannerService {
         self.shards.iter().map(|s| s.planner.cache_stats()).collect()
     }
 
+    /// Pending requests in the bounded queue.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Capacity of the bounded queue (fixed at construction, minimum 1).
     pub fn queue_capacity(&self) -> usize {
         self.queue.capacity()
     }
@@ -495,7 +525,12 @@ impl PlannerService {
     }
 
     /// Process every pending request and return one [`ServiceOutcome`]
-    /// per request, in submission order.
+    /// per request, in **SLO order**: the batch is stable-sorted by the
+    /// submitting tenant's nearest device deadline
+    /// ([`PlannerService::tenant_nearest_deadline`], read *before* any
+    /// delta in the batch applies), so the tenant closest to missing its
+    /// SLO replans first and its requests head the returned outcomes.
+    /// Requests from the same tenant keep their submission order.
     ///
     /// Within the batch, later deltas supersede earlier covered ones
     /// (see [`crate::service::queue`]); surviving parameter deltas are
@@ -516,7 +551,8 @@ impl PlannerService {
                 };
             }
         }
-        let reqs = self.queue.drain();
+        let drained = self.queue.drain();
+        let reqs = self.slo_order(drained);
         let superseded = superseded_by(&reqs);
         let mut results: Vec<Option<ServiceOutcome>> = (0..reqs.len()).map(|_| None).collect();
         let mut i = 0;
@@ -544,6 +580,35 @@ impl PlannerService {
     }
 
     // ---- internals --------------------------------------------------------
+
+    /// Stable-sort a drained batch so the tenant with the nearest device
+    /// deadline goes first (unknown tenants sort last and are rejected
+    /// downstream).  Stability keeps each tenant's requests in
+    /// submission order, which is what the queue's coalescing
+    /// (`superseded_by`) and membership barriers assume — both are
+    /// intra-tenant relations, so reordering across tenants is safe.
+    /// Deadlines are read once, before any delta in the batch applies:
+    /// the schedule depends only on pre-drain state.
+    fn slo_order(&self, mut reqs: Vec<Request>) -> Vec<Request> {
+        let keys: Vec<(TenantId, f64)> = {
+            let mut seen: Vec<(TenantId, f64)> = Vec::new();
+            for r in &reqs {
+                if !seen.iter().any(|(t, _)| *t == r.tenant) {
+                    let d = self.tenant_nearest_deadline(r.tenant).unwrap_or(f64::INFINITY);
+                    seen.push((r.tenant, d));
+                }
+            }
+            seen
+        };
+        let key_of = |tenant: TenantId| -> f64 {
+            keys.iter()
+                .find(|(t, _)| *t == tenant)
+                .map(|(_, d)| *d)
+                .unwrap_or(f64::INFINITY)
+        };
+        reqs.sort_by(|a, b| key_of(a.tenant).total_cmp(&key_of(b.tenant)));
+        reqs
+    }
 
     /// Feed one disposed request into the tenant's circuit breaker.
     /// No-op when the breaker is disabled (`breaker_threshold == 0`).

@@ -16,7 +16,9 @@ use super::{ServiceError, TenantId};
 /// One queued request: a tenant-level delta awaiting a drain.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// The submitting tenant.
     pub tenant: TenantId,
+    /// The change to apply at the next drain.
     pub delta: ScenarioDelta,
 }
 
@@ -51,14 +53,17 @@ impl DeltaQueue {
         self.pending.drain(..).collect()
     }
 
+    /// Pending request count.
     pub fn len(&self) -> usize {
         self.pending.len()
     }
 
+    /// `true` when nothing is pending.
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
     }
 
+    /// The fixed capacity (≥ 1).
     pub fn capacity(&self) -> usize {
         self.capacity
     }

@@ -1,0 +1,308 @@
+//! TCP frontend for the sharded [`PlannerService`] — `ripra serve
+//! --listen <addr>`.
+//!
+//! One [`std::net::TcpListener`], one reader thread per connection, one
+//! shared service behind a mutex.  Each connection loops: read a frame
+//! ([`crate::service::wire`]), decode the request, execute it against
+//! the service, write exactly one response frame.  Requests therefore
+//! pipeline per-connection (FIFO on the socket) while connections
+//! interleave at request granularity — the mutex is the serialization
+//! point, and because every handler is deterministic, a single-client
+//! session's response transcript is a pure function of its request
+//! bytes (the load generator's replay pin).
+//!
+//! Deltas go through the service's bounded coalescing queue and are
+//! **drained in SLO order** (deadline-nearest tenant first, see
+//! [`PlannerService::drain`]) at four deterministic trigger points:
+//! `plan` and `stats` requests, `shutdown`, and load shedding.  When the
+//! queue refuses a delta the server answers [`WireResponse::Shed`] with
+//! a jittered exponential back-off hint from
+//! [`crate::fault::FaultStreams::backoff_s`] — the request is dropped
+//! (unlike in-process [`ServiceError::Backpressure`], which leaves retry
+//! to the caller) and the backlog is drained so the connection can make
+//! progress.  No wall-clock is read anywhere on the serve path; latency
+//! is the *client's* measurement.
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::fault::{FaultOptions, FaultStreams};
+use crate::util::rng::Rng;
+
+use super::planner_service::{PlannerService, ServiceOptions};
+use super::wire::{self, WireError, WireRequest, WireResponse};
+use super::{ServiceError, TenantId};
+
+/// Configuration for [`Server::bind`].
+#[derive(Clone, Debug)]
+pub struct ServerOptions {
+    /// Address to listen on, e.g. `127.0.0.1:7700` (port 0 picks a free
+    /// port; read it back with [`Server::local_addr`]).
+    pub listen: String,
+    /// Shard count for the underlying [`PlannerService`].
+    pub shards: usize,
+    /// Bounded delta-queue capacity; beyond it the server sheds.
+    pub queue_capacity: usize,
+    /// Seed for the back-off jitter stream (the only randomness in the
+    /// server, and it never touches planning state).
+    pub seed: u64,
+    /// Base back-off, seconds: shed attempt `k` hints
+    /// `base · 2^k · U[0.75, 1.25]`.
+    pub backoff_base_s: f64,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            listen: "127.0.0.1:0".into(),
+            shards: 2,
+            queue_capacity: 64,
+            seed: 7,
+            backoff_base_s: 0.05,
+        }
+    }
+}
+
+/// Shared mutable state: the service plus the shed-back-off machinery.
+struct ServerState {
+    svc: PlannerService,
+    faults: FaultOptions,
+    backoff: FaultStreams,
+    /// Consecutive sheds per tenant; resets when a delta is accepted.
+    shed_attempts: Vec<(TenantId, u32)>,
+}
+
+impl ServerState {
+    /// Execute one decoded request, returning the response and whether
+    /// the server should stop afterwards.
+    fn handle(&mut self, req: WireRequest) -> (WireResponse, bool) {
+        match req {
+            WireRequest::Admit { tenant, scenario, bound } => {
+                match self.svc.admit_tenant_with(tenant, scenario, bound) {
+                    Ok(_) => {
+                        let energy_j = self.svc.tenant_energy(tenant).unwrap_or(0.0);
+                        (WireResponse::Admitted { tenant, energy_j }, false)
+                    }
+                    Err(e) => (error_response(&e), false),
+                }
+            }
+            WireRequest::Delta { tenant, delta } => match self.svc.submit(tenant, delta) {
+                Ok(()) => {
+                    self.reset_attempts(tenant);
+                    (WireResponse::Queued { depth: self.svc.queue_len() }, false)
+                }
+                Err(ServiceError::Backpressure { .. }) => {
+                    let attempt = self.bump_attempts(tenant);
+                    let backoff_s = self.backoff.backoff_s(&self.faults, attempt);
+                    // Shed, then drain: the dropped request's siblings
+                    // apply now, so a client honouring the hint finds a
+                    // free queue when it retries.
+                    let _ = self.svc.drain();
+                    (WireResponse::Shed { backoff_s, attempt }, false)
+                }
+                Err(e) => (error_response(&e), false),
+            },
+            WireRequest::Plan { tenant } => {
+                let drained = self.svc.drain().len();
+                match (self.svc.assembled_plan(tenant), self.svc.tenant_energy(tenant)) {
+                    (Some(plan), Some(energy_j)) => {
+                        (WireResponse::PlanRow { tenant, drained, energy_j, plan }, false)
+                    }
+                    _ => (error_response(&ServiceError::UnknownTenant(tenant)), false),
+                }
+            }
+            WireRequest::Stats => {
+                let drained = self.svc.drain().len();
+                (
+                    WireResponse::StatsRow {
+                        drained,
+                        tenants: self.svc.tenant_count(),
+                        queue_len: self.svc.queue_len(),
+                        stats: self.svc.stats(),
+                    },
+                    false,
+                )
+            }
+            WireRequest::Shutdown => {
+                let _ = self.svc.drain();
+                (WireResponse::Bye, true)
+            }
+        }
+    }
+
+    fn reset_attempts(&mut self, tenant: TenantId) {
+        self.shed_attempts.retain(|(t, _)| *t != tenant);
+    }
+
+    /// Return this shed's 0-based attempt number and remember the next.
+    fn bump_attempts(&mut self, tenant: TenantId) -> u32 {
+        for (t, a) in &mut self.shed_attempts {
+            if *t == tenant {
+                let now = *a;
+                *a = a.saturating_add(1);
+                return now;
+            }
+        }
+        self.shed_attempts.push((tenant, 1));
+        0
+    }
+}
+
+/// Map a [`ServiceError`] onto a wire error response (its stable code
+/// from [`wire::error_code`] plus the `Display` text).
+fn error_response(e: &ServiceError) -> WireResponse {
+    WireResponse::Error { code: wire::error_code(e).into(), message: format!("{e}") }
+}
+
+/// A bound TCP planner frontend; [`Server::run`] serves until a
+/// `shutdown` request arrives.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<Mutex<ServerState>>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Lock a possibly-poisoned mutex: a panicking connection thread must
+/// not wedge the whole server, and the service's transactional drains
+/// keep its state coherent regardless.
+fn lock(state: &Mutex<ServerState>) -> std::sync::MutexGuard<'_, ServerState> {
+    match state.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+impl Server {
+    /// Bind the listener and build the shared service (no connections
+    /// accepted yet).  Service construction errors (bad shard count)
+    /// surface as [`WireError::Frame`]-free plain errors here, before
+    /// any socket traffic.
+    pub fn bind(opts: &ServerOptions) -> Result<Server, String> {
+        let svc = PlannerService::new(ServiceOptions {
+            shards: opts.shards.max(1),
+            queue_capacity: opts.queue_capacity,
+            ..ServiceOptions::default()
+        })
+        .map_err(|e| format!("service: {e}"))?;
+        let listener =
+            TcpListener::bind(&opts.listen).map_err(|e| format!("bind {}: {e}", opts.listen))?;
+        let mut master = Rng::new(opts.seed);
+        let state = ServerState {
+            svc,
+            faults: FaultOptions { backoff_base_s: opts.backoff_base_s, ..FaultOptions::default() },
+            backoff: FaultStreams::fork_off(&mut master),
+            shed_attempts: Vec::new(),
+        };
+        Ok(Server {
+            listener,
+            state: Arc::new(Mutex::new(state)),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr, String> {
+        self.listener.local_addr().map_err(|e| format!("local_addr: {e}"))
+    }
+
+    /// Accept connections until a `shutdown` request flips the stop
+    /// flag; every connection gets a reader thread feeding the shared
+    /// service.  Joins all connection threads before returning.
+    pub fn run(self) -> Result<(), String> {
+        let mut workers = Vec::new();
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let state = Arc::clone(&self.state);
+                    let stop = Arc::clone(&self.stop);
+                    workers.push(std::thread::spawn(move || serve_conn(stream, &state, &stop)));
+                }
+                Err(e) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    return Err(format!("accept: {e}"));
+                }
+            }
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        // Unblocking connect from `serve_conn` may still be queued;
+        // nothing to do — dropping the listener closes it.
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+
+    /// Convenience for tests: the stop flag shared with connections.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+}
+
+/// Serve one connection: frame-decode requests, execute under the state
+/// lock, answer each with exactly one frame.  Protocol errors answer a
+/// `bad-request` error frame when possible, then close.
+fn serve_conn(mut stream: TcpStream, state: &Mutex<ServerState>, stop: &AtomicBool) {
+    let peer_addr = stream.local_addr().ok();
+    loop {
+        let msg = match wire::read_json(&mut stream) {
+            Ok(Some(j)) => j,
+            Ok(None) => return, // clean close
+            Err(WireError::Io(_)) => return,
+            Err(e) => {
+                let resp = WireResponse::Error { code: "bad-request".into(), message: format!("{e}") };
+                let _ = wire::write_json(&mut stream, &resp.to_json());
+                return;
+            }
+        };
+        let req = match WireRequest::from_json(&msg) {
+            Ok(r) => r,
+            Err(e) => {
+                let resp = WireResponse::Error { code: "bad-request".into(), message: format!("{e}") };
+                if wire::write_json(&mut stream, &resp.to_json()).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        let (resp, stop_now) = {
+            let mut guard = lock(state);
+            guard.handle(req)
+        };
+        let write_ok = wire::write_json(&mut stream, &resp.to_json()).is_ok();
+        if stop_now {
+            stop.store(true, Ordering::SeqCst);
+            // The accept loop is blocked in `incoming()`; poke it with a
+            // throwaway connection so it observes the flag and exits.
+            if let Some(addr) = peer_addr {
+                if let Ok(mut s) = TcpStream::connect(addr) {
+                    let _ = s.flush();
+                }
+            }
+            return;
+        }
+        if !write_ok {
+            return;
+        }
+    }
+}
+
+/// CLI entry for `ripra serve --listen`: bind, print the resolved
+/// address on stdout (so scripts against port 0 can find it), serve
+/// until shutdown.
+pub fn serve(opts: &ServerOptions) -> Result<(), String> {
+    let server = Server::bind(opts)?;
+    let addr = server.local_addr()?;
+    println!("ripra serve: listening on {addr} ({} shards, queue {})", opts.shards.max(1), opts.queue_capacity);
+    server.run()?;
+    println!("ripra serve: shutdown complete");
+    Ok(())
+}

@@ -1,0 +1,819 @@
+//! Length-prefixed JSON wire protocol for the TCP planner frontend.
+//!
+//! `ripra serve --listen` and `ripra loadgen` speak this protocol over a
+//! plain [`std::net::TcpStream`] — no new dependencies, no async
+//! runtime.  Every message (request or response) is one **frame**:
+//!
+//! ```text
+//! +----------------+---------------------------+
+//! | length: u32 BE | body: `length` JSON bytes |
+//! +----------------+---------------------------+
+//! ```
+//!
+//! The body is compact JSON (the repo's own [`Json`] writer — stable key
+//! order, no whitespace) so a request stream is a *byte-identical*
+//! function of its inputs: the load generator's replay contract (same
+//! seed ⇒ same bytes on the wire) rests on this module alone.  The full
+//! frame and message grammar is specified in EXPERIMENTS.md §Serving.
+//!
+//! Byte layout of the smallest request, `{"kind":"stats"}` (16 bytes):
+//!
+//! ```
+//! use ripra::service::wire::{encode_frame, WireRequest};
+//!
+//! let frame = encode_frame(WireRequest::Stats.to_json().to_string_compact().as_bytes());
+//! assert_eq!(&frame[..4], &[0x00, 0x00, 0x00, 0x10]); // 16, big-endian
+//! assert_eq!(&frame[4..], br#"{"kind":"stats"}"#);
+//! ```
+//!
+//! Requests round-trip through [`WireRequest::to_json`] /
+//! [`WireRequest::from_json`] (responses likewise), and the decoder
+//! rejects malformed frames with [`WireError`] instead of panicking:
+//!
+//! ```
+//! use ripra::service::wire::WireRequest;
+//! use ripra::util::json::Json;
+//!
+//! let req = WireRequest::Plan { tenant: 7 };
+//! let body = req.to_json().to_string_compact();
+//! assert_eq!(body, r#"{"kind":"plan","tenant":7}"#);
+//! let back = WireRequest::from_json(&Json::parse(&body).unwrap()).unwrap();
+//! assert!(matches!(back, WireRequest::Plan { tenant: 7 }));
+//! ```
+
+use std::io::{Read, Write};
+
+use crate::channel::Uplink;
+use crate::engine::ScenarioDelta;
+use crate::models::ModelProfile;
+use crate::optim::types::{Device, Plan, Scenario};
+use crate::risk::RiskBound;
+use crate::util::json::Json;
+
+use super::{ServiceError, ServiceStats, TenantId};
+
+/// Hard cap on one frame's body length (4 MiB).  A peer announcing a
+/// larger frame is protocol-broken (or hostile); the reader refuses it
+/// before allocating.
+pub const MAX_FRAME_LEN: u32 = 4 << 20;
+
+/// Wire-protocol failure: transport, framing, or message-schema errors.
+///
+/// Service-level refusals (unknown tenant, backpressure, …) are *not*
+/// errors at this layer — they travel as [`WireResponse::Error`] /
+/// [`WireResponse::Shed`] payloads.
+#[derive(Debug)]
+pub enum WireError {
+    /// The underlying socket read/write failed.
+    Io(std::io::Error),
+    /// The frame itself is malformed: oversize announced length or a
+    /// stream truncated mid-frame.
+    Frame(String),
+    /// The body is not valid JSON, or is valid JSON that does not match
+    /// the request/response schema.
+    Parse(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+            WireError::Frame(s) => write!(f, "bad frame: {s}"),
+            WireError::Parse(s) => write!(f, "bad message: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+// ---- framing --------------------------------------------------------------
+
+/// Assemble one frame: 4-byte big-endian length prefix + the body bytes.
+pub fn encode_frame(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Write one frame to `w` (single `write_all`, so a frame is never
+/// interleaved with another writer's bytes on the same stream).
+pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> Result<(), WireError> {
+    if body.len() as u64 > MAX_FRAME_LEN as u64 {
+        return Err(WireError::Frame(format!(
+            "frame body of {} bytes exceeds MAX_FRAME_LEN ({MAX_FRAME_LEN})",
+            body.len()
+        )));
+    }
+    w.write_all(&encode_frame(body))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame from `r`.  Returns `Ok(None)` on a clean EOF *at a
+/// frame boundary* (the peer closed after a complete message); EOF
+/// mid-frame is a [`WireError::Frame`] truncation error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>, WireError> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(WireError::Frame(format!(
+                    "stream closed {got} bytes into the length prefix"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Frame(format!(
+            "announced body of {len} bytes exceeds MAX_FRAME_LEN ({MAX_FRAME_LEN})"
+        )));
+    }
+    let mut body = vec![0u8; len as usize];
+    let mut at = 0;
+    while at < body.len() {
+        match r.read(&mut body[at..]) {
+            Ok(0) => {
+                return Err(WireError::Frame(format!(
+                    "stream closed {at} bytes into a {len}-byte body"
+                )))
+            }
+            Ok(n) => at += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(Some(body))
+}
+
+/// Read one frame and parse its body as JSON.
+pub fn read_json<R: Read>(r: &mut R) -> Result<Option<Json>, WireError> {
+    let Some(body) = read_frame(r)? else { return Ok(None) };
+    let text = String::from_utf8(body)
+        .map_err(|e| WireError::Parse(format!("frame body is not UTF-8: {e}")))?;
+    Json::parse(&text).map(Some).map_err(|e| WireError::Parse(format!("{e}")))
+}
+
+/// Serialize `j` compactly and write it as one frame.
+pub fn write_json<W: Write>(w: &mut W, j: &Json) -> Result<(), WireError> {
+    write_frame(w, j.to_string_compact().as_bytes())
+}
+
+// ---- shared field helpers -------------------------------------------------
+
+fn want_f64(j: &Json, key: &str) -> Result<f64, WireError> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| WireError::Parse(format!("missing/non-numeric field {key:?}")))
+}
+
+fn want_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, WireError> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| WireError::Parse(format!("missing/non-string field {key:?}")))
+}
+
+fn want_usize(j: &Json, key: &str) -> Result<usize, WireError> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| WireError::Parse(format!("missing/non-integer field {key:?}")))
+}
+
+/// Tenant ids ride as JSON numbers, so the wire restricts them to the
+/// exactly-representable range (< 2⁵³ — far beyond any fleet).
+fn want_tenant(j: &Json) -> Result<TenantId, WireError> {
+    let x = want_f64(j, "tenant")?;
+    // lint:allow(float-eq): fract() != 0.0 is an exact integrality test
+    if x.fract() != 0.0 || !(0.0..9.0e15).contains(&x) {
+        return Err(WireError::Parse(format!("tenant id {x} is not a small non-negative integer")));
+    }
+    Ok(x as TenantId)
+}
+
+/// `device: i` or `device: null` (fleet-wide) for deadline/risk deltas.
+fn opt_device(j: &Json) -> Result<Option<usize>, WireError> {
+    match j.get("device") {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| WireError::Parse("field \"device\" must be an index or null".into())),
+    }
+}
+
+/// Encode a risk bound as its CLI spelling (`ecr`, `gauss`, `bernstein`,
+/// `calibrated:SCALE`) so [`RiskBound::parse`] is the exact inverse.
+pub fn bound_to_wire(b: RiskBound) -> String {
+    match b.scale() {
+        Some(s) => format!("calibrated:{s}"),
+        None => b.name().to_string(),
+    }
+}
+
+fn parse_bound(s: &str) -> Result<RiskBound, WireError> {
+    RiskBound::parse(s).ok_or_else(|| WireError::Parse(format!("unknown risk bound {s:?}")))
+}
+
+// ---- scenario / delta encoding --------------------------------------------
+
+/// One device as wire JSON.  The model travels by registry name
+/// ([`ModelProfile::by_name`]), not by value: both peers share the
+/// in-crate profile registry, so a name pins the full profile.
+pub fn device_to_json(d: &Device) -> Json {
+    Json::Obj(vec![
+        ("model".into(), Json::Str(d.model.name.clone())),
+        ("p_tx".into(), Json::Num(d.uplink.p_tx)),
+        ("gain".into(), Json::Num(d.uplink.gain)),
+        ("n0".into(), Json::Num(d.uplink.n0)),
+        ("deadline_s".into(), Json::Num(d.deadline_s)),
+        ("risk".into(), Json::Num(d.risk)),
+    ])
+}
+
+/// Decode one wire device; unknown model names are schema errors.
+pub fn device_from_json(j: &Json) -> Result<Device, WireError> {
+    let name = want_str(j, "model")?;
+    let model = ModelProfile::by_name(name)
+        .ok_or_else(|| WireError::Parse(format!("unknown model {name:?}")))?;
+    Ok(Device {
+        model,
+        uplink: Uplink {
+            p_tx: want_f64(j, "p_tx")?,
+            gain: want_f64(j, "gain")?,
+            n0: want_f64(j, "n0")?,
+        },
+        deadline_s: want_f64(j, "deadline_s")?,
+        risk: want_f64(j, "risk")?,
+    })
+}
+
+/// A tenant fleet as wire JSON (`admit` payload).
+pub fn scenario_to_json(sc: &Scenario) -> Json {
+    Json::Obj(vec![
+        ("total_bandwidth_hz".into(), Json::Num(sc.total_bandwidth_hz)),
+        ("devices".into(), Json::Arr(sc.devices.iter().map(device_to_json).collect())),
+    ])
+}
+
+/// Decode a wire scenario (at least one device required downstream; the
+/// service validates that on admission).
+pub fn scenario_from_json(j: &Json) -> Result<Scenario, WireError> {
+    let devices = j
+        .get("devices")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| WireError::Parse("missing/non-array field \"devices\"".into()))?
+        .iter()
+        .map(device_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(Scenario { devices, total_bandwidth_hz: want_f64(j, "total_bandwidth_hz")? })
+}
+
+/// A scenario delta as tagged wire JSON; kinds mirror the fleet metrics
+/// vocabulary (`join`, `leave`, `deadline`, `risk`, `channel`,
+/// `bandwidth`, `bound`).
+pub fn delta_to_json(d: &ScenarioDelta) -> Json {
+    let kind = |k: &str| ("kind".to_string(), Json::Str(k.into()));
+    let dev = |i: &Option<usize>| match i {
+        Some(i) => Json::Num(*i as f64),
+        None => Json::Null,
+    };
+    match d {
+        ScenarioDelta::Join(device) => {
+            Json::Obj(vec![kind("join"), ("device".into(), device_to_json(device))])
+        }
+        ScenarioDelta::Leave(i) => {
+            Json::Obj(vec![kind("leave"), ("device".into(), Json::Num(*i as f64))])
+        }
+        ScenarioDelta::Deadline { device, deadline_s } => Json::Obj(vec![
+            kind("deadline"),
+            ("device".into(), dev(device)),
+            ("deadline_s".into(), Json::Num(*deadline_s)),
+        ]),
+        ScenarioDelta::Risk { device, risk } => Json::Obj(vec![
+            kind("risk"),
+            ("device".into(), dev(device)),
+            ("risk".into(), Json::Num(*risk)),
+        ]),
+        ScenarioDelta::Channel { device, uplink } => Json::Obj(vec![
+            kind("channel"),
+            ("device".into(), Json::Num(*device as f64)),
+            ("p_tx".into(), Json::Num(uplink.p_tx)),
+            ("gain".into(), Json::Num(uplink.gain)),
+            ("n0".into(), Json::Num(uplink.n0)),
+        ]),
+        ScenarioDelta::TotalBandwidth(b) => {
+            Json::Obj(vec![kind("bandwidth"), ("total_bandwidth_hz".into(), Json::Num(*b))])
+        }
+        ScenarioDelta::Bound(b) => {
+            Json::Obj(vec![kind("bound"), ("bound".into(), Json::Str(bound_to_wire(*b)))])
+        }
+    }
+}
+
+/// Decode a tagged wire delta (inverse of [`delta_to_json`]).
+pub fn delta_from_json(j: &Json) -> Result<ScenarioDelta, WireError> {
+    match want_str(j, "kind")? {
+        "join" => {
+            let d = j
+                .get("device")
+                .ok_or_else(|| WireError::Parse("join requires a \"device\" object".into()))?;
+            Ok(ScenarioDelta::Join(device_from_json(d)?))
+        }
+        "leave" => Ok(ScenarioDelta::Leave(want_usize(j, "device")?)),
+        "deadline" => Ok(ScenarioDelta::Deadline {
+            device: opt_device(j)?,
+            deadline_s: want_f64(j, "deadline_s")?,
+        }),
+        "risk" => Ok(ScenarioDelta::Risk { device: opt_device(j)?, risk: want_f64(j, "risk")? }),
+        "channel" => Ok(ScenarioDelta::Channel {
+            device: want_usize(j, "device")?,
+            uplink: Uplink {
+                p_tx: want_f64(j, "p_tx")?,
+                gain: want_f64(j, "gain")?,
+                n0: want_f64(j, "n0")?,
+            },
+        }),
+        "bandwidth" => Ok(ScenarioDelta::TotalBandwidth(want_f64(j, "total_bandwidth_hz")?)),
+        "bound" => Ok(ScenarioDelta::Bound(parse_bound(want_str(j, "bound")?)?)),
+        other => Err(WireError::Parse(format!("unknown delta kind {other:?}"))),
+    }
+}
+
+// ---- requests -------------------------------------------------------------
+
+/// One client→server message.  The five kinds mirror the in-process
+/// [`super::PlannerService`] API one-to-one.
+#[derive(Clone, Debug)]
+pub enum WireRequest {
+    /// Admit a tenant fleet (maps to
+    /// [`super::PlannerService::admit_tenant_with`]).
+    Admit {
+        /// Tenant id to admit under.
+        tenant: TenantId,
+        /// The tenant's initial fleet.
+        scenario: Scenario,
+        /// Risk bound every sub-fleet plans with.
+        bound: RiskBound,
+    },
+    /// Enqueue one scenario delta (maps to
+    /// [`super::PlannerService::submit`]); a full queue answers
+    /// [`WireResponse::Shed`].
+    Delta {
+        /// Target tenant.
+        tenant: TenantId,
+        /// The change to apply at the next drain.
+        delta: ScenarioDelta,
+    },
+    /// Drain the backlog, then return the tenant's assembled fleet-wide
+    /// plan (maps to [`super::PlannerService::assembled_plan`]).
+    Plan {
+        /// Tenant whose plan to read.
+        tenant: TenantId,
+    },
+    /// Drain the backlog, then return the service counters (maps to
+    /// [`super::PlannerService::stats`]).
+    Stats,
+    /// Drain, answer [`WireResponse::Bye`], and stop the server.
+    Shutdown,
+}
+
+impl WireRequest {
+    /// Stable lowercase request tag (`admit`, `delta`, `plan`, `stats`,
+    /// `shutdown`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            WireRequest::Admit { .. } => "admit",
+            WireRequest::Delta { .. } => "delta",
+            WireRequest::Plan { .. } => "plan",
+            WireRequest::Stats => "stats",
+            WireRequest::Shutdown => "shutdown",
+        }
+    }
+
+    /// Encode as wire JSON (compact serialization of this value is the
+    /// exact frame body).
+    pub fn to_json(&self) -> Json {
+        let kind = ("kind".to_string(), Json::Str(self.kind().into()));
+        match self {
+            WireRequest::Admit { tenant, scenario, bound } => Json::Obj(vec![
+                kind,
+                ("tenant".into(), Json::Num(*tenant as f64)),
+                ("bound".into(), Json::Str(bound_to_wire(*bound))),
+                ("scenario".into(), scenario_to_json(scenario)),
+            ]),
+            WireRequest::Delta { tenant, delta } => Json::Obj(vec![
+                kind,
+                ("tenant".into(), Json::Num(*tenant as f64)),
+                ("delta".into(), delta_to_json(delta)),
+            ]),
+            WireRequest::Plan { tenant } => {
+                Json::Obj(vec![kind, ("tenant".into(), Json::Num(*tenant as f64))])
+            }
+            WireRequest::Stats | WireRequest::Shutdown => Json::Obj(vec![kind]),
+        }
+    }
+
+    /// Decode a wire request (inverse of [`WireRequest::to_json`]).
+    pub fn from_json(j: &Json) -> Result<WireRequest, WireError> {
+        match want_str(j, "kind")? {
+            "admit" => Ok(WireRequest::Admit {
+                tenant: want_tenant(j)?,
+                bound: parse_bound(want_str(j, "bound")?)?,
+                scenario: scenario_from_json(
+                    j.get("scenario")
+                        .ok_or_else(|| WireError::Parse("admit requires \"scenario\"".into()))?,
+                )?,
+            }),
+            "delta" => Ok(WireRequest::Delta {
+                tenant: want_tenant(j)?,
+                delta: delta_from_json(
+                    j.get("delta")
+                        .ok_or_else(|| WireError::Parse("delta requires \"delta\"".into()))?,
+                )?,
+            }),
+            "plan" => Ok(WireRequest::Plan { tenant: want_tenant(j)? }),
+            "stats" => Ok(WireRequest::Stats),
+            "shutdown" => Ok(WireRequest::Shutdown),
+            other => Err(WireError::Parse(format!("unknown request kind {other:?}"))),
+        }
+    }
+}
+
+// ---- responses ------------------------------------------------------------
+
+/// Stable error code for a [`ServiceError`] travelling in a
+/// [`WireResponse::Error`] (the catalog is part of the wire spec in
+/// EXPERIMENTS.md §Serving).  [`ServiceError::Backpressure`] never
+/// reaches this mapping — a full queue answers with
+/// [`WireResponse::Shed`] instead.
+pub fn error_code(e: &ServiceError) -> &'static str {
+    match e {
+        ServiceError::Backpressure { .. } => "backpressure",
+        ServiceError::CircuitOpen(_) => "circuit-open",
+        ServiceError::UnknownTenant(_) => "unknown-tenant",
+        ServiceError::DuplicateTenant(_) => "duplicate-tenant",
+        ServiceError::InvalidOptions(_) => "invalid-options",
+        ServiceError::Plan(_) => "plan",
+    }
+}
+
+/// One server→client message.
+#[derive(Clone, Debug)]
+pub enum WireResponse {
+    /// `admit` succeeded.
+    Admitted {
+        /// The admitted tenant.
+        tenant: TenantId,
+        /// Tenant-wide planned energy after admission, J.
+        energy_j: f64,
+    },
+    /// `delta` was accepted into the bounded queue (it applies at the
+    /// next drain).
+    Queued {
+        /// Queue depth after this request.
+        depth: usize,
+    },
+    /// `delta` was **shed**: the queue was full, the request was
+    /// dropped, and the server drained the backlog so the connection can
+    /// make progress.  The client should wait `backoff_s` before
+    /// retrying (jittered exponential hint from
+    /// [`crate::fault::FaultStreams::backoff_s`]).
+    Shed {
+        /// Suggested client back-off, seconds.
+        backoff_s: f64,
+        /// Consecutive sheds for this tenant (0-based attempt counter
+        /// feeding the exponential).
+        attempt: u32,
+    },
+    /// `plan` result: the tenant's assembled fleet-wide decision.
+    PlanRow {
+        /// The tenant whose plan this is.
+        tenant: TenantId,
+        /// Requests drained (applied/absorbed/rejected/superseded)
+        /// before assembling the plan.
+        drained: usize,
+        /// Tenant-wide planned energy, J.
+        energy_j: f64,
+        /// The assembled decision (partition / bandwidth / frequency per
+        /// device, tenant device order).
+        plan: Plan,
+    },
+    /// `stats` result: deterministic service counters plus queue state.
+    StatsRow {
+        /// Requests drained before reading the counters.
+        drained: usize,
+        /// Admitted tenants.
+        tenants: usize,
+        /// Pending requests left in the queue (0 after a drain).
+        queue_len: usize,
+        /// The service's cumulative counters.
+        stats: ServiceStats,
+    },
+    /// The request was refused; `code` is from [`error_code`]'s catalog
+    /// plus `"bad-request"` for schema violations.
+    Error {
+        /// Stable machine-readable refusal code.
+        code: String,
+        /// Human-readable detail (the underlying `Display` text).
+        message: String,
+    },
+    /// `shutdown` acknowledged; the server stops accepting connections.
+    Bye,
+}
+
+impl WireResponse {
+    /// Stable lowercase response tag (`admitted`, `queued`, `shed`,
+    /// `plan`, `stats`, `error`, `bye`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            WireResponse::Admitted { .. } => "admitted",
+            WireResponse::Queued { .. } => "queued",
+            WireResponse::Shed { .. } => "shed",
+            WireResponse::PlanRow { .. } => "plan",
+            WireResponse::StatsRow { .. } => "stats",
+            WireResponse::Error { .. } => "error",
+            WireResponse::Bye => "bye",
+        }
+    }
+
+    /// Encode as wire JSON (compact serialization is the frame body).
+    pub fn to_json(&self) -> Json {
+        let kind = ("kind".to_string(), Json::Str(self.kind().into()));
+        match self {
+            WireResponse::Admitted { tenant, energy_j } => Json::Obj(vec![
+                kind,
+                ("tenant".into(), Json::Num(*tenant as f64)),
+                ("energy_j".into(), Json::Num(*energy_j)),
+            ]),
+            WireResponse::Queued { depth } => {
+                Json::Obj(vec![kind, ("depth".into(), Json::Num(*depth as f64))])
+            }
+            WireResponse::Shed { backoff_s, attempt } => Json::Obj(vec![
+                kind,
+                ("backoff_s".into(), Json::Num(*backoff_s)),
+                ("attempt".into(), Json::Num(*attempt as f64)),
+            ]),
+            WireResponse::PlanRow { tenant, drained, energy_j, plan } => Json::Obj(vec![
+                kind,
+                ("tenant".into(), Json::Num(*tenant as f64)),
+                ("drained".into(), Json::Num(*drained as f64)),
+                ("energy_j".into(), Json::Num(*energy_j)),
+                (
+                    "partition".into(),
+                    Json::Arr(plan.partition.iter().map(|&m| Json::Num(m as f64)).collect()),
+                ),
+                (
+                    "bandwidth_hz".into(),
+                    Json::Arr(plan.bandwidth_hz.iter().map(|&b| Json::Num(b)).collect()),
+                ),
+                (
+                    "freq_ghz".into(),
+                    Json::Arr(plan.freq_ghz.iter().map(|&f| Json::Num(f)).collect()),
+                ),
+            ]),
+            WireResponse::StatsRow { drained, tenants, queue_len, stats } => Json::Obj(vec![
+                kind,
+                ("drained".into(), Json::Num(*drained as f64)),
+                ("tenants".into(), Json::Num(*tenants as f64)),
+                ("queue_len".into(), Json::Num(*queue_len as f64)),
+                ("submitted".into(), Json::Num(stats.submitted as f64)),
+                ("refused".into(), Json::Num(stats.refused as f64)),
+                ("superseded".into(), Json::Num(stats.superseded as f64)),
+                ("shard_ops".into(), Json::Num(stats.shard_ops as f64)),
+                ("replans".into(), Json::Num(stats.replans as f64)),
+                ("cache_hits".into(), Json::Num(stats.cache_hits as f64)),
+                ("rebases".into(), Json::Num(stats.rebases as f64)),
+                ("rejected".into(), Json::Num(stats.rejected as f64)),
+                ("rebalance_moves".into(), Json::Num(stats.rebalance_moves as f64)),
+                ("breaker_trips".into(), Json::Num(stats.breaker_trips as f64)),
+            ]),
+            WireResponse::Error { code, message } => Json::Obj(vec![
+                kind,
+                ("code".into(), Json::Str(code.clone())),
+                ("message".into(), Json::Str(message.clone())),
+            ]),
+            WireResponse::Bye => Json::Obj(vec![kind]),
+        }
+    }
+
+    /// Decode a wire response (inverse of [`WireResponse::to_json`];
+    /// used by the load generator and tests).
+    pub fn from_json(j: &Json) -> Result<WireResponse, WireError> {
+        match want_str(j, "kind")? {
+            "admitted" => Ok(WireResponse::Admitted {
+                tenant: want_tenant(j)?,
+                energy_j: want_f64(j, "energy_j")?,
+            }),
+            "queued" => Ok(WireResponse::Queued { depth: want_usize(j, "depth")? }),
+            "shed" => Ok(WireResponse::Shed {
+                backoff_s: want_f64(j, "backoff_s")?,
+                attempt: want_usize(j, "attempt")? as u32,
+            }),
+            "plan" => {
+                let arr = |key: &str| -> Result<Vec<f64>, WireError> {
+                    j.get(key)
+                        .and_then(Json::f64_array)
+                        .ok_or_else(|| WireError::Parse(format!("missing/non-array {key:?}")))
+                };
+                Ok(WireResponse::PlanRow {
+                    tenant: want_tenant(j)?,
+                    drained: want_usize(j, "drained")?,
+                    energy_j: want_f64(j, "energy_j")?,
+                    plan: Plan {
+                        partition: j
+                            .get("partition")
+                            .and_then(Json::usize_array)
+                            .ok_or_else(|| {
+                                WireError::Parse("missing/non-array \"partition\"".into())
+                            })?,
+                        bandwidth_hz: arr("bandwidth_hz")?,
+                        freq_ghz: arr("freq_ghz")?,
+                    },
+                })
+            }
+            "stats" => {
+                let n = |key: &str| -> Result<u64, WireError> {
+                    Ok(want_f64(j, key)? as u64)
+                };
+                Ok(WireResponse::StatsRow {
+                    drained: want_usize(j, "drained")?,
+                    tenants: want_usize(j, "tenants")?,
+                    queue_len: want_usize(j, "queue_len")?,
+                    stats: ServiceStats {
+                        submitted: n("submitted")?,
+                        refused: n("refused")?,
+                        superseded: n("superseded")?,
+                        shard_ops: n("shard_ops")?,
+                        replans: n("replans")?,
+                        cache_hits: n("cache_hits")?,
+                        rebases: n("rebases")?,
+                        rejected: n("rejected")?,
+                        rebalance_moves: n("rebalance_moves")?,
+                        breaker_trips: n("breaker_trips")?,
+                    },
+                })
+            }
+            "error" => Ok(WireResponse::Error {
+                code: want_str(j, "code")?.to_string(),
+                message: want_str(j, "message")?.to_string(),
+            }),
+            "bye" => Ok(WireResponse::Bye),
+            other => Err(WireError::Parse(format!("unknown response kind {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_device() -> Device {
+        Device {
+            model: ModelProfile::alexnet_paper(),
+            uplink: Uplink::from_distance(120.0),
+            deadline_s: 0.25,
+            risk: 0.05,
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF at a frame boundary");
+    }
+
+    #[test]
+    fn truncated_and_oversize_frames_are_errors() {
+        let mut full = encode_frame(b"payload");
+        full.truncate(7); // mid-body
+        let mut r = std::io::Cursor::new(full);
+        assert!(matches!(read_frame(&mut r), Err(WireError::Frame(_))));
+
+        let mut huge = (MAX_FRAME_LEN + 1).to_be_bytes().to_vec();
+        huge.extend_from_slice(&[0; 8]);
+        let mut r = std::io::Cursor::new(huge);
+        assert!(matches!(read_frame(&mut r), Err(WireError::Frame(_))));
+
+        let mut half_prefix = std::io::Cursor::new(vec![0u8, 0]);
+        assert!(matches!(read_frame(&mut half_prefix), Err(WireError::Frame(_))));
+    }
+
+    #[test]
+    fn every_request_kind_roundtrips() {
+        let mut rng = Rng::new(9);
+        let sc = Scenario::uniform(&ModelProfile::alexnet_paper(), 3, 12e6, 0.25, 0.05, &mut rng);
+        let reqs = vec![
+            WireRequest::Admit { tenant: 1, scenario: sc, bound: RiskBound::calibrated(0.8) },
+            WireRequest::Delta { tenant: 1, delta: ScenarioDelta::TotalBandwidth(9e6) },
+            WireRequest::Delta { tenant: 1, delta: ScenarioDelta::Join(sample_device()) },
+            WireRequest::Delta { tenant: 1, delta: ScenarioDelta::Leave(2) },
+            WireRequest::Delta {
+                tenant: 1,
+                delta: ScenarioDelta::Deadline { device: None, deadline_s: 0.3 },
+            },
+            WireRequest::Delta {
+                tenant: 1,
+                delta: ScenarioDelta::Risk { device: Some(1), risk: 0.1 },
+            },
+            WireRequest::Delta {
+                tenant: 1,
+                delta: ScenarioDelta::Channel {
+                    device: 0,
+                    uplink: Uplink::from_gain_db(-78.0),
+                },
+            },
+            WireRequest::Delta { tenant: 1, delta: ScenarioDelta::Bound(RiskBound::Gaussian) },
+            WireRequest::Plan { tenant: 1 },
+            WireRequest::Stats,
+            WireRequest::Shutdown,
+        ];
+        for req in reqs {
+            let body = req.to_json().to_string_compact();
+            let back = WireRequest::from_json(&Json::parse(&body).unwrap()).unwrap();
+            let body2 = back.to_json().to_string_compact();
+            assert_eq!(body, body2, "request {:?} must roundtrip byte-identically", req.kind());
+        }
+    }
+
+    #[test]
+    fn every_response_kind_roundtrips() {
+        let resps = vec![
+            WireResponse::Admitted { tenant: 3, energy_j: 1.25 },
+            WireResponse::Queued { depth: 7 },
+            WireResponse::Shed { backoff_s: 0.375, attempt: 2 },
+            WireResponse::PlanRow {
+                tenant: 3,
+                drained: 4,
+                energy_j: 2.5,
+                plan: Plan {
+                    partition: vec![0, 3],
+                    bandwidth_hz: vec![4e6, 8e6],
+                    freq_ghz: vec![1.5, 2.0],
+                },
+            },
+            WireResponse::StatsRow {
+                drained: 1,
+                tenants: 2,
+                queue_len: 0,
+                stats: ServiceStats { submitted: 10, superseded: 2, ..Default::default() },
+            },
+            WireResponse::Error { code: "unknown-tenant".into(), message: "unknown tenant 9".into() },
+            WireResponse::Bye,
+        ];
+        for resp in resps {
+            let body = resp.to_json().to_string_compact();
+            let back = WireResponse::from_json(&Json::parse(&body).unwrap()).unwrap();
+            assert_eq!(
+                body,
+                back.to_json().to_string_compact(),
+                "response {:?} must roundtrip byte-identically",
+                resp.kind()
+            );
+        }
+    }
+
+    #[test]
+    fn bound_wire_spelling_roundtrips_the_scale() {
+        for b in [
+            RiskBound::Ecr,
+            RiskBound::Gaussian,
+            RiskBound::Bernstein,
+            RiskBound::calibrated(0.8),
+        ] {
+            assert_eq!(RiskBound::parse(&bound_to_wire(b)), Some(b));
+        }
+    }
+
+    #[test]
+    fn malformed_messages_are_parse_errors_not_panics() {
+        for text in [
+            r#"{"kind":"warp"}"#,
+            r#"{"kind":"plan"}"#,
+            r#"{"kind":"delta","tenant":1}"#,
+            r#"{"kind":"delta","tenant":1,"delta":{"kind":"join"}}"#,
+            r#"{"kind":"admit","tenant":1,"bound":"nope","scenario":{"total_bandwidth_hz":1,"devices":[]}}"#,
+            r#"{"kind":"plan","tenant":1.5}"#,
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(WireRequest::from_json(&j).is_err(), "{text} must be rejected");
+        }
+    }
+}

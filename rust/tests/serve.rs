@@ -1,0 +1,258 @@
+//! Wire-serving integration suite: every request kind round-trips over
+//! a real loopback socket, a full queue answers `shed` (with the
+//! backlog drained so the connection keeps making progress), the SLO
+//! drain order processes the deadline-nearest tenant first, and the
+//! load generator's seed-replay contract holds end to end (identical
+//! request bytes *and* identical response transcripts against fresh
+//! servers).
+
+use std::net::TcpStream;
+
+use ripra::channel::Uplink;
+use ripra::engine::{RiskBound, ScenarioDelta};
+use ripra::fleet::loadgen::{self, LoadGenOptions};
+use ripra::models::ModelProfile;
+use ripra::optim::types::{Device, Scenario};
+use ripra::service::wire;
+use ripra::service::{
+    PlannerService, Server, ServerOptions, ServiceOptions, WireRequest, WireResponse,
+};
+
+/// A moderate, comfortably feasible device (no RNG: the pins below want
+/// full control of deadlines and channels).
+fn device(distance_m: f64, deadline_s: f64) -> Device {
+    Device {
+        model: ModelProfile::alexnet_paper(),
+        uplink: Uplink::from_distance(distance_m),
+        deadline_s,
+        risk: 0.05,
+    }
+}
+
+fn scenario(deadline_s: f64) -> Scenario {
+    Scenario {
+        devices: vec![device(80.0, deadline_s), device(120.0, deadline_s)],
+        total_bandwidth_hz: 10e6,
+    }
+}
+
+/// Bind a server on an ephemeral loopback port, run it on a thread, and
+/// hand back a connected client plus the join handle.
+fn spawn_server(
+    shards: usize,
+    queue_capacity: usize,
+) -> (TcpStream, std::thread::JoinHandle<Result<(), String>>) {
+    let server = Server::bind(&ServerOptions {
+        listen: "127.0.0.1:0".into(),
+        shards,
+        queue_capacity,
+        ..ServerOptions::default()
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    let handle = std::thread::spawn(move || server.run());
+    let client = TcpStream::connect(addr).expect("connect");
+    client.set_nodelay(true).expect("nodelay");
+    (client, handle)
+}
+
+/// Send one request, block for its response.
+fn call(stream: &mut TcpStream, req: &WireRequest) -> WireResponse {
+    wire::write_json(stream, &req.to_json()).expect("send");
+    let j = wire::read_json(stream).expect("recv").expect("server closed early");
+    WireResponse::from_json(&j).expect("decodable response")
+}
+
+/// Send a raw (already-JSON) body, block for its response.
+fn call_raw(stream: &mut TcpStream, body: &str) -> WireResponse {
+    wire::write_frame(stream, body.as_bytes()).expect("send");
+    let j = wire::read_json(stream).expect("recv").expect("server closed early");
+    WireResponse::from_json(&j).expect("decodable response")
+}
+
+// ---- round trips ----------------------------------------------------------
+
+/// Every request kind round-trips over a real socket and answers its
+/// documented response kind, including the error paths
+/// (duplicate-tenant, unknown-tenant, bad-request).
+#[test]
+fn every_request_kind_round_trips_over_loopback() {
+    let (mut c, handle) = spawn_server(1, 8);
+
+    // admit → admitted (with the tenant-wide planned energy).
+    let admit =
+        WireRequest::Admit { tenant: 1, scenario: scenario(0.28), bound: RiskBound::Ecr };
+    match call(&mut c, &admit) {
+        WireResponse::Admitted { tenant, energy_j } => {
+            assert_eq!(tenant, 1);
+            assert!(energy_j > 0.0, "feasible fleet must carry positive planned energy");
+        }
+        other => panic!("admit answered {other:?}"),
+    }
+
+    // re-admit → duplicate-tenant.
+    match call(&mut c, &admit) {
+        WireResponse::Error { code, .. } => assert_eq!(code, "duplicate-tenant"),
+        other => panic!("duplicate admit answered {other:?}"),
+    }
+
+    // delta → queued (depth counts the pending request).
+    let delta = WireRequest::Delta { tenant: 1, delta: ScenarioDelta::TotalBandwidth(9e6) };
+    match call(&mut c, &delta) {
+        WireResponse::Queued { depth } => assert_eq!(depth, 1),
+        other => panic!("delta answered {other:?}"),
+    }
+
+    // plan → drains the backlog, then returns the assembled decision.
+    match call(&mut c, &WireRequest::Plan { tenant: 1 }) {
+        WireResponse::PlanRow { tenant, drained, energy_j, plan } => {
+            assert_eq!(tenant, 1);
+            assert_eq!(drained, 1, "the queued bandwidth delta drains before planning");
+            assert!(energy_j > 0.0);
+            assert_eq!(plan.partition.len(), 2, "one partition point per device");
+        }
+        other => panic!("plan answered {other:?}"),
+    }
+
+    // plan for an un-admitted tenant → unknown-tenant.
+    match call(&mut c, &WireRequest::Plan { tenant: 99 }) {
+        WireResponse::Error { code, .. } => assert_eq!(code, "unknown-tenant"),
+        other => panic!("unknown plan answered {other:?}"),
+    }
+
+    // stats → the counters.
+    match call(&mut c, &WireRequest::Stats) {
+        WireResponse::StatsRow { drained, tenants, queue_len, .. } => {
+            assert_eq!(drained, 0);
+            assert_eq!(tenants, 1);
+            assert_eq!(queue_len, 0);
+        }
+        other => panic!("stats answered {other:?}"),
+    }
+
+    // schema violation → bad-request (connection stays usable).
+    match call_raw(&mut c, "{\"kind\":\"nope\"}") {
+        WireResponse::Error { code, .. } => assert_eq!(code, "bad-request"),
+        other => panic!("bad request answered {other:?}"),
+    }
+
+    // shutdown → bye, and the accept loop exits.
+    match call(&mut c, &WireRequest::Shutdown) {
+        WireResponse::Bye => {}
+        other => panic!("shutdown answered {other:?}"),
+    }
+    handle.join().expect("server thread").expect("clean shutdown");
+}
+
+// ---- load shedding --------------------------------------------------------
+
+/// A full queue sheds: the overflowing delta is dropped, the response
+/// carries a positive back-off hint with a 0-based attempt counter, and
+/// the shed-triggered drain frees the queue so the very next delta is
+/// accepted again.
+#[test]
+fn full_queue_sheds_with_backoff_hint_then_recovers() {
+    let (mut c, handle) = spawn_server(1, 1);
+
+    let admit =
+        WireRequest::Admit { tenant: 1, scenario: scenario(0.28), bound: RiskBound::Ecr };
+    assert!(matches!(call(&mut c, &admit), WireResponse::Admitted { .. }));
+
+    let delta = |hz: f64| WireRequest::Delta {
+        tenant: 1,
+        delta: ScenarioDelta::TotalBandwidth(hz),
+    };
+    // Capacity 1: the first delta fills the queue ...
+    assert!(matches!(call(&mut c, &delta(9.5e6)), WireResponse::Queued { depth: 1 }));
+    // ... the second is shed with the jittered-exponential hint ...
+    match call(&mut c, &delta(9.0e6)) {
+        WireResponse::Shed { backoff_s, attempt } => {
+            assert!(backoff_s > 0.0, "back-off hint must be positive");
+            assert_eq!(attempt, 0, "first consecutive shed is attempt 0");
+        }
+        other => panic!("overflow answered {other:?}"),
+    }
+    // ... and the shed-triggered drain freed the queue.
+    assert!(matches!(call(&mut c, &delta(8.5e6)), WireResponse::Queued { depth: 1 }));
+
+    assert!(matches!(call(&mut c, &WireRequest::Shutdown), WireResponse::Bye));
+    handle.join().expect("server thread").expect("clean shutdown");
+}
+
+// ---- SLO drain order ------------------------------------------------------
+
+/// The drain processes the deadline-nearest tenant's requests first:
+/// tenant 2 (0.22 s deadline) submits *after* tenant 1 (0.28 s) but its
+/// outcome comes back first.
+#[test]
+fn drain_processes_the_deadline_nearest_tenant_first() {
+    let mut svc = PlannerService::new(ServiceOptions {
+        shards: 1,
+        queue_capacity: 8,
+        threads: 1,
+        ..ServiceOptions::default()
+    })
+    .expect("valid options");
+
+    svc.admit_tenant(1, scenario(0.28)).expect("admit tenant 1");
+    svc.admit_tenant(2, scenario(0.22)).expect("admit tenant 2");
+    assert_eq!(svc.tenant_nearest_deadline(1), Some(0.28));
+    assert_eq!(svc.tenant_nearest_deadline(2), Some(0.22));
+
+    // Submission order: relaxed tenant first, urgent tenant second.
+    svc.submit(1, ScenarioDelta::TotalBandwidth(9.5e6)).expect("submit 1");
+    svc.submit(2, ScenarioDelta::TotalBandwidth(9.0e6)).expect("submit 2");
+
+    let outcomes = svc.drain();
+    let order: Vec<_> = outcomes.iter().map(|o| o.tenant).collect();
+    assert_eq!(order, vec![2, 1], "nearest deadline drains first");
+}
+
+// ---- replay determinism ---------------------------------------------------
+
+/// The loadgen replay contract, end to end: the same seed produces
+/// byte-identical request streams, and playing them against two fresh
+/// same-seed servers produces identical response transcripts.
+#[test]
+fn same_seed_loadgen_replays_byte_identically_against_fresh_servers() {
+    let opts = LoadGenOptions {
+        tenants: 2,
+        devices: 2,
+        events: 12,
+        rate_hz: 0.0, // no pacing: determinism must not depend on timing
+        probe_every: 5,
+        seed: 11,
+        ..LoadGenOptions::default()
+    };
+
+    // Same seed ⇒ byte-identical request stream (the wire half of the
+    // replay contract).
+    let a = loadgen::encode_script(&loadgen::script(&opts));
+    let b = loadgen::encode_script(&loadgen::script(&opts));
+    assert_eq!(a, b, "same-seed scripts must encode to identical bytes");
+
+    // Same stream against two fresh same-seed servers ⇒ identical
+    // response transcripts (the server half).
+    let mut transcripts = Vec::new();
+    for _ in 0..2 {
+        let server = Server::bind(&ServerOptions {
+            listen: "127.0.0.1:0".into(),
+            shards: 1,
+            queue_capacity: 64,
+            ..ServerOptions::default()
+        })
+        .expect("bind");
+        let addr = server.local_addr().expect("local addr");
+        let handle = std::thread::spawn(move || server.run());
+        let report =
+            loadgen::run(&format!("{addr}"), &opts).expect("loadgen run");
+        handle.join().expect("server thread").expect("clean shutdown");
+        assert!(report.requests > 0);
+        assert_eq!(report.errors, 0, "scripted traffic must never be malformed");
+        transcripts.push(report.transcript);
+    }
+    assert_eq!(
+        transcripts[0], transcripts[1],
+        "same seed must reproduce the exact response transcript"
+    );
+}

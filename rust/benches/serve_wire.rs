@@ -36,6 +36,25 @@ fn replay(opts: &LoadGenOptions, shards: usize, queue_capacity: usize) -> LoadGe
     report
 }
 
+/// Throughput-mode replay (`loadgen::run`, connections > 1): one fresh
+/// server hosts both the sequential baseline and the concurrent batched
+/// phase, so `single_epm` and `throughput_epm` in the returned report
+/// are measured back to back against identical serving state.
+fn replay_concurrent(opts: &LoadGenOptions, shards: usize, queue_capacity: usize) -> LoadGenReport {
+    let server = Server::bind(&ServerOptions {
+        listen: "127.0.0.1:0".into(),
+        shards,
+        queue_capacity,
+        ..ServerOptions::default()
+    })
+    .expect("bind loopback server");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let handle = std::thread::spawn(move || server.run());
+    let report = loadgen::run(&addr, opts).expect("loadgen throughput replay");
+    handle.join().expect("server thread").expect("clean shutdown");
+    report
+}
+
 fn main() {
     let mut bench =
         Bencher::auto().with_window(Duration::from_millis(300), Duration::from_secs(3));
@@ -56,7 +75,6 @@ fn main() {
         ("serve_wire_q2_shed", 1, 2),
     ];
 
-    let mut canonical: Option<LoadGenReport> = None;
     for (name, shards, queue) in cases {
         bench.bench(name, || replay(&base, shards, queue).requests as f64);
         // Latency/shed rows from one deterministic replay (the script is
@@ -68,18 +86,27 @@ fn main() {
         bench.attach(name, "serve_p50_us", report.p50_us);
         bench.attach(name, "serve_p99_us", report.p99_us);
         bench.attach(name, "shed_rate", report.shed_rate);
-        if name == "serve_wire_shards1" {
-            canonical = Some(report);
-        }
     }
 
+    // Throughput mode: 4 connections, 16-event batch frames, plus the
+    // in-run sequential baseline — the sharded/batched speedup case.
+    let conc = LoadGenOptions { connections: 4, batch: 16, events: 256, ..base.clone() };
+    let name = "serve_wire_c4_b16";
+    bench.bench(name, || replay_concurrent(&conc, 4, 64).requests as f64);
+    let report = replay_concurrent(&conc, 4, 64);
+    bench.attach(name, "requests", report.requests as f64);
+    bench.attach(name, "serve_throughput_epm", report.throughput_epm);
+    bench.attach(name, "serve_single_epm", report.single_epm);
+    bench.attach(name, "serve_batch_p99_us", report.batch_p99_us);
+    bench.attach(name, "serve_connections", report.connections as f64);
+
     bench.write_json(Path::new("BENCH_planner.json")).expect("writing BENCH_planner.json");
-    // The canonical `benches.serve_wire` row (serve_p50_us / serve_p99_us
-    // / serve_mean_us / shed_rate) merges in on top.
-    if let Some(report) = canonical {
-        report
-            .write_bench_rows(Path::new("BENCH_planner.json"))
-            .expect("merging serve rows into BENCH_planner.json");
-    }
+    // The canonical `benches.serve_wire` row merges in on top: the
+    // single-replay latency fields plus the throughput comparison
+    // (`serve_throughput_epm` next to `serve_single_epm`/`serve_speedup`
+    // from the same run, same server).
+    report
+        .write_bench_rows(Path::new("BENCH_planner.json"))
+        .expect("merging serve rows into BENCH_planner.json");
     println!("wrote BENCH_planner.json");
 }

@@ -17,6 +17,19 @@
 //! request stream).  [`LoadGenReport::write_bench_rows`] merges
 //! `serve_p50_us` / `serve_p99_us` / `shed_rate` into BENCH_planner.json
 //! alongside the in-process planner benches.
+//!
+//! **Throughput mode** (`--connections C`, C > 1) measures the sharded
+//! server's aggregate event rate.  The canonical script is *partitioned
+//! by tenant* across C sockets ([`split_script`]) — each connection
+//! carries a deterministic, connection-disjoint sub-script, so no new
+//! RNG streams are forked and the per-connection byte streams stay pure
+//! functions of the seed.  Consecutive requests on each connection are
+//! coalesced into [`WireRequest::Batch`] frames ([`batch_script`]) to
+//! amortize framing.  The run first plays an unbatched single-connection
+//! baseline against the same server (disjoint tenant ids), then the
+//! concurrent batched phase, and reports both rates side by side:
+//! `serve_single_epm`, `serve_throughput_epm`, and their ratio
+//! `serve_speedup` land in BENCH_planner.json together.
 
 // lint:allow-file(wall-clock): client-side latency measurement only —
 // the request stream is precomputed by `script` before any clock is
@@ -73,6 +86,19 @@ pub struct LoadGenOptions {
     pub bound: RiskBound,
     /// Master seed: the *entire* request stream is a function of it.
     pub seed: u64,
+    /// Concurrent connections to stripe the script over (1 = the classic
+    /// sequential replay; >1 enables throughput mode with a baseline
+    /// comparison phase).
+    pub connections: usize,
+    /// Coalesce up to this many consecutive requests per frame as a
+    /// [`WireRequest::Batch`] (0 or 1 = unbatched; throughput mode
+    /// defaults 0 to 16).
+    pub batch: usize,
+    /// First tenant id to admit (ids `first_tenant..first_tenant+tenants`).
+    /// The default 1 reproduces the historical `1..=tenants` ids byte for
+    /// byte; throughput mode offsets it so the baseline and concurrent
+    /// phases admit disjoint tenants on one server.
+    pub first_tenant: TenantId,
 }
 
 impl Default for LoadGenOptions {
@@ -89,6 +115,9 @@ impl Default for LoadGenOptions {
             risk: 0.05,
             bound: RiskBound::Ecr,
             seed: 7,
+            connections: 1,
+            batch: 0,
+            first_tenant: 1,
         }
     }
 }
@@ -139,7 +168,8 @@ pub fn script(opts: &LoadGenOptions) -> Vec<WireRequest> {
     let n0 = opts.devices.max(1);
     let mut reqs = Vec::new();
     let mut sims: Vec<TenantSim> = Vec::new();
-    for t in 1..=tenants as TenantId {
+    for k in 0..tenants as TenantId {
+        let t = opts.first_tenant + k;
         let mut gms = Vec::with_capacity(n0);
         let mut devices = Vec::with_capacity(n0);
         for _ in 0..n0 {
@@ -214,6 +244,51 @@ pub fn encode_script(reqs: &[WireRequest]) -> Vec<u8> {
     out
 }
 
+/// Partition a script over `connections` sockets **by tenant** (tenant
+/// id modulo connection count — the same striping the server's submit
+/// shards use).  Each tenant's admission, deltas, and plan probes stay
+/// on one connection in script order, so per-tenant causality (admit
+/// before delta before plan) is preserved by socket FIFO alone.
+/// Tenant-less `stats` probes ride connection 0; `shutdown` is stripped
+/// entirely — the concurrent runner sends it on a dedicated closer
+/// connection after every worker has drained.
+pub fn split_script(reqs: &[WireRequest], connections: usize) -> Vec<Vec<WireRequest>> {
+    let c = connections.max(1);
+    let mut out: Vec<Vec<WireRequest>> = vec![Vec::new(); c];
+    for r in reqs {
+        match r {
+            WireRequest::Shutdown => {}
+            WireRequest::Admit { tenant, .. }
+            | WireRequest::Delta { tenant, .. }
+            | WireRequest::Plan { tenant } => {
+                out[(*tenant as usize) % c].push(r.clone());
+            }
+            // stats and anything already batched have no owning tenant
+            _ => out[0].push(r.clone()),
+        }
+    }
+    out
+}
+
+/// Coalesce consecutive requests into [`WireRequest::Batch`] frames of
+/// at most `batch` inner requests (0 or 1 leaves the script unbatched).
+/// Order is preserved exactly — the server executes a batch as the same
+/// sequential singles — so batching changes framing, never semantics.
+pub fn batch_script(reqs: &[WireRequest], batch: usize) -> Vec<WireRequest> {
+    if batch <= 1 {
+        return reqs.to_vec();
+    }
+    reqs.chunks(batch)
+        .map(|chunk| {
+            if chunk.len() == 1 {
+                chunk[0].clone()
+            } else {
+                WireRequest::Batch(chunk.to_vec())
+            }
+        })
+        .collect()
+}
+
 /// What one [`run`] measured.
 #[derive(Clone, Debug)]
 pub struct LoadGenReport {
@@ -231,20 +306,53 @@ pub struct LoadGenReport {
     pub mean_us: f64,
     /// `sheds / requests` (0 when nothing was sent).
     pub shed_rate: f64,
+    /// Connections the measured phase used (1 = sequential replay).
+    pub connections: usize,
+    /// Wall-clock seconds of the measured phase.
+    pub wall_s: f64,
+    /// Aggregate throughput, *events per minute* (batch inner requests
+    /// count individually): `requests · 60 / wall_s`.
+    pub throughput_epm: f64,
+    /// 99th-percentile client latency of `batch` frames only, µs (0 when
+    /// the run sent no batches).
+    pub batch_p99_us: f64,
+    /// Single-connection unbatched baseline, events per minute, from the
+    /// comparison phase throughput mode runs against the same server
+    /// (0 when no baseline phase ran).
+    pub single_epm: f64,
     /// Compact JSON of every response, arrival order — the transcript
-    /// two equal-seed runs must reproduce verbatim.
+    /// two equal-seed runs must reproduce verbatim.  In throughput mode
+    /// the per-connection transcripts are concatenated in connection
+    /// order (each one individually deterministic; interleaving across
+    /// connections intentionally is not recorded).
     pub transcript: Vec<String>,
 }
 
 impl LoadGenReport {
     /// Human-readable summary (what `ripra loadgen` prints).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "loadgen: {} requests, {} shed ({:.3} rate), {} errors; \
-             latency p50 {:.1} us, p99 {:.1} us, mean {:.1} us",
-            self.requests, self.sheds, self.shed_rate, self.errors, self.p50_us, self.p99_us,
-            self.mean_us
-        )
+             latency p50 {:.1} us, p99 {:.1} us, mean {:.1} us; \
+             {} connection(s), {:.0} events/min",
+            self.requests,
+            self.sheds,
+            self.shed_rate,
+            self.errors,
+            self.p50_us,
+            self.p99_us,
+            self.mean_us,
+            self.connections,
+            self.throughput_epm
+        );
+        if self.single_epm > 0.0 {
+            s.push_str(&format!(
+                " (baseline {:.0} events/min, speedup {:.2}x)",
+                self.single_epm,
+                self.throughput_epm / self.single_epm
+            ));
+        }
+        s
     }
 
     /// Machine-readable report (the `--json` payload; the transcript is
@@ -258,6 +366,11 @@ impl LoadGenReport {
             ("serve_p99_us".into(), Json::Num(self.p99_us)),
             ("serve_mean_us".into(), Json::Num(self.mean_us)),
             ("shed_rate".into(), Json::Num(self.shed_rate)),
+            ("serve_connections".into(), Json::Num(self.connections as f64)),
+            ("serve_wall_s".into(), Json::Num(self.wall_s)),
+            ("serve_throughput_epm".into(), Json::Num(self.throughput_epm)),
+            ("serve_batch_p99_us".into(), Json::Num(self.batch_p99_us)),
+            ("serve_single_epm".into(), Json::Num(self.single_epm)),
             (
                 "transcript".into(),
                 Json::Arr(self.transcript.iter().map(|s| Json::Str(s.clone())).collect()),
@@ -301,7 +414,7 @@ impl LoadGenReport {
                 )
             })?,
         };
-        let row = Json::Obj(vec![
+        let mut fields = vec![
             ("serve_p50_us".into(), Json::Num(self.p50_us)),
             ("serve_p99_us".into(), Json::Num(self.p99_us)),
             ("serve_mean_us".into(), Json::Num(self.mean_us)),
@@ -309,7 +422,18 @@ impl LoadGenReport {
             ("requests".into(), Json::Num(self.requests as f64)),
             ("sheds".into(), Json::Num(self.sheds as f64)),
             ("errors".into(), Json::Num(self.errors as f64)),
-        ]);
+            ("serve_connections".into(), Json::Num(self.connections as f64)),
+            ("serve_throughput_epm".into(), Json::Num(self.throughput_epm)),
+            ("serve_batch_p99_us".into(), Json::Num(self.batch_p99_us)),
+        ];
+        if self.single_epm > 0.0 {
+            fields.push(("serve_single_epm".into(), Json::Num(self.single_epm)));
+            fields.push((
+                "serve_speedup".into(),
+                Json::Num(self.throughput_epm / self.single_epm),
+            ));
+        }
+        let row = Json::Obj(fields);
         match entries.iter_mut().find(|(n, _)| n == "serve_wire") {
             Some(e) => e.1 = row,
             None => entries.push(("serve_wire".into(), row)),
@@ -336,22 +460,61 @@ fn percentile_us(samples: &[f64], q: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
-/// Play a prebuilt script against a live server and measure it.
-///
-/// One sequential connection: send a frame, block for the response,
-/// record the elapsed service latency, then sleep out the rest of the
-/// pacing interval (`1 / rate_hz`).  Pacing changes *when* requests are
-/// sent, never *what* is sent — the transcript stays a pure function of
-/// the script.
-pub fn run_script(addr: &str, reqs: &[WireRequest], rate_hz: f64) -> Result<LoadGenReport, String> {
-    let mut stream =
-        TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+/// What one connection's replay measured.  `singles` counts events —
+/// each inner request of a [`WireRequest::Batch`] individually — while
+/// the latency samples are per *frame* (a batch frame contributes one
+/// round-trip sample covering all its events).
+struct ConnOutcome {
+    singles: usize,
+    sheds: usize,
+    errors: usize,
+    /// Per-frame round-trip latency, µs, send order.
+    frame_latencies_us: Vec<f64>,
+    /// Round-trip latency of `batch` frames only, µs.
+    batch_latencies_us: Vec<f64>,
+    /// Compact JSON of each response frame, arrival order.
+    transcript: Vec<String>,
+}
+
+/// Tally one decoded response frame into the outcome (recursing one
+/// level for batches — the wire layer guarantees they never nest).
+fn tally(resp: &WireResponse, out: &mut ConnOutcome) {
+    match resp {
+        WireResponse::Batch(inner) => {
+            for r in inner {
+                tally(r, out);
+            }
+        }
+        WireResponse::Shed { .. } => {
+            out.singles += 1;
+            out.sheds += 1;
+        }
+        WireResponse::Error { .. } => {
+            out.singles += 1;
+            out.errors += 1;
+        }
+        _ => out.singles += 1,
+    }
+}
+
+/// Replay one script on one sequential connection: send a frame, block
+/// for the response, record the round trip, then sleep out the rest of
+/// the pacing interval (`1 / rate_hz`).  Pacing changes *when* frames
+/// are sent, never *what* is sent — the transcript stays a pure
+/// function of the script.
+fn replay_conn(addr: &str, reqs: &[WireRequest], rate_hz: f64) -> Result<ConnOutcome, String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
     stream.set_nodelay(true).map_err(|e| format!("set_nodelay: {e}"))?;
     let pace = if rate_hz > 0.0 { Some(Duration::from_secs_f64(1.0 / rate_hz)) } else { None };
 
-    let mut latencies_us = Vec::with_capacity(reqs.len());
-    let mut transcript = Vec::with_capacity(reqs.len());
-    let (mut sheds, mut errors) = (0usize, 0usize);
+    let mut out = ConnOutcome {
+        singles: 0,
+        sheds: 0,
+        errors: 0,
+        frame_latencies_us: Vec::with_capacity(reqs.len()),
+        batch_latencies_us: Vec::new(),
+        transcript: Vec::with_capacity(reqs.len()),
+    };
     for req in reqs {
         let body = req.to_json().to_string_compact();
         let sent = Instant::now();
@@ -361,14 +524,16 @@ pub fn run_script(addr: &str, reqs: &[WireRequest], rate_hz: f64) -> Result<Load
             None => return Err("server closed mid-script".into()),
         };
         let elapsed = sent.elapsed();
-        latencies_us.push(elapsed.as_secs_f64() * 1e6);
+        let us = elapsed.as_secs_f64() * 1e6;
+        out.frame_latencies_us.push(us);
+        if matches!(req, WireRequest::Batch(_)) {
+            out.batch_latencies_us.push(us);
+        }
         match WireResponse::from_json(&resp) {
-            Ok(WireResponse::Shed { .. }) => sheds += 1,
-            Ok(WireResponse::Error { .. }) => errors += 1,
-            Ok(_) => {}
+            Ok(decoded) => tally(&decoded, &mut out),
             Err(e) => return Err(format!("undecodable response: {e}")),
         }
-        transcript.push(resp.to_string_compact());
+        out.transcript.push(resp.to_string_compact());
         if let Some(p) = pace {
             if elapsed < p {
                 std::thread::sleep(p - elapsed);
@@ -376,29 +541,132 @@ pub fn run_script(addr: &str, reqs: &[WireRequest], rate_hz: f64) -> Result<Load
         }
     }
     let _ = stream.flush();
-
-    let requests = latencies_us.len();
-    let mean_us = if requests == 0 {
-        0.0
-    } else {
-        latencies_us.iter().sum::<f64>() / requests as f64
-    };
-    Ok(LoadGenReport {
-        requests,
-        sheds,
-        errors,
-        p50_us: percentile_us(&latencies_us, 0.50),
-        p99_us: percentile_us(&latencies_us, 0.99),
-        mean_us,
-        shed_rate: if requests == 0 { 0.0 } else { sheds as f64 / requests as f64 },
-        transcript,
-    })
+    Ok(out)
 }
 
-/// Build the script from `opts` and play it ([`script`] +
-/// [`run_script`]).
+/// Fold connection outcomes (connection order) into a report.  `wall_s`
+/// is the caller's measurement around the whole phase; throughput
+/// counts events (batch inner requests individually).
+fn report_of(outcomes: Vec<ConnOutcome>, connections: usize, wall_s: f64) -> LoadGenReport {
+    let mut singles = 0;
+    let mut sheds = 0;
+    let mut errors = 0;
+    let mut frames: Vec<f64> = Vec::new();
+    let mut batches: Vec<f64> = Vec::new();
+    let mut transcript: Vec<String> = Vec::new();
+    for mut o in outcomes {
+        singles += o.singles;
+        sheds += o.sheds;
+        errors += o.errors;
+        frames.append(&mut o.frame_latencies_us);
+        batches.append(&mut o.batch_latencies_us);
+        transcript.append(&mut o.transcript);
+    }
+    let mean_us =
+        if frames.is_empty() { 0.0 } else { frames.iter().sum::<f64>() / frames.len() as f64 };
+    LoadGenReport {
+        requests: singles,
+        sheds,
+        errors,
+        p50_us: percentile_us(&frames, 0.50),
+        p99_us: percentile_us(&frames, 0.99),
+        mean_us,
+        shed_rate: if singles == 0 { 0.0 } else { sheds as f64 / singles as f64 },
+        connections,
+        wall_s,
+        throughput_epm: if wall_s > 0.0 { singles as f64 * 60.0 / wall_s } else { 0.0 },
+        batch_p99_us: percentile_us(&batches, 0.99),
+        single_epm: 0.0,
+        transcript,
+    }
+}
+
+/// Play a prebuilt script against a live server on one sequential
+/// connection and measure it (the classic replay entry point; the
+/// determinism pins in `rust/tests/serve.rs` go through here).
+pub fn run_script(addr: &str, reqs: &[WireRequest], rate_hz: f64) -> Result<LoadGenReport, String> {
+    let started = Instant::now();
+    let outcome = replay_conn(addr, reqs, rate_hz)?;
+    Ok(report_of(vec![outcome], 1, started.elapsed().as_secs_f64()))
+}
+
+/// Send one `shutdown` on a dedicated connection (throughput mode's
+/// closer, after every worker has drained its sub-script).
+fn send_shutdown(addr: &str) -> Result<(), String> {
+    let _ = replay_conn(addr, &[WireRequest::Shutdown], 0.0)?;
+    Ok(())
+}
+
+/// Build the script from `opts` and play it.
+///
+/// With `connections <= 1` this is [`script`] + optional
+/// [`batch_script`] + [`run_script`].  With `connections > 1` it runs
+/// the **two-phase throughput comparison** against one server:
+///
+/// 1. *Baseline*: the sequential, unbatched script (tenants
+///    `first_tenant..`), shutdown stripped — measured exactly like the
+///    single-connection mode and recorded as `single_epm`.
+/// 2. *Concurrent*: a second script with disjoint tenant ids (offset by
+///    `tenants`) and a decorrelated seed, partitioned by tenant over C
+///    connections and coalesced into batch frames (`batch`, default 16),
+///    played by C threads and wall-clocked end to end.
+///
+/// The returned report describes the concurrent phase, with the
+/// baseline rate alongside; a final closer connection shuts the server
+/// down.  `rate_hz` paces each connection independently.
 pub fn run(addr: &str, opts: &LoadGenOptions) -> Result<LoadGenReport, String> {
-    run_script(addr, &script(opts), opts.rate_hz)
+    let c = opts.connections.max(1);
+    if c == 1 {
+        let reqs = batch_script(&script(opts), opts.batch);
+        return run_script(addr, &reqs, opts.rate_hz);
+    }
+
+    // Phase 1: sequential unbatched baseline, same server, no shutdown.
+    let mut base_reqs = script(opts);
+    base_reqs.retain(|r| !matches!(r, WireRequest::Shutdown));
+    let base_started = Instant::now();
+    let base = replay_conn(addr, &base_reqs, opts.rate_hz)?;
+    let base_wall = base_started.elapsed().as_secs_f64();
+    let single_epm = if base_wall > 0.0 { base.singles as f64 * 60.0 / base_wall } else { 0.0 };
+
+    // Phase 2: disjoint tenants, decorrelated seed (so the concurrent
+    // phase cannot ride the baseline's warm plan caches), split by
+    // tenant, batched.
+    let conc_opts = LoadGenOptions {
+        first_tenant: opts.first_tenant + opts.tenants.max(1) as TenantId,
+        seed: opts.seed.wrapping_add(1),
+        ..opts.clone()
+    };
+    let batch = if opts.batch == 0 { 16 } else { opts.batch };
+    let scripts: Vec<Vec<WireRequest>> = split_script(&script(&conc_opts), c)
+        .into_iter()
+        .map(|s| batch_script(&s, batch))
+        .collect();
+
+    let started = Instant::now();
+    let outcomes: Vec<Result<ConnOutcome, String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = scripts
+            .iter()
+            .map(|reqs| scope.spawn(move || replay_conn(addr, reqs, opts.rate_hz)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err("connection worker panicked".into()),
+            })
+            .collect()
+    });
+    let wall_s = started.elapsed().as_secs_f64();
+    send_shutdown(addr)?;
+
+    let mut collected = Vec::with_capacity(outcomes.len());
+    for o in outcomes {
+        collected.push(o?);
+    }
+    let mut report = report_of(collected, c, wall_s);
+    report.single_epm = single_epm;
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -458,6 +726,89 @@ mod tests {
             }
         }
         assert!(live >= 1);
+    }
+
+    #[test]
+    fn split_preserves_per_tenant_order_and_strips_shutdown() {
+        let opts =
+            LoadGenOptions { tenants: 5, events: 40, probe_every: 4, ..LoadGenOptions::default() };
+        let reqs = script(&opts);
+        let parts = split_script(&reqs, 3);
+        assert_eq!(parts.len(), 3);
+        let total: usize = parts.iter().map(Vec::len).sum();
+        let stats = reqs.iter().filter(|r| r.kind() == "stats").count();
+        // everything except shutdown survives the split, exactly once
+        assert_eq!(total, reqs.len() - 1);
+        assert!(parts.iter().flatten().all(|r| r.kind() != "shutdown"));
+        // stats probes all ride connection 0
+        assert_eq!(parts[0].iter().filter(|r| r.kind() == "stats").count(), stats);
+        // per connection, the tenant-tagged sub-sequence preserves the
+        // canonical script order (socket FIFO is the only causality)
+        for (c, part) in parts.iter().enumerate() {
+            let tenant_of = |r: &WireRequest| match r {
+                WireRequest::Admit { tenant, .. }
+                | WireRequest::Delta { tenant, .. }
+                | WireRequest::Plan { tenant } => Some(*tenant),
+                _ => None,
+            };
+            for t in part.iter().filter_map(&tenant_of) {
+                assert_eq!(t as usize % 3, c, "tenant routed to the wrong connection");
+            }
+            let want: Vec<String> = reqs
+                .iter()
+                .filter(|r| tenant_of(r).is_some_and(|t| t as usize % 3 == c))
+                .map(|r| r.to_json().to_string_compact())
+                .collect();
+            let got: Vec<String> = part
+                .iter()
+                .filter(|r| tenant_of(r).is_some())
+                .map(|r| r.to_json().to_string_compact())
+                .collect();
+            assert_eq!(got, want, "split must not reorder a tenant's requests");
+        }
+    }
+
+    #[test]
+    fn batching_reframes_without_reordering() {
+        let opts = LoadGenOptions { events: 17, probe_every: 0, ..LoadGenOptions::default() };
+        let reqs = script(&opts);
+        let batched = batch_script(&reqs, 4);
+        // flattening the batches reproduces the original script exactly
+        let mut flat = Vec::new();
+        for r in &batched {
+            match r {
+                WireRequest::Batch(inner) => {
+                    assert!(inner.len() >= 2 && inner.len() <= 4);
+                    flat.extend(inner.iter().cloned());
+                }
+                other => flat.push(other.clone()),
+            }
+        }
+        assert_eq!(encode_script(&flat), encode_script(&reqs));
+        // batch 0 and 1 are the identity
+        assert_eq!(encode_script(&batch_script(&reqs, 0)), encode_script(&reqs));
+        assert_eq!(encode_script(&batch_script(&reqs, 1)), encode_script(&reqs));
+    }
+
+    #[test]
+    fn first_tenant_offsets_ids_without_touching_the_event_stream() {
+        let a = LoadGenOptions { tenants: 2, events: 20, ..LoadGenOptions::default() };
+        let b = LoadGenOptions { first_tenant: 11, ..a.clone() };
+        let sa = script(&a);
+        let sb = script(&b);
+        assert_eq!(sa.len(), sb.len());
+        for (ra, rb) in sa.iter().zip(&sb) {
+            let ta = ra.to_json().to_string_compact();
+            let tb = rb.to_json().to_string_compact();
+            // identical apart from the tenant ids (1,2) -> (11,12)
+            assert_eq!(
+                ta.replace("\"tenant\":1,", "\"tenant\":11,")
+                    .replace("\"tenant\":2,", "\"tenant\":12,")
+                    .replace("\"tenant\":1}", "\"tenant\":11}")
+                    .replace("\"tenant\":2}", "\"tenant\":12}"),
+                tb
+            );
+        }
     }
 
     #[test]

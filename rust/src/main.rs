@@ -92,11 +92,14 @@ fn usage() -> String {
          serve    --model alexnet|resnet152 [--n N] [--requests K] [--time-scale X]\n\
          \x20        [--deadline S] [--risk E] [--bandwidth HZ] [--seed S]\n\
          \x20        [--shards K]   (K >= 1 plans through the sharded service)\n\
-         serve    --listen ADDR [--shards K] [--queue N] [--seed S] [--backoff S]\n\
+         serve    --listen ADDR [--shards K] [--queue N] [--submit-shards K]\n\
+         \x20        [--seed S] [--backoff S]\n\
          \x20        (TCP planner frontend; wire protocol in EXPERIMENTS.md)\n\
          loadgen  --addr ADDR [--model M] [--tenants T] [--n N] [--events E]\n\
          \x20        [--rate HZ] [--probe-every K] [--bandwidth HZ] [--deadline S]\n\
-         \x20        [--risk E] [--bound B] [--seed S] [--bench FILE] [--json]\n\
+         \x20        [--risk E] [--bound B] [--seed S] [--connections C] [--batch K]\n\
+         \x20        [--first-tenant T] [--bench FILE] [--json]\n\
+         \x20        (C > 1 adds a two-phase throughput comparison)\n\
          profile  [--model M] [--trials T]\n\
          selftest"
     )
@@ -427,6 +430,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             listen: listen.clone(),
             shards: flag_usize(&flags, "shards", 2)?.max(1),
             queue_capacity: flag_usize(&flags, "queue", 64)?,
+            submit_shards: flag_usize(&flags, "submit-shards", 16)?.max(1),
             seed: flag_usize(&flags, "seed", 7)? as u64,
             backoff_base_s: flag_f64(&flags, "backoff", 0.05)?,
         };
@@ -498,6 +502,9 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         risk: flag_f64(&flags, "risk", defaults.risk)?,
         bound: bound_of(&flags)?,
         seed: flag_usize(&flags, "seed", defaults.seed as usize)? as u64,
+        connections: flag_usize(&flags, "connections", defaults.connections)?.max(1),
+        batch: flag_usize(&flags, "batch", defaults.batch)?,
+        first_tenant: flag_usize(&flags, "first-tenant", defaults.first_tenant as usize)? as u64,
     };
     let report = loadgen::run(&addr, &opts).map_err(|e| anyhow!(e))?;
     if flags.contains_key("json") {

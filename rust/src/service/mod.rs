@@ -55,7 +55,14 @@
 //! frontend behind `ripra serve --listen`, speaking the length-prefixed
 //! JSON protocol defined in [`wire`] (spec in EXPERIMENTS.md §Serving),
 //! and `ripra loadgen` ([`crate::fleet::loadgen`]) replays deterministic
-//! fleet traffic against it.
+//! fleet traffic against it.  The frontend's hot path is built for
+//! throughput: connections read greedily and answer whole *waves* of
+//! frames with one buffered write, requests may arrive coalesced into
+//! [`WireRequest::Batch`] frames, and delta intake is striped over
+//! per-shard submit locks so the global service lock is held only at
+//! the deterministic drain points — single-connection transcripts stay
+//! a pure function of the request bytes (pinned in
+//! `rust/tests/serve.rs`).
 
 #![warn(missing_docs)]
 

@@ -478,6 +478,19 @@ impl PlannerService {
         Ok(())
     }
 
+    /// Record one load-shed refusal that bypassed [`PlannerService::submit`].
+    ///
+    /// The lock-sharded wire server ([`crate::service::server`]) bounds
+    /// intake with an atomic reservation over its per-shard submit
+    /// queues, so an over-capacity delta is dropped before it ever
+    /// reaches this service.  Counting the drop here keeps the
+    /// `refused` stat — and every `stats` wire response built from it —
+    /// byte-identical to the single-lock serving path, where the same
+    /// overload would have been refused by the bounded queue itself.
+    pub fn record_shed(&mut self) {
+        self.queue.record_refusal();
+    }
+
     /// [`PlannerService::submit`] with bounded retry on
     /// [`ServiceError::Backpressure`]: each refusal triggers one
     /// [`PlannerService::drain`] (freeing the queue) whose outcomes are

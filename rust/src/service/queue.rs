@@ -72,6 +72,16 @@ impl DeltaQueue {
     pub fn refused(&self) -> u64 {
         self.refused
     }
+
+    /// Count one refusal that happened *outside* [`DeltaQueue::submit`].
+    /// The sharded wire server bounds its per-shard submit queues with a
+    /// shared atomic reservation and drops overloads before they reach
+    /// this queue; recording the refusal here keeps the `refused`
+    /// counter (and therefore `stats` responses) identical to the
+    /// single-lock path.
+    pub fn record_refusal(&mut self) {
+        self.refused += 1;
+    }
 }
 
 /// The parameter slot a delta writes, used to decide supersession.

@@ -1,38 +1,59 @@
-//! TCP frontend for the sharded [`PlannerService`] — `ripra serve
+//! Lock-sharded TCP frontend for the [`PlannerService`] — `ripra serve
 //! --listen <addr>`.
 //!
-//! One [`std::net::TcpListener`], one reader thread per connection, one
-//! shared service behind a mutex.  Each connection loops: read a frame
-//! ([`crate::service::wire`]), decode the request, execute it against
-//! the service, write exactly one response frame.  Requests therefore
-//! pipeline per-connection (FIFO on the socket) while connections
-//! interleave at request granularity — the mutex is the serialization
-//! point, and because every handler is deterministic, a single-client
-//! session's response transcript is a pure function of its request
-//! bytes (the load generator's replay pin).
+//! One [`std::net::TcpListener`], one reader thread per connection.
+//! The serve hot path is built for throughput (ROADMAP: millions of
+//! events per minute) while keeping every determinism contract from the
+//! single-lock design it replaced:
 //!
-//! Deltas go through the service's bounded coalescing queue and are
-//! **drained in SLO order** (deadline-nearest tenant first, see
-//! [`PlannerService::drain`]) at four deterministic trigger points:
-//! `plan` and `stats` requests, `shutdown`, and load shedding.  When the
-//! queue refuses a delta the server answers [`WireResponse::Shed`] with
-//! a jittered exponential back-off hint from
-//! [`crate::fault::FaultStreams::backoff_s`] — the request is dropped
-//! (unlike in-process [`ServiceError::Backpressure`], which leaves retry
-//! to the caller) and the backlog is drained so the connection can make
-//! progress.  No wall-clock is read anywhere on the serve path; latency
-//! is the *client's* measurement.
+//! * **Greedy frame batching** — each connection reads whatever the
+//!   socket has buffered ([`wire::FrameBuffer`]), decodes *every*
+//!   complete frame, executes the whole wave, and answers with one
+//!   buffered write.  A frame may itself be a [`WireRequest::Batch`],
+//!   amortizing framing across many events.  Encode/decode buffers are
+//!   reused per connection, so the framing layer allocates nothing per
+//!   event in steady state (`rust/tests/alloc_wire.rs` counts).
+//! * **Lock sharding** — deltas (the overwhelming majority of traffic)
+//!   never take the global service lock: a lock-free tenant-registry
+//!   check, an atomic capacity reservation, and a push onto the owning
+//!   submit shard's queue under that shard's lock.  The global lock is
+//!   held only at the four deterministic drain points (`plan`, `stats`,
+//!   `shutdown`, and load shedding), where the collector merges the
+//!   shard queues back into global submission order (an atomic
+//!   sequence number per delta) and feeds them through
+//!   [`PlannerService::submit`] — so a drained batch is applied exactly
+//!   as the single-lock server would have applied it.
+//!
+//! For a single sequential connection the response transcript is a pure
+//! function of the request bytes — byte-identical to the pre-sharding
+//! server (pinned in `rust/tests/serve.rs`).  Across connections each
+//! transcript is deterministic per-connection for tenant-scoped
+//! payloads (admission energies, plans) when tenants are
+//! connection-disjoint; coordination fields (`depth`, `drained`, global
+//! counters, back-off jitter) depend on interleaving by design.
+//!
+//! Deltas drain in **SLO order** (deadline-nearest tenant first, see
+//! [`PlannerService::drain`]).  When intake is over capacity the server
+//! answers [`WireResponse::Shed`] with a jittered exponential back-off
+//! hint from [`crate::fault::FaultStreams::backoff_s`] — the request is
+//! dropped (unlike in-process [`ServiceError::Backpressure`], which
+//! leaves retry to the caller) and the backlog is drained so the
+//! connection can make progress.  No wall-clock is read anywhere on the
+//! serve path; latency is the *client's* measurement.
 
 use std::io::Write as _;
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
+use crate::engine::ScenarioDelta;
 use crate::fault::{FaultOptions, FaultStreams};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::planner_service::{PlannerService, ServiceOptions};
-use super::wire::{self, WireError, WireRequest, WireResponse};
+use super::queue::Request;
+use super::wire::{self, FrameBuffer, WireError, WireRequest, WireResponse};
 use super::{ServiceError, TenantId};
 
 /// Configuration for [`Server::bind`].
@@ -41,10 +62,15 @@ pub struct ServerOptions {
     /// Address to listen on, e.g. `127.0.0.1:7700` (port 0 picks a free
     /// port; read it back with [`Server::local_addr`]).
     pub listen: String,
-    /// Shard count for the underlying [`PlannerService`].
+    /// Shard count for the underlying [`PlannerService`] (planner
+    /// parallelism at drain time).
     pub shards: usize,
-    /// Bounded delta-queue capacity; beyond it the server sheds.
+    /// Bounded delta-intake capacity; beyond it the server sheds.
     pub queue_capacity: usize,
+    /// Submit-shard count: independent locks the delta fast path is
+    /// striped over (tenant id modulo this count picks the shard).
+    /// Orthogonal to `shards`, which parallelizes the drain.
+    pub submit_shards: usize,
     /// Seed for the back-off jitter stream (the only randomness in the
     /// server, and it never touches planning state).
     pub seed: u64,
@@ -59,94 +85,154 @@ impl Default for ServerOptions {
             listen: "127.0.0.1:0".into(),
             shards: 2,
             queue_capacity: 64,
+            submit_shards: 16,
             seed: 7,
             backoff_base_s: 0.05,
         }
     }
 }
 
-/// Shared mutable state: the service plus the shed-back-off machinery.
-struct ServerState {
+/// State behind the **global** lock: the service plus the shed back-off
+/// stream.  Held only at the four drain points, never on the delta fast
+/// path.
+struct Core {
     svc: PlannerService,
     faults: FaultOptions,
     backoff: FaultStreams,
-    /// Consecutive sheds per tenant; resets when a delta is accepted.
+}
+
+/// One submit shard: pending deltas (tagged with their global sequence
+/// number) plus the consecutive-shed counters for the tenants this
+/// shard owns.  Each shard has its own lock; a delta touches exactly
+/// one.
+#[derive(Default)]
+struct SubmitShard {
+    queue: Vec<(u64, Request)>,
+    /// Consecutive sheds per owned tenant; resets when a delta is
+    /// accepted.
     shed_attempts: Vec<(TenantId, u32)>,
 }
 
-impl ServerState {
-    /// Execute one decoded request, returning the response and whether
-    /// the server should stop afterwards.
-    fn handle(&mut self, req: WireRequest) -> (WireResponse, bool) {
-        match req {
-            WireRequest::Admit { tenant, scenario, bound } => {
-                match self.svc.admit_tenant_with(tenant, scenario, bound) {
-                    Ok(_) => {
-                        let energy_j = self.svc.tenant_energy(tenant).unwrap_or(0.0);
-                        (WireResponse::Admitted { tenant, energy_j }, false)
-                    }
-                    Err(e) => (error_response(&e), false),
-                }
-            }
-            WireRequest::Delta { tenant, delta } => match self.svc.submit(tenant, delta) {
-                Ok(()) => {
-                    self.reset_attempts(tenant);
-                    (WireResponse::Queued { depth: self.svc.queue_len() }, false)
-                }
-                Err(ServiceError::Backpressure { .. }) => {
-                    let attempt = self.bump_attempts(tenant);
-                    let backoff_s = self.backoff.backoff_s(&self.faults, attempt);
-                    // Shed, then drain: the dropped request's siblings
-                    // apply now, so a client honouring the hint finds a
-                    // free queue when it retries.
-                    let _ = self.svc.drain();
-                    (WireResponse::Shed { backoff_s, attempt }, false)
-                }
-                Err(e) => (error_response(&e), false),
-            },
-            WireRequest::Plan { tenant } => {
-                let drained = self.svc.drain().len();
-                match (self.svc.assembled_plan(tenant), self.svc.tenant_energy(tenant)) {
-                    (Some(plan), Some(energy_j)) => {
-                        (WireResponse::PlanRow { tenant, drained, energy_j, plan }, false)
-                    }
-                    _ => (error_response(&ServiceError::UnknownTenant(tenant)), false),
-                }
-            }
-            WireRequest::Stats => {
-                let drained = self.svc.drain().len();
-                (
-                    WireResponse::StatsRow {
-                        drained,
-                        tenants: self.svc.tenant_count(),
-                        queue_len: self.svc.queue_len(),
-                        stats: self.svc.stats(),
-                    },
-                    false,
-                )
-            }
-            WireRequest::Shutdown => {
-                let _ = self.svc.drain();
-                (WireResponse::Bye, true)
-            }
+/// Everything the connection threads share.  Lock order is always
+/// global-then-shard (the fast path takes one shard lock and nothing
+/// else), so the pair can never deadlock.
+struct Shared {
+    core: Mutex<Core>,
+    shards: Vec<Mutex<SubmitShard>>,
+    /// Admitted tenants — the lock-free-read validation the fast path
+    /// does instead of consulting the service.  Only ever appended to
+    /// (the wire protocol has no tenant removal).
+    tenants: RwLock<Vec<TenantId>>,
+    /// Atomic reservation over the shard queues: a delta is accepted
+    /// iff the pre-increment count is below `capacity`, which both
+    /// bounds memory exactly and reproduces the single-lock
+    /// `Queued { depth }` / shed points for a sequential client.
+    pending_total: AtomicUsize,
+    /// Global submission order across shards; [`Shared::collect`]
+    /// merges by this.
+    seq: AtomicU64,
+    /// Mirror of the service queue's (clamped) capacity.
+    capacity: usize,
+    /// One `try_clone` per accepted connection, so shutdown can
+    /// half-close every socket and no worker stays blocked in a read.
+    conns: Mutex<Vec<TcpStream>>,
+}
+
+/// Lock a possibly-poisoned mutex: a panicking connection thread must
+/// not wedge the whole server, and the service's transactional drains
+/// keep its state coherent regardless.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// [`lock`] for the tenant registry's read side.
+fn read_tenants(l: &RwLock<Vec<TenantId>>) -> std::sync::RwLockReadGuard<'_, Vec<TenantId>> {
+    match l.read() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+impl Shared {
+    fn shard_of(&self, tenant: TenantId) -> &Mutex<SubmitShard> {
+        &self.shards[(tenant as usize) % self.shards.len()]
+    }
+
+    /// The delta fast path: registry check, atomic reservation, one
+    /// shard lock.  Over capacity falls through to the shed path, which
+    /// takes the global lock (shedding *is* a drain point).
+    fn submit_delta(&self, tenant: TenantId, delta: ScenarioDelta) -> WireResponse {
+        if !read_tenants(&self.tenants).contains(&tenant) {
+            return error_response(&ServiceError::UnknownTenant(tenant));
         }
+        let before = self.pending_total.fetch_add(1, Ordering::SeqCst);
+        if before >= self.capacity {
+            self.pending_total.fetch_sub(1, Ordering::SeqCst);
+            let mut core = lock(&self.core);
+            // Count the drop where the single-lock queue would have
+            // (`stats.refused` parity), then hint, then free the
+            // backlog — the same shed-drain-recover sequence as before.
+            core.svc.record_shed();
+            let attempt = self.bump_attempts(tenant);
+            let backoff_s = core.backoff.backoff_s(&core.faults, attempt);
+            let _ = self.collect_and_drain(&mut core);
+            return WireResponse::Shed { backoff_s, attempt };
+        }
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let mut shard = lock(self.shard_of(tenant));
+        shard.shed_attempts.retain(|(t, _)| *t != tenant);
+        shard.queue.push((seq, Request { tenant, delta }));
+        WireResponse::Queued { depth: before + 1 }
     }
 
-    fn reset_attempts(&mut self, tenant: TenantId) {
-        self.shed_attempts.retain(|(t, _)| *t != tenant);
-    }
-
-    /// Return this shed's 0-based attempt number and remember the next.
-    fn bump_attempts(&mut self, tenant: TenantId) -> u32 {
-        for (t, a) in &mut self.shed_attempts {
+    /// Return this shed's 0-based attempt number and remember the next
+    /// (stored on the tenant's owning shard, so accepted deltas can
+    /// reset it without the global lock).
+    fn bump_attempts(&self, tenant: TenantId) -> u32 {
+        let mut shard = lock(self.shard_of(tenant));
+        for (t, a) in &mut shard.shed_attempts {
             if *t == tenant {
                 let now = *a;
                 *a = a.saturating_add(1);
                 return now;
             }
         }
-        self.shed_attempts.push((tenant, 1));
+        shard.shed_attempts.push((tenant, 1));
         0
+    }
+
+    /// Move every pending delta from the submit shards into the
+    /// service's queue in global submission order.  Called only under
+    /// the global lock (the four drain points), so the collected batch
+    /// is applied exactly as the single-lock server applied its queue.
+    fn collect(&self, core: &mut Core) {
+        let mut merged: Vec<(u64, Request)> = Vec::new();
+        for shard in &self.shards {
+            let mut g = lock(shard);
+            merged.append(&mut g.queue);
+        }
+        if merged.is_empty() {
+            return;
+        }
+        merged.sort_by_key(|&(seq, _)| seq);
+        self.pending_total.fetch_sub(merged.len(), Ordering::SeqCst);
+        for (_, req) in merged {
+            // Cannot refuse: reservations cap the batch at the service
+            // queue's capacity, the registry guarantees the tenant is
+            // admitted, and the server never enables circuit breakers
+            // (`breaker_threshold` stays at its off default).
+            let _ = core.svc.submit(req.tenant, req.delta);
+        }
+    }
+
+    /// [`Shared::collect`] + [`PlannerService::drain`]; returns the
+    /// drained-request count the `plan`/`stats` responses report.
+    fn collect_and_drain(&self, core: &mut Core) -> usize {
+        self.collect(core);
+        core.svc.drain().len()
     }
 }
 
@@ -156,29 +242,91 @@ fn error_response(e: &ServiceError) -> WireResponse {
     WireResponse::Error { code: wire::error_code(e).into(), message: format!("{e}") }
 }
 
+/// Execute one decoded top-level request.  A batch executes its inner
+/// requests in order — each with exactly the sequential-singles
+/// semantics — and answers one [`WireResponse::Batch`]; a shutdown
+/// anywhere latches `stop_after` (the connection finishes writing the
+/// wave first).
+fn execute(shared: &Shared, req: WireRequest, stop_after: &mut bool) -> WireResponse {
+    match req {
+        WireRequest::Batch(inner) => {
+            let mut resps = Vec::with_capacity(inner.len());
+            for r in inner {
+                resps.push(execute_single(shared, r, stop_after));
+            }
+            WireResponse::Batch(resps)
+        }
+        other => execute_single(shared, other, stop_after),
+    }
+}
+
+fn execute_single(shared: &Shared, req: WireRequest, stop_after: &mut bool) -> WireResponse {
+    match req {
+        WireRequest::Admit { tenant, scenario, bound } => {
+            let mut core = lock(&shared.core);
+            match core.svc.admit_tenant_with(tenant, scenario, bound) {
+                Ok(_) => {
+                    let energy_j = core.svc.tenant_energy(tenant).unwrap_or(0.0);
+                    // Registered before the core lock drops, so no delta
+                    // can observe the service knowing a tenant the
+                    // registry does not.
+                    match shared.tenants.write() {
+                        Ok(mut g) => g.push(tenant),
+                        Err(poisoned) => poisoned.into_inner().push(tenant),
+                    }
+                    WireResponse::Admitted { tenant, energy_j }
+                }
+                Err(e) => error_response(&e),
+            }
+        }
+        WireRequest::Delta { tenant, delta } => shared.submit_delta(tenant, delta),
+        WireRequest::Plan { tenant } => {
+            let mut core = lock(&shared.core);
+            let drained = shared.collect_and_drain(&mut core);
+            match (core.svc.assembled_plan(tenant), core.svc.tenant_energy(tenant)) {
+                (Some(plan), Some(energy_j)) => {
+                    WireResponse::PlanRow { tenant, drained, energy_j, plan }
+                }
+                _ => error_response(&ServiceError::UnknownTenant(tenant)),
+            }
+        }
+        WireRequest::Stats => {
+            let mut core = lock(&shared.core);
+            let drained = shared.collect_and_drain(&mut core);
+            WireResponse::StatsRow {
+                drained,
+                tenants: core.svc.tenant_count(),
+                queue_len: core.svc.queue_len(),
+                stats: core.svc.stats(),
+            }
+        }
+        WireRequest::Shutdown => {
+            let mut core = lock(&shared.core);
+            let _ = shared.collect_and_drain(&mut core);
+            *stop_after = true;
+            WireResponse::Bye
+        }
+        // The decoder rejects nested batches; refuse defensively rather
+        // than recurse.
+        WireRequest::Batch(_) => WireResponse::Error {
+            code: "bad-request".into(),
+            message: "batch requests cannot nest".into(),
+        },
+    }
+}
+
 /// A bound TCP planner frontend; [`Server::run`] serves until a
 /// `shutdown` request arrives.
 pub struct Server {
     listener: TcpListener,
-    state: Arc<Mutex<ServerState>>,
+    shared: Arc<Shared>,
     stop: Arc<AtomicBool>,
-}
-
-/// Lock a possibly-poisoned mutex: a panicking connection thread must
-/// not wedge the whole server, and the service's transactional drains
-/// keep its state coherent regardless.
-fn lock(state: &Mutex<ServerState>) -> std::sync::MutexGuard<'_, ServerState> {
-    match state.lock() {
-        Ok(g) => g,
-        Err(poisoned) => poisoned.into_inner(),
-    }
 }
 
 impl Server {
     /// Bind the listener and build the shared service (no connections
     /// accepted yet).  Service construction errors (bad shard count)
-    /// surface as [`WireError::Frame`]-free plain errors here, before
-    /// any socket traffic.
+    /// surface as plain errors here, before any socket traffic.
     pub fn bind(opts: &ServerOptions) -> Result<Server, String> {
         let svc = PlannerService::new(ServiceOptions {
             shards: opts.shards.max(1),
@@ -186,18 +334,29 @@ impl Server {
             ..ServiceOptions::default()
         })
         .map_err(|e| format!("service: {e}"))?;
+        let capacity = svc.queue_capacity();
         let listener =
             TcpListener::bind(&opts.listen).map_err(|e| format!("bind {}: {e}", opts.listen))?;
         let mut master = Rng::new(opts.seed);
-        let state = ServerState {
+        let core = Core {
             svc,
             faults: FaultOptions { backoff_base_s: opts.backoff_base_s, ..FaultOptions::default() },
             backoff: FaultStreams::fork_off(&mut master),
-            shed_attempts: Vec::new(),
+        };
+        let shared = Shared {
+            core: Mutex::new(core),
+            shards: (0..opts.submit_shards.max(1))
+                .map(|_| Mutex::new(SubmitShard::default()))
+                .collect(),
+            tenants: RwLock::new(Vec::new()),
+            pending_total: AtomicUsize::new(0),
+            seq: AtomicU64::new(0),
+            capacity,
+            conns: Mutex::new(Vec::new()),
         };
         Ok(Server {
             listener,
-            state: Arc::new(Mutex::new(state)),
+            shared: Arc::new(shared),
             stop: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -209,36 +368,47 @@ impl Server {
 
     /// Accept connections until a `shutdown` request flips the stop
     /// flag; every connection gets a reader thread feeding the shared
-    /// service.  Joins all connection threads before returning.
+    /// state.  Shutdown ordering: the accept loop exits *first*, then
+    /// every registered connection is half-closed (so no worker stays
+    /// blocked reading a socket nobody will write to again), and only
+    /// then are the workers joined.
     pub fn run(self) -> Result<(), String> {
         let mut workers = Vec::new();
+        let mut result = Ok(());
         for conn in self.listener.incoming() {
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
             match conn {
                 Ok(stream) => {
-                    let state = Arc::clone(&self.state);
+                    let _ = stream.set_nodelay(true);
+                    if let Ok(clone) = stream.try_clone() {
+                        lock(&self.shared.conns).push(clone);
+                    }
+                    let shared = Arc::clone(&self.shared);
                     let stop = Arc::clone(&self.stop);
-                    workers.push(std::thread::spawn(move || serve_conn(stream, &state, &stop)));
+                    workers.push(std::thread::spawn(move || serve_conn(stream, &shared, &stop)));
                 }
                 Err(e) => {
-                    if self.stop.load(Ordering::SeqCst) {
-                        break;
+                    if !self.stop.load(Ordering::SeqCst) {
+                        result = Err(format!("accept: {e}"));
                     }
-                    return Err(format!("accept: {e}"));
+                    break;
                 }
             }
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
         }
-        // Unblocking connect from `serve_conn` may still be queued;
-        // nothing to do — dropping the listener closes it.
+        // Shutting down an already-dead clone is a harmless error, so
+        // this is safe no matter how far each worker got.
+        for conn in lock(&self.shared.conns).drain(..) {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
         for w in workers {
             let _ = w.join();
         }
-        Ok(())
+        result
     }
 
     /// Convenience for tests: the stop flag shared with connections.
@@ -247,49 +417,136 @@ impl Server {
     }
 }
 
-/// Serve one connection: frame-decode requests, execute under the state
-/// lock, answer each with exactly one frame.  Protocol errors answer a
-/// `bad-request` error frame when possible, then close.
-fn serve_conn(mut stream: TcpStream, state: &Mutex<ServerState>, stop: &AtomicBool) {
-    let peer_addr = stream.local_addr().ok();
+/// Wake the accept loop (blocked in `incoming()`) so it observes the
+/// stop flag.  Best-effort and idempotent: failures are ignored, and a
+/// duplicate poke just hands the exiting accept loop one more throwaway
+/// connection to drop.
+fn poke(addr: Option<std::net::SocketAddr>) {
+    if let Some(addr) = addr {
+        if let Ok(s) = TcpStream::connect(addr) {
+            drop(s);
+        }
+    }
+}
+
+/// One decoded frame on its way to execution: a request, or the
+/// `bad-request` response a schema-invalid body earns (the connection
+/// stays open, matching the one-frame-at-a-time server).
+enum Decoded {
+    Req(WireRequest),
+    Bad(WireResponse),
+}
+
+/// Decode one frame body.  `Err` carries the `bad-request` response for
+/// *fatal* malformations (non-UTF-8, non-JSON) after which the
+/// connection closes; schema violations on well-formed JSON come back
+/// as [`Decoded::Bad`] and keep the connection usable.
+fn decode_frame(frame: &[u8]) -> Result<Decoded, WireResponse> {
+    let text = match std::str::from_utf8(frame) {
+        Ok(t) => t,
+        Err(e) => {
+            return Err(bad_request(&WireError::Parse(format!("frame body is not UTF-8: {e}"))))
+        }
+    };
+    let json = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return Err(bad_request(&WireError::Parse(format!("{e}")))),
+    };
+    match WireRequest::from_json(&json) {
+        Ok(r) => Ok(Decoded::Req(r)),
+        Err(e) => Ok(Decoded::Bad(bad_request(&e))),
+    }
+}
+
+fn bad_request(e: &WireError) -> WireResponse {
+    WireResponse::Error { code: "bad-request".into(), message: format!("{e}") }
+}
+
+/// Serve one connection, a wave at a time: one blocking read, *every*
+/// complete frame buffered decoded and executed, one buffered write for
+/// all the responses.  The decode buffer, the JSON encode buffer, and
+/// the output buffer are all reused across waves — steady state, the
+/// framing layer allocates nothing per event.
+fn serve_conn(mut stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
+    // For an accepted socket the local address *is* the listener's —
+    // where the shutdown poke must connect.
+    let listener_addr = stream.local_addr().ok();
+    let mut frames = FrameBuffer::new();
+    let mut wave: Vec<Decoded> = Vec::new();
+    let mut body = String::new();
+    let mut out: Vec<u8> = Vec::new();
     loop {
-        let msg = match wire::read_json(&mut stream) {
-            Ok(Some(j)) => j,
-            Ok(None) => return, // clean close
-            Err(WireError::Io(_)) => return,
-            Err(e) => {
-                let resp = WireResponse::Error { code: "bad-request".into(), message: format!("{e}") };
-                let _ = wire::write_json(&mut stream, &resp.to_json());
-                return;
-            }
+        let got = match frames.fill_from(&mut stream) {
+            Ok(n) => n,
+            Err(_) => return,
         };
-        let req = match WireRequest::from_json(&msg) {
-            Ok(r) => r,
-            Err(e) => {
-                let resp = WireResponse::Error { code: "bad-request".into(), message: format!("{e}") };
-                if wire::write_json(&mut stream, &resp.to_json()).is_err() {
-                    return;
+        if got == 0 {
+            if frames.buffered() > 0 {
+                // EOF mid-frame: best-effort truncation report.
+                let e = WireError::Frame(format!(
+                    "stream closed with {} bytes of a partial frame buffered",
+                    frames.buffered()
+                ));
+                let _ = wire::write_json(&mut stream, &bad_request(&e).to_json());
+            }
+            return; // clean close at a frame boundary
+        }
+
+        // Drain every complete frame already buffered — before taking
+        // any lock.
+        wave.clear();
+        let mut fatal: Option<WireResponse> = None;
+        loop {
+            match frames.next_frame() {
+                Ok(None) => break,
+                Ok(Some(frame)) => match decode_frame(frame) {
+                    Ok(d) => wave.push(d),
+                    Err(resp) => {
+                        fatal = Some(resp);
+                        break;
+                    }
+                },
+                Err(e) => {
+                    fatal = Some(bad_request(&e));
+                    break;
                 }
-                continue;
             }
-        };
-        let (resp, stop_now) = {
-            let mut guard = lock(state);
-            guard.handle(req)
-        };
-        let write_ok = wire::write_json(&mut stream, &resp.to_json()).is_ok();
-        if stop_now {
+        }
+
+        // Execute the wave and encode every response into one buffer.
+        out.clear();
+        let mut stop_after = false;
+        let mut encode_ok = true;
+        for item in wave.drain(..) {
+            let resp = match item {
+                Decoded::Req(r) => execute(shared, r, &mut stop_after),
+                Decoded::Bad(b) => b,
+            };
+            body.clear();
+            resp.to_json().write_compact_into(&mut body);
+            if wire::write_frame_into(&mut out, body.as_bytes()).is_err() {
+                encode_ok = false;
+                break;
+            }
+            if stop_after {
+                // Frames after a shutdown are never executed — the
+                // single-frame server closed before reading them.
+                break;
+            }
+        }
+        let close_after = fatal.is_some();
+        if let Some(resp) = fatal.take() {
+            body.clear();
+            resp.to_json().write_compact_into(&mut body);
+            let _ = wire::write_frame_into(&mut out, body.as_bytes());
+        }
+        let write_ok = stream.write_all(&out).and_then(|_| stream.flush()).is_ok();
+        if stop_after {
             stop.store(true, Ordering::SeqCst);
-            // The accept loop is blocked in `incoming()`; poke it with a
-            // throwaway connection so it observes the flag and exits.
-            if let Some(addr) = peer_addr {
-                if let Ok(mut s) = TcpStream::connect(addr) {
-                    let _ = s.flush();
-                }
-            }
+            poke(listener_addr);
             return;
         }
-        if !write_ok {
+        if close_after || !encode_ok || !write_ok {
             return;
         }
     }
@@ -301,7 +558,12 @@ fn serve_conn(mut stream: TcpStream, state: &Mutex<ServerState>, stop: &AtomicBo
 pub fn serve(opts: &ServerOptions) -> Result<(), String> {
     let server = Server::bind(opts)?;
     let addr = server.local_addr()?;
-    println!("ripra serve: listening on {addr} ({} shards, queue {})", opts.shards.max(1), opts.queue_capacity);
+    println!(
+        "ripra serve: listening on {addr} ({} shards, queue {}, {} submit shards)",
+        opts.shards.max(1),
+        opts.queue_capacity,
+        opts.submit_shards.max(1)
+    );
     server.run()?;
     println!("ripra serve: shutdown complete");
     Ok(())

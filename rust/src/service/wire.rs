@@ -16,6 +16,21 @@
 //! seed ⇒ same bytes on the wire) rests on this module alone.  The full
 //! frame and message grammar is specified in EXPERIMENTS.md §Serving.
 //!
+//! Two throughput paths share the codec with the simple one-frame
+//! helpers ([`read_frame`]/[`write_frame`]):
+//!
+//! * **Batched frames** — [`WireRequest::Batch`] carries many requests
+//!   in one frame and is answered by one [`WireResponse::Batch`] with
+//!   one inner response per inner request, in order.  Batches never
+//!   nest (a nested batch is a [`WireError::Parse`] schema error).
+//! * **Buffered framing** — [`FrameBuffer`] accumulates socket reads
+//!   and yields every *complete* frame already buffered without a
+//!   per-frame allocation, and [`write_frame_into`] appends frames to a
+//!   reusable output buffer so a wave of responses costs one syscall.
+//!   Both validate announced lengths against [`MAX_FRAME_LEN`] before
+//!   any body buffer grows, so a hostile 4-byte header can never force
+//!   a giant allocation.
+//!
 //! Byte layout of the smallest request, `{"kind":"stats"}` (16 bytes):
 //!
 //! ```
@@ -156,6 +171,116 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>, WireError> {
         }
     }
     Ok(Some(body))
+}
+
+/// Append one frame (length prefix + body) to a reusable output buffer
+/// without flushing — the batched write path: encode a whole wave of
+/// responses into one buffer, then hand it to the socket as a single
+/// `write_all`.  Steady state this allocates nothing: the caller clears
+/// and reuses `out`, whose capacity is retained.
+pub fn write_frame_into(out: &mut Vec<u8>, body: &[u8]) -> Result<(), WireError> {
+    if body.len() as u64 > MAX_FRAME_LEN as u64 {
+        return Err(WireError::Frame(format!(
+            "frame body of {} bytes exceeds MAX_FRAME_LEN ({MAX_FRAME_LEN})",
+            body.len()
+        )));
+    }
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(body);
+    Ok(())
+}
+
+/// How many bytes one [`FrameBuffer::fill_from`] call asks the socket
+/// for (64 KiB — comfortably above the typical request wave, far below
+/// [`MAX_FRAME_LEN`]).
+pub const FILL_CHUNK: usize = 64 * 1024;
+
+/// Accumulating frame decoder for the greedy read path: append whatever
+/// the socket has with [`FrameBuffer::fill_from`], then pull every
+/// *complete* frame already buffered with [`FrameBuffer::next_frame`]
+/// before taking any lock.  Extraction is zero-copy (the returned body
+/// borrows the internal buffer) and, after warm-up, allocation-free:
+/// the buffer compacts in place and its capacity is retained across
+/// fills.
+///
+/// The announced length is validated against [`MAX_FRAME_LEN`] as soon
+/// as the 4-byte header is visible — *before* any body bytes are waited
+/// for and before any buffer grows toward it — so a hostile header
+/// cannot trigger a giant allocation (the buffer only ever grows by
+/// [`FILL_CHUNK`] per read, independent of what the peer announces).
+#[derive(Debug, Default)]
+pub struct FrameBuffer {
+    /// Accumulated bytes; `..pos` is the consumed prefix of frames
+    /// already handed out by [`FrameBuffer::next_frame`].
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FrameBuffer {
+    /// An empty buffer (first fill sizes it to [`FILL_CHUNK`]).
+    pub fn new() -> FrameBuffer {
+        FrameBuffer::default()
+    }
+
+    /// Bytes buffered but not yet consumed — nonzero at EOF means the
+    /// peer hung up mid-frame (a [`WireError::Frame`] truncation for
+    /// the caller to report).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// One (blocking) read appended to the buffer; returns the byte
+    /// count (0 = EOF).  The consumed prefix is compacted away first,
+    /// so memory stays bounded by one partial frame plus one chunk.
+    /// Interrupted reads retry; any other I/O error is returned with
+    /// the buffer unchanged.
+    pub fn fill_from<R: Read>(&mut self, r: &mut R) -> Result<usize, WireError> {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        let len = self.buf.len();
+        self.buf.resize(len + FILL_CHUNK, 0);
+        loop {
+            match r.read(&mut self.buf[len..]) {
+                Ok(n) => {
+                    self.buf.truncate(len + n);
+                    return Ok(n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    self.buf.truncate(len);
+                    return Err(WireError::Io(e));
+                }
+            }
+        }
+    }
+
+    /// Extract the next complete frame already buffered, zero-copy.
+    /// `Ok(None)` means more bytes are needed (call
+    /// [`FrameBuffer::fill_from`] again); the returned body slice is
+    /// valid until the next `fill_from`.  An announced length beyond
+    /// [`MAX_FRAME_LEN`] is rejected here, from the header alone.
+    pub fn next_frame(&mut self) -> Result<Option<&[u8]>, WireError> {
+        let avail = self.buf.len() - self.pos;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let p = self.pos;
+        let len =
+            u32::from_be_bytes([self.buf[p], self.buf[p + 1], self.buf[p + 2], self.buf[p + 3]]);
+        if len > MAX_FRAME_LEN {
+            return Err(WireError::Frame(format!(
+                "announced body of {len} bytes exceeds MAX_FRAME_LEN ({MAX_FRAME_LEN})"
+            )));
+        }
+        let need = 4 + len as usize;
+        if avail < need {
+            return Ok(None);
+        }
+        self.pos += need;
+        Ok(Some(&self.buf[p + 4..p + need]))
+    }
 }
 
 /// Read one frame and parse its body as JSON.
@@ -387,11 +512,22 @@ pub enum WireRequest {
     Stats,
     /// Drain, answer [`WireResponse::Bye`], and stop the server.
     Shutdown,
+    /// Many requests in one frame, answered by one
+    /// [`WireResponse::Batch`] carrying one inner response per inner
+    /// request, in order.  Execution is exactly the sequential-singles
+    /// semantics (a shed inside a batch drops that delta and drains,
+    /// just as a single shed would; a shutdown inside a batch stops the
+    /// server *after* the full batch response is written).  Batches
+    /// never nest.
+    Batch(
+        /// The inner requests, executed in order.
+        Vec<WireRequest>,
+    ),
 }
 
 impl WireRequest {
     /// Stable lowercase request tag (`admit`, `delta`, `plan`, `stats`,
-    /// `shutdown`).
+    /// `shutdown`, `batch`).
     pub fn kind(&self) -> &'static str {
         match self {
             WireRequest::Admit { .. } => "admit",
@@ -399,6 +535,7 @@ impl WireRequest {
             WireRequest::Plan { .. } => "plan",
             WireRequest::Stats => "stats",
             WireRequest::Shutdown => "shutdown",
+            WireRequest::Batch(_) => "batch",
         }
     }
 
@@ -422,6 +559,10 @@ impl WireRequest {
                 Json::Obj(vec![kind, ("tenant".into(), Json::Num(*tenant as f64))])
             }
             WireRequest::Stats | WireRequest::Shutdown => Json::Obj(vec![kind]),
+            WireRequest::Batch(reqs) => Json::Obj(vec![
+                kind,
+                ("requests".into(), Json::Arr(reqs.iter().map(WireRequest::to_json).collect())),
+            ]),
         }
     }
 
@@ -446,6 +587,20 @@ impl WireRequest {
             "plan" => Ok(WireRequest::Plan { tenant: want_tenant(j)? }),
             "stats" => Ok(WireRequest::Stats),
             "shutdown" => Ok(WireRequest::Shutdown),
+            "batch" => {
+                let items = j.get("requests").and_then(Json::as_arr).ok_or_else(|| {
+                    WireError::Parse("batch requires a \"requests\" array".into())
+                })?;
+                let mut reqs = Vec::with_capacity(items.len());
+                for item in items {
+                    let r = WireRequest::from_json(item)?;
+                    if matches!(r, WireRequest::Batch(_)) {
+                        return Err(WireError::Parse("batch requests cannot nest".into()));
+                    }
+                    reqs.push(r);
+                }
+                Ok(WireRequest::Batch(reqs))
+            }
             other => Err(WireError::Parse(format!("unknown request kind {other:?}"))),
         }
     }
@@ -531,11 +686,17 @@ pub enum WireResponse {
     },
     /// `shutdown` acknowledged; the server stops accepting connections.
     Bye,
+    /// Answer to a [`WireRequest::Batch`]: one inner response per inner
+    /// request, in request order.  Never nests.
+    Batch(
+        /// The inner responses, request order.
+        Vec<WireResponse>,
+    ),
 }
 
 impl WireResponse {
     /// Stable lowercase response tag (`admitted`, `queued`, `shed`,
-    /// `plan`, `stats`, `error`, `bye`).
+    /// `plan`, `stats`, `error`, `bye`, `batch`).
     pub fn kind(&self) -> &'static str {
         match self {
             WireResponse::Admitted { .. } => "admitted",
@@ -545,6 +706,7 @@ impl WireResponse {
             WireResponse::StatsRow { .. } => "stats",
             WireResponse::Error { .. } => "error",
             WireResponse::Bye => "bye",
+            WireResponse::Batch(_) => "batch",
         }
     }
 
@@ -605,6 +767,13 @@ impl WireResponse {
                 ("message".into(), Json::Str(message.clone())),
             ]),
             WireResponse::Bye => Json::Obj(vec![kind]),
+            WireResponse::Batch(resps) => Json::Obj(vec![
+                kind,
+                (
+                    "responses".into(),
+                    Json::Arr(resps.iter().map(WireResponse::to_json).collect()),
+                ),
+            ]),
         }
     }
 
@@ -670,6 +839,20 @@ impl WireResponse {
                 message: want_str(j, "message")?.to_string(),
             }),
             "bye" => Ok(WireResponse::Bye),
+            "batch" => {
+                let items = j.get("responses").and_then(Json::as_arr).ok_or_else(|| {
+                    WireError::Parse("batch requires a \"responses\" array".into())
+                })?;
+                let mut resps = Vec::with_capacity(items.len());
+                for item in items {
+                    let r = WireResponse::from_json(item)?;
+                    if matches!(r, WireResponse::Batch(_)) {
+                        return Err(WireError::Parse("batch responses cannot nest".into()));
+                    }
+                    resps.push(r);
+                }
+                Ok(WireResponse::Batch(resps))
+            }
             other => Err(WireError::Parse(format!("unknown response kind {other:?}"))),
         }
     }
@@ -788,6 +971,89 @@ mod tests {
                 resp.kind()
             );
         }
+    }
+
+    #[test]
+    fn batch_request_and_response_roundtrip() {
+        let req = WireRequest::Batch(vec![
+            WireRequest::Delta { tenant: 1, delta: ScenarioDelta::TotalBandwidth(9e6) },
+            WireRequest::Plan { tenant: 1 },
+            WireRequest::Stats,
+        ]);
+        let body = req.to_json().to_string_compact();
+        assert!(body.starts_with(r#"{"kind":"batch","requests":["#));
+        let back = WireRequest::from_json(&Json::parse(&body).unwrap()).unwrap();
+        assert_eq!(body, back.to_json().to_string_compact());
+
+        let resp = WireResponse::Batch(vec![
+            WireResponse::Queued { depth: 1 },
+            WireResponse::Shed { backoff_s: 0.1, attempt: 0 },
+            WireResponse::Bye,
+        ]);
+        let body = resp.to_json().to_string_compact();
+        assert!(body.starts_with(r#"{"kind":"batch","responses":["#));
+        let back = WireResponse::from_json(&Json::parse(&body).unwrap()).unwrap();
+        assert_eq!(body, back.to_json().to_string_compact());
+    }
+
+    #[test]
+    fn nested_batches_are_rejected() {
+        let req = r#"{"kind":"batch","requests":[{"kind":"batch","requests":[]}]}"#;
+        assert!(matches!(
+            WireRequest::from_json(&Json::parse(req).unwrap()),
+            Err(WireError::Parse(_))
+        ));
+        let resp = r#"{"kind":"batch","responses":[{"kind":"batch","responses":[]}]}"#;
+        assert!(matches!(
+            WireResponse::from_json(&Json::parse(resp).unwrap()),
+            Err(WireError::Parse(_))
+        ));
+        let missing = r#"{"kind":"batch"}"#;
+        assert!(WireRequest::from_json(&Json::parse(missing).unwrap()).is_err());
+    }
+
+    #[test]
+    fn frame_buffer_extracts_every_buffered_frame_greedily() {
+        let mut stream = Vec::new();
+        for body in [b"alpha".as_slice(), b"", b"gamma-with-more-bytes"] {
+            write_frame_into(&mut stream, body).unwrap();
+        }
+        // Append half of a fourth frame: header + partial body.
+        let mut partial = encode_frame(b"delta");
+        partial.truncate(7);
+        stream.extend_from_slice(&partial);
+
+        let mut fb = FrameBuffer::new();
+        let mut r = std::io::Cursor::new(stream);
+        assert!(fb.fill_from(&mut r).unwrap() > 0);
+        assert_eq!(fb.next_frame().unwrap().unwrap(), b"alpha");
+        assert_eq!(fb.next_frame().unwrap().unwrap(), b"");
+        assert_eq!(fb.next_frame().unwrap().unwrap(), b"gamma-with-more-bytes");
+        // The partial frame stays buffered until more bytes arrive.
+        assert!(fb.next_frame().unwrap().is_none());
+        assert!(fb.buffered() > 0, "partial frame must be detectable at EOF");
+        // EOF now: the cursor is exhausted.
+        assert_eq!(fb.fill_from(&mut r).unwrap(), 0);
+    }
+
+    #[test]
+    fn frame_buffer_rejects_hostile_headers_from_the_header_alone() {
+        // A 4 GiB announcement with zero body bytes behind it: the
+        // length must be refused before any body buffer could grow.
+        let huge = 0xFFFF_FFFFu32.to_be_bytes().to_vec();
+        let mut fb = FrameBuffer::new();
+        let mut r = std::io::Cursor::new(huge);
+        assert!(fb.fill_from(&mut r).unwrap() > 0);
+        assert!(matches!(fb.next_frame(), Err(WireError::Frame(_))));
+    }
+
+    #[test]
+    fn write_frame_into_matches_encode_frame_and_caps_length() {
+        let mut out = Vec::new();
+        write_frame_into(&mut out, b"payload").unwrap();
+        assert_eq!(out, encode_frame(b"payload"));
+        let big = vec![0u8; MAX_FRAME_LEN as usize + 1];
+        assert!(matches!(write_frame_into(&mut out, &big), Err(WireError::Frame(_))));
     }
 
     #[test]

@@ -125,6 +125,14 @@ impl Json {
         out
     }
 
+    /// Compact serialization appended to a caller-owned buffer — the
+    /// allocation-free sibling of [`Json::to_string_compact`] for hot
+    /// paths that encode many values (the wire server reuses one buffer
+    /// per connection).  `out` is *not* cleared first.
+    pub fn write_compact_into(&self, out: &mut String) {
+        self.write(out, 0, false);
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, n: usize| {
             if pretty {

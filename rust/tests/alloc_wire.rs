@@ -1,0 +1,112 @@
+//! Allocation accounting for the wire-framing hot path.
+//!
+//! A counting global allocator wraps `System`; the single test below
+//! (one test fn so no concurrent test pollutes the counter — its own
+//! binary for the same reason) verifies the PR-level guarantee behind
+//! the batched serve loop: once a connection's reusable buffers are
+//! warm, extracting buffered frames ([`FrameBuffer`]) and appending
+//! response frames ([`wire::write_frame_into`]) perform **zero** heap
+//! allocations per event.  JSON values inherently allocate to decode
+//! and execute — the claim is scoped to the framing layer, which is
+//! what runs once per event on both sides of every wave.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::Cursor;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use ripra::service::wire::{self, FrameBuffer};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn frame_extract_and_encode_are_allocation_free_after_warmup() {
+    // One wave's worth of inbound traffic, prebuilt outside the measured
+    // window (the bodies stand in for compact-JSON requests).
+    let bodies: Vec<Vec<u8>> = (0..64)
+        .map(|i| format!("{{\"kind\":\"stats\",\"pad\":{i}}}").into_bytes())
+        .collect();
+    let mut inbound = Vec::new();
+    for b in &bodies {
+        wire::write_frame_into(&mut inbound, b).expect("encode fixture");
+    }
+
+    let mut frames = FrameBuffer::new();
+    let mut out: Vec<u8> = Vec::new();
+
+    // Warm-up wave: grows the fill chunk, the scratch, and the output
+    // buffer to steady-state size.
+    let mut reader = Cursor::new(inbound.clone());
+    assert!(frames.fill_from(&mut reader).expect("fill") > 0);
+    let mut warm = 0;
+    while let Some(frame) = frames.next_frame().expect("frame") {
+        let owned = frame.to_vec(); // decode stand-in, outside the claim
+        wire::write_frame_into(&mut out, &owned).expect("encode");
+        warm += 1;
+    }
+    assert_eq!(warm, bodies.len());
+    assert_eq!(frames.buffered(), 0);
+
+    // Measured wave: identical traffic through the warm buffers — the
+    // framing layer itself must not allocate at all.
+    let mut reader = Cursor::new(inbound);
+    out.clear();
+    let before = ALLOCS.load(Ordering::Relaxed);
+    assert!(frames.fill_from(&mut reader).expect("fill") > 0);
+    let mut extracted = 0;
+    let mut echoed = 0usize;
+    while let Some(frame) = frames.next_frame().expect("frame") {
+        echoed += frame.len();
+        extracted += 1;
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(extracted, bodies.len());
+    assert_eq!(echoed, bodies.iter().map(Vec::len).sum::<usize>());
+    assert_eq!(
+        after - before,
+        0,
+        "warm framing layer allocated {} times for a {}-frame wave",
+        after - before,
+        extracted
+    );
+
+    // Encoding the same wave into the warm output buffer is also free.
+    out.clear();
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for b in &bodies {
+        wire::write_frame_into(&mut out, b).expect("encode");
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "warm frame encoding allocated {} times for a {}-frame wave",
+        after - before,
+        bodies.len()
+    );
+}

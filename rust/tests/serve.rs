@@ -6,10 +6,12 @@
 //! request bytes *and* identical response transcripts against fresh
 //! servers).
 
+use std::io::Write as _;
 use std::net::TcpStream;
 
 use ripra::channel::Uplink;
 use ripra::engine::{RiskBound, ScenarioDelta};
+use ripra::fault::{FaultOptions, FaultStreams};
 use ripra::fleet::loadgen::{self, LoadGenOptions};
 use ripra::models::ModelProfile;
 use ripra::optim::types::{Device, Scenario};
@@ -17,6 +19,8 @@ use ripra::service::wire;
 use ripra::service::{
     PlannerService, Server, ServerOptions, ServiceOptions, WireRequest, WireResponse,
 };
+use ripra::util::json::Json;
+use ripra::util::rng::Rng;
 
 /// A moderate, comfortably feasible device (no RNG: the pins below want
 /// full control of deadlines and channels).
@@ -255,4 +259,390 @@ fn same_seed_loadgen_replays_byte_identically_against_fresh_servers() {
         transcripts[0], transcripts[1],
         "same seed must reproduce the exact response transcript"
     );
+}
+
+/// Bind a server and return its address plus the join handle (for tests
+/// that open their own connections).
+fn spawn_server_addr(
+    shards: usize,
+    queue_capacity: usize,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<Result<(), String>>) {
+    let server = Server::bind(&ServerOptions {
+        listen: "127.0.0.1:0".into(),
+        shards,
+        queue_capacity,
+        ..ServerOptions::default()
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+/// Pre-sharding `handle()` logic, replicated verbatim as the oracle for
+/// the byte-parity pin below: submit against the bounded queue, shed
+/// with the jittered back-off hint on overflow, drain at plan / stats /
+/// shutdown.  Any divergence between the sharded server and this
+/// function is a transcript regression.
+fn oracle_response(
+    svc: &mut PlannerService,
+    faults: &FaultOptions,
+    backoff: &mut FaultStreams,
+    shed_attempts: &mut Vec<(u64, u32)>,
+    req: &WireRequest,
+) -> WireResponse {
+    let error_response = |e: &ripra::service::ServiceError| WireResponse::Error {
+        code: wire::error_code(e).into(),
+        message: format!("{e}"),
+    };
+    match req {
+        WireRequest::Admit { tenant, scenario, bound } => {
+            match svc.admit_tenant_with(*tenant, scenario.clone(), *bound) {
+                Ok(_) => WireResponse::Admitted {
+                    tenant: *tenant,
+                    energy_j: svc.tenant_energy(*tenant).unwrap_or(0.0),
+                },
+                Err(e) => error_response(&e),
+            }
+        }
+        WireRequest::Delta { tenant, delta } => match svc.submit(*tenant, delta.clone()) {
+            Ok(()) => {
+                shed_attempts.retain(|(t, _)| t != tenant);
+                WireResponse::Queued { depth: svc.queue_len() }
+            }
+            Err(ripra::service::ServiceError::Backpressure { .. }) => {
+                let attempt = {
+                    let mut found = None;
+                    for (t, a) in shed_attempts.iter_mut() {
+                        if t == tenant {
+                            found = Some(*a);
+                            *a += 1;
+                            break;
+                        }
+                    }
+                    match found {
+                        Some(a) => a,
+                        None => {
+                            shed_attempts.push((*tenant, 1));
+                            0
+                        }
+                    }
+                };
+                let backoff_s = backoff.backoff_s(faults, attempt);
+                let _ = svc.drain();
+                WireResponse::Shed { backoff_s, attempt }
+            }
+            Err(e) => error_response(&e),
+        },
+        WireRequest::Plan { tenant } => {
+            let drained = svc.drain().len();
+            match (svc.assembled_plan(*tenant), svc.tenant_energy(*tenant)) {
+                (Some(plan), Some(energy_j)) => {
+                    WireResponse::PlanRow { tenant: *tenant, drained, energy_j, plan }
+                }
+                _ => error_response(&ripra::service::ServiceError::UnknownTenant(*tenant)),
+            }
+        }
+        WireRequest::Stats => {
+            let drained = svc.drain().len();
+            WireResponse::StatsRow {
+                drained,
+                tenants: svc.tenant_count(),
+                queue_len: svc.queue_len(),
+                stats: svc.stats(),
+            }
+        }
+        WireRequest::Shutdown => {
+            let _ = svc.drain();
+            WireResponse::Bye
+        }
+        WireRequest::Batch(_) => unreachable!("loadgen scripts are unbatched"),
+    }
+}
+
+/// Single-connection byte parity with the pre-sharding server: a full
+/// loadgen script (small queue, so the shed path is on it) against the
+/// live sharded server must reproduce, frame for frame and byte for
+/// byte, the transcript the single-lock `handle()` logic computes
+/// in-process.  This is the PR-to-PR transcript pin.
+#[test]
+fn single_connection_transcript_matches_in_process_replay() {
+    let opts = LoadGenOptions {
+        tenants: 2,
+        devices: 2,
+        events: 16,
+        rate_hz: 0.0,
+        probe_every: 5,
+        seed: 11,
+        ..LoadGenOptions::default()
+    };
+    let script = loadgen::script(&opts);
+
+    // Live: sharded server, queue capacity 4 (sheds between probes).
+    let server = Server::bind(&ServerOptions {
+        listen: "127.0.0.1:0".into(),
+        shards: 1,
+        queue_capacity: 4,
+        ..ServerOptions::default()
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let handle = std::thread::spawn(move || server.run());
+    let report = loadgen::run_script(&addr, &script, 0.0).expect("replay");
+    handle.join().expect("server thread").expect("clean shutdown");
+    assert!(report.sheds > 0, "queue 4 with probe_every 5 must exercise the shed path");
+
+    // Oracle: the same service configuration driven by the single-lock
+    // logic (seed 7 and backoff 0.05 are the ServerOptions defaults).
+    let mut svc = PlannerService::new(ServiceOptions {
+        shards: 1,
+        queue_capacity: 4,
+        ..ServiceOptions::default()
+    })
+    .expect("service");
+    let mut master = Rng::new(7);
+    let mut backoff = FaultStreams::fork_off(&mut master);
+    let faults = FaultOptions { backoff_base_s: 0.05, ..FaultOptions::default() };
+    let mut shed_attempts: Vec<(u64, u32)> = Vec::new();
+
+    assert_eq!(report.transcript.len(), script.len());
+    for (i, req) in script.iter().enumerate() {
+        let want = oracle_response(&mut svc, &faults, &mut backoff, &mut shed_attempts, req)
+            .to_json()
+            .to_string_compact();
+        assert_eq!(report.transcript[i], want, "transcript diverged at frame {i} ({req:?})");
+    }
+}
+
+/// Zero the coordination fields (`depth`, `drained`) that legitimately
+/// depend on cross-connection interleaving, leaving every tenant-scoped
+/// payload byte-exact for comparison.
+fn normalized(entries: &[String]) -> Vec<String> {
+    fn scrub(j: Json) -> Json {
+        match j {
+            Json::Obj(kv) => Json::Obj(
+                kv.into_iter()
+                    .map(|(k, v)| {
+                        if k == "depth" || k == "drained" {
+                            (k, Json::Num(0.0))
+                        } else {
+                            (k, scrub(v))
+                        }
+                    })
+                    .collect(),
+            ),
+            Json::Arr(items) => Json::Arr(items.into_iter().map(scrub).collect()),
+            other => other,
+        }
+    }
+    entries
+        .iter()
+        .map(|s| scrub(Json::parse(s).expect("transcript entry")).to_string_compact())
+        .collect()
+}
+
+/// N concurrent clients with disjoint tenants: however the connections
+/// interleave, each connection's transcript is deterministic — equal
+/// across repeat runs *and* equal to a serial replay of the same
+/// sub-scripts — once the interleaving-coordination fields (`depth`,
+/// `drained`) are normalized.  Tenant-scoped payloads (admission
+/// energies, plans) must be byte-exact.
+#[test]
+fn concurrent_connections_replay_deterministically_per_connection() {
+    // Three connection-disjoint sub-scripts (tenants 1-2, 11-12, 21-22),
+    // decorrelated seeds, no stats probes (global counters are the one
+    // thing interleaving is allowed to change), no shutdown (sent on a
+    // closer connection once the workers are done).
+    let scripts: Vec<Vec<WireRequest>> = (0..3u64)
+        .map(|k| {
+            let opts = LoadGenOptions {
+                tenants: 2,
+                devices: 2,
+                events: 10,
+                rate_hz: 0.0,
+                probe_every: 0,
+                seed: 11 + k,
+                first_tenant: 1 + 10 * k,
+                ..LoadGenOptions::default()
+            };
+            let mut s = loadgen::script(&opts);
+            s.retain(|r| r.kind() != "stats" && r.kind() != "shutdown");
+            s
+        })
+        .collect();
+
+    let run_once = |concurrent: bool| -> Vec<Vec<String>> {
+        let (addr, handle) = spawn_server_addr(1, 64);
+        let transcripts: Vec<Vec<String>> = if concurrent {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = scripts
+                    .iter()
+                    .map(|s| {
+                        scope.spawn(move || {
+                            loadgen::run_script(&addr.to_string(), s, 0.0)
+                                .expect("replay")
+                                .transcript
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("worker")).collect()
+            })
+        } else {
+            scripts
+                .iter()
+                .map(|s| {
+                    loadgen::run_script(&addr.to_string(), s, 0.0).expect("replay").transcript
+                })
+                .collect()
+        };
+        let mut closer = TcpStream::connect(addr).expect("closer connect");
+        assert!(matches!(call(&mut closer, &WireRequest::Shutdown), WireResponse::Bye));
+        handle.join().expect("server thread").expect("clean shutdown");
+        transcripts.iter().map(|t| normalized(t)).collect()
+    };
+
+    let serial = run_once(false);
+    let conc_a = run_once(true);
+    let conc_b = run_once(true);
+    assert_eq!(conc_a, conc_b, "same sub-scripts must replay identically run to run");
+    assert_eq!(
+        conc_a, serial,
+        "per-connection transcripts must not depend on cross-connection interleaving"
+    );
+}
+
+/// A `batch` frame is executed as exactly its sequential singles: the
+/// inner responses byte-match the responses the same requests get when
+/// sent as individual frames against an identically-seeded fresh
+/// server.
+#[test]
+fn batch_request_is_equivalent_to_sequential_singles() {
+    let singles = vec![
+        WireRequest::Admit { tenant: 1, scenario: scenario(0.28), bound: RiskBound::Ecr },
+        WireRequest::Delta { tenant: 1, delta: ScenarioDelta::TotalBandwidth(9.5e6) },
+        WireRequest::Delta { tenant: 1, delta: ScenarioDelta::TotalBandwidth(9.0e6) },
+        WireRequest::Plan { tenant: 1 },
+        WireRequest::Stats,
+    ];
+
+    // Server A: one frame per request.
+    let (mut a, handle_a) = spawn_server(1, 8);
+    let mut sequential = Vec::new();
+    for req in &singles {
+        sequential.push(call(&mut a, req).to_json().to_string_compact());
+    }
+    assert!(matches!(call(&mut a, &WireRequest::Shutdown), WireResponse::Bye));
+    handle_a.join().expect("server thread").expect("clean shutdown");
+
+    // Server B: the same requests in one batch frame.
+    let (mut b, handle_b) = spawn_server(1, 8);
+    match call(&mut b, &WireRequest::Batch(singles.clone())) {
+        WireResponse::Batch(inner) => {
+            let got: Vec<String> =
+                inner.iter().map(|r| r.to_json().to_string_compact()).collect();
+            assert_eq!(got, sequential, "batch must equal its sequential singles, byte for byte");
+        }
+        other => panic!("batch answered {other:?}"),
+    }
+    assert!(matches!(call(&mut b, &WireRequest::Shutdown), WireResponse::Bye));
+    handle_b.join().expect("server thread").expect("clean shutdown");
+}
+
+/// Load shedding inside a batch behaves exactly like a sequential shed:
+/// with capacity 1, `[delta, delta, delta]` answers
+/// `[queued(1), shed(attempt 0), queued(1)]` — the shed-triggered drain
+/// frees the queue mid-batch.
+#[test]
+fn shed_inside_a_batch_matches_sequential_shed_semantics() {
+    let (mut c, handle) = spawn_server(1, 1);
+    let admit =
+        WireRequest::Admit { tenant: 1, scenario: scenario(0.28), bound: RiskBound::Ecr };
+    assert!(matches!(call(&mut c, &admit), WireResponse::Admitted { .. }));
+
+    let delta = |hz: f64| WireRequest::Delta {
+        tenant: 1,
+        delta: ScenarioDelta::TotalBandwidth(hz),
+    };
+    match call(&mut c, &WireRequest::Batch(vec![delta(9.5e6), delta(9.0e6), delta(8.5e6)])) {
+        WireResponse::Batch(inner) => {
+            assert_eq!(inner.len(), 3);
+            assert!(matches!(inner[0], WireResponse::Queued { depth: 1 }));
+            match &inner[1] {
+                WireResponse::Shed { backoff_s, attempt } => {
+                    assert!(*backoff_s > 0.0);
+                    assert_eq!(*attempt, 0);
+                }
+                other => panic!("overflow inside batch answered {other:?}"),
+            }
+            assert!(
+                matches!(inner[2], WireResponse::Queued { depth: 1 }),
+                "the shed-triggered drain must free the queue mid-batch"
+            );
+        }
+        other => panic!("batch answered {other:?}"),
+    }
+    assert!(matches!(call(&mut c, &WireRequest::Shutdown), WireResponse::Bye));
+    handle.join().expect("server thread").expect("clean shutdown");
+}
+
+/// Several frames written back to back (no reads in between) are all
+/// answered, in order — the greedy wave path end to end.
+#[test]
+fn pipelined_frames_are_answered_in_order() {
+    let (mut c, handle) = spawn_server(1, 8);
+    let reqs = [
+        WireRequest::Admit { tenant: 1, scenario: scenario(0.28), bound: RiskBound::Ecr },
+        WireRequest::Delta { tenant: 1, delta: ScenarioDelta::TotalBandwidth(9.5e6) },
+        WireRequest::Plan { tenant: 1 },
+    ];
+    let mut bytes = Vec::new();
+    for r in &reqs {
+        wire::write_frame_into(&mut bytes, r.to_json().to_string_compact().as_bytes())
+            .expect("encode");
+    }
+    c.write_all(&bytes).expect("pipelined write");
+    let kinds: Vec<String> = (0..reqs.len())
+        .map(|_| {
+            let j = wire::read_json(&mut c).expect("recv").expect("open");
+            WireResponse::from_json(&j).expect("decodable").kind().to_string()
+        })
+        .collect();
+    assert_eq!(kinds, ["admitted", "queued", "plan"]);
+    assert!(matches!(call(&mut c, &WireRequest::Shutdown), WireResponse::Bye));
+    handle.join().expect("server thread").expect("clean shutdown");
+}
+
+/// A hostile frame header announcing more than `MAX_FRAME_LEN` is
+/// rejected from the 4 header bytes alone: the server answers
+/// `bad-request` and closes that connection without ever allocating for
+/// the announced body — and the server itself stays up for other
+/// clients.
+#[test]
+fn oversize_frame_header_is_rejected_and_quarantined_to_its_connection() {
+    let (addr, handle) = spawn_server_addr(1, 8);
+
+    let mut hostile = TcpStream::connect(addr).expect("connect");
+    hostile.set_nodelay(true).expect("nodelay");
+    hostile.write_all(&0xFFFF_FFFFu32.to_be_bytes()).expect("send hostile header");
+    match wire::read_json(&mut hostile).expect("recv") {
+        Some(j) => match WireResponse::from_json(&j).expect("decodable") {
+            WireResponse::Error { code, .. } => assert_eq!(code, "bad-request"),
+            other => panic!("hostile header answered {other:?}"),
+        },
+        None => panic!("server must answer before closing"),
+    }
+    assert!(
+        wire::read_json(&mut hostile).expect("recv").is_none(),
+        "the hostile connection must be closed after the error"
+    );
+
+    // A healthy client on the same server is unaffected.
+    let mut healthy = TcpStream::connect(addr).expect("connect");
+    healthy.set_nodelay(true).expect("nodelay");
+    match call(&mut healthy, &WireRequest::Stats) {
+        WireResponse::StatsRow { tenants, .. } => assert_eq!(tenants, 0),
+        other => panic!("stats answered {other:?}"),
+    }
+    assert!(matches!(call(&mut healthy, &WireRequest::Shutdown), WireResponse::Bye));
+    handle.join().expect("server thread").expect("clean shutdown");
 }
